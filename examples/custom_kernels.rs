@@ -1,0 +1,57 @@
+//! §IV-C scenario: PM2Lat on custom computation-intensive kernels —
+//! Triton MatMul (autotuned), Triton vector kernels, FlashAttention-2 and
+//! CUTLASS attention — including the architecture gates (no FA2 on
+//! Turing, no attention kernels on Blackwell).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example custom_kernels
+//! ```
+
+use pm2lat::gpusim::{custom, Gpu};
+use pm2lat::ops::{CustomOp, DType, Op};
+use pm2lat::pm2lat::custom_model;
+use pm2lat::profiler::{self, ProfileSpec};
+use pm2lat::util::stats::signed_rel_err_pct;
+
+fn main() {
+    let dtype = DType::F32;
+    for device in ["rtx3060m", "t4", "a100", "rtx5070"] {
+        let mut gpu = Gpu::by_name(device).unwrap();
+        println!("\n=== {device} ===");
+        let model = custom_model::collect(&mut gpu, dtype, &ProfileSpec::experiment());
+        gpu.reset();
+        let ops = [
+            CustomOp::TritonMM { m: 1024, n: 2048, k: 4096, dtype },
+            CustomOp::TritonVec { elems: 1 << 22, dtype },
+            CustomOp::FlashAttn { batch: 4, heads: 16, seq: 1024, head_dim: 64, dtype, causal: true },
+            CustomOp::CutlassAttn { batch: 4, heads: 16, seq: 1024, head_dim: 64, dtype, causal: true },
+        ];
+        for op in ops {
+            if !custom::supported(&gpu.spec, &op) {
+                println!("  {:10} unsupported on this architecture (-)", op.name());
+                continue;
+            }
+            let pred = model.predict(&gpu, &op);
+            let truth = profiler::measure(&mut gpu, &Op::Custom(op), &ProfileSpec::experiment())
+                .unwrap()
+                .mean_s;
+            match pred {
+                Some(p) => println!(
+                    "  {:10} predicted {:>8.3} ms | measured {:>8.3} ms | {:+.1}%",
+                    op.name(),
+                    p * 1e3,
+                    truth * 1e3,
+                    signed_rel_err_pct(p, truth)
+                ),
+                None => println!("  {:10} no profile", op.name()),
+            }
+        }
+        // TruthCFG variant for Triton MM.
+        let op = CustomOp::TritonMM { m: 1024, n: 2048, k: 4096, dtype };
+        if custom::supported(&gpu.spec, &op) {
+            if let Some(p) = model.predict_truth_cfg(&gpu, &op) {
+                println!("  TritonMM (TruthCFG) predicted {:.3} ms", p * 1e3);
+            }
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! End-to-end driver: exercises the full three-layer system on a real
+//! small workload and reports the paper's headline metric.
+//!
+//! Pipeline: simulated devices → PM2Lat collection (profiler) → NeuSight
+//! dataset + **MLP training through the AOT Pallas/JAX artifacts on PJRT**
+//! → per-layer + model-level evaluation → headline: PM2Lat error vs
+//! NeuSight error, and the NAS-preprocessing speed ratio.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use pm2lat::experiments::{apps_exp, tables, Lab, Scale};
+use pm2lat::runtime::Runtime;
+
+fn main() {
+    let runtime = Runtime::open_default().expect("run `make artifacts` first");
+    println!("== end-to-end: build lab (PM2Lat fits + NeuSight PJRT training) ==");
+    let scale = Scale { per_cell: 60, ns_per_device: 100, ns_epochs: 30, model_reps: 5, custom_per_kind: 20 };
+    let mut lab = Lab::build(&runtime, scale, false).expect("lab build");
+    for (dt, ns) in &lab.neusight {
+        if let Some(r) = &ns.report {
+            println!(
+                "NeuSight[{dt}] trained via PJRT: loss {:.4} → {:.4} over {} epochs",
+                r.first_loss, r.final_loss, r.epochs
+            );
+        }
+    }
+
+    println!("\n== per-layer evaluation (Table II, reduced scale) ==");
+    let t2 = tables::table2(&mut lab).expect("table2");
+    println!("{}", t2.markdown);
+
+    // Headline: mean error over all finite cells.
+    let pl_mean = mean_err(&t2.records, true);
+    let ns_mean = mean_err(&t2.records, false);
+    println!(
+        "HEADLINE per-layer: PM2Lat {:.1}% vs NeuSight {:.1}% mean relative error ({:.0}x)",
+        pl_mean,
+        ns_mean,
+        ns_mean / pl_mean
+    );
+
+    println!("\n== NAS preprocessing speed (§IV-D2) ==");
+    let nas = apps_exp::nas_speed_experiment(&mut lab, 500).expect("nas");
+    println!("{nas}");
+
+    assert!(pl_mean < ns_mean, "PM2Lat must beat the baseline");
+    println!("end_to_end OK");
+}
+
+fn mean_err(records: &[tables::SampleRecord], pl: bool) -> f64 {
+    let vals: Vec<f64> = records
+        .iter()
+        .map(|r| if pl { r.pl_err } else { r.ns_err })
+        .filter(|v| v.is_finite())
+        .collect();
+    pm2lat::util::stats::mean(&vals)
+}

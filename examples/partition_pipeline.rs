@@ -1,0 +1,69 @@
+//! §IV-D1 scenario: split Qwen3-4B (BS=8) across an RTX 3060M and an RTX
+//! 5070 with pipeline parallelism, choosing the cut with PM2Lat, then
+//! validate the plan by simulating 100 requests.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example partition_pipeline
+//! ```
+
+use pm2lat::apps::partition;
+use pm2lat::gpusim::Gpu;
+use pm2lat::models::zoo;
+use pm2lat::ops::DType;
+use pm2lat::pm2lat::Pm2Lat;
+use pm2lat::profiler::ProfileSpec;
+
+fn main() {
+    let cfg = zoo::qwen3_4b();
+    let (batch, seq) = (8, 512);
+    println!("partitioning {} (BS={batch}, seq={seq}) across rtx3060m + rtx5070", cfg.name);
+
+    // Fit PM2Lat on both target devices.
+    let mut d1 = Gpu::by_name("rtx3060m").unwrap();
+    let mut d2 = Gpu::by_name("rtx5070").unwrap();
+    let spec = ProfileSpec::experiment();
+    let pl1 = Pm2Lat::build_dtypes(&mut d1, &spec, &[DType::Bf16], false);
+    let pl2 = Pm2Lat::build_dtypes(&mut d2, &spec, &[DType::Bf16], false);
+    d1.reset();
+    d2.reset();
+
+    // Evaluate every feasible cut; print the frontier.
+    println!("\ncut  stage1(3060M)  stage2(5070)  bottleneck");
+    let mut best: Option<partition::Plan> = None;
+    for cut in 1..cfg.layers {
+        if !partition::cut_fits(&cfg, cut, batch, seq, &d1, &d2) {
+            continue;
+        }
+        let t1 = cfg.block_range_trace(batch, seq, 0, cut, false);
+        let t2 = cfg.block_range_trace(batch, seq, cut, cfg.layers, true);
+        let s1 = pl1.predict_trace(&d1, &t1).unwrap();
+        let s2 = pl2.predict_trace(&d2, &t2).unwrap() + partition::transfer_s(&cfg, batch, seq);
+        let plan = partition::Plan { cut, stage1_s: s1, stage2_s: s2 };
+        println!(
+            "{cut:>3}  {:>10.0} ms  {:>10.0} ms  {:>8.0} ms",
+            s1 * 1e3,
+            s2 * 1e3,
+            plan.bottleneck_s() * 1e3
+        );
+        if best.map(|b| plan.bottleneck_s() < b.bottleneck_s()).unwrap_or(true) {
+            best = Some(plan);
+        }
+    }
+    let plan = best.expect("a feasible cut");
+    println!("\nchosen cut: after block {}", plan.cut);
+
+    // Validate: measure the chosen cut and simulate 100 requests.
+    let measured =
+        partition::measure_cut(&cfg, plan.cut, batch, seq, &mut d1, &mut d2, 5).unwrap();
+    println!(
+        "measured stages: {:.0} ms / {:.0} ms (bottleneck {:.0} ms, predicted {:.0} ms)",
+        measured.stage1_s * 1e3,
+        measured.stage2_s * 1e3,
+        measured.bottleneck_s() * 1e3,
+        plan.bottleneck_s() * 1e3
+    );
+    println!(
+        "100 requests complete in {:.1} s",
+        partition::pipeline_completion_s(&measured, 100)
+    );
+}

@@ -1,0 +1,58 @@
+//! Quickstart: profile a device once, then predict GEMM / utility-layer /
+//! whole-model latencies and check them against measurements.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use pm2lat::gpusim::Gpu;
+use pm2lat::models::{runner, zoo};
+use pm2lat::ops::{DType, GemmOp, Op, UtilKind, UtilOp};
+use pm2lat::pm2lat::Pm2Lat;
+use pm2lat::profiler::{self, ProfileSpec};
+use pm2lat::util::stats::signed_rel_err_pct;
+
+fn main() {
+    // 1. Pick a (simulated) target device and run PM2Lat's one-time
+    //    data-collection + fitting pass on it.
+    let mut gpu = Gpu::by_name("a100").expect("device");
+    println!("profiling {} (one-time, per-device)...", gpu.spec.name);
+    let pl = Pm2Lat::build_dtypes(&mut gpu, &ProfileSpec::experiment(), &[DType::F32], false);
+    gpu.reset();
+
+    // 2. Predict individual layers and compare to fresh measurements.
+    let ops = [
+        ("Linear 512x4096x1024", Op::Gemm(GemmOp::linear(512, 4096, 1024, DType::F32))),
+        ("MatMul 2048^3", Op::Gemm(GemmOp::mm(2048, 2048, 2048, DType::F32))),
+        ("BMM 32x256x256x64", Op::Gemm(GemmOp::bmm(32, 256, 256, 64, DType::F32))),
+        ("SoftMax 8192x1024", Op::Util(UtilOp::new(UtilKind::Softmax, 8192, 1024, DType::F32))),
+        ("GeLU 4096x4096", Op::Util(UtilOp::new(UtilKind::Gelu, 4096, 4096, DType::F32))),
+    ];
+    println!("\nper-layer predictions on {}:", gpu.spec.name);
+    for (name, op) in &ops {
+        let pred = pl.predict(&gpu, op).expect("supported");
+        let truth = profiler::measure(&mut gpu, op, &ProfileSpec::experiment())
+            .expect("measure")
+            .mean_s;
+        println!(
+            "  {name:24} predicted {:>9.3} ms | measured {:>9.3} ms | {:+.1}%",
+            pred * 1e3,
+            truth * 1e3,
+            signed_rel_err_pct(pred, truth)
+        );
+    }
+
+    // 3. Whole model: GPT-2 Large prefill at batch 8.
+    let cfg = zoo::gpt2_large();
+    let trace = cfg.trace(8, 512);
+    let pred = pl.predict_trace(&gpu, &trace).expect("supported");
+    gpu.reset();
+    let run = runner::run_model(&mut gpu, &cfg, 8, 512, 5, 25).expect("run");
+    println!(
+        "\n{} BS=8 seq=512: predicted {:.1} ms | measured {:.1} ms | {:+.1}%",
+        cfg.name,
+        pred * 1e3,
+        run.mean_s * 1e3,
+        signed_rel_err_pct(pred, run.mean_s)
+    );
+}

@@ -1,0 +1,126 @@
+"""AOT lowering: JAX/Pallas entries → HLO *text* artifacts for the Rust side.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` 0.1.6 crate) rejects; the text
+parser reassigns ids and round-trips cleanly.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Produces one .hlo.txt per entry plus manifest.json describing shapes, the
+initial MLP parameters (params_init.json) so Rust training starts from the
+same initialization, and is idempotent (the Makefile skips it when inputs
+are unchanged).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import batch_predict as bp
+from .kernels.ref import N_K_POINTS
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the Rust
+    side always unwraps a tuple, regardless of arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entries():
+    """(name, fn, arg_specs) for every artifact."""
+    f, h = model.FEATURE_DIM, model.HIDDEN_DIM
+    param_specs = [_spec(s) for s in model.PARAM_SHAPES]
+    out = []
+
+    for b in (128, 1024):
+        out.append(
+            (
+                f"neusight_infer_b{b}",
+                model.neusight_infer,
+                [_spec((b, f))] + param_specs,
+            )
+        )
+
+    bt = 512
+    train_specs = (
+        param_specs  # params
+        + [_spec(s) for s in model.PARAM_SHAPES]  # m
+        + [_spec(s) for s in model.PARAM_SHAPES]  # v
+        + [_spec(()), _spec((bt, f)), _spec((bt,)), _spec((bt,)), _spec(())]
+    )
+    out.append((f"neusight_train_b{bt}", model.neusight_train_step, train_specs))
+
+    for b in (1024, 4096):
+        out.append(
+            (
+                f"pm2lat_batch_predict_b{b}",
+                model.pm2lat_batch_predict,
+                [
+                    _spec((bp.MAX_KERNELS, N_K_POINTS)),
+                    _spec((bp.MAX_KERNELS,)),
+                    _spec((b,)),
+                    _spec((b,), I32),
+                    _spec((b,)),
+                ],
+            )
+        )
+
+    n, p = 4096, 8
+    out.append(
+        (f"pm2lat_gram_n{n}_p{p}", model.pm2lat_gram, [_spec((n, p)), _spec((n,))])
+    )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"feature_dim": model.FEATURE_DIM, "hidden_dim": model.HIDDEN_DIM,
+                "max_kernels": bp.MAX_KERNELS, "n_k_points": N_K_POINTS,
+                "artifacts": {}}
+    for name, fn, specs in entries():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [[list(s.shape), str(s.dtype)] for s in specs],
+        }
+        print(f"wrote {path} ({len(text)} chars, {len(specs)} args)")
+
+    # Initial MLP parameters: Rust starts Adam from this exact init.
+    params = model.init_params(seed=0)
+    pjson = {
+        f"p{i}": {"shape": list(p.shape), "data": [float(x) for x in p.reshape(-1)]}
+        for i, p in enumerate(params)
+    }
+    with open(os.path.join(args.out_dir, "params_init.json"), "w") as fh:
+        json.dump(pjson, fh)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only; lowered to HLO by compile.aot)."""
+
+from . import batch_predict, lstsq, mlp, ref  # noqa: F401

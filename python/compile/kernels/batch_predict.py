@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: PM2Lat batched interpolation (Eq. 1 + Eq. 2).
+
+PM2Lat's NAS-preprocessing hot path: given a profiled throughput table
+(one row per GEMM kernel implementation, columns = the power-of-two K grid)
+and a batch of query configs, predict every latency in one shot.
+
+The grid index needs no search: the K grid is powers of two, so
+idx = floor(log2(K/32)) — pure VPU arithmetic, branch-free and lockstep
+across lanes. This mirrors the paper's SIMT observation: with a fixed grid
+the per-query work is identical, so a vector unit processes queries with
+zero divergence.
+
+Hardware adaptation (DESIGN.md §8): a CUDA version would be a 1-D thread
+grid with one query per thread and the table in L2; here queries stream
+through VMEM in (TILE,)-lane blocks while the (≤128 x 9) table and base
+durations stay VMEM-resident for the whole launch.
+
+interpret=True always: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import K_GRID_MAX, K_GRID_MIN, N_K_POINTS
+
+TILE = 1024  # queries per grid step; multiple of the (8,128) VPU lane tile
+MAX_KERNELS = 128  # table rows (BF16 needs 96; padded to a power of two)
+
+
+def _predict_kernel(table_ref, base_ref, k_ref, kid_ref, scale_ref, o_ref):
+    table = table_ref[...]  # (MAX_KERNELS, N_K_POINTS)
+    base = base_ref[...]  # (MAX_KERNELS,)
+    k = jnp.clip(k_ref[...], K_GRID_MIN, K_GRID_MAX)  # (TILE,)
+    kid = kid_ref[...]
+    pos = jnp.log2(k / K_GRID_MIN)
+    idx = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, N_K_POINTS - 2)
+    k1 = K_GRID_MIN * jnp.exp2(idx.astype(jnp.float32))
+    # Flattened gather: row-major (kid, idx) — one take instead of a 2-D
+    # gather, which keeps the interpret path (and a future Mosaic lowering)
+    # to plain dynamic-slice machinery.
+    flat = table.reshape(-1)
+    base_off = kid * N_K_POINTS + idx
+    t1 = jnp.take(flat, base_off)
+    t3 = jnp.take(flat, base_off + 1)
+    org_thr = jnp.take(flat, kid * N_K_POINTS + (N_K_POINTS - 1))
+    new_thr = t1 + (k - k1) / k1 * (t3 - t1)  # (K3 - K1) == k1
+    org_dur = jnp.take(base, kid)
+    o_ref[...] = org_dur * (k / K_GRID_MAX) * (org_thr / new_thr) * scale_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def batch_predict(table, base_dur, k_vals, kernel_ids, scale):
+    """Batched Eq. 1/2 evaluation via pallas_call.
+
+    table: (MAX_KERNELS, N_K_POINTS) f32; base_dur: (MAX_KERNELS,) f32;
+    k_vals/scale: (B,) f32; kernel_ids: (B,) i32; B multiple of TILE.
+    Returns (B,) f32 predicted durations.
+    """
+    (b,) = k_vals.shape
+    nk, npts = table.shape
+    assert b % TILE == 0, f"batch {b} must be a multiple of {TILE}"
+    assert npts == N_K_POINTS
+    grid = (b // TILE,)
+    return pl.pallas_call(
+        _predict_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nk, npts), lambda i: (0, 0)),
+            pl.BlockSpec((nk,), lambda i: (0,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(table, base_dur, k_vals, kernel_ids, scale)
+
+
+def vmem_bytes(tile=TILE, nk=MAX_KERNELS, npts=N_K_POINTS):
+    """Static VMEM footprint estimate (bytes): table + base + 4 lane vecs."""
+    return 4 * (nk * npts + nk + 4 * tile)

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: normal-equations accumulation for the utility-layer fit.
+
+PM2Lat fits utility-layer latency with linear regression over NCU-style
+proxy metrics (paper §III-C). The fit itself is tiny (P ≈ 8 features), but
+the design matrix can be long (one row per profiled sample), so the hot part
+is the XᵀX / Xᵀy reduction. This kernel tiles X along N and accumulates both
+Gram products in VMEM scratch; the (P, P) solve happens in the L2 graph.
+
+Hardware adaptation: a CUDA implementation would use a grid-stride reduction
+with atomics or a two-pass tree; on TPU the natural shape is a sequential
+grid walk with a VMEM accumulator — grid step i multiplies a (TILE_N, P)
+row-block on the MXU and adds into the resident (P, P) block.
+
+interpret=True always: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 256
+
+
+def _gram_kernel(x_ref, y_ref, xtx_ref, xty_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        xtx_ref[...] = jnp.zeros_like(xtx_ref)
+        xty_ref[...] = jnp.zeros_like(xty_ref)
+
+    x = x_ref[...]  # (TILE_N, P)
+    y = y_ref[...]  # (TILE_N,)
+    xtx_ref[...] += jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+    xty_ref[...] += jnp.dot(x.T, y, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gram(x, y):
+    """Accumulate (XᵀX, Xᵀy) over row tiles of X.
+
+    x: (N, P) with N a multiple of TILE_N (caller zero-pads rows — zero rows
+    contribute nothing to either product); y: (N,).
+    """
+    n, p = x.shape
+    assert n % TILE_N == 0, f"N {n} must be a multiple of {TILE_N}"
+    grid = (n // TILE_N,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, p), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_N,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((p, p), lambda i: (0, 0)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, p), jnp.float32),
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, y)
+
+
+def lstsq(x, y, ridge=1e-6):
+    """Full ridge solve: Pallas Gram accumulation + jnp solve (L2 graph)."""
+    xtx, xty = gram(x, y)
+    p = x.shape[1]
+    return jnp.linalg.solve(xtx + ridge * jnp.eye(p, dtype=x.dtype), xty)

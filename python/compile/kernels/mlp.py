@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: NeuSight's utilization MLP forward, fused.
+
+The baseline (NeuSight, ASPLOS'25) predicts per-wave GPU utilization with a
+small MLP; at NAS-preprocessing scale this forward is *the* baseline hot
+path (6.5 ms/prediction in the paper). We implement it as one fused Pallas
+kernel: both GEMMs, both bias adds, both ReLUs and the sigmoid head execute
+per block-row of the batch without leaving VMEM.
+
+Hardware adaptation (DESIGN.md §8): the CUDA formulation would stage tiles
+through shared memory per threadblock; here BlockSpec streams (TILE_B, F)
+row-blocks of X HBM→VMEM while the weights (F×H + H×H + H×1, ≲130 KB for
+H=128) stay VMEM-resident across the whole grid — the MXU sees back-to-back
+(TILE_B,128)x(128,128) matmuls, its native shape.
+
+interpret=True always: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile: 128 rows of batch per grid step, hidden width 128.
+TILE_B = 128
+HIDDEN = 128
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, o_ref):
+    """One block-row of the fused MLP. All operands already in VMEM."""
+    x = x_ref[...]  # (TILE_B, F)
+    h1 = jnp.maximum(
+        jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+        + b1_ref[...],
+        0.0,
+    )
+    h2 = jnp.maximum(
+        jnp.dot(h1, w2_ref[...], preferred_element_type=jnp.float32)
+        + b2_ref[...],
+        0.0,
+    )
+    logits = (
+        jnp.dot(h2, w3_ref[...], preferred_element_type=jnp.float32)
+        + b3_ref[...]
+    )
+    o_ref[...] = jnp.reciprocal(1.0 + jnp.exp(-logits))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mlp_forward(x, w1, b1, w2, b2, w3, b3):
+    """Fused MLP forward via pallas_call.
+
+    x: (B, F) with B a multiple of TILE_B (the L3 caller pads); returns
+    (B, 1) utilization in (0, 1). Weights are broadcast to every grid step
+    (index_map pins them to block 0), so they are fetched once.
+    """
+    b, f = x.shape
+    h = w1.shape[1]
+    assert b % TILE_B == 0, f"batch {b} must be a multiple of {TILE_B}"
+    grid = (b // TILE_B,)
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        interpret=True,
+    )(x, w1, b1, w2, b2, w3, b3)
+
+
+def vmem_bytes(batch_tile=TILE_B, f=16, h=HIDDEN):
+    """Static VMEM footprint estimate for DESIGN.md §Perf (bytes).
+
+    x tile + all weights + intermediates, f32.
+    """
+    tile = batch_tile * f
+    weights = f * h + h + h * h + h + h + 1
+    inter = batch_tile * h * 2 + batch_tile  # h1, h2, out
+    return 4 * (tile + weights + inter)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest (python/tests/) asserts allclose between kernel and oracle across a
+hypothesis-driven sweep of shapes. These oracles are also what the L2 train
+step uses for differentiable forwards (pallas_call has no registered VJP in
+interpret mode), so the pytest equivalence is what guarantees that params
+trained through the oracle transfer to the Pallas inference path.
+"""
+
+import jax.numpy as jnp
+
+# Power-of-two K grid used by PM2Lat's throughput tables (paper §III-C:
+# "powers-of-two values of K (e.g., 32, 64, 128, 256, ..., 8192)").
+K_GRID_MIN = 32.0
+K_GRID_MAX = 8192.0
+N_K_POINTS = 9  # 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192
+
+
+def mlp_forward_ref(x, w1, b1, w2, b2, w3, b3):
+    """NeuSight utilization MLP: 2 ReLU hidden layers + sigmoid head.
+
+    x: (B, F); w1: (F, H); w2: (H, H); w3: (H, 1). Returns (B, 1) in (0, 1).
+    """
+    h1 = jnp.maximum(x @ w1 + b1, 0.0)
+    h2 = jnp.maximum(h1 @ w2 + b2, 0.0)
+    return jnp.reciprocal(1.0 + jnp.exp(-(h2 @ w3 + b3)))
+
+
+def batch_predict_ref(table, base_dur, k_vals, kernel_ids, scale):
+    """PM2Lat Eq. (1)+(2): interpolated-throughput latency prediction.
+
+    table:      (n_kernels, N_K_POINTS) throughput at the power-of-two grid.
+    base_dur:   (n_kernels,) measured duration at K = 8192 ("orgDur").
+    k_vals:     (B,) query K dimension (float32, >= 1).
+    kernel_ids: (B,) int32 row index into table / base_dur.
+    scale:      (B,) wave/tile scaling factor for the query's (M, N) vs the
+                profiled base shape (computed by the Rust caller).
+
+    newThrPut = ThrPut1 + (K - K1)/(K3 - K1) * (ThrPut3 - ThrPut1)   (Eq. 2)
+    newDur    = orgDur * (newK / 8192) * (orgThrPut / newThrPut)     (Eq. 1)
+    """
+    k = jnp.clip(k_vals.astype(jnp.float32), K_GRID_MIN, K_GRID_MAX)
+    # Grid index: log2(k/32) in [0, 8]; interpolate between idx and idx+1.
+    pos = jnp.log2(k / K_GRID_MIN)
+    idx = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, N_K_POINTS - 2)
+    k1 = K_GRID_MIN * jnp.exp2(idx.astype(jnp.float32))
+    k3 = 2.0 * k1
+    rows = jnp.take(table, kernel_ids, axis=0)  # (B, N_K_POINTS)
+    t1 = jnp.take_along_axis(rows, idx[:, None], axis=1)[:, 0]
+    t3 = jnp.take_along_axis(rows, (idx + 1)[:, None], axis=1)[:, 0]
+    new_thr = t1 + (k - k1) / (k3 - k1) * (t3 - t1)
+    org_thr = rows[:, N_K_POINTS - 1]
+    org_dur = jnp.take(base_dur, kernel_ids)
+    return org_dur * (k / K_GRID_MAX) * (org_thr / new_thr) * scale
+
+
+def lstsq_ref(x, y, ridge=1e-6):
+    """Ridge-regularized least squares via normal equations.
+
+    x: (N, P); y: (N,). Returns (P,) coefficients. PM2Lat's utility-layer
+    latency regression (paper §III-C) is exactly this fit over NCU-style
+    proxy metrics.
+    """
+    xtx = x.T @ x + ridge * jnp.eye(x.shape[1], dtype=x.dtype)
+    xty = x.T @ y
+    return jnp.linalg.solve(xtx, xty)

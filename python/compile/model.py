@@ -1,0 +1,121 @@
+"""L2 JAX graphs: NeuSight MLP training + the inference/prediction entries.
+
+Everything here is build-time Python. compile.aot lowers these functions to
+HLO text once; the Rust coordinator loads and executes the artifacts via
+PJRT with no Python on the request path.
+
+The forward used *inside the train step* is the pure-jnp oracle
+(ref.mlp_forward_ref) because interpret-mode pallas_call has no VJP; the
+inference entry uses the fused Pallas kernel (kernels.mlp). pytest asserts
+the two are allclose, so trained parameters transfer exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import batch_predict as bp
+from .kernels import lstsq as lsq
+from .kernels import mlp as mlpk
+from .kernels import ref
+
+# NeuSight MLP dimensions, fixed at AOT time (the Rust side pads batches).
+FEATURE_DIM = 16
+HIDDEN_DIM = 128
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+PARAM_SHAPES = (
+    (FEATURE_DIM, HIDDEN_DIM),  # w1
+    (HIDDEN_DIM,),              # b1
+    (HIDDEN_DIM, HIDDEN_DIM),   # w2
+    (HIDDEN_DIM,),              # b2
+    (HIDDEN_DIM, 1),            # w3
+    (1,),                       # b3
+)
+
+
+def init_params(seed=0):
+    """He-initialized MLP parameters as a flat tuple (w1,b1,w2,b2,w3,b3)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for shape in PARAM_SHAPES:
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32)
+                * jnp.sqrt(2.0 / fan_in)
+            )
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return tuple(params)
+
+
+def neusight_infer(x, w1, b1, w2, b2, w3, b3):
+    """Inference entry: fused Pallas MLP → (B, 1) utilization."""
+    return (mlpk.mlp_forward(x, w1, b1, w2, b2, w3, b3),)
+
+
+def _latency_from_util(util, scale):
+    """NeuSight latency head: wave work-time / predicted utilization.
+
+    scale is the per-sample 'work at 100% utilization' time; dividing by the
+    MLP's (0,1) utilization yields predicted latency. Clamped away from 0
+    for numerical safety.
+    """
+    return scale / jnp.maximum(util[:, 0], 1e-4)
+
+
+def _smape(pred, target):
+    """Symmetric mean absolute percentage error — the loss the paper calls
+    out for its small-latency imbalance (§IV-B); keeping it faithful keeps
+    the baseline's documented failure mode."""
+    return jnp.mean(2.0 * jnp.abs(pred - target) / (jnp.abs(pred) + jnp.abs(target) + 1e-12))
+
+
+def neusight_loss(params, x, scale, y_lat):
+    util = ref.mlp_forward_ref(x, *params)
+    return _smape(_latency_from_util(util, scale), y_lat)
+
+
+def neusight_train_step(*args):
+    """One Adam step. Flat signature for AOT:
+
+    args = (w1,b1,w2,b2,w3,b3, m1..m6, v1..v6, step, x, scale, y_lat, lr)
+    returns (w1',...,b3', m1'..m6', v1'..v6', step+1, loss) — 20 tensors.
+    """
+    params = tuple(args[0:6])
+    m = tuple(args[6:12])
+    v = tuple(args[12:18])
+    step, x, scale, y_lat, lr = args[18:]
+
+    loss, grads = jax.value_and_grad(neusight_loss)(params, x, scale, y_lat)
+    step = step + 1.0
+    bc1 = 1.0 - ADAM_B1**step
+    bc2 = 1.0 - ADAM_B2**step
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        update = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        new_p.append(p - update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return (*new_p, *new_m, *new_v, step, loss)
+
+
+def pm2lat_batch_predict(table, base_dur, k_vals, kernel_ids, scale):
+    """Inference entry: Pallas batched Eq. 1/2 interpolation."""
+    return (bp.batch_predict(table, base_dur, k_vals, kernel_ids, scale),)
+
+
+def pm2lat_gram(x, y):
+    """Fit entry: Pallas Gram accumulation → (XᵀX, Xᵀy).
+
+    The final (P, P) solve happens in Rust (Cholesky): `jnp.linalg.solve`
+    lowers to a TYPED_FFI LAPACK custom-call that xla_extension 0.5.1
+    cannot execute, so the artifact stops at the Gram products.
+    """
+    return lsq.gram(x, y)

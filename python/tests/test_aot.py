@@ -1,0 +1,78 @@
+"""AOT pipeline consistency: manifest shapes, artifact determinism, and
+the DESIGN.md §Perf VMEM estimates."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, model
+from compile.kernels import batch_predict as bp
+from compile.kernels import mlp as mlpk
+
+
+class TestVmemEstimates:
+    """Static VMEM footprints quoted in EXPERIMENTS.md §Perf."""
+
+    def test_mlp_fits_vmem(self):
+        bytes_ = mlpk.vmem_bytes()
+        assert bytes_ < 16 * 1024 * 1024, "must fit a 16MB VMEM"
+        # And the quoted order of magnitude (~230 KB).
+        assert 100_000 < bytes_ < 400_000
+
+    def test_batch_predict_fits_vmem(self):
+        bytes_ = bp.vmem_bytes()
+        assert bytes_ < 16 * 1024 * 1024
+        assert 20_000 < bytes_ < 100_000
+
+    def test_footprint_scales_with_tile(self):
+        assert mlpk.vmem_bytes(batch_tile=256) > mlpk.vmem_bytes(batch_tile=128)
+        assert bp.vmem_bytes(tile=2048) > bp.vmem_bytes(tile=1024)
+
+
+class TestAotDeterminism:
+    def test_hlo_text_is_deterministic(self):
+        name, fn, specs = aot.entries()[0]
+        a = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+        b = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+        assert a == b, name
+
+    def test_params_init_deterministic(self):
+        a = model.init_params(seed=0)
+        b = model.init_params(seed=0)
+        for x, y in zip(a, b):
+            assert (x == y).all()
+        c = model.init_params(seed=1)
+        assert not (a[0] == c[0]).all()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="run `make artifacts` first",
+)
+class TestManifestConsistency:
+    def _manifest(self):
+        path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+        with open(path) as fh:
+            return json.load(fh)
+
+    def test_manifest_matches_entries(self):
+        m = self._manifest()
+        names = {e[0] for e in aot.entries()}
+        assert set(m["artifacts"].keys()) == names
+
+    def test_manifest_dims_match_model(self):
+        m = self._manifest()
+        assert m["feature_dim"] == model.FEATURE_DIM
+        assert m["hidden_dim"] == model.HIDDEN_DIM
+        assert m["max_kernels"] == bp.MAX_KERNELS
+
+    def test_every_artifact_file_exists_and_is_hlo(self):
+        m = self._manifest()
+        base = os.path.join(os.path.dirname(__file__), "../../artifacts")
+        for name, entry in m["artifacts"].items():
+            path = os.path.join(base, entry["file"])
+            assert os.path.exists(path), name
+            with open(path) as fh:
+                assert fh.read(9) == "HloModule", name

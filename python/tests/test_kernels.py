@@ -1,0 +1,187 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Every Pallas kernel must match its pure-jnp oracle to float32 tolerance
+across a sweep of shapes and value distributions (hypothesis when
+available, a fixed grid otherwise).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import batch_predict as bp
+from compile.kernels import lstsq as lsq
+from compile.kernels import mlp as mlpk
+from compile.kernels import ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+RNG = np.random.default_rng(42)
+
+
+def _mlp_inputs(b, f=model.FEATURE_DIM, h=model.HIDDEN_DIM, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, f)).astype(np.float32)
+    w1 = rng.normal(scale=0.3, size=(f, h)).astype(np.float32)
+    b1 = rng.normal(scale=0.1, size=(h,)).astype(np.float32)
+    w2 = rng.normal(scale=0.1, size=(h, h)).astype(np.float32)
+    b2 = rng.normal(scale=0.1, size=(h,)).astype(np.float32)
+    w3 = rng.normal(scale=0.3, size=(h, 1)).astype(np.float32)
+    b3 = rng.normal(scale=0.1, size=(1,)).astype(np.float32)
+    return x, w1, b1, w2, b2, w3, b3
+
+
+class TestMlpKernel:
+    @pytest.mark.parametrize("b", [128, 256, 1024])
+    def test_matches_ref(self, b):
+        args = _mlp_inputs(b, seed=b)
+        got = mlpk.mlp_forward(*args)
+        want = ref.mlp_forward_ref(*args)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_output_in_unit_interval(self):
+        args = _mlp_inputs(256, seed=7)
+        out = np.asarray(mlpk.mlp_forward(*args))
+        assert np.all(out > 0.0) and np.all(out < 1.0)
+
+    def test_rejects_unaligned_batch(self):
+        args = _mlp_inputs(128)
+        bad = (np.zeros((100, model.FEATURE_DIM), np.float32),) + args[1:]
+        with pytest.raises(AssertionError):
+            mlpk.mlp_forward(*bad)
+
+    @pytest.mark.parametrize("f", [8, 16, 32])
+    def test_feature_dims(self, f):
+        args = _mlp_inputs(128, f=f, seed=f)
+        got = mlpk.mlp_forward(*args)
+        want = ref.mlp_forward_ref(*args)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_deterministic(self):
+        args = _mlp_inputs(128, seed=3)
+        a = np.asarray(mlpk.mlp_forward(*args))
+        b = np.asarray(mlpk.mlp_forward(*args))
+        np.testing.assert_array_equal(a, b)
+
+    if HAVE_HYPOTHESIS:
+
+        @settings(max_examples=20, deadline=None)
+        @given(
+            b_mult=st.integers(min_value=1, max_value=6),
+            f=st.integers(min_value=4, max_value=48),
+            seed=st.integers(min_value=0, max_value=2**31 - 1),
+        )
+        def test_hypothesis_sweep(self, b_mult, f, seed):
+            args = _mlp_inputs(128 * b_mult, f=f, seed=seed)
+            got = mlpk.mlp_forward(*args)
+            want = ref.mlp_forward_ref(*args)
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def _predict_inputs(b, nk=bp.MAX_KERNELS, seed=0):
+    rng = np.random.default_rng(seed)
+    # Monotone-ish saturating throughput rows, like real kernels.
+    base = rng.uniform(0.5, 4.0, size=(nk, 1)).astype(np.float32)
+    ramp = 1.0 / (1.0 + 64.0 / (2.0 ** np.arange(ref.N_K_POINTS))[None, :])
+    table = (base * (0.2 + ramp)).astype(np.float32)
+    base_dur = rng.uniform(1e-5, 1e-2, size=(nk,)).astype(np.float32)
+    k_vals = rng.uniform(1.0, 10000.0, size=(b,)).astype(np.float32)
+    kids = rng.integers(0, nk, size=(b,), dtype=np.int32)
+    scale = rng.uniform(0.1, 8.0, size=(b,)).astype(np.float32)
+    return table, base_dur, k_vals, kids, scale
+
+
+class TestBatchPredictKernel:
+    @pytest.mark.parametrize("b", [1024, 4096])
+    def test_matches_ref(self, b):
+        args = _predict_inputs(b, seed=b)
+        got = bp.batch_predict(*args)
+        want = ref.batch_predict_ref(*args)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-9)
+
+    def test_exact_grid_points(self):
+        """At K exactly on the grid, prediction must hit the table value."""
+        table, base_dur, _, _, _ = _predict_inputs(1024, seed=1)
+        k_grid = 32.0 * 2.0 ** np.arange(ref.N_K_POINTS - 1)
+        k_vals = np.tile(k_grid, 128).astype(np.float32)
+        kids = np.repeat(np.arange(128, dtype=np.int32), 8)
+        scale = np.ones(1024, np.float32)
+        got = np.asarray(bp.batch_predict(table, base_dur, k_vals, kids, scale))
+        thr = table[kids, np.log2(k_vals / 32.0).astype(int)]
+        org_thr = table[kids, -1]
+        want = base_dur[kids] * (k_vals / 8192.0) * (org_thr / thr)
+        np.testing.assert_allclose(got, want, rtol=1e-4)
+
+    def test_k_clamped_above_grid(self):
+        """K > 8192 behaves as K = 8192 × linear duration extension? No —
+        the kernel clamps K to the grid for interpolation; Eq. 1's K factor
+        uses the clamped K too, matching ref."""
+        args = list(_predict_inputs(1024, seed=2))
+        args[2] = np.full(1024, 20000.0, np.float32)
+        got = bp.batch_predict(*args)
+        want = ref.batch_predict_ref(*args)
+        np.testing.assert_allclose(got, want, rtol=1e-4)
+
+    def test_monotone_in_scale(self):
+        args = list(_predict_inputs(1024, seed=3))
+        lo = np.asarray(bp.batch_predict(*args))
+        args[4] = args[4] * 2.0
+        hi = np.asarray(bp.batch_predict(*args))
+        assert np.all(hi > lo)
+
+    if HAVE_HYPOTHESIS:
+
+        @settings(max_examples=20, deadline=None)
+        @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+        def test_hypothesis_sweep(self, seed):
+            args = _predict_inputs(1024, seed=seed)
+            got = bp.batch_predict(*args)
+            want = ref.batch_predict_ref(*args)
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-9)
+
+
+class TestLstsqKernel:
+    @pytest.mark.parametrize("n,p", [(256, 4), (1024, 8), (4096, 8)])
+    def test_recovers_coefficients(self, n, p):
+        rng = np.random.default_rng(n + p)
+        x = rng.normal(size=(n, p)).astype(np.float32)
+        true_c = rng.normal(size=(p,)).astype(np.float32)
+        y = x @ true_c
+        got = np.asarray(lsq.lstsq(jnp.asarray(x), jnp.asarray(y)))
+        np.testing.assert_allclose(got, true_c, rtol=1e-3, atol=1e-3)
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(1024, 8)).astype(np.float32)
+        y = rng.normal(size=(1024,)).astype(np.float32)
+        got = np.asarray(lsq.lstsq(jnp.asarray(x), jnp.asarray(y)))
+        want = np.asarray(ref.lstsq_ref(jnp.asarray(x), jnp.asarray(y)))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    def test_gram_matches_dense(self):
+        rng = np.random.default_rng(5)
+        x = rng.normal(size=(512, 8)).astype(np.float32)
+        y = rng.normal(size=(512,)).astype(np.float32)
+        xtx, xty = lsq.gram(jnp.asarray(x), jnp.asarray(y))
+        np.testing.assert_allclose(np.asarray(xtx), x.T @ x, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(xty), x.T @ y, rtol=1e-4, atol=1e-3)
+
+    def test_zero_padding_invariance(self):
+        """Zero rows contribute nothing: padded fit == unpadded fit."""
+        rng = np.random.default_rng(6)
+        x = rng.normal(size=(512, 8)).astype(np.float32)
+        y = rng.normal(size=(512,)).astype(np.float32)
+        xp = np.zeros((1024, 8), np.float32)
+        yp = np.zeros((1024,), np.float32)
+        xp[:512], yp[:512] = x, y
+        a = np.asarray(lsq.lstsq(jnp.asarray(x), jnp.asarray(y)))
+        b = np.asarray(lsq.lstsq(jnp.asarray(xp), jnp.asarray(yp)))
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)

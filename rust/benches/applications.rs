@@ -1,0 +1,16 @@
+//! Bench: regenerate **§IV-D1** — the Qwen3-4B partitioning case study
+//! (PM2Lat vs NeuSight plans, bottleneck estimates, 100-request pipeline).
+
+use pm2lat::experiments::{apps_exp, common, Lab, Scale};
+use pm2lat::runtime::Runtime;
+use pm2lat::util::bench::Bench;
+
+fn main() {
+    let runtime = Runtime::open_default().expect("run `make artifacts` first");
+    let bench = Bench::new();
+    bench.section("§IV-D1: distributed-inference partitioning");
+    let mut lab = Lab::build(&runtime, Scale::from_env(), false).expect("lab");
+    let report = apps_exp::partition_experiment(&mut lab).expect("partition");
+    println!("{report}");
+    common::write_result("partition.md", &report).unwrap();
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate **Table VI** (PM2Lat on Triton / FlashAttention /
+//! CUTLASS-attention kernels, with architecture gates).
+
+use pm2lat::experiments::{common, tables, Lab, Scale};
+use pm2lat::runtime::Runtime;
+use pm2lat::util::bench::Bench;
+
+fn main() {
+    let runtime = Runtime::open_default().expect("run `make artifacts` first");
+    let bench = Bench::new();
+    bench.section("Table VI: custom kernels");
+    let mut lab = Lab::build(&runtime, Scale::from_env(), true).expect("lab");
+    let t6 = tables::table6(&mut lab).expect("table6");
+    println!("{t6}");
+    common::write_result("table6.md", &t6).unwrap();
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate **Fig 5** (binned worst-case MatMul error) and
+//! **Figs 6–9** (error distribution histograms for 3060M/5070 FP32 and
+//! L4/A100 BF16).
+
+use pm2lat::experiments::{common, figures, tables, Lab, Scale};
+use pm2lat::runtime::Runtime;
+use pm2lat::util::bench::Bench;
+
+fn main() {
+    let runtime = Runtime::open_default().expect("run `make artifacts` first");
+    let bench = Bench::new();
+    bench.section("Figs 5–9: error structure");
+    let mut lab = Lab::build(&runtime, Scale::from_env(), false).expect("lab");
+    let t2 = tables::table2(&mut lab).expect("table2");
+    let f5 = figures::fig5(&t2.records);
+    println!("{f5}");
+    common::write_result("fig5.csv", &f5).unwrap();
+    let f69 = figures::figs_6_9(&t2.records);
+    println!("{f69}");
+    common::write_result("figs_6_9.csv", &f69).unwrap();
+}

@@ -1,0 +1,35 @@
+//! Bench: regenerate **Table II** (per-layer average relative error,
+//! PM2Lat vs NeuSight across dtypes × devices × layer types) and time the
+//! per-prediction cost of both predictors.
+//!
+//! `PM2LAT_FULL=1 cargo bench --bench layer_prediction` runs the paper's
+//! 1000-samples-per-cell scale.
+
+use pm2lat::experiments::{common, tables, Lab, Scale};
+use pm2lat::gpusim::Gpu;
+use pm2lat::ops::{DType, GemmOp, Op};
+use pm2lat::runtime::Runtime;
+use pm2lat::util::bench::{black_box, Bench};
+
+fn main() {
+    let runtime = Runtime::open_default().expect("run `make artifacts` first");
+    let mut bench = Bench::new();
+    bench.section("Table II: per-layer prediction error");
+    let scale = Scale::from_env();
+    let mut lab = Lab::build(&runtime, scale, false).expect("lab");
+    let t2 = tables::table2(&mut lab).expect("table2");
+    println!("{}", t2.markdown);
+    common::write_result("table2.md", &t2.markdown).unwrap();
+
+    bench.section("per-prediction cost");
+    let gpu = Gpu::by_name("a100").unwrap();
+    let pl = lab.pl("a100", DType::F32).unwrap();
+    let op = Op::Gemm(GemmOp::mm(1024, 2048, 4096, DType::F32));
+    bench.run("pm2lat scalar predict (1 op)", || {
+        black_box(pl.predict(&gpu, &op));
+    });
+    let ns = lab.ns(DType::F32);
+    bench.run("neusight predict (1 op, PJRT b128)", || {
+        black_box(ns.predict(&gpu.spec, &op).unwrap());
+    });
+}

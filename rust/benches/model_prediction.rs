@@ -1,0 +1,32 @@
+//! Bench: regenerate **Tables IV & V** (model-wise signed error across
+//! the Table III zoo × batch sizes × devices) and time whole-model
+//! prediction.
+
+use pm2lat::experiments::{common, tables, Lab, Scale};
+use pm2lat::models::zoo;
+use pm2lat::ops::DType;
+use pm2lat::runtime::Runtime;
+use pm2lat::util::bench::{black_box, Bench};
+
+fn main() {
+    let runtime = Runtime::open_default().expect("run `make artifacts` first");
+    let mut bench = Bench::new();
+    bench.section("Tables IV & V: model-wise prediction error");
+    let mut lab = Lab::build(&runtime, Scale::from_env(), false).expect("lab");
+    let t45 = tables::table45(&mut lab).expect("table45");
+    println!("{t45}");
+    common::write_result("table45.md", &t45).unwrap();
+
+    bench.section("whole-model prediction cost");
+    let cfg = zoo::gpt2_large();
+    let trace = cfg.trace(8, 512);
+    let gpu = lab.gpu("a100");
+    let pl = lab.pl("a100", DType::F32).unwrap();
+    bench.run("pm2lat predict gpt2-large BS=8 (full trace)", || {
+        black_box(pl.predict_trace(gpu, &trace));
+    });
+    let ns = lab.ns(DType::F32);
+    bench.run("neusight predict gpt2-large BS=8 (batched)", || {
+        black_box(ns.predict_trace(&gpu.spec, &trace).unwrap());
+    });
+}

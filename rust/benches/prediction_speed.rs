@@ -1,0 +1,41 @@
+//! Bench: regenerate **§IV-D2** — NAS preprocessing speed: PM2Lat scalar
+//! (CPU) and Pallas/PJRT-batched paths vs NeuSight per-query and batched,
+//! with the 400M-configuration extrapolation. Also measures the raw hot
+//! paths for the §Perf log.
+
+use pm2lat::experiments::{apps_exp, common, Lab, Scale};
+use pm2lat::gpusim::Gpu;
+use pm2lat::ops::{DType, GemmOp};
+use pm2lat::runtime::Runtime;
+use pm2lat::util::bench::{black_box, Bench};
+
+fn main() {
+    let runtime = Runtime::open_default().expect("run `make artifacts` first");
+    let mut bench = Bench::new();
+    bench.section("§IV-D2: NAS preprocessing speed");
+    let mut lab = Lab::build(&runtime, Scale::from_env(), false).expect("lab");
+    let n = if std::env::var("PM2LAT_FULL").map(|v| v == "1").unwrap_or(false) {
+        5000
+    } else {
+        1000
+    };
+    let report = apps_exp::nas_speed_experiment(&mut lab, n).expect("nas");
+    println!("{report}");
+    common::write_result("nas_speed.md", &report).unwrap();
+
+    bench.section("hot-path micro benches (§Perf)");
+    let gpu = Gpu::by_name("a100").unwrap();
+    let pl = lab.pl("a100", DType::F32).unwrap();
+    let table = pl.gemm_table(DType::F32).unwrap();
+    let op = GemmOp::mm(777, 1234, 4321, DType::F32);
+    bench.run("heuristic + Eq1/2 interp (scalar predict)", || {
+        black_box(table.predict(&gpu, &op));
+    });
+    let cfg = pm2lat::gpusim::heuristic::algo_get_heuristic(&gpu.spec, &op).unwrap();
+    bench.run("Eq1/2 interp only (config known)", || {
+        black_box(table.predict_with_config(&gpu, &op, cfg));
+    });
+    bench.run("heuristic only (config search)", || {
+        black_box(pm2lat::gpusim::heuristic::algo_get_heuristic(&gpu.spec, &op));
+    });
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate **Figs 3 & 4** — duration vs K (linear at fixed
+//! waves) and throughput vs K (rational saturation) for fixed kernel
+//! configurations at a locked clock.
+
+use pm2lat::experiments::{common, figures};
+use pm2lat::util::bench::Bench;
+
+fn main() {
+    let bench = Bench::new();
+    bench.section("Figs 3 & 4: duration / throughput vs K");
+    for (device, kernel) in [("a100", 9usize), ("rtx3060m", 3), ("l4", 6)] {
+        let out = figures::figs_3_4(device, kernel).expect("figs34");
+        println!("{out}");
+        common::write_result(&format!("figs_3_4_{device}_k{kernel}.csv"), &out).unwrap();
+    }
+}

@@ -1,0 +1,7 @@
+//! # apps — the two §IV-D applications
+//!
+//! [`partition`]: pipeline partitioning of Qwen3-4B across heterogeneous
+//! edge devices; [`nas`]: NAS-preprocessing latency caching at scale.
+
+pub mod nas;
+pub mod partition;

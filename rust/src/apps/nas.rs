@@ -1,0 +1,152 @@
+//! Application §IV-D2: NAS preprocessing — predict-and-cache latencies
+//! for enormous configuration spaces. The paper's headline: PM2Lat at
+//! 0.045 ms/prediction (CPU) vs NeuSight at 6.5 ms/prediction (GPU); the
+//! 400M-configuration MatMul space takes ~5 hours vs ~30 days.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::gpusim::Gpu;
+use crate::ops::{DType, GemmOp};
+use crate::pm2lat::GemmTable;
+use crate::util::prng::Rng;
+
+/// The paper's example NAS space: 14 feature-dimension choices, batch
+/// 1..256, sequence 64..8192 — "the number of configurations for just one
+/// MatMul layer exceeds 400 million possibilities".
+pub const FEATURE_CHOICES: [usize; 14] =
+    [128, 256, 384, 512, 640, 768, 1024, 1280, 1536, 2048, 2560, 3072, 4096, 5120];
+
+pub fn space_size() -> u64 {
+    // features_in × features_out × batch × seq values ≈ 4.07e8 — the
+    // paper's ">400 million possibilities for just one MatMul layer".
+    let b = 256u64;
+    let s = 8192u64 - 64 + 1;
+    14 * 14 * b * s
+}
+
+/// Sample `n` NAS MatMul configurations (M = batch·seq, N = out-features,
+/// K = in-features).
+pub fn sample_configs(n: usize, dtype: DType, seed: u64) -> Vec<GemmOp> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let f_in = *rng.choice(&FEATURE_CHOICES);
+            let f_out = *rng.choice(&FEATURE_CHOICES);
+            let batch = rng.int_range(1, 256) as usize;
+            let seq = rng.log_uniform_int(64, 8192) as usize;
+            GemmOp::linear((batch * seq).min(1 << 21), f_out, f_in, dtype)
+        })
+        .collect()
+}
+
+/// A latency cache: the precomputed lookup NAS uses at search time.
+#[derive(Default)]
+pub struct LatencyCache {
+    map: HashMap<(usize, usize, usize, u8), f64>,
+}
+
+impl LatencyCache {
+    fn key(op: &GemmOp) -> (usize, usize, usize, u8) {
+        (op.m, op.n, op.k, matches!(op.dtype, DType::Bf16) as u8)
+    }
+    pub fn insert(&mut self, op: &GemmOp, latency: f64) {
+        self.map.insert(Self::key(op), latency);
+    }
+    pub fn get(&self, op: &GemmOp) -> Option<f64> {
+        self.map.get(&Self::key(op)).copied()
+    }
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Timing report for a preprocessing run.
+#[derive(Clone, Debug)]
+pub struct SpeedReport {
+    pub n_predictions: usize,
+    pub total_s: f64,
+    pub ms_per_prediction: f64,
+    /// Extrapolated wall time for the full 400M-config space.
+    pub full_space_hours: f64,
+}
+
+impl SpeedReport {
+    pub fn from_run(n: usize, total_s: f64) -> SpeedReport {
+        let ms = total_s * 1e3 / n as f64;
+        SpeedReport {
+            n_predictions: n,
+            total_s,
+            ms_per_prediction: ms,
+            full_space_hours: ms * 4e8 / 1e3 / 3600.0,
+        }
+    }
+}
+
+/// Fill a cache with PM2Lat scalar-path predictions, timing the run.
+pub fn preprocess_pm2lat(
+    gpu: &Gpu,
+    table: &GemmTable,
+    configs: &[GemmOp],
+    cache: &mut LatencyCache,
+) -> SpeedReport {
+    let t0 = Instant::now();
+    for op in configs {
+        if let Some(lat) = table.predict(gpu, op) {
+            cache.insert(op, lat);
+        }
+    }
+    SpeedReport::from_run(configs.len(), t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pm2lat::gemm_model;
+    use crate::profiler::ProfileSpec;
+
+    #[test]
+    fn space_exceeds_400m() {
+        assert!(space_size() > 4e8 as u64);
+    }
+
+    #[test]
+    fn sampled_configs_in_domain() {
+        let cfgs = sample_configs(100, DType::F32, 1);
+        assert_eq!(cfgs.len(), 100);
+        for c in &cfgs {
+            assert!(FEATURE_CHOICES.contains(&c.k));
+            assert!(FEATURE_CHOICES.contains(&c.n));
+            assert!(c.m >= 64);
+        }
+    }
+
+    #[test]
+    fn cache_roundtrip_and_speed() {
+        let mut gpu = Gpu::by_name("a100").unwrap();
+        let table =
+            gemm_model::collect(&mut gpu, DType::F32, &ProfileSpec::quick()).unwrap();
+        gpu.reset();
+        let configs = sample_configs(500, DType::F32, 2);
+        let mut cache = LatencyCache::default();
+        let report = preprocess_pm2lat(&gpu, &table, &configs, &mut cache);
+        assert!(cache.len() > 450, "cache {} entries", cache.len());
+        assert_eq!(cache.get(&configs[0]), cache.get(&configs[0]));
+        // The paper's headline: well under a millisecond per prediction.
+        assert!(
+            report.ms_per_prediction < 1.0,
+            "PM2Lat too slow: {} ms/pred",
+            report.ms_per_prediction
+        );
+        assert!(report.full_space_hours < 120.0);
+    }
+
+    #[test]
+    fn deterministic_sampling() {
+        assert_eq!(sample_configs(10, DType::F32, 3), sample_configs(10, DType::F32, 3));
+        assert_ne!(sample_configs(10, DType::F32, 3), sample_configs(10, DType::F32, 4));
+    }
+}

@@ -1,0 +1,86 @@
+//! Service metrics: request counts, batch sizes, per-call service time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub pjrt_calls: AtomicU64,
+    pub unsupported: AtomicU64,
+    service_ns: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_batch(&self, n_requests: usize, pjrt_calls: usize, service: std::time::Duration) {
+        self.requests.fetch_add(n_requests as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.pjrt_calls.fetch_add(pjrt_calls as u64, Ordering::Relaxed);
+        self.service_ns.lock().unwrap().push(service.as_nanos() as u64);
+    }
+
+    pub fn record_unsupported(&self, n: usize) {
+        self.unsupported.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Mean service time per *batch* in microseconds.
+    pub fn mean_batch_us(&self) -> f64 {
+        let v = self.service_ns.lock().unwrap();
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.iter().sum::<u64>() as f64 / v.len() as f64 / 1e3
+    }
+
+    /// Mean service time per *request* in microseconds.
+    pub fn mean_request_us(&self) -> f64 {
+        let reqs = self.requests.load(Ordering::Relaxed);
+        if reqs == 0 {
+            return 0.0;
+        }
+        let v = self.service_ns.lock().unwrap();
+        v.iter().sum::<u64>() as f64 / reqs as f64 / 1e3
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} pjrt_calls={} unsupported={} mean_batch={:.1}µs mean_req={:.2}µs",
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.pjrt_calls.load(Ordering::Relaxed),
+            self.unsupported.load(Ordering::Relaxed),
+            self.mean_batch_us(),
+            self.mean_request_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn accumulates() {
+        let m = Metrics::new();
+        m.record_batch(100, 2, Duration::from_micros(500));
+        m.record_batch(50, 1, Duration::from_micros(250));
+        assert_eq!(m.requests.load(Ordering::Relaxed), 150);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(m.pjrt_calls.load(Ordering::Relaxed), 3);
+        assert!((m.mean_batch_us() - 375.0).abs() < 1.0);
+        assert!((m.mean_request_us() - 5.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn empty_metrics_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_batch_us(), 0.0);
+        assert_eq!(m.mean_request_us(), 0.0);
+    }
+}

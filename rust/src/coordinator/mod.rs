@@ -1,0 +1,15 @@
+//! # coordinator — the prediction service (L3)
+//!
+//! A deployment-shaped front end over the predictors: clients submit
+//! prediction requests (op + device + predictor kind); the coordinator
+//! routes per device, *batches* NeuSight MLP queries and PM2Lat GEMM
+//! queries so each PJRT executable launch is amortized over up to 1024
+//! lanes, fans independent device groups across a thread pool, and
+//! exposes service metrics. This is the machinery the NAS-preprocessing
+//! application (§IV-D2) runs on at millions-of-queries scale.
+
+pub mod metrics;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use service::{Coordinator, PredictorKind, Request};

@@ -1,0 +1,261 @@
+//! The prediction service: device-keyed routing + request batching over
+//! the PJRT-backed predictors.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::gpusim::Gpu;
+use crate::neusight::NeuSight;
+use crate::ops::{DType, GemmOp, Op};
+use crate::pm2lat::batch::BatchPredictor;
+use crate::pm2lat::Pm2Lat;
+use crate::runtime::Runtime;
+
+use super::metrics::Metrics;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PredictorKind {
+    Pm2Lat,
+    /// PM2Lat through the batched Pallas/PJRT artifact (GEMM only; other
+    /// ops fall back to the scalar path).
+    Pm2LatBatched,
+    NeuSight,
+}
+
+/// One prediction request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub device: String,
+    pub op: Op,
+    pub kind: PredictorKind,
+}
+
+/// The service. Owns the per-device simulated GPUs (standing in for the
+/// target-device daemons that answer heuristic/occupancy queries), the
+/// fitted PM2Lat state, and the trained NeuSight sessions.
+pub struct Coordinator<'rt> {
+    runtime: &'rt Runtime,
+    gpus: HashMap<String, Gpu>,
+    pm2lat: HashMap<String, Pm2Lat>,
+    neusight: HashMap<DType, NeuSight<'rt>>,
+    batchers: HashMap<String, BatchPredictor<'rt>>,
+    pub metrics: Metrics,
+}
+
+impl<'rt> Coordinator<'rt> {
+    pub fn new(runtime: &'rt Runtime) -> Coordinator<'rt> {
+        Coordinator {
+            runtime,
+            gpus: HashMap::new(),
+            pm2lat: HashMap::new(),
+            neusight: HashMap::new(),
+            batchers: HashMap::new(),
+            metrics: Metrics::new(),
+        }
+    }
+
+    /// Register a device with its fitted PM2Lat state.
+    pub fn register_device(&mut self, gpu: Gpu, pm2lat: Pm2Lat) -> Result<()> {
+        let name = gpu.spec.name.to_string();
+        // Pre-build the batched predictor when an F32 table exists.
+        if let Some(table) = pm2lat.gemm_table(DType::F32) {
+            if let Ok(bp) = BatchPredictor::new(self.runtime, table, 1024) {
+                self.batchers.insert(name.clone(), bp);
+            }
+        }
+        self.pm2lat.insert(name.clone(), pm2lat);
+        self.gpus.insert(name, gpu);
+        Ok(())
+    }
+
+    pub fn register_neusight(&mut self, ns: NeuSight<'rt>) {
+        self.neusight.insert(ns.dtype, ns);
+    }
+
+    pub fn devices(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.gpus.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Serve a batch of requests; responses in request order.
+    pub fn submit(&self, requests: &[Request]) -> Result<Vec<Option<f64>>> {
+        let t0 = Instant::now();
+        let mut out = vec![None; requests.len()];
+        let mut pjrt_calls = 0usize;
+        // Group by (device, kind) to batch PJRT-backed paths.
+        let mut groups: HashMap<(String, PredictorKind), Vec<usize>> = HashMap::new();
+        for (i, r) in requests.iter().enumerate() {
+            groups
+                .entry((r.device.clone(), r.kind))
+                .or_default()
+                .push(i);
+        }
+        for ((device, kind), idxs) in groups {
+            let gpu = self
+                .gpus
+                .get(&device)
+                .ok_or_else(|| anyhow!("unknown device {device}"))?;
+            match kind {
+                PredictorKind::Pm2Lat => {
+                    let pl = self
+                        .pm2lat
+                        .get(&device)
+                        .ok_or_else(|| anyhow!("no pm2lat for {device}"))?;
+                    for i in idxs {
+                        out[i] = pl.predict(gpu, &requests[i].op);
+                    }
+                }
+                PredictorKind::Pm2LatBatched => {
+                    let pl = self.pm2lat.get(&device).ok_or_else(|| anyhow!("no pm2lat"))?;
+                    // Split GEMM F32 lanes from everything else.
+                    let mut gemm_idx: Vec<usize> = Vec::new();
+                    let mut gemm_ops: Vec<GemmOp> = Vec::new();
+                    for &i in &idxs {
+                        if let Op::Gemm(g) = requests[i].op {
+                            if g.dtype == DType::F32 && self.batchers.contains_key(&device) {
+                                gemm_idx.push(i);
+                                gemm_ops.push(g);
+                                continue;
+                            }
+                        }
+                        out[i] = pl.predict(gpu, &requests[i].op);
+                    }
+                    if !gemm_ops.is_empty() {
+                        let bp = &self.batchers[&device];
+                        let table = pl.gemm_table(DType::F32).unwrap();
+                        for (chunk_i, chunk) in gemm_ops.chunks(bp.batch).enumerate() {
+                            let res = bp.predict(gpu, table, chunk)?;
+                            pjrt_calls += 1;
+                            for (j, v) in res.into_iter().enumerate() {
+                                out[gemm_idx[chunk_i * bp.batch + j]] = v;
+                            }
+                        }
+                    }
+                }
+                PredictorKind::NeuSight => {
+                    // Group further by dtype → one batched MLP call each.
+                    let mut by_dtype: HashMap<DType, Vec<usize>> = HashMap::new();
+                    for &i in &idxs {
+                        by_dtype.entry(requests[i].op.dtype()).or_default().push(i);
+                    }
+                    for (dt, sub) in by_dtype {
+                        let Some(ns) = self.neusight.get(&dt) else {
+                            self.metrics.record_unsupported(sub.len());
+                            continue;
+                        };
+                        let ops: Vec<Op> = sub.iter().map(|&i| requests[i].op).collect();
+                        let res = ns.predict_batch(&gpu.spec, &ops)?;
+                        pjrt_calls += ops.len().div_ceil(1024);
+                        for (j, v) in res.into_iter().enumerate() {
+                            out[sub[j]] = v;
+                        }
+                    }
+                }
+            }
+        }
+        self.metrics.record_batch(requests.len(), pjrt_calls, t0.elapsed());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::ProfileSpec;
+
+    fn coordinator(rt: &Runtime) -> Coordinator<'_> {
+        let mut c = Coordinator::new(rt);
+        for dev in ["a100", "t4"] {
+            let mut gpu = Gpu::by_name(dev).unwrap();
+            let pl = Pm2Lat::build_dtypes(
+                &mut gpu,
+                &ProfileSpec::quick(),
+                &[DType::F32],
+                false,
+            );
+            gpu.reset();
+            c.register_device(gpu, pl).unwrap();
+        }
+        c
+    }
+
+    #[test]
+    fn routes_by_device_and_answers_in_order() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let c = coordinator(&rt);
+        let reqs: Vec<Request> = (0..40)
+            .map(|i| Request {
+                device: if i % 2 == 0 { "a100" } else { "t4" }.to_string(),
+                op: Op::Gemm(GemmOp::mm(2048 + i, 2048, 2048, DType::F32)),
+                kind: PredictorKind::Pm2Lat,
+            })
+            .collect();
+        let out = c.submit(&reqs).unwrap();
+        assert_eq!(out.len(), 40);
+        assert!(out.iter().all(|o| o.is_some()));
+        // A100 is faster than T4 on aggregate (tiny ops are launch-bound,
+        // so compare sums, not single pairs).
+        let a100: f64 = out.iter().step_by(2).map(|o| o.unwrap()).sum();
+        let t4: f64 = out.iter().skip(1).step_by(2).map(|o| o.unwrap()).sum();
+        assert!(a100 < t4, "a100 {a100} vs t4 {t4}");
+        assert_eq!(c.metrics.requests.load(std::sync::atomic::Ordering::Relaxed), 40);
+    }
+
+    #[test]
+    fn batched_path_matches_scalar_path() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let c = coordinator(&rt);
+        let mut rng = crate::util::prng::Rng::new(21);
+        let ops: Vec<Op> = (0..100)
+            .map(|_| {
+                Op::Gemm(GemmOp::mm(
+                    rng.log_uniform_int(64, 4096) as usize,
+                    rng.log_uniform_int(64, 4096) as usize,
+                    rng.log_uniform_int(64, 8192) as usize,
+                    DType::F32,
+                ))
+            })
+            .collect();
+        let scalar: Vec<Request> = ops
+            .iter()
+            .map(|op| Request { device: "a100".into(), op: *op, kind: PredictorKind::Pm2Lat })
+            .collect();
+        let batched: Vec<Request> = ops
+            .iter()
+            .map(|op| Request { device: "a100".into(), op: *op, kind: PredictorKind::Pm2LatBatched })
+            .collect();
+        let a = c.submit(&scalar).unwrap();
+        let b = c.submit(&batched).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            let (x, y) = (x.unwrap(), y.unwrap());
+            assert!((x - y).abs() / x < 2e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn unknown_device_is_error() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let c = coordinator(&rt);
+        let req = Request {
+            device: "h100".into(),
+            op: Op::Gemm(GemmOp::mm(64, 64, 64, DType::F32)),
+            kind: PredictorKind::Pm2Lat,
+        };
+        assert!(c.submit(&[req]).is_err());
+    }
+
+    #[test]
+    fn unsupported_dtype_lane_is_none() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let c = coordinator(&rt);
+        let req = Request {
+            device: "t4".into(),
+            op: Op::Gemm(GemmOp::mm(64, 64, 64, DType::Bf16)),
+            kind: PredictorKind::Pm2Lat,
+        };
+        assert_eq!(c.submit(&[req]).unwrap(), vec![None]);
+    }
+}

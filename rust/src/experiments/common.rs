@@ -1,0 +1,230 @@
+//! Shared experiment infrastructure: predictor construction, sample
+//! generators matching the paper's §IV-A evaluation domains, and the
+//! result-directory plumbing.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::gpusim::{all_devices, Gpu};
+use crate::neusight::{NeuSight, TrainConfig};
+use crate::ops::{DType, GemmOp, Op, UtilKind, UtilOp};
+use crate::pm2lat::Pm2Lat;
+use crate::profiler::ProfileSpec;
+use crate::runtime::Runtime;
+use crate::util::prng::Rng;
+
+/// Experiment scale: sample counts per Table II cell etc.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub per_cell: usize,
+    pub ns_per_device: usize,
+    pub ns_epochs: usize,
+    pub model_reps: usize,
+    pub custom_per_kind: usize,
+}
+
+impl Scale {
+    /// Paper-scale: 1000 samples per layer cell.
+    pub fn full() -> Scale {
+        Scale { per_cell: 1000, ns_per_device: 200, ns_epochs: 60, model_reps: 25, custom_per_kind: 200 }
+    }
+    /// Bench-scale default (same structure, lighter counts).
+    pub fn quick() -> Scale {
+        Scale { per_cell: 120, ns_per_device: 120, ns_epochs: 40, model_reps: 5, custom_per_kind: 40 }
+    }
+    /// From the environment: PM2LAT_FULL=1 selects full scale.
+    pub fn from_env() -> Scale {
+        if std::env::var("PM2LAT_FULL").map(|v| v == "1").unwrap_or(false) {
+            Scale::full()
+        } else {
+            Scale::quick()
+        }
+    }
+}
+
+/// Where experiment outputs land.
+pub fn results_dir() -> PathBuf {
+    let dir = crate::runtime::default_artifacts_dir()
+        .map(|a| a.parent().unwrap().join("results"))
+        .unwrap_or_else(|| PathBuf::from("results"));
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+pub fn write_result(name: &str, content: &str) -> Result<PathBuf> {
+    let path = results_dir().join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+/// All predictors, built once and shared across experiments.
+pub struct Lab<'rt> {
+    pub runtime: &'rt Runtime,
+    pub gpus: HashMap<String, Gpu>,
+    pub pm2lat: HashMap<(String, DType), Pm2Lat>,
+    pub neusight: HashMap<DType, NeuSight<'rt>>,
+    pub scale: Scale,
+}
+
+impl<'rt> Lab<'rt> {
+    /// Build PM2Lat on every (device, dtype) and train NeuSight per dtype.
+    pub fn build(runtime: &'rt Runtime, scale: Scale, with_custom: bool) -> Result<Lab<'rt>> {
+        let mut gpus = HashMap::new();
+        let mut pm2lat = HashMap::new();
+        let spec = ProfileSpec::experiment();
+        for dev in all_devices() {
+            let mut gpu = Gpu::new(dev);
+            for dt in [DType::F32, DType::Bf16] {
+                if !gpu.spec.supports(dt) {
+                    continue;
+                }
+                let pl = Pm2Lat::build_dtypes(&mut gpu, &spec, &[dt], with_custom);
+                gpu.reset();
+                pm2lat.insert((gpu.spec.name.to_string(), dt), pl);
+            }
+            gpus.insert(gpu.spec.name.to_string(), gpu);
+        }
+        let mut neusight = HashMap::new();
+        for dt in [DType::F32, DType::Bf16] {
+            let mut train_gpus: Vec<Gpu> =
+                all_devices().into_iter().map(Gpu::new).collect();
+            let cfg = TrainConfig {
+                per_device: scale.ns_per_device,
+                epochs: scale.ns_epochs,
+                lr: 3e-3,
+                seed: 2024 + dt.bytes() as u64,
+            };
+            let ns = NeuSight::train_on(runtime, &mut train_gpus, dt, cfg, &ProfileSpec::quick())?;
+            neusight.insert(dt, ns);
+        }
+        Ok(Lab { runtime, gpus, pm2lat, neusight, scale })
+    }
+
+    pub fn gpu(&self, device: &str) -> &Gpu {
+        &self.gpus[device]
+    }
+    pub fn gpu_mut(&mut self, device: &str) -> &mut Gpu {
+        self.gpus.get_mut(device).unwrap()
+    }
+    pub fn pl(&self, device: &str, dt: DType) -> Option<&Pm2Lat> {
+        self.pm2lat.get(&(device.to_string(), dt))
+    }
+    pub fn ns(&self, dt: DType) -> &NeuSight<'rt> {
+        &self.neusight[&dt]
+    }
+}
+
+/// The Table II layer buckets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Bmm,
+    Mm,
+    Linear,
+    Softmax,
+    Vector,
+}
+
+impl LayerKind {
+    pub fn all() -> [LayerKind; 5] {
+        [LayerKind::Bmm, LayerKind::Mm, LayerKind::Linear, LayerKind::Softmax, LayerKind::Vector]
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerKind::Bmm => "BMM",
+            LayerKind::Mm => "MM",
+            LayerKind::Linear => "Linear",
+            LayerKind::Softmax => "SoftMax",
+            LayerKind::Vector => "Vector",
+        }
+    }
+
+    /// Sample an op from the paper's §IV-A evaluation domain.
+    pub fn sample(&self, rng: &mut Rng, dtype: DType) -> Op {
+        match self {
+            // "For BMM kernels, dimensions are capped at 1024."
+            LayerKind::Bmm => Op::Gemm(GemmOp::bmm(
+                rng.int_range(1, 64) as usize,
+                rng.log_uniform_int(16, 1024) as usize,
+                rng.log_uniform_int(16, 1024) as usize,
+                rng.log_uniform_int(16, 1024) as usize,
+                dtype,
+            )),
+            // "M and N dimensions go up to 8192, while K is limited to
+            // 20000."
+            LayerKind::Mm => Op::Gemm(GemmOp::mm(
+                rng.log_uniform_int(64, 8192) as usize,
+                rng.log_uniform_int(64, 8192) as usize,
+                rng.log_uniform_int(32, 20000) as usize,
+                dtype,
+            )),
+            LayerKind::Linear => Op::Gemm(GemmOp::linear(
+                rng.log_uniform_int(64, 8192) as usize,
+                rng.log_uniform_int(64, 8192) as usize,
+                rng.log_uniform_int(32, 20000) as usize,
+                dtype,
+            )),
+            // "Utility layers are tested with batch sizes and input
+            // features up to 16384."
+            LayerKind::Softmax => {
+                let (r, c) = util_shape(rng);
+                Op::Util(UtilOp::new(UtilKind::Softmax, r, c, dtype))
+            }
+            LayerKind::Vector => {
+                let kinds = [UtilKind::Relu, UtilKind::Gelu, UtilKind::Add, UtilKind::Mul, UtilKind::Dropout];
+                let (r, c) = util_shape(rng);
+                Op::Util(UtilOp::new(*rng.choice(&kinds), r, c, dtype))
+            }
+        }
+    }
+}
+
+fn util_shape(rng: &mut Rng) -> (usize, usize) {
+    loop {
+        let r = rng.log_uniform_int(16, 16384) as usize;
+        let c = rng.log_uniform_int(16, 16384) as usize;
+        if r * c >= 4096 {
+            return (r, c);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_domains_match_paper() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            if let Op::Gemm(g) = LayerKind::Bmm.sample(&mut rng, DType::F32) {
+                assert!(g.m <= 1024 && g.n <= 1024 && g.k <= 1024);
+                assert!(g.batch >= 1 && g.batch <= 64);
+            } else {
+                panic!("bmm must be gemm");
+            }
+            if let Op::Gemm(g) = LayerKind::Mm.sample(&mut rng, DType::F32) {
+                assert!(g.m <= 8192 && g.n <= 8192 && g.k <= 20000);
+            }
+        }
+    }
+
+    #[test]
+    fn vector_samples_are_elementwise() {
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            if let Op::Util(u) = LayerKind::Vector.sample(&mut rng, DType::F32) {
+                assert!(!u.kind.is_reduction());
+            } else {
+                panic!("vector must be util");
+            }
+        }
+    }
+
+    #[test]
+    fn scale_from_env_default_quick() {
+        std::env::remove_var("PM2LAT_FULL");
+        assert_eq!(Scale::from_env().per_cell, Scale::quick().per_cell);
+    }
+}

@@ -1,0 +1,200 @@
+//! Figure regenerators: Fig 3 (duration vs K), Fig 4 (throughput vs K),
+//! Fig 5 (binned max error), Figs 6–9 (error distributions). Output is
+//! CSV-in-markdown — the series the paper plots.
+
+use anyhow::Result;
+
+use crate::gpusim::{gemm::GemmConfig, FreqMode, Gpu};
+use crate::ops::{DType, GemmOp, Op};
+use crate::profiler::{self, ProfileSpec};
+use crate::util::stats::{binned_max, Histogram};
+
+use super::common::LayerKind;
+use super::tables::SampleRecord;
+
+/// Figs 3 & 4: duration and throughput vs K at a fixed kernel config and
+/// wave count, on a locked clock — the §III-C collection experiment.
+pub fn figs_3_4(device: &str, kernel_id: usize) -> Result<String> {
+    let mut gpu = Gpu::by_name(device).expect("device");
+    gpu.set_freq(FreqMode::Fixed(gpu.spec.max_freq_ghz * 0.7));
+    let kern = gpu.kernel(DType::F32, kernel_id).expect("kernel").clone();
+    let bpsm = crate::gpusim::gemm::blocks_per_sm(&gpu.spec, &kern).unwrap();
+    let capacity = bpsm * gpu.spec.sm_count;
+    // Fixed 2 complete waves; sweep K densely (powers of two + midpoints).
+    let blocks = capacity * 2;
+    let mut tm = (blocks as f64).sqrt() as usize;
+    while blocks % tm != 0 {
+        tm -= 1;
+    }
+    let (m, n) = (kern.tile_m * tm, kern.tile_n * (blocks / tm));
+    let mut out = String::from(
+        "### Fig 3 & 4: duration and throughput vs K (fixed waves, fixed config, locked clock)\n\n",
+    );
+    out.push_str(&format!(
+        "device={device} kernel={} tile={}x{}x{} waves=2 m={m} n={n}\n\n",
+        kernel_id, kern.tile_m, kern.tile_n, kern.tile_k
+    ));
+    out.push_str("k,duration_ms,throughput_tflops\n");
+    let spec = ProfileSpec::experiment();
+    let cfg = GemmConfig { kernel_id, splitk: 1 };
+    let mut k = 32usize;
+    while k <= 8192 {
+        for kk in [k, k + k / 2] {
+            if kk > 8192 {
+                break;
+            }
+            let op = GemmOp::mm(m, n, kk, DType::F32);
+            let meas =
+                profiler::measure_config(&mut gpu, &Op::Gemm(op), Some(cfg), &spec)?;
+            out.push_str(&format!(
+                "{kk},{:.4},{:.4}\n",
+                meas.mean_s * 1e3,
+                op.flops() / meas.mean_s / 1e12
+            ));
+        }
+        k *= 2;
+    }
+    Ok(out)
+}
+
+/// Fig 5: worst-case (per-bin max) relative error over the MatMul input
+/// domain, 100 bins keyed by log-FLOPs.
+pub fn fig5(records: &[SampleRecord]) -> String {
+    let mut out = String::from(
+        "### Fig 5: maximum relative error of MatMul kernels (100 bins over log-FLOPs)\n\n",
+    );
+    for dtype in [DType::F32, DType::Bf16] {
+        let matmul: Vec<&SampleRecord> = records
+            .iter()
+            .filter(|r| {
+                r.dtype == dtype
+                    && matches!(r.layer, LayerKind::Mm | LayerKind::Linear)
+                    && r.pl_err.is_finite()
+                    && r.ns_err.is_finite()
+            })
+            .collect();
+        if matmul.is_empty() {
+            continue;
+        }
+        let keys: Vec<f64> = matmul.iter().map(|r| r.log_flops).collect();
+        let pl: Vec<f64> = matmul.iter().map(|r| r.pl_err).collect();
+        let ns: Vec<f64> = matmul.iter().map(|r| r.ns_err).collect();
+        let pl_bins = binned_max(&keys, &pl, 100);
+        let ns_bins = binned_max(&keys, &ns, 100);
+        out.push_str(&format!("\n#### {}\nbin,pl_max_err,ns_max_err\n", dtype.name()));
+        for (i, (p, n)) in pl_bins.iter().zip(&ns_bins).enumerate() {
+            if p.is_nan() && n.is_nan() {
+                continue;
+            }
+            out.push_str(&format!("{i},{:.1},{:.1}\n", p, n));
+        }
+        let pl_worst = pl_bins.iter().cloned().filter(|v| !v.is_nan()).fold(0.0, f64::max);
+        let ns_worst = ns_bins.iter().cloned().filter(|v| !v.is_nan()).fold(0.0, f64::max);
+        out.push_str(&format!(
+            "# {} worst-case: PL {:.1}% vs NS {:.1}%\n",
+            dtype.name(),
+            pl_worst,
+            ns_worst
+        ));
+    }
+    out
+}
+
+/// Figs 6–9: error distribution histograms for the paper's four panels.
+pub fn figs_6_9(records: &[SampleRecord]) -> String {
+    let panels = [
+        ("Fig 6", "rtx3060m", DType::F32),
+        ("Fig 7", "rtx5070", DType::F32),
+        ("Fig 8", "l4", DType::Bf16),
+        ("Fig 9", "a100", DType::Bf16),
+    ];
+    let mut out = String::from("### Figs 6–9: error distributions (5%-wide bins, last bin = ≥95%)\n");
+    for (fig, device, dtype) in panels {
+        let sel: Vec<&SampleRecord> = records
+            .iter()
+            .filter(|r| r.device == device && r.dtype == dtype)
+            .collect();
+        if sel.is_empty() {
+            continue;
+        }
+        let mut pl_hist = Histogram::new(0.0, 100.0, 20);
+        let mut ns_hist = Histogram::new(0.0, 100.0, 20);
+        for r in &sel {
+            if r.pl_err.is_finite() {
+                pl_hist.add(r.pl_err);
+            }
+            if r.ns_err.is_finite() {
+                ns_hist.add(r.ns_err);
+            }
+        }
+        out.push_str(&format!(
+            "\n#### {fig}: {device} ({})\nbin_lo,pl_count,ns_count\n",
+            dtype.name()
+        ));
+        for i in 0..20 {
+            out.push_str(&format!(
+                "{},{},{}\n",
+                i * 5,
+                pl_hist.counts[i],
+                ns_hist.counts[i]
+            ));
+        }
+        out.push_str(&format!(
+            "# below 15%: PL {:.0}% of predictions, NS {:.0}%\n",
+            pl_hist.frac_below(15.0) * 100.0,
+            ns_hist.frac_below(15.0) * 100.0
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figs34_series_shapes() {
+        let out = figs_3_4("a100", 9).unwrap();
+        let lines: Vec<&str> = out
+            .lines()
+            .filter(|l| l.contains(',') && l.starts_with(|c: char| c.is_ascii_digit()))
+            .collect();
+        assert!(lines.len() > 10);
+        // Duration grows with K; throughput saturates.
+        let parse = |l: &str| -> (f64, f64, f64) {
+            let p: Vec<f64> = l.split(',').map(|v| v.parse().unwrap()).collect();
+            (p[0], p[1], p[2])
+        };
+        let first = parse(lines[0]);
+        let last = parse(lines[lines.len() - 1]);
+        assert!(last.1 > first.1 * 10.0, "duration must grow with K");
+        assert!(last.2 > first.2, "throughput must grow with K");
+    }
+
+    fn fake_records() -> Vec<SampleRecord> {
+        (0..500)
+            .map(|i| SampleRecord {
+                device: "rtx3060m".into(),
+                dtype: DType::F32,
+                layer: if i % 2 == 0 { LayerKind::Mm } else { LayerKind::Vector },
+                log_flops: 10.0 + (i as f64) / 20.0,
+                pl_err: (i % 13) as f64,
+                ns_err: (i % 37) as f64 * 3.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fig5_reports_worst_case_gap() {
+        let out = fig5(&fake_records());
+        assert!(out.contains("worst-case"));
+        assert!(out.contains("fp32"));
+    }
+
+    #[test]
+    fn figs69_histogram_counts_total() {
+        let out = figs_6_9(&fake_records());
+        assert!(out.contains("Fig 6"));
+        assert!(out.contains("below 15%"));
+    }
+}

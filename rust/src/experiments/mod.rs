@@ -1,0 +1,64 @@
+//! # experiments — regenerate every table and figure of the paper
+//!
+//! See DESIGN.md §7 for the experiment index. Each runner emits markdown
+//! (tables) or CSV series (figures) into `results/`.
+
+pub mod apps_exp;
+pub mod common;
+pub mod figures;
+pub mod tables;
+
+use anyhow::Result;
+
+pub use common::{Lab, Scale};
+
+/// Run the full evaluation suite; returns the combined report.
+pub fn run_all(runtime: &crate::runtime::Runtime, scale: Scale) -> Result<String> {
+    let mut report = String::new();
+    report.push_str(&tables::table1());
+    report.push('\n');
+
+    let mut lab = Lab::build(runtime, scale, true)?;
+
+    let t2 = tables::table2(&mut lab)?;
+    report.push_str(&t2.markdown);
+    report.push('\n');
+    common::write_result("table2.md", &t2.markdown)?;
+
+    let f34 = figures::figs_3_4("a100", 9)?;
+    common::write_result("figs_3_4.csv", &f34)?;
+    report.push_str(&f34);
+    report.push('\n');
+
+    let f5 = figures::fig5(&t2.records);
+    common::write_result("fig5.csv", &f5)?;
+    report.push_str(&f5);
+    report.push('\n');
+
+    let f69 = figures::figs_6_9(&t2.records);
+    common::write_result("figs_6_9.csv", &f69)?;
+    report.push_str(&f69);
+    report.push('\n');
+
+    let t45 = tables::table45(&mut lab)?;
+    common::write_result("table45.md", &t45)?;
+    report.push_str(&t45);
+    report.push('\n');
+
+    let t6 = tables::table6(&mut lab)?;
+    common::write_result("table6.md", &t6)?;
+    report.push_str(&t6);
+    report.push('\n');
+
+    let p = apps_exp::partition_experiment(&mut lab)?;
+    common::write_result("partition.md", &p)?;
+    report.push_str(&p);
+    report.push('\n');
+
+    let nas = apps_exp::nas_speed_experiment(&mut lab, 1000)?;
+    common::write_result("nas_speed.md", &nas)?;
+    report.push_str(&nas);
+
+    common::write_result("full_report.md", &report)?;
+    Ok(report)
+}

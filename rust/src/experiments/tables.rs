@@ -1,0 +1,312 @@
+//! Table regenerators: Table I (specs), Table II (per-layer errors),
+//! Tables IV/V (model-level), Table VI (custom kernels).
+
+use anyhow::Result;
+
+use crate::gpusim::all_devices;
+use crate::models::{runner, zoo};
+use crate::ops::{CustomOp, DType, Op};
+use crate::profiler::{self, ProfileSpec};
+use crate::util::prng::Rng;
+use crate::util::stats::{mean, rel_err_pct, signed_rel_err_pct};
+use crate::util::table;
+
+use super::common::{Lab, LayerKind};
+
+/// Table I: specifications of the tested GPUs.
+pub fn table1() -> String {
+    let devs = all_devices();
+    let header: Vec<&str> = std::iter::once("")
+        .chain(devs.iter().map(|d| d.name))
+        .collect();
+    let mut rows = Vec::new();
+    let mut row = |label: &str, vals: Vec<String>| {
+        let mut r = vec![label.to_string()];
+        r.extend(vals);
+        rows.push(r);
+    };
+    row("Max Freq (GHz)", devs.iter().map(|d| format!("{:.3}", d.max_freq_ghz)).collect());
+    row("FP32 (TFLOPs)", devs.iter().map(|d| format!("{:.2}", d.fp32_tflops)).collect());
+    row("BF16 (TFLOPs)", devs.iter().map(|d| table::cell(d.bf16_tflops, 2)).collect());
+    row("DRAM BW (GB/s)", devs.iter().map(|d| format!("{:.0}", d.dram_gbps)).collect());
+    row("MEM (GB)", devs.iter().map(|d| format!("{:.0}", d.mem_gb)).collect());
+    row("L2 (MB)", devs.iter().map(|d| format!("{:.0}", d.l2_mb)).collect());
+    row("SM Count", devs.iter().map(|d| format!("{}", d.sm_count)).collect());
+    row("CUDA Cores", devs.iter().map(|d| format!("{}", d.cuda_cores)).collect());
+    row("Power (W)", devs.iter().map(|d| format!("{:.0}", d.power_w)).collect());
+    format!("### Table I: simulated GPU specifications\n\n{}", table::markdown(&header, &rows))
+}
+
+/// One Table II cell outcome.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub pl_err: Option<f64>,
+    pub ns_err: Option<f64>,
+}
+
+/// Per-sample record kept for the figures (5–9).
+#[derive(Clone, Debug)]
+pub struct SampleRecord {
+    pub device: String,
+    pub dtype: DType,
+    pub layer: LayerKind,
+    pub log_flops: f64,
+    pub pl_err: f64,
+    pub ns_err: f64,
+}
+
+pub struct Table2Output {
+    pub markdown: String,
+    pub records: Vec<SampleRecord>,
+}
+
+/// Table II: average relative error per (dtype, layer, device).
+pub fn table2(lab: &mut Lab) -> Result<Table2Output> {
+    let devices: Vec<String> = {
+        let mut v: Vec<String> = lab.gpus.keys().cloned().collect();
+        // Table order.
+        let order = ["rtx3060m", "t4", "l4", "a100", "rtx5070"];
+        v.sort_by_key(|n| order.iter().position(|o| o == n).unwrap_or(9));
+        v
+    };
+    let mut rows = Vec::new();
+    let mut records = Vec::new();
+    let eval_spec = ProfileSpec { warmup: 2, min_reps: 10, min_total_s: 0.0, max_reps: 20 };
+    for dtype in [DType::F32, DType::Bf16] {
+        for layer in LayerKind::all() {
+            let mut pl_cells = Vec::new();
+            let mut ns_cells = Vec::new();
+            for device in &devices {
+                let supports = lab.gpu(device).spec.supports(dtype);
+                if !supports {
+                    pl_cells.push(None);
+                    ns_cells.push(None);
+                    continue;
+                }
+                let n = lab.scale.per_cell;
+                let mut rng = Rng::new(
+                    crate::util::prng::hash64(
+                        format!("t2/{device}/{dtype}/{}", layer.name()).as_bytes(),
+                    ),
+                );
+                let ops: Vec<Op> =
+                    (0..n).map(|_| layer.sample(&mut rng, dtype)).collect();
+                // Ground truth: boost-clock measurements, back-to-back
+                // (the die heats like a real evaluation pass).
+                let mut truths = Vec::with_capacity(n);
+                {
+                    let gpu = lab.gpu_mut(device);
+                    gpu.reset();
+                    for op in &ops {
+                        truths.push(
+                            profiler::measure(gpu, op, &eval_spec)?.mean_s,
+                        );
+                        // Host-side framework overhead between samples
+                        // (tensor allocation, Python dispatch) — the duty
+                        // cycle a real per-layer sweep has.
+                        gpu.idle(0.03);
+                    }
+                }
+                let gpu = lab.gpu(device);
+                let pl = lab.pl(device, dtype).unwrap();
+                let ns = lab.ns(dtype);
+                let ns_preds = ns.predict_batch(&gpu.spec, &ops)?;
+                let mut pl_errs = Vec::with_capacity(n);
+                let mut ns_errs = Vec::with_capacity(n);
+                for ((op, truth), ns_pred) in
+                    ops.iter().zip(&truths).zip(&ns_preds)
+                {
+                    let pl_pred = pl.predict(gpu, op).unwrap_or(f64::NAN);
+                    let ple = rel_err_pct(pl_pred, *truth);
+                    let nse = ns_pred
+                        .map(|p| rel_err_pct(p, *truth))
+                        .unwrap_or(f64::NAN);
+                    pl_errs.push(ple);
+                    ns_errs.push(nse);
+                    let flops = match op {
+                        Op::Gemm(g) => g.flops(),
+                        Op::Util(u) => u.elems(),
+                        Op::Custom(c) => c.flops(),
+                    };
+                    records.push(SampleRecord {
+                        device: device.clone(),
+                        dtype,
+                        layer,
+                        log_flops: flops.ln(),
+                        pl_err: ple,
+                        ns_err: nse,
+                    });
+                }
+                pl_cells.push(Some(mean(&pl_errs)));
+                ns_cells.push(Some(mean(&ns_errs)));
+            }
+            for (tag, cells) in [("NS", ns_cells), ("PL", pl_cells)] {
+                let mut row = vec![
+                    dtype.name().to_string(),
+                    layer.name().to_string(),
+                    tag.to_string(),
+                ];
+                row.extend(cells.iter().map(|c| table::cell(*c, 1)));
+                rows.push(row);
+            }
+        }
+    }
+    let mut header = vec!["DType", "Layer", ""];
+    header.extend(devices.iter().map(|d| d.as_str()));
+    let markdown = format!(
+        "### Table II: average relative error (%) — PM2Lat (PL) vs NeuSight (NS)\n\n{}",
+        table::markdown(&header, &rows)
+    );
+    Ok(Table2Output { markdown, records })
+}
+
+/// Tables IV & V: model-wise signed error per (model, batch, device).
+pub fn table45(lab: &mut Lab) -> Result<String> {
+    let grid: Vec<(&str, Vec<usize>)> = vec![
+        ("gpt2-large", vec![1, 8, 16, 32, 64]),
+        ("flan-t5-base", vec![1, 8, 16, 32, 64]),
+        ("qwen3-0.6b", vec![1, 8, 16, 32, 64]),
+        ("qwen3-4b", vec![1, 8, 16, 32]),
+        ("ds-r1-7b", vec![1, 8, 16, 32]),
+        ("ds-r1-14b", vec![1, 8, 16]),
+    ];
+    let devices = ["rtx3060m", "t4", "l4", "a100", "rtx5070"];
+    let seq = 512;
+    let mut header = vec!["Model".to_string(), "BS".to_string()];
+    for d in devices {
+        header.push(format!("{d} MeanT(ms)"));
+        header.push(format!("{d} PL(%)"));
+        header.push(format!("{d} NS(%)"));
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut rows = Vec::new();
+    for (model_name, batches) in grid {
+        let cfg = zoo::by_name(model_name).unwrap();
+        for &bs in &batches {
+            let mut row = vec![model_name.to_string(), bs.to_string()];
+            for device in devices {
+                let dtype = cfg.dtype;
+                let supports = lab.gpu(device).spec.supports(dtype);
+                let fits = lab
+                    .gpu(device)
+                    .check_memory(cfg.memory_bytes(bs, seq))
+                    .is_ok();
+                if !supports || !fits {
+                    row.extend(["-".to_string(), "-".to_string(), "-".to_string()]);
+                    continue;
+                }
+                let reps = lab.scale.model_reps;
+                let run = {
+                    let gpu = lab.gpu_mut(device);
+                    gpu.reset();
+                    runner::run_model(gpu, &cfg, bs, seq, 5.min(reps), reps)
+                };
+                let Ok(run) = run else {
+                    row.extend(["-".to_string(), "-".to_string(), "-".to_string()]);
+                    continue;
+                };
+                let gpu = lab.gpu(device);
+                let trace = cfg.trace(bs, seq);
+                let pl_pred = lab
+                    .pl(device, dtype)
+                    .and_then(|pl| pl.predict_trace(gpu, &trace));
+                let ns_pred = lab.ns(dtype).predict_trace(&gpu.spec, &trace)?;
+                row.push(format!("{:.0}", run.mean_s * 1e3));
+                row.push(table::signed_pct(
+                    pl_pred.map(|p| signed_rel_err_pct(p, run.mean_s)),
+                ));
+                row.push(table::signed_pct(
+                    ns_pred.map(|p| signed_rel_err_pct(p, run.mean_s)),
+                ));
+            }
+            rows.push(row);
+        }
+    }
+    Ok(format!(
+        "### Tables IV & V: model-wise signed error — PM2Lat (PL) vs NeuSight (NS), seq={seq}\n\n{}",
+        table::markdown(&header_refs, &rows)
+    ))
+}
+
+/// Table VI: PM2Lat on custom kernels.
+pub fn table6(lab: &mut Lab) -> Result<String> {
+    let devices = ["rtx3060m", "t4", "l4", "a100", "rtx5070"];
+    let kinds = ["TritonMM", "PL TruthCFG", "TritonVec", "F-Attn", "C-Attn"];
+    let eval_spec = ProfileSpec { warmup: 2, min_reps: 10, min_total_s: 0.0, max_reps: 20 };
+    let mut rows = Vec::new();
+    for kind in kinds {
+        let mut row = vec![kind.to_string()];
+        for device in devices {
+            let dtype = DType::F32;
+            let n = lab.scale.custom_per_kind;
+            let mut rng = Rng::new(crate::util::prng::hash64(
+                format!("t6/{device}/{kind}").as_bytes(),
+            ));
+            let mut errs = Vec::new();
+            for _ in 0..n {
+                let op = match kind {
+                    "TritonMM" | "PL TruthCFG" => CustomOp::TritonMM {
+                        m: rng.log_uniform_int(128, 4096) as usize,
+                        n: rng.log_uniform_int(128, 4096) as usize,
+                        k: rng.log_uniform_int(64, 8192) as usize,
+                        dtype,
+                    },
+                    "TritonVec" => CustomOp::TritonVec {
+                        elems: rng.log_uniform_int(1 << 14, 1 << 26) as usize,
+                        dtype,
+                    },
+                    "F-Attn" => CustomOp::FlashAttn {
+                        batch: rng.int_range(1, 8) as usize,
+                        heads: rng.int_range(8, 32) as usize,
+                        seq: rng.log_uniform_int(128, 4096) as usize,
+                        head_dim: 64,
+                        dtype,
+                        causal: false,
+                    },
+                    _ => CustomOp::CutlassAttn {
+                        batch: rng.int_range(1, 8) as usize,
+                        heads: rng.int_range(8, 32) as usize,
+                        seq: rng.log_uniform_int(128, 4096) as usize,
+                        head_dim: 64,
+                        dtype,
+                        causal: false,
+                    },
+                };
+                let supported = crate::gpusim::custom::supported(&lab.gpu(device).spec, &op);
+                if !supported {
+                    continue;
+                }
+                let truth = {
+                    let gpu = lab.gpu_mut(device);
+                    match profiler::measure(gpu, &Op::Custom(op), &eval_spec) {
+                        Ok(m) => m.mean_s,
+                        Err(_) => continue,
+                    }
+                };
+                let gpu = lab.gpu(device);
+                let Some(pl) = lab.pl(device, dtype) else { continue };
+                let Some(cm) = pl.custom_model(dtype) else { continue };
+                let pred = if kind == "PL TruthCFG" {
+                    cm.predict_truth_cfg(gpu, &op)
+                } else {
+                    cm.predict(gpu, &op)
+                };
+                if let Some(p) = pred {
+                    errs.push(rel_err_pct(p, truth));
+                }
+            }
+            row.push(if errs.is_empty() {
+                "-".to_string()
+            } else {
+                format!("{:.1}", mean(&errs))
+            });
+        }
+        rows.push(row);
+    }
+    let mut header = vec![""];
+    header.extend(devices);
+    Ok(format!(
+        "### Table VI: PM2Lat error (%) on custom kernels (FP32)\n\n{}",
+        table::markdown(&header, &rows)
+    ))
+}

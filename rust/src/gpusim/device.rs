@@ -1,0 +1,280 @@
+//! Device specifications — Table I of the paper, plus derived architectural
+//! parameters (cache bandwidths, shared memory, launch overhead) that the
+//! paper points out are NOT publicly disclosed. We procedurally derive them
+//! per device — which is precisely why predictors must treat them as
+//! unobservable, exactly as on real hardware.
+
+use crate::ops::DType;
+use crate::util::prng::hash64;
+
+/// Cooling class: passive devices (T4, L4) throttle earlier under
+/// sustained load (paper §IV-A thermal discussion).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cooling {
+    Active,
+    Passive,
+}
+
+/// GPU architecture generation — gates custom kernels (Table VI notes:
+/// FlashAttention-2 needs Ampere+; neither attention kernel supports
+/// Blackwell yet).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Arch {
+    Turing,
+    Ampere,
+    AdaLovelace,
+    Blackwell,
+}
+
+/// Public specification (Table I) + procedurally derived internals.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    pub arch: Arch,
+    pub max_freq_ghz: f64,
+    pub fp32_tflops: f64,
+    /// None ⇒ dtype unsupported (T4 has no BF16 tensor path).
+    pub bf16_tflops: Option<f64>,
+    pub dram_gbps: f64,
+    pub mem_gb: f64,
+    pub l2_mb: f64,
+    pub sm_count: usize,
+    pub cuda_cores: usize,
+    pub power_w: f64,
+    pub cooling: Cooling,
+    // ---- derived, "undisclosed" internals (stable per device) ----
+    /// L2 bandwidth as a multiple of DRAM bandwidth (≈3–6×).
+    pub l2_bw_ratio: f64,
+    /// L1/shared bandwidth as a multiple of L2 bandwidth (≈2.5–4×).
+    pub l1_bw_ratio: f64,
+    /// Kernel launch overhead in microseconds (µs).
+    pub launch_us: f64,
+    /// Shared memory per SM in KiB (occupancy limiter).
+    pub smem_kib: f64,
+    /// Max resident threads per SM.
+    pub max_threads_per_sm: usize,
+    /// Integer/ALU throughput in Gops/s at max frequency.
+    pub int_gops: f64,
+}
+
+impl DeviceSpec {
+    /// Peak TFLOPs for a dtype at max frequency; None if unsupported.
+    pub fn peak_tflops(&self, dtype: DType) -> Option<f64> {
+        match dtype {
+            DType::F32 => Some(self.fp32_tflops),
+            DType::Bf16 => self.bf16_tflops,
+        }
+    }
+    pub fn supports(&self, dtype: DType) -> bool {
+        self.peak_tflops(dtype).is_some()
+    }
+    pub fn dram_bw(&self) -> f64 {
+        self.dram_gbps * 1e9
+    }
+    pub fn l2_bw(&self) -> f64 {
+        self.dram_bw() * self.l2_bw_ratio
+    }
+    pub fn l1_bw(&self) -> f64 {
+        self.l2_bw() * self.l1_bw_ratio
+    }
+    pub fn l2_bytes(&self) -> f64 {
+        self.l2_mb * 1024.0 * 1024.0
+    }
+    pub fn mem_bytes(&self) -> f64 {
+        self.mem_gb * 1024.0 * 1024.0 * 1024.0
+    }
+    pub fn cores_per_sm(&self) -> usize {
+        self.cuda_cores / self.sm_count
+    }
+
+    fn derive(mut self) -> Self {
+        // Stable per-device internals from the device name; these are the
+        // "unobservable" parameters the paper refuses to model (§III-B).
+        let h = hash64(self.name.as_bytes());
+        let u = |shift: u32| ((h >> shift) & 0xffff) as f64 / 65535.0;
+        self.l2_bw_ratio = 3.0 + 3.0 * u(0);
+        self.l1_bw_ratio = 2.5 + 1.5 * u(16);
+        self.launch_us = 2.5 + 4.0 * u(32);
+        self.int_gops = self.cuda_cores as f64 * self.max_freq_ghz * 0.9;
+        self
+    }
+}
+
+/// The five devices of Table I, with arch-correct derived limits.
+pub fn all_devices() -> Vec<DeviceSpec> {
+    vec![
+        DeviceSpec {
+            name: "rtx3060m",
+            arch: Arch::Ampere,
+            max_freq_ghz: 2.090,
+            fp32_tflops: 16.05,
+            bf16_tflops: Some(32.10),
+            dram_gbps: 336.0,
+            mem_gb: 6.0,
+            l2_mb: 3.0,
+            sm_count: 30,
+            cuda_cores: 3840,
+            power_w: 130.0,
+            cooling: Cooling::Active,
+            l2_bw_ratio: 0.0,
+            l1_bw_ratio: 0.0,
+            launch_us: 0.0,
+            smem_kib: 100.0,
+            max_threads_per_sm: 1536,
+            int_gops: 0.0,
+        }
+        .derive(),
+        DeviceSpec {
+            name: "t4",
+            arch: Arch::Turing,
+            max_freq_ghz: 1.590,
+            fp32_tflops: 8.141,
+            bf16_tflops: None,
+            dram_gbps: 320.0,
+            mem_gb: 16.0,
+            l2_mb: 4.0,
+            sm_count: 40,
+            cuda_cores: 2560,
+            power_w: 70.0,
+            cooling: Cooling::Passive,
+            l2_bw_ratio: 0.0,
+            l1_bw_ratio: 0.0,
+            launch_us: 0.0,
+            smem_kib: 64.0,
+            max_threads_per_sm: 1024,
+            int_gops: 0.0,
+        }
+        .derive(),
+        DeviceSpec {
+            name: "l4",
+            arch: Arch::AdaLovelace,
+            max_freq_ghz: 2.040,
+            fp32_tflops: 30.29,
+            bf16_tflops: Some(121.16),
+            dram_gbps: 300.0,
+            mem_gb: 24.0,
+            l2_mb: 48.0,
+            sm_count: 58,
+            cuda_cores: 7242,
+            power_w: 70.0,
+            cooling: Cooling::Passive,
+            l2_bw_ratio: 0.0,
+            l1_bw_ratio: 0.0,
+            launch_us: 0.0,
+            smem_kib: 100.0,
+            max_threads_per_sm: 1536,
+            int_gops: 0.0,
+        }
+        .derive(),
+        DeviceSpec {
+            name: "a100",
+            arch: Arch::Ampere,
+            max_freq_ghz: 1.410,
+            fp32_tflops: 19.49,
+            bf16_tflops: Some(311.87),
+            dram_gbps: 1560.0,
+            mem_gb: 40.0,
+            l2_mb: 40.0,
+            sm_count: 108,
+            cuda_cores: 6912,
+            power_w: 400.0,
+            cooling: Cooling::Active,
+            l2_bw_ratio: 0.0,
+            l1_bw_ratio: 0.0,
+            launch_us: 0.0,
+            smem_kib: 164.0,
+            max_threads_per_sm: 2048,
+            int_gops: 0.0,
+        }
+        .derive(),
+        DeviceSpec {
+            name: "rtx5070",
+            arch: Arch::Blackwell,
+            max_freq_ghz: 3.090,
+            fp32_tflops: 37.97,
+            bf16_tflops: Some(75.94),
+            dram_gbps: 672.0,
+            mem_gb: 12.0,
+            l2_mb: 48.0,
+            sm_count: 48,
+            cuda_cores: 6144,
+            power_w: 250.0,
+            cooling: Cooling::Active,
+            l2_bw_ratio: 0.0,
+            l1_bw_ratio: 0.0,
+            launch_us: 0.0,
+            smem_kib: 100.0,
+            max_threads_per_sm: 1536,
+            int_gops: 0.0,
+        }
+        .derive(),
+    ]
+}
+
+pub fn device_by_name(name: &str) -> Option<DeviceSpec> {
+    all_devices()
+        .into_iter()
+        .find(|d| d.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_devices_table1() {
+        let devs = all_devices();
+        assert_eq!(devs.len(), 5);
+        let names: Vec<&str> = devs.iter().map(|d| d.name).collect();
+        assert_eq!(names, vec!["rtx3060m", "t4", "l4", "a100", "rtx5070"]);
+    }
+
+    #[test]
+    fn t4_has_no_bf16() {
+        let t4 = device_by_name("t4").unwrap();
+        assert!(!t4.supports(DType::Bf16));
+        assert!(t4.supports(DType::F32));
+        assert!(device_by_name("a100").unwrap().supports(DType::Bf16));
+    }
+
+    #[test]
+    fn derived_params_in_plausible_ranges() {
+        for d in all_devices() {
+            assert!(d.l2_bw_ratio >= 3.0 && d.l2_bw_ratio <= 6.0, "{}", d.name);
+            assert!(d.l1_bw_ratio >= 2.5 && d.l1_bw_ratio <= 4.0);
+            assert!(d.launch_us >= 2.5 && d.launch_us <= 6.5);
+            assert!(d.int_gops > 0.0);
+            assert!(d.cores_per_sm() > 0);
+        }
+    }
+
+    #[test]
+    fn derived_params_stable() {
+        let a = device_by_name("a100").unwrap();
+        let b = device_by_name("a100").unwrap();
+        assert_eq!(a.l2_bw_ratio, b.l2_bw_ratio);
+        assert_eq!(a.launch_us, b.launch_us);
+    }
+
+    #[test]
+    fn bandwidth_hierarchy_ordering() {
+        for d in all_devices() {
+            assert!(d.l1_bw() > d.l2_bw());
+            assert!(d.l2_bw() > d.dram_bw());
+        }
+    }
+
+    #[test]
+    fn passive_devices_are_t4_l4() {
+        for d in all_devices() {
+            let expect = matches!(d.name, "t4" | "l4");
+            assert_eq!(d.cooling == Cooling::Passive, expect, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn lookup_case_insensitive() {
+        assert!(device_by_name("A100").is_some());
+        assert!(device_by_name("nope").is_none());
+    }
+}

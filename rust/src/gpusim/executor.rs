@@ -1,0 +1,376 @@
+//! The simulated GPU: executes ops against the latency physics with a
+//! virtual clock, thermal state, frequency control, cold-start effects and
+//! deterministic measurement noise. This is the "hardware" every predictor
+//! is evaluated against; its API mirrors what CUPTI-instrumented execution
+//! gives you on a real card — a duration and a set of counters, nothing
+//! about the closed-source kernel internals.
+
+use std::collections::HashSet;
+
+use crate::ops::{Counters, CustomOp, GemmOp, Op, UtilOp};
+use crate::util::prng::{hash64, Rng};
+
+use super::custom;
+use super::device::{device_by_name, DeviceSpec};
+use super::gemm::{self, GemmConfig};
+use super::heuristic;
+use super::kernel::{registry, GemmKernel};
+use super::thermal::Thermal;
+use super::utility;
+
+/// Core-clock policy. PM2Lat collects throughput at a fixed (lower)
+/// frequency (§III-C / §IV-A); evaluation runs boost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FreqMode {
+    /// Boost clock subject to thermal derating.
+    Boost,
+    /// Locked clock (e.g. `nvidia-smi -lgc`): thermally stable.
+    Fixed(f64),
+}
+
+/// One measured execution, CUPTI-style.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub dur_s: f64,
+    pub counters: Counters,
+    pub freq_ghz: f64,
+    pub temp_c: f64,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum ExecError {
+    #[error("dtype not supported on this device")]
+    UnsupportedDtype,
+    #[error("kernel not supported on this architecture")]
+    UnsupportedKernel,
+    #[error("unknown kernel id {0}")]
+    UnknownKernel(usize),
+    #[error("out of device memory: need {need_mb} MB, have {have_mb} MB")]
+    OutOfMemory { need_mb: u64, have_mb: u64 },
+}
+
+/// A simulated GPU instance with mutable execution state.
+pub struct Gpu {
+    pub spec: DeviceSpec,
+    fp32_kernels: Vec<GemmKernel>,
+    bf16_kernels: Vec<GemmKernel>,
+    freq_mode: FreqMode,
+    thermal: Thermal,
+    /// Virtual wall-clock (seconds since reset).
+    pub clock_s: f64,
+    /// Ops already JIT-warmed (first launch pays a cold penalty).
+    warm: HashSet<u64>,
+    exec_count: u64,
+    /// Measurement noise sigma (lognormal). ~2.5% like real CUPTI runs.
+    pub noise_sigma: f64,
+    seed: u64,
+}
+
+impl Gpu {
+    pub fn new(spec: DeviceSpec) -> Gpu {
+        let fp32_kernels = registry(&spec, crate::ops::DType::F32);
+        let bf16_kernels = registry(&spec, crate::ops::DType::Bf16);
+        let seed = hash64(spec.name.as_bytes());
+        Gpu {
+            thermal: Thermal::new(&spec),
+            fp32_kernels,
+            bf16_kernels,
+            freq_mode: FreqMode::Boost,
+            clock_s: 0.0,
+            warm: HashSet::new(),
+            exec_count: 0,
+            noise_sigma: 0.025,
+            seed,
+            spec,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Gpu> {
+        device_by_name(name).map(Gpu::new)
+    }
+
+    pub fn kernels(&self, dtype: crate::ops::DType) -> &[GemmKernel] {
+        match dtype {
+            crate::ops::DType::F32 => &self.fp32_kernels,
+            crate::ops::DType::Bf16 => &self.bf16_kernels,
+        }
+    }
+
+    pub fn kernel(&self, dtype: crate::ops::DType, id: usize) -> Option<&GemmKernel> {
+        self.kernels(dtype).get(id)
+    }
+
+    /// Reset execution state (clock, thermals, JIT cache).
+    pub fn reset(&mut self) {
+        self.thermal.reset();
+        self.clock_s = 0.0;
+        self.warm.clear();
+        self.exec_count = 0;
+    }
+
+    pub fn set_freq(&mut self, mode: FreqMode) {
+        self.freq_mode = mode;
+    }
+
+    pub fn temp_c(&self) -> f64 {
+        self.thermal.temp_c
+    }
+
+    /// Current effective core clock (GHz) after thermal derating.
+    pub fn current_freq(&self) -> f64 {
+        match self.freq_mode {
+            FreqMode::Fixed(f) => f.min(self.spec.max_freq_ghz),
+            FreqMode::Boost => self.spec.max_freq_ghz * self.thermal.derate(),
+        }
+    }
+
+    /// Let the device sit idle (cooling) for `dur` seconds of virtual time.
+    pub fn idle(&mut self, dur: f64) {
+        self.thermal.idle(dur);
+        self.clock_s += dur;
+    }
+
+    /// Noise-free model latency at an explicit frequency — the internal
+    /// physics; used by the heuristic and by ground-truth assertions in
+    /// tests. Predictors never call this.
+    pub fn model_latency(
+        &self,
+        op: &Op,
+        cfg: Option<GemmConfig>,
+        freq_ghz: f64,
+    ) -> Result<f64, ExecError> {
+        match op {
+            Op::Gemm(g) => {
+                let cfg = match cfg {
+                    Some(c) => c,
+                    None => heuristic::algo_get_heuristic(&self.spec, g)
+                        .ok_or(ExecError::UnsupportedDtype)?,
+                };
+                let kern = self
+                    .kernel(g.dtype, cfg.kernel_id)
+                    .ok_or(ExecError::UnknownKernel(cfg.kernel_id))?;
+                gemm::gemm_latency(&self.spec, kern, g, cfg.splitk, freq_ghz)
+                    .ok_or(ExecError::UnsupportedKernel)
+            }
+            Op::Util(u) => {
+                if !self.spec.supports(u.dtype) {
+                    return Err(ExecError::UnsupportedDtype);
+                }
+                Ok(utility::util_latency(&self.spec, u, freq_ghz))
+            }
+            Op::Custom(c) => custom::custom_latency(&self.spec, c, freq_ghz)
+                .ok_or(ExecError::UnsupportedKernel),
+        }
+    }
+
+    /// Counters for an op (NCU-style export).
+    pub fn counters(&self, op: &Op, cfg: Option<GemmConfig>) -> Result<Counters, ExecError> {
+        match op {
+            Op::Gemm(g) => {
+                let cfg = match cfg {
+                    Some(c) => c,
+                    None => heuristic::algo_get_heuristic(&self.spec, g)
+                        .ok_or(ExecError::UnsupportedDtype)?,
+                };
+                let kern = self
+                    .kernel(g.dtype, cfg.kernel_id)
+                    .ok_or(ExecError::UnknownKernel(cfg.kernel_id))?;
+                Ok(gemm::gemm_counters(&self.spec, kern, g, cfg.splitk))
+            }
+            Op::Util(u) => Ok(utility::util_counters(&self.spec, u)),
+            Op::Custom(c) => Ok(custom::custom_counters(&self.spec, c)),
+        }
+    }
+
+    /// Execute with the library-selected configuration (what a framework
+    /// call does).
+    pub fn exec(&mut self, op: &Op) -> Result<Sample, ExecError> {
+        self.exec_config(op, None)
+    }
+
+    /// Execute with an explicitly pinned GEMM config — PM2Lat's controlled
+    /// collection ("we manually specify kernel settings and analyze their
+    /// behavior in isolation", §III-C).
+    pub fn exec_config(
+        &mut self,
+        op: &Op,
+        cfg: Option<GemmConfig>,
+    ) -> Result<Sample, ExecError> {
+        let freq = self.current_freq();
+        let base = self.model_latency(op, cfg, freq)?;
+        let counters = self.counters(op, cfg)?;
+        // Cold-start: first launch of a distinct op pays JIT/load cost.
+        let key = op.stable_hash() ^ cfg.map(|c| c.kernel_id as u64 + 1).unwrap_or(0);
+        let cold = if self.warm.insert(key) { 1.18 } else { 1.0 };
+        // Deterministic measurement noise: varies per repetition.
+        let mut rng = Rng::new(
+            self.seed ^ key.rotate_left(17) ^ self.exec_count.wrapping_mul(0x9e37),
+        );
+        let noise = rng.lognormal_noise(self.noise_sigma);
+        let dur = base * cold * noise;
+        // Power draw tracks achieved utilization (compute-heavy ops heat
+        // the die; memory-bound ops much less).
+        let util = match op {
+            Op::Gemm(g) => gemm::utilization(&self.spec, g, base),
+            Op::Util(_) => 0.12,
+            Op::Custom(c) => {
+                let peak = self
+                    .spec
+                    .peak_tflops(op.dtype())
+                    .unwrap_or(self.spec.fp32_tflops)
+                    * 1e12;
+                (c.flops() / (peak * base)).min(1.0)
+            }
+        };
+        // Dynamic power ∝ f²·V ≈ f²: locked-low-clock profiling (PM2Lat's
+        // collection mode) barely heats the die; boost-clock sweeps do.
+        let freq_factor = (freq / self.spec.max_freq_ghz).powi(2);
+        let power = self.spec.power_w * (0.3 + 0.7 * util) * freq_factor;
+        self.thermal.advance(power, dur);
+        self.clock_s += dur;
+        self.exec_count += 1;
+        Ok(Sample { dur_s: dur, counters, freq_ghz: freq, temp_c: self.thermal.temp_c })
+    }
+
+    /// Convenience wrappers.
+    pub fn exec_gemm(&mut self, g: &GemmOp) -> Result<Sample, ExecError> {
+        self.exec(&Op::Gemm(*g))
+    }
+    pub fn exec_util(&mut self, u: &UtilOp) -> Result<Sample, ExecError> {
+        self.exec(&Op::Util(*u))
+    }
+    pub fn exec_custom(&mut self, c: &CustomOp) -> Result<Sample, ExecError> {
+        self.exec(&Op::Custom(*c))
+    }
+
+    /// OOM check for a model footprint (weights + activations), in bytes.
+    pub fn check_memory(&self, need_bytes: f64) -> Result<(), ExecError> {
+        if need_bytes > self.spec.mem_bytes() {
+            Err(ExecError::OutOfMemory {
+                need_mb: (need_bytes / 1e6) as u64,
+                have_mb: (self.spec.mem_bytes() / 1e6) as u64,
+            })
+        } else {
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{DType, GemmOp, UtilKind};
+
+    fn gpu(name: &str) -> Gpu {
+        Gpu::by_name(name).unwrap()
+    }
+
+    #[test]
+    fn exec_returns_positive_latency_and_counters() {
+        let mut g = gpu("a100");
+        let s = g.exec_gemm(&GemmOp::mm(512, 512, 512, DType::F32)).unwrap();
+        assert!(s.dur_s > 0.0);
+        assert!(s.counters.flops > 0.0);
+        assert!(g.clock_s > 0.0);
+    }
+
+    #[test]
+    fn cold_start_then_stable() {
+        let mut g = gpu("l4");
+        let op = GemmOp::mm(1024, 1024, 1024, DType::F32);
+        let first = g.exec_gemm(&op).unwrap().dur_s;
+        let rest: Vec<f64> =
+            (0..10).map(|_| g.exec_gemm(&op).unwrap().dur_s).collect();
+        let warm_mean = crate::util::stats::mean(&rest);
+        assert!(first > warm_mean * 1.08, "first={first} warm={warm_mean}");
+    }
+
+    #[test]
+    fn noise_varies_but_is_deterministic() {
+        let mut g1 = gpu("t4");
+        let mut g2 = gpu("t4");
+        let op = GemmOp::mm(256, 256, 256, DType::F32);
+        let a: Vec<f64> = (0..5).map(|_| g1.exec_gemm(&op).unwrap().dur_s).collect();
+        let b: Vec<f64> = (0..5).map(|_| g2.exec_gemm(&op).unwrap().dur_s).collect();
+        assert_eq!(a, b, "same device+sequence must reproduce exactly");
+        assert!(a[1] != a[2] || a[2] != a[3], "reps must differ (noise)");
+    }
+
+    #[test]
+    fn t4_rejects_bf16() {
+        let mut g = gpu("t4");
+        let err = g.exec_gemm(&GemmOp::mm(128, 128, 128, DType::Bf16));
+        assert_eq!(err.unwrap_err(), ExecError::UnsupportedDtype);
+    }
+
+    #[test]
+    fn sustained_load_throttles_passive_device() {
+        let mut g = gpu("l4");
+        g.set_freq(FreqMode::Boost);
+        let op = GemmOp::mm(8192, 8192, 8192, DType::Bf16);
+        let f_cold = g.current_freq();
+        for _ in 0..200 {
+            g.exec_gemm(&op).unwrap();
+        }
+        let f_hot = g.current_freq();
+        assert!(g.temp_c() > 60.0, "temp={}", g.temp_c());
+        assert!(f_hot < f_cold, "should throttle: {f_hot} vs {f_cold}");
+        // Latency under throttle is higher than cold.
+        g.reset();
+        let cold_t = g.exec_gemm(&op).unwrap();
+        let _ = cold_t;
+    }
+
+    #[test]
+    fn fixed_frequency_is_thermally_stable() {
+        let mut g = gpu("t4");
+        g.set_freq(FreqMode::Fixed(1.0));
+        let op = GemmOp::mm(2048, 2048, 2048, DType::F32);
+        for _ in 0..50 {
+            g.exec_gemm(&op).unwrap();
+        }
+        assert_eq!(g.current_freq(), 1.0, "locked clock never derates");
+    }
+
+    #[test]
+    fn pinned_config_differs_from_heuristic_choice() {
+        let mut g = gpu("a100");
+        let op = Op::Gemm(GemmOp::mm(2048, 2048, 2048, DType::F32));
+        // Worst kernel pinned should be slower than heuristic pick.
+        let mut worst: Option<(GemmConfig, f64)> = None;
+        for k in g.kernels(DType::F32).to_vec() {
+            let cfg = GemmConfig { kernel_id: k.id, splitk: 1 };
+            if let Ok(t) = g.model_latency(&op, Some(cfg), g.spec.max_freq_ghz) {
+                if worst.map(|(_, wt)| t > wt).unwrap_or(true) {
+                    worst = Some((cfg, t));
+                }
+            }
+        }
+        let (wcfg, _) = worst.unwrap();
+        let auto = g.model_latency(&op, None, g.spec.max_freq_ghz).unwrap();
+        let pinned = g.model_latency(&op, Some(wcfg), g.spec.max_freq_ghz).unwrap();
+        assert!(pinned > auto);
+    }
+
+    #[test]
+    fn oom_detection() {
+        let g = gpu("rtx3060m"); // 6 GB
+        assert!(g.check_memory(5.0e9).is_ok());
+        assert!(matches!(
+            g.check_memory(8.0e9),
+            Err(ExecError::OutOfMemory { .. })
+        ));
+    }
+
+    #[test]
+    fn idle_cools_device() {
+        let mut g = gpu("t4");
+        let op = GemmOp::mm(4096, 4096, 4096, DType::F32);
+        for _ in 0..200 {
+            g.exec_gemm(&op).unwrap();
+        }
+        let hot = g.temp_c();
+        g.idle(300.0);
+        assert!(g.temp_c() < hot - 5.0);
+    }
+}

@@ -1,0 +1,346 @@
+//! Wave-level GEMM latency model: tile grid → occupancy → waves →
+//! max(compute, memory) per wave with stage-dependent overlap.
+//!
+//! This is the ground-truth physics of the simulated GPU. Both behaviours
+//! the paper highlights in §III-C hold by construction:
+//!   * a thread block executes fully even if its tile is partially filled
+//!     (block FLOPs always use the full tile);
+//!   * the final wave runs all its blocks in parallel (lockstep compute
+//!     time), only its memory pressure is lighter.
+
+use crate::ops::{Counters, GemmOp};
+
+use super::device::DeviceSpec;
+use super::kernel::GemmKernel;
+
+/// Kernel selection for one GEMM: which implementation + split-K factor.
+/// This is what `algo_get_heuristic` returns — and what PM2Lat profiles
+/// against (paper §III-B "Dataset Matching" fix).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmConfig {
+    pub kernel_id: usize,
+    pub splitk: usize,
+}
+
+/// Wave decomposition of a GEMM launch.
+#[derive(Clone, Copy, Debug)]
+pub struct WaveInfo {
+    pub blocks: usize,
+    /// Blocks resident per SM (occupancy).
+    pub blocks_per_sm: usize,
+    /// Blocks per wave = SMs × blocks_per_sm.
+    pub wave_capacity: usize,
+    pub full_waves: usize,
+    pub tail_blocks: usize,
+}
+
+impl WaveInfo {
+    pub fn total_waves(&self) -> usize {
+        self.full_waves + (self.tail_blocks > 0) as usize
+    }
+}
+
+/// Occupancy: how many blocks of `kern` fit per SM. None = kernel cannot
+/// launch on this device (shared-memory overflow).
+pub fn blocks_per_sm(dev: &DeviceSpec, kern: &GemmKernel) -> Option<usize> {
+    let smem_lim = (dev.smem_kib * 1024.0 / kern.smem_bytes()).floor() as usize;
+    if smem_lim == 0 {
+        return None;
+    }
+    let thread_lim = dev.max_threads_per_sm / kern.threads;
+    Some(smem_lim.min(thread_lim).min(8).max(1))
+}
+
+/// Wave decomposition for (op, kern, splitk).
+pub fn wave_info(
+    dev: &DeviceSpec,
+    kern: &GemmKernel,
+    op: &GemmOp,
+    splitk: usize,
+) -> Option<WaveInfo> {
+    let bpsm = blocks_per_sm(dev, kern)?;
+    let tiles_m = op.m.div_ceil(kern.tile_m);
+    let tiles_n = op.n.div_ceil(kern.tile_n);
+    let blocks = tiles_m * tiles_n * op.batch * splitk;
+    let wave_capacity = dev.sm_count * bpsm;
+    Some(WaveInfo {
+        blocks,
+        blocks_per_sm: bpsm,
+        wave_capacity,
+        full_waves: blocks / wave_capacity,
+        tail_blocks: blocks % wave_capacity,
+    })
+}
+
+/// Internal per-wave timing breakdown (also drives counters + power).
+struct WaveTimes {
+    t_compute: f64,
+    t_mem_full: f64,
+    dram_bytes_per_block: f64,
+    l2_bytes_per_block: f64,
+}
+
+fn wave_times(
+    dev: &DeviceSpec,
+    kern: &GemmKernel,
+    op: &GemmOp,
+    splitk: usize,
+    waves: &WaveInfo,
+    freq_ghz: f64,
+) -> WaveTimes {
+    let kb = op.k.div_ceil(splitk) as f64;
+    let dsize = op.dtype.bytes() as f64;
+    // --- compute: blocks on an SM share its FLOP throughput ---
+    let block_flops = 2.0 * kern.tile_m as f64 * kern.tile_n as f64 * kb;
+    let peak = dev.peak_tflops(op.dtype).expect("dtype gated earlier")
+        * 1e12
+        * (freq_ghz / dev.max_freq_ghz);
+    let per_sm = peak / dev.sm_count as f64;
+    let eff = kern.eff_at_k(kb) * kern.trans_eff(op.trans());
+    let t_compute = block_flops * waves.blocks_per_sm as f64 / (per_sm * eff);
+    // --- memory: operand slabs + output tile per block ---
+    let in_bytes = (kern.tile_m + kern.tile_n) as f64 * kb * dsize;
+    let out_bytes = (kern.tile_m * kern.tile_n) as f64 * dsize;
+    // L2 residency: the kernel's swizzle-/layout-dependent reuse fraction,
+    // blending up toward near-full residency as the operand set shrinks
+    // below the L2 capacity (smooth, like a real cache's hit curve).
+    let mut l2f = kern.l2_frac(op.trans());
+    let ws = op.io_bytes() / dev.l2_bytes();
+    if ws < 3.0 {
+        let resident = 0.85;
+        let t = if ws <= 0.4 {
+            1.0
+        } else {
+            // log-space ramp from fully-resident (0.4×L2) to none (3×L2).
+            1.0 - (ws.ln() - 0.4f64.ln()) / (3.0f64.ln() - 0.4f64.ln())
+        };
+        l2f = l2f.max(l2f + (resident - l2f) * t.clamp(0.0, 1.0));
+    }
+    let dram_bytes_per_block = in_bytes * (1.0 - l2f) + out_bytes;
+    let l2_bytes_per_block = in_bytes * l2f;
+    let cap = waves.wave_capacity as f64;
+    let t_mem_full = (dram_bytes_per_block * cap)
+        / (dev.dram_bw() * kern.mem_eff)
+        + (l2_bytes_per_block * cap) / (dev.l2_bw() * kern.mem_eff);
+    WaveTimes { t_compute, t_mem_full, dram_bytes_per_block, l2_bytes_per_block }
+}
+
+/// Noise-free GEMM latency in seconds at a given core frequency.
+/// None = kernel cannot run this op on this device.
+pub fn gemm_latency(
+    dev: &DeviceSpec,
+    kern: &GemmKernel,
+    op: &GemmOp,
+    cfg_splitk: usize,
+    freq_ghz: f64,
+) -> Option<f64> {
+    if !dev.supports(op.dtype) || kern.dtype != op.dtype {
+        return None;
+    }
+    let splitk = cfg_splitk.max(1);
+    let waves = wave_info(dev, kern, op, splitk)?;
+    let wt = wave_times(dev, kern, op, splitk, &waves, freq_ghz);
+    let overlap = kern.overlap();
+    let combine = |tc: f64, tm: f64| tc.max(tm) + (1.0 - overlap) * tc.min(tm);
+    let full_wave_t = combine(wt.t_compute, wt.t_mem_full);
+    let tail_frac = waves.tail_blocks as f64 / waves.wave_capacity as f64;
+    let tail_t = if waves.tail_blocks > 0 {
+        // Tail wave: fewer blocks resident per SM share its throughput, so
+        // per-block compute speeds up; aggregate memory pressure shrinks
+        // proportionally. (SIMT lockstep still holds *within* the wave.)
+        let tail_bpsm = waves.tail_blocks.div_ceil(dev.sm_count);
+        let t_compute_tail =
+            wt.t_compute * tail_bpsm as f64 / waves.blocks_per_sm as f64;
+        combine(t_compute_tail, wt.t_mem_full * tail_frac)
+    } else {
+        0.0
+    };
+    // Split-K epilogue: partial products reduced through DRAM.
+    let reduce_t = if splitk > 1 {
+        let bytes =
+            (op.batch * op.m * op.n) as f64 * (splitk as f64 + 1.0) * 4.0;
+        bytes / dev.dram_bw() + dev.launch_us * 1e-6 * 0.5
+    } else {
+        0.0
+    };
+    let sched_t = 0.15e-6 * waves.total_waves() as f64;
+    Some(
+        dev.launch_us * 1e-6
+            + waves.full_waves as f64 * full_wave_t
+            + tail_t
+            + reduce_t
+            + sched_t,
+    )
+}
+
+/// NCU-style counters for the op under this kernel config.
+pub fn gemm_counters(
+    dev: &DeviceSpec,
+    kern: &GemmKernel,
+    op: &GemmOp,
+    cfg_splitk: usize,
+) -> Counters {
+    let splitk = cfg_splitk.max(1);
+    let waves = match wave_info(dev, kern, op, splitk) {
+        Some(w) => w,
+        None => return Counters::default(),
+    };
+    let wt = wave_times(dev, kern, op, splitk, &waves, dev.max_freq_ghz);
+    let nb = waves.blocks as f64;
+    Counters {
+        flops: op.flops(),
+        dram_bytes: wt.dram_bytes_per_block * nb,
+        l2_bytes: wt.l2_bytes_per_block * nb,
+        int_ops: nb * (kern.tile_m * kern.tile_n) as f64 * 0.5,
+        mem_insts: (wt.dram_bytes_per_block + wt.l2_bytes_per_block) * nb / 128.0,
+    }
+}
+
+/// Achieved-FLOPs utilization (for power draw + NeuSight's target).
+pub fn utilization(dev: &DeviceSpec, op: &GemmOp, latency_s: f64) -> f64 {
+    let peak = match dev.peak_tflops(op.dtype) {
+        Some(p) => p * 1e12,
+        None => return 0.0,
+    };
+    (op.flops() / (peak * latency_s)).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::device_by_name;
+    use crate::gpusim::kernel::registry;
+    use crate::ops::{DType, GemmOp};
+
+    fn a100_fp32() -> (DeviceSpec, Vec<GemmKernel>) {
+        let d = device_by_name("a100").unwrap();
+        let ks = registry(&d, DType::F32);
+        (d, ks)
+    }
+
+    #[test]
+    fn latency_monotone_in_k() {
+        let (d, ks) = a100_fp32();
+        let k = &ks[9];
+        let mut prev = 0.0;
+        for kk in [64, 256, 1024, 4096, 8192] {
+            let op = GemmOp::mm(2048, 2048, kk, DType::F32);
+            let t = gemm_latency(&d, k, &op, 1, d.max_freq_ghz).unwrap();
+            assert!(t > prev, "k={kk}: {t} <= {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn duration_linear_in_k_at_fixed_waves() {
+        // Fig 3: fixed tile/waves, duration ≈ linear in K at large K.
+        let (d, ks) = a100_fp32();
+        let k = &ks[9];
+        let op1 = GemmOp::mm(2048, 2048, 4096, DType::F32);
+        let op2 = GemmOp::mm(2048, 2048, 8192, DType::F32);
+        let t1 = gemm_latency(&d, k, &op1, 1, d.max_freq_ghz).unwrap();
+        let t2 = gemm_latency(&d, k, &op2, 1, d.max_freq_ghz).unwrap();
+        let ratio = t2 / t1;
+        assert!(ratio > 1.7 && ratio < 2.2, "ratio={ratio}");
+    }
+
+    #[test]
+    fn throughput_saturates_rationally() {
+        // Fig 4: throughput (flops/s) grows with K and saturates.
+        let (d, ks) = a100_fp32();
+        let k = &ks[9];
+        let thr = |kk: usize| {
+            let op = GemmOp::mm(2048, 2048, kk, DType::F32);
+            op.flops() / gemm_latency(&d, k, &op, 1, d.max_freq_ghz).unwrap()
+        };
+        let t32 = thr(32);
+        let t1024 = thr(1024);
+        let t8192 = thr(8192);
+        assert!(t1024 > t32 * 2.0);
+        assert!(t8192 > t1024);
+        // Diminishing returns: last doubling gains < 20%.
+        assert!(thr(8192) / thr(4096) < 1.2);
+    }
+
+    #[test]
+    fn partial_tiles_execute_fully() {
+        // m=129 with tile 128 costs the same as m=256 block count-wise.
+        let (d, ks) = a100_fp32();
+        let k = ks.iter().find(|k| k.tile_m == 128 && k.tile_n == 128).unwrap();
+        let t_full =
+            gemm_latency(&d, k, &GemmOp::mm(256, 1024, 1024, DType::F32), 1, d.max_freq_ghz)
+                .unwrap();
+        let t_partial =
+            gemm_latency(&d, k, &GemmOp::mm(129, 1024, 1024, DType::F32), 1, d.max_freq_ghz)
+                .unwrap();
+        assert_eq!(
+            wave_info(&d, k, &GemmOp::mm(129, 1024, 1024, DType::F32), 1)
+                .unwrap()
+                .blocks,
+            wave_info(&d, k, &GemmOp::mm(256, 1024, 1024, DType::F32), 1)
+                .unwrap()
+                .blocks
+        );
+        // Same blocks → same latency.
+        assert!((t_full - t_partial).abs() < 1e-12);
+    }
+
+    #[test]
+    fn splitk_helps_small_mn_large_k() {
+        let (d, ks) = a100_fp32();
+        let k = ks.iter().find(|k| k.tile_m == 128 && k.tile_n == 128).unwrap();
+        let op = GemmOp::mm(128, 128, 16384, DType::F32);
+        let t1 = gemm_latency(&d, k, &op, 1, d.max_freq_ghz).unwrap();
+        let t8 = gemm_latency(&d, k, &op, 8, d.max_freq_ghz).unwrap();
+        assert!(t8 < t1, "splitk should help: {t8} vs {t1}");
+    }
+
+    #[test]
+    fn kernels_differ_on_same_op() {
+        // The paper's core phenomenon: same FLOPs, different kernels,
+        // significantly different latency.
+        let (d, ks) = a100_fp32();
+        let op = GemmOp::mm(1024, 1024, 1024, DType::F32);
+        let ts: Vec<f64> = ks
+            .iter()
+            .filter_map(|k| gemm_latency(&d, k, &op, 1, d.max_freq_ghz))
+            .collect();
+        let lo = ts.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = ts.iter().cloned().fold(0.0, f64::max);
+        assert!(hi / lo > 1.3, "kernel disparity too small: {}", hi / lo);
+    }
+
+    #[test]
+    fn frequency_scales_compute_latency() {
+        let (d, ks) = a100_fp32();
+        let k = &ks[9];
+        let op = GemmOp::mm(4096, 4096, 4096, DType::F32);
+        let t_full = gemm_latency(&d, k, &op, 1, d.max_freq_ghz).unwrap();
+        let t_half = gemm_latency(&d, k, &op, 1, d.max_freq_ghz / 2.0).unwrap();
+        assert!(t_half > t_full * 1.3, "compute-bound op must slow down");
+    }
+
+    #[test]
+    fn wrong_dtype_kernel_rejected() {
+        let (d, ks) = a100_fp32();
+        let op = GemmOp::mm(128, 128, 128, DType::Bf16);
+        assert!(gemm_latency(&d, &ks[0], &op, 1, d.max_freq_ghz).is_none());
+    }
+
+    #[test]
+    fn counters_positive_and_flops_exact() {
+        let (d, ks) = a100_fp32();
+        let op = GemmOp::mm(512, 512, 512, DType::F32);
+        let c = gemm_counters(&d, &ks[3], &op, 1);
+        assert_eq!(c.flops, op.flops());
+        assert!(c.dram_bytes > 0.0 && c.l2_bytes > 0.0);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let (d, _) = a100_fp32();
+        let op = GemmOp::mm(4096, 4096, 4096, DType::F32);
+        let u = utilization(&d, &op, 0.02);
+        assert!(u > 0.0 && u <= 1.0);
+    }
+}

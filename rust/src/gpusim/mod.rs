@@ -1,0 +1,24 @@
+//! # gpusim — the simulated GPU substrate
+//!
+//! Wave-level SIMT latency simulator instantiated with the paper's five
+//! Table-I devices. It reproduces the phenomena PM2Lat is built on —
+//! tile/wave quantization, per-kernel efficiency disparity (13 FP32 / 96
+//! BF16 implementations), rational throughput-vs-K curves, composite
+//! DRAM+L2+L1 bandwidth, launch overhead, thermal throttling and
+//! measurement noise — behind the same observational API real hardware
+//! offers: execute an op, get a duration + NCU-style counters. See
+//! DESIGN.md §1 for the substitution argument, §3 for the model.
+
+pub mod custom;
+pub mod device;
+pub mod executor;
+pub mod gemm;
+pub mod heuristic;
+pub mod kernel;
+pub mod thermal;
+pub mod utility;
+
+pub use device::{all_devices, device_by_name, Arch, Cooling, DeviceSpec};
+pub use executor::{ExecError, FreqMode, Gpu, Sample};
+pub use gemm::{GemmConfig, WaveInfo};
+pub use kernel::GemmKernel;

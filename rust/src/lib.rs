@@ -1,0 +1,34 @@
+//! # PM2Lat — kernel-aware DNN latency prediction (paper reproduction)
+//!
+//! Three-layer reproduction of *PM2Lat: Highly Accurate and Generalized
+//! Prediction of DNN Execution Latency on GPUs* (CS.PF 2026):
+//!
+//! - **L1/L2 (build-time Python)** — Pallas kernels + JAX graphs, AOT-lowered
+//!   to HLO text under `artifacts/` (`make artifacts`).
+//! - **L3 (this crate)** — everything at runtime: the simulated-GPU
+//!   substrate ([`gpusim`]), the CUPTI/NCU-style [`profiler`], the paper's
+//!   predictor ([`pm2lat`]), the NeuSight baseline ([`neusight`]) whose MLP
+//!   runs through PJRT ([`runtime`]), the transformer model zoo
+//!   ([`models`]), the prediction service ([`coordinator`]), and the two
+//!   applications from §IV-D ([`apps`]).
+//!
+//! The physical GPUs of the paper are replaced by `gpusim` per the
+//! substitution table in DESIGN.md §1; everything downstream consumes only
+//! latency observations + kernel metadata, exactly as the paper's method
+//! does on hardware.
+
+pub mod apps;
+pub mod coordinator;
+pub mod experiments;
+pub mod gpusim;
+pub mod models;
+pub mod neusight;
+pub mod ops;
+pub mod pm2lat;
+pub mod profiler;
+pub mod runtime;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,118 @@
+//! PM2Lat CLI — the leader entrypoint.
+//!
+//! ```text
+//! pm2lat report devices                     # Table I
+//! pm2lat predict --device a100 --model gpt2-large --batch 8
+//! pm2lat layer --device l4 --dtype bf16 --m 1024 --n 1024 --k 4096
+//! pm2lat experiments [--full]               # every table + figure
+//! pm2lat nas --n 1000                       # §IV-D2 speed study
+//! pm2lat partition                          # §IV-D1 case study
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use pm2lat::experiments::{self, Scale};
+use pm2lat::gpusim::Gpu;
+use pm2lat::models::{runner, zoo};
+use pm2lat::ops::{DType, GemmOp, Op};
+use pm2lat::pm2lat::Pm2Lat;
+use pm2lat::profiler::ProfileSpec;
+use pm2lat::runtime::Runtime;
+use pm2lat::util::cli::Args;
+
+fn main() {
+    let args = Args::parse_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("report") => {
+            println!("{}", experiments::tables::table1());
+            Ok(())
+        }
+        Some("layer") => layer(args),
+        Some("predict") => predict_model(args),
+        Some("experiments") => {
+            let runtime = Runtime::open_default()?;
+            if args.flag("full") {
+                std::env::set_var("PM2LAT_FULL", "1");
+            }
+            let report = experiments::run_all(&runtime, Scale::from_env())?;
+            println!("{report}");
+            println!("\n(written to results/)");
+            Ok(())
+        }
+        Some("nas") => {
+            let runtime = Runtime::open_default()?;
+            let mut lab = experiments::Lab::build(&runtime, Scale::from_env(), false)?;
+            let n = args.opt_usize("n", 1000);
+            println!("{}", experiments::apps_exp::nas_speed_experiment(&mut lab, n)?);
+            Ok(())
+        }
+        Some("partition") => {
+            let runtime = Runtime::open_default()?;
+            let mut lab = experiments::Lab::build(&runtime, Scale::from_env(), false)?;
+            println!("{}", experiments::apps_exp::partition_experiment(&mut lab)?);
+            Ok(())
+        }
+        Some(cmd) => Err(anyhow!("unknown command `{cmd}` (try: report, layer, predict, experiments, nas, partition)")),
+        None => {
+            println!("pm2lat {} — kernel-aware DNN latency prediction", pm2lat::version());
+            println!("commands: report | layer | predict | experiments | nas | partition");
+            Ok(())
+        }
+    }
+}
+
+fn layer(args: &Args) -> Result<()> {
+    let device = args.opt_or("device", "a100").to_string();
+    let dtype = DType::parse(args.opt_or("dtype", "fp32"))
+        .ok_or_else(|| anyhow!("bad dtype"))?;
+    let m = args.opt_usize("m", 1024);
+    let n = args.opt_usize("n", 1024);
+    let k = args.opt_usize("k", 1024);
+    let mut gpu = Gpu::by_name(&device).ok_or_else(|| anyhow!("unknown device"))?;
+    let pl = Pm2Lat::build_dtypes(&mut gpu, &ProfileSpec::experiment(), &[dtype], false);
+    gpu.reset();
+    let op = Op::Gemm(GemmOp::mm(m, n, k, dtype));
+    let pred = pl
+        .predict(&gpu, &op)
+        .ok_or_else(|| anyhow!("unsupported on this device"))?;
+    let truth = pm2lat::profiler::measure(&mut gpu, &op, &ProfileSpec::experiment())?;
+    println!(
+        "MatMul {m}x{n}x{k} {dtype} on {device}: predicted {:.3} ms, measured {:.3} ms ({:+.1}%)",
+        pred * 1e3,
+        truth.mean_s * 1e3,
+        pm2lat::util::stats::signed_rel_err_pct(pred, truth.mean_s)
+    );
+    Ok(())
+}
+
+fn predict_model(args: &Args) -> Result<()> {
+    let device = args.opt_or("device", "a100").to_string();
+    let model = args.opt_or("model", "gpt2-large").to_string();
+    let batch = args.opt_usize("batch", 1);
+    let seq = args.opt_usize("seq", 512);
+    let cfg = zoo::by_name(&model).ok_or_else(|| anyhow!("unknown model"))?;
+    let mut gpu = Gpu::by_name(&device).ok_or_else(|| anyhow!("unknown device"))?;
+    let pl = Pm2Lat::build_dtypes(&mut gpu, &ProfileSpec::experiment(), &[cfg.dtype], false);
+    gpu.reset();
+    let trace = cfg.trace(batch, seq);
+    let pred = pl
+        .predict_trace(&gpu, &trace)
+        .ok_or_else(|| anyhow!("model unsupported on this device"))?;
+    println!("{model} BS={batch} seq={seq} on {device}: predicted {:.1} ms", pred * 1e3);
+    match runner::run_model(&mut gpu, &cfg, batch, seq, 5, 25) {
+        Ok(run) => println!(
+            "measured {:.1} ms → error {:+.1}%",
+            run.mean_s * 1e3,
+            pm2lat::util::stats::signed_rel_err_pct(pred, run.mean_s)
+        ),
+        Err(e) => println!("(measurement unavailable: {e})"),
+    }
+    Ok(())
+}

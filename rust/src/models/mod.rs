@@ -1,0 +1,11 @@
+//! # models — the Table III transformer zoo
+//!
+//! Architecture configs ([`zoo`]), the kernel-trace expansion
+//! ([`transformer`]), and ground-truth execution on the simulator
+//! ([`runner`]).
+
+pub mod runner;
+pub mod transformer;
+pub mod zoo;
+
+pub use transformer::TransformerConfig;

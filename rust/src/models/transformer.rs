@@ -1,0 +1,252 @@
+//! Transformer graph builder: a model configuration expands into the
+//! per-layer CUDA-kernel trace (the `Op` sequence) that both the simulator
+//! executes for ground truth and the predictors sum over (paper §IV-B).
+//! Inference/prefill only — the paper evaluates inference and notes the
+//! backward pass reuses the same kernel types.
+
+use crate::ops::{DType, GemmOp, Op, UtilKind, UtilOp};
+
+/// Architecture description (decoder-only or encoder–decoder).
+#[derive(Clone, Debug)]
+pub struct TransformerConfig {
+    pub name: &'static str,
+    /// Reported parameter count (for Table III).
+    pub params_b: f64,
+    pub layers: usize,
+    /// Encoder layers (encoder–decoder models only).
+    pub enc_layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    /// KV heads (GQA); == heads for MHA.
+    pub kv_heads: usize,
+    pub ffn_hidden: usize,
+    pub vocab: usize,
+    pub dtype: DType,
+    /// Gated FFN (SwiGLU / gated GeLU): up + gate + down projections.
+    pub gated_ffn: bool,
+}
+
+impl TransformerConfig {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Exact weight parameter count from the architecture.
+    pub fn weight_params(&self) -> f64 {
+        let h = self.hidden as f64;
+        let hd = self.head_dim() as f64;
+        let q = h * h;
+        let kv = 2.0 * h * (self.kv_heads as f64 * hd);
+        let o = h * h;
+        let ffn = if self.gated_ffn {
+            3.0 * h * self.ffn_hidden as f64
+        } else {
+            2.0 * h * self.ffn_hidden as f64
+        };
+        let per_layer = q + kv + o + ffn + 2.0 * h;
+        let dec = self.layers as f64 * per_layer;
+        // Encoder layers + decoder cross-attention.
+        let enc = self.enc_layers as f64 * per_layer;
+        let cross = if self.enc_layers > 0 {
+            self.layers as f64 * (q + kv + o)
+        } else {
+            0.0
+        };
+        let embed = self.vocab as f64 * h;
+        dec + enc + cross + embed
+    }
+
+    pub fn weight_bytes(&self) -> f64 {
+        self.weight_params() * self.dtype.bytes() as f64
+    }
+
+    /// Peak activation estimate for (batch, seq) prefill: transient
+    /// buffers + materialized attention scores + framework overhead.
+    pub fn activation_bytes(&self, batch: usize, seq: usize) -> f64 {
+        let d = self.dtype.bytes() as f64;
+        let per_sample = seq as f64 * self.hidden.max(self.ffn_hidden) as f64 * d * 6.0
+            + self.heads as f64 * (seq as f64).powi(2) * d * 2.0;
+        batch as f64 * per_sample
+    }
+
+    /// Total memory needed (weights + activations + CUDA context).
+    pub fn memory_bytes(&self, batch: usize, seq: usize) -> f64 {
+        self.weight_bytes() + self.activation_bytes(batch, seq) + 0.7e9
+    }
+
+    /// One attention + FFN block's kernel trace (self-attention).
+    fn block_trace(&self, batch: usize, seq: usize, out: &mut Vec<Op>) {
+        let dt = self.dtype;
+        let h = self.hidden;
+        let hd = self.head_dim();
+        let rows = batch * seq;
+        let kv_dim = self.kv_heads * hd;
+        // Pre-norm.
+        out.push(Op::Util(UtilOp::new(UtilKind::LayerNorm, rows, h, dt)));
+        // QKV projection (fused as one Linear, TN like torch Linear).
+        out.push(Op::Gemm(GemmOp::linear(rows, h + 2 * kv_dim, h, dt)));
+        // Attention scores + weighted values as batched MatMul (the
+        // non-fused PyTorch/ONNX path the paper's Table II "BMM" row
+        // profiles), plus the softmax.
+        out.push(Op::Gemm(GemmOp::bmm(batch * self.heads, seq, seq, hd, dt)));
+        out.push(Op::Util(UtilOp::new(
+            UtilKind::Softmax,
+            batch * self.heads * seq,
+            seq,
+            dt,
+        )));
+        out.push(Op::Gemm(GemmOp::bmm(batch * self.heads, seq, hd, seq, dt)));
+        // Output projection + residual.
+        out.push(Op::Gemm(GemmOp::linear(rows, h, h, dt)));
+        out.push(Op::Util(UtilOp::new(UtilKind::Add, rows, h, dt)));
+        // FFN.
+        out.push(Op::Util(UtilOp::new(UtilKind::LayerNorm, rows, h, dt)));
+        if self.gated_ffn {
+            out.push(Op::Gemm(GemmOp::linear(rows, 2 * self.ffn_hidden, h, dt)));
+            out.push(Op::Util(UtilOp::new(UtilKind::Gelu, rows, self.ffn_hidden, dt)));
+            out.push(Op::Util(UtilOp::new(UtilKind::Mul, rows, self.ffn_hidden, dt)));
+        } else {
+            out.push(Op::Gemm(GemmOp::linear(rows, self.ffn_hidden, h, dt)));
+            out.push(Op::Util(UtilOp::new(UtilKind::Gelu, rows, self.ffn_hidden, dt)));
+        }
+        out.push(Op::Gemm(GemmOp::linear(rows, h, self.ffn_hidden, dt)));
+        out.push(Op::Util(UtilOp::new(UtilKind::Add, rows, h, dt)));
+    }
+
+    /// Full inference (prefill) trace for (batch, seq).
+    pub fn trace(&self, batch: usize, seq: usize) -> Vec<Op> {
+        let mut out = Vec::new();
+        // Encoder stack (enc–dec models).
+        for _ in 0..self.enc_layers {
+            self.block_trace(batch, seq, &mut out);
+        }
+        // Decoder stack (+ cross-attention for enc–dec).
+        for _ in 0..self.layers {
+            self.block_trace(batch, seq, &mut out);
+            if self.enc_layers > 0 {
+                let dt = self.dtype;
+                let h = self.hidden;
+                let hd = self.head_dim();
+                let rows = batch * seq;
+                out.push(Op::Util(UtilOp::new(UtilKind::LayerNorm, rows, h, dt)));
+                out.push(Op::Gemm(GemmOp::linear(rows, h, h, dt))); // Q
+                out.push(Op::Gemm(GemmOp::linear(rows, 2 * h, h, dt))); // KV from enc
+                out.push(Op::Gemm(GemmOp::bmm(batch * self.heads, seq, seq, hd, dt)));
+                out.push(Op::Util(UtilOp::new(UtilKind::Softmax, batch * self.heads * seq, seq, dt)));
+                out.push(Op::Gemm(GemmOp::bmm(batch * self.heads, seq, hd, seq, dt)));
+                out.push(Op::Gemm(GemmOp::linear(rows, h, h, dt)));
+                out.push(Op::Util(UtilOp::new(UtilKind::Add, rows, h, dt)));
+            }
+        }
+        // Final norm + LM head.
+        out.push(Op::Util(UtilOp::new(UtilKind::LayerNorm, batch * seq, self.hidden, self.dtype)));
+        out.push(Op::Gemm(GemmOp::linear(batch * seq, self.vocab, self.hidden, self.dtype)));
+        out
+    }
+
+    /// Trace of a contiguous decoder-block range [lo, hi) — the unit the
+    /// partitioner (§IV-D1) splits on. `include_head` appends the LM head.
+    pub fn block_range_trace(
+        &self,
+        batch: usize,
+        seq: usize,
+        lo: usize,
+        hi: usize,
+        include_head: bool,
+    ) -> Vec<Op> {
+        let mut out = Vec::new();
+        for _ in lo..hi.min(self.layers) {
+            self.block_trace(batch, seq, &mut out);
+        }
+        if include_head {
+            out.push(Op::Util(UtilOp::new(UtilKind::LayerNorm, batch * seq, self.hidden, self.dtype)));
+            out.push(Op::Gemm(GemmOp::linear(batch * seq, self.vocab, self.hidden, self.dtype)));
+        }
+        out
+    }
+
+    /// Weight bytes of a block range (+ embeddings/head on the end hosts).
+    pub fn block_range_weight_bytes(&self, lo: usize, hi: usize, include_head: bool) -> f64 {
+        let h = self.hidden as f64;
+        let hd = self.head_dim() as f64;
+        let ffn = if self.gated_ffn {
+            3.0 * h * self.ffn_hidden as f64
+        } else {
+            2.0 * h * self.ffn_hidden as f64
+        };
+        let per_layer =
+            h * h * 2.0 + 2.0 * h * (self.kv_heads as f64 * hd) + ffn + 2.0 * h;
+        let mut params = (hi.min(self.layers) - lo) as f64 * per_layer;
+        if include_head {
+            params += self.vocab as f64 * h;
+        }
+        if lo == 0 {
+            params += self.vocab as f64 * h; // embedding table
+        }
+        params * self.dtype.bytes() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn trace_structure_counts() {
+        let cfg = zoo::gpt2_large();
+        let trace = cfg.trace(1, 512);
+        let gemms = trace.iter().filter(|o| matches!(o, Op::Gemm(_))).count();
+        // 5 GEMMs per block (qkv, 2 bmm, out, ffn-up, ffn-down = 6) + head.
+        assert_eq!(gemms, cfg.layers * 6 + 1);
+        let softmaxes = trace
+            .iter()
+            .filter(|o| matches!(o, Op::Util(u) if u.kind == UtilKind::Softmax))
+            .count();
+        assert_eq!(softmaxes, cfg.layers);
+    }
+
+    #[test]
+    fn gated_ffn_adds_mul() {
+        let cfg = zoo::qwen3_0_6b();
+        let trace = cfg.trace(1, 128);
+        assert!(trace
+            .iter()
+            .any(|o| matches!(o, Op::Util(u) if u.kind == UtilKind::Mul)));
+    }
+
+    #[test]
+    fn enc_dec_has_cross_attention() {
+        let t5 = zoo::flan_t5_base();
+        let plain = zoo::gpt2_large();
+        let t5_gemms_per_layer = t5.trace(1, 128).iter().filter(|o| matches!(o, Op::Gemm(_))).count()
+            as f64
+            / (t5.layers + t5.enc_layers) as f64;
+        let gpt_gemms_per_layer = plain.trace(1, 128).iter().filter(|o| matches!(o, Op::Gemm(_))).count()
+            as f64
+            / plain.layers as f64;
+        assert!(t5_gemms_per_layer > gpt_gemms_per_layer);
+    }
+
+    #[test]
+    fn block_range_composes_to_full_decoder() {
+        let cfg = zoo::qwen3_4b();
+        let a = cfg.block_range_trace(2, 256, 0, 12, false);
+        let b = cfg.block_range_trace(2, 256, 12, cfg.layers, true);
+        let full = cfg.trace(2, 256);
+        assert_eq!(a.len() + b.len(), full.len());
+    }
+
+    #[test]
+    fn block_weights_sum_to_total() {
+        let cfg = zoo::qwen3_4b();
+        let a = cfg.block_range_weight_bytes(0, 12, false);
+        let b = cfg.block_range_weight_bytes(12, cfg.layers, true);
+        // The split holds the untied LM head on the tail device, so the
+        // sum exceeds the (tied-embedding) total by exactly vocab × h.
+        let total = cfg.weight_bytes()
+            + (cfg.vocab * cfg.hidden * cfg.dtype.bytes()) as f64;
+        let sum = a + b;
+        assert!((sum - total).abs() / total < 0.01, "{sum} vs {total}");
+    }
+}

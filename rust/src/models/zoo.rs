@@ -1,0 +1,161 @@
+//! The six Table-III models, with architecture parameters from their
+//! published configs (GPT-2 Large, FLAN-T5 Base, Qwen3 0.6B/4B,
+//! DeepSeek-R1-Distill-Qwen 7B/14B).
+
+use crate::ops::DType;
+
+use super::transformer::TransformerConfig;
+
+pub fn gpt2_large() -> TransformerConfig {
+    TransformerConfig {
+        name: "gpt2-large",
+        params_b: 0.774,
+        layers: 36,
+        enc_layers: 0,
+        hidden: 1280,
+        heads: 20,
+        kv_heads: 20,
+        ffn_hidden: 5120,
+        vocab: 50257,
+        dtype: DType::F32,
+        gated_ffn: false,
+    }
+}
+
+pub fn flan_t5_base() -> TransformerConfig {
+    TransformerConfig {
+        name: "flan-t5-base",
+        params_b: 0.250,
+        layers: 12,
+        enc_layers: 12,
+        hidden: 768,
+        heads: 12,
+        kv_heads: 12,
+        ffn_hidden: 2048,
+        vocab: 32128,
+        dtype: DType::F32,
+        gated_ffn: true, // gated-GELU FFN in T5 v1.1 / FLAN
+    }
+}
+
+pub fn qwen3_0_6b() -> TransformerConfig {
+    TransformerConfig {
+        name: "qwen3-0.6b",
+        params_b: 0.6,
+        layers: 28,
+        enc_layers: 0,
+        hidden: 1024,
+        heads: 16,
+        kv_heads: 8,
+        ffn_hidden: 3072,
+        vocab: 151936,
+        dtype: DType::Bf16,
+        gated_ffn: true,
+    }
+}
+
+pub fn qwen3_4b() -> TransformerConfig {
+    TransformerConfig {
+        name: "qwen3-4b",
+        params_b: 4.0,
+        layers: 36,
+        enc_layers: 0,
+        hidden: 2560,
+        heads: 32,
+        kv_heads: 8,
+        ffn_hidden: 9728,
+        vocab: 151936,
+        dtype: DType::Bf16,
+        gated_ffn: true,
+    }
+}
+
+pub fn deepseek_r1_7b() -> TransformerConfig {
+    TransformerConfig {
+        name: "ds-r1-7b",
+        params_b: 7.0,
+        layers: 28,
+        enc_layers: 0,
+        hidden: 3584,
+        heads: 28,
+        kv_heads: 4,
+        ffn_hidden: 18944,
+        vocab: 152064,
+        dtype: DType::Bf16,
+        gated_ffn: true,
+    }
+}
+
+pub fn deepseek_r1_14b() -> TransformerConfig {
+    TransformerConfig {
+        name: "ds-r1-14b",
+        params_b: 14.0,
+        layers: 48,
+        enc_layers: 0,
+        hidden: 5120,
+        heads: 40,
+        kv_heads: 8,
+        ffn_hidden: 13824,
+        vocab: 152064,
+        dtype: DType::Bf16,
+        gated_ffn: true,
+    }
+}
+
+pub fn all_models() -> Vec<TransformerConfig> {
+    vec![
+        gpt2_large(),
+        flan_t5_base(),
+        qwen3_0_6b(),
+        qwen3_4b(),
+        deepseek_r1_7b(),
+        deepseek_r1_14b(),
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<TransformerConfig> {
+    all_models().into_iter().find(|m| m.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_counts_match_reported() {
+        // Architecture-derived counts should land near the reported sizes
+        // (within 20% — embeddings/tied weights vary by convention).
+        for cfg in all_models() {
+            let derived = cfg.weight_params() / 1e9;
+            let ratio = derived / cfg.params_b;
+            assert!(
+                ratio > 0.75 && ratio < 1.35,
+                "{}: derived {derived:.2}B vs reported {}B",
+                cfg.name,
+                cfg.params_b
+            );
+        }
+    }
+
+    #[test]
+    fn dtype_assignment_matches_table3() {
+        assert_eq!(gpt2_large().dtype, DType::F32);
+        assert_eq!(flan_t5_base().dtype, DType::F32);
+        assert_eq!(qwen3_4b().dtype, DType::Bf16);
+        assert_eq!(deepseek_r1_14b().dtype, DType::Bf16);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("qwen3-4b").is_some());
+        assert!(by_name("GPT2-LARGE").is_some());
+        assert!(by_name("llama").is_none());
+    }
+
+    #[test]
+    fn memory_ordering_by_size() {
+        let small = qwen3_0_6b().memory_bytes(1, 512);
+        let big = deepseek_r1_14b().memory_bytes(1, 512);
+        assert!(big > small * 5.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! NeuSight feature extraction: the shape/wave/device-spec feature vector
+//! its utilization MLP consumes (paper §II / §III-B). Exactly the inputs
+//! the paper criticizes: theoretical peak FLOPs, DRAM bandwidth, L2 size,
+//! SM count, cores per SM, FLOP counts and wave estimates — and nothing
+//! about which of the 13/96 kernel implementations actually runs.
+
+use crate::gpusim::DeviceSpec;
+use crate::ops::{DType, GemmOp, Op, UtilOp};
+
+/// Must match the AOT-compiled MLP input width (manifest feature_dim).
+pub const FEATURE_DIM: usize = 16;
+
+/// Tile assumption used for wave estimation (from the tile dataset match;
+/// NeuSight has no heuristic API access).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TileGuess {
+    pub tile_m: usize,
+    pub tile_n: usize,
+}
+
+impl Default for TileGuess {
+    fn default() -> Self {
+        TileGuess { tile_m: 128, tile_n: 128 }
+    }
+}
+
+fn ln(x: f64) -> f32 {
+    (x.max(1e-12)).ln() as f32
+}
+
+/// Feature vector for a GEMM op under a tile guess.
+pub fn gemm_features(dev: &DeviceSpec, op: &GemmOp, tile: TileGuess) -> [f32; FEATURE_DIM] {
+    let tiles = op.m.div_ceil(tile.tile_m) * op.n.div_ceil(tile.tile_n) * op.batch;
+    // NeuSight's wave estimate: blocks over SMs (it cannot see occupancy
+    // per implementation).
+    let waves = tiles.div_ceil(dev.sm_count);
+    let peak = dev.peak_tflops(op.dtype).unwrap_or(dev.fp32_tflops);
+    [
+        ln(op.m as f64) / 10.0,
+        ln(op.n as f64) / 10.0,
+        ln(op.k as f64) / 10.0,
+        ln(op.batch as f64) / 6.0,
+        ln(op.flops()) / 30.0,
+        ln(op.io_bytes()) / 25.0,
+        ln(waves as f64) / 8.0,
+        tile.tile_m as f32 / 256.0,
+        tile.tile_n as f32 / 256.0,
+        ln(peak) / 6.0,
+        ln(dev.dram_gbps) / 8.0,
+        ln(dev.l2_mb) / 4.0,
+        ln(dev.sm_count as f64) / 5.0,
+        dev.cores_per_sm() as f32 / 160.0,
+        if op.dtype == DType::Bf16 { 1.0 } else { 0.0 },
+        0.0, // is_util
+    ]
+}
+
+/// Feature vector for a utility op.
+pub fn util_features(dev: &DeviceSpec, op: &UtilOp) -> [f32; FEATURE_DIM] {
+    let elems = op.elems();
+    let bytes = elems * op.dtype.bytes() as f64 * op.passes();
+    let waves = (op.rows * op.cols).div_ceil(dev.sm_count * 1024);
+    let peak = dev.peak_tflops(op.dtype).unwrap_or(dev.fp32_tflops);
+    [
+        ln(op.rows as f64) / 10.0,
+        ln(op.cols as f64) / 10.0,
+        0.0,
+        if op.kind.is_reduction() { 1.0 } else { 0.0 },
+        ln(elems * op.instrs_per_elem()) / 30.0,
+        ln(bytes) / 25.0,
+        ln(waves.max(1) as f64) / 8.0,
+        0.0,
+        0.0,
+        ln(peak) / 6.0,
+        ln(dev.dram_gbps) / 8.0,
+        ln(dev.l2_mb) / 4.0,
+        ln(dev.sm_count as f64) / 5.0,
+        dev.cores_per_sm() as f32 / 160.0,
+        if op.dtype == DType::Bf16 { 1.0 } else { 0.0 },
+        1.0, // is_util
+    ]
+}
+
+/// The "work at 100% utilization" scale the latency head divides by
+/// (latency = scale / predicted_utilization).
+pub fn scale_seconds(dev: &DeviceSpec, op: &Op) -> f64 {
+    match op {
+        Op::Gemm(g) => {
+            let peak = dev.peak_tflops(g.dtype).unwrap_or(dev.fp32_tflops) * 1e12;
+            g.flops() / peak
+        }
+        Op::Util(u) => {
+            let bytes = u.elems() * u.dtype.bytes() as f64 * u.passes();
+            bytes / dev.dram_bw()
+        }
+        Op::Custom(c) => {
+            let peak =
+                dev.peak_tflops(op.dtype()).unwrap_or(dev.fp32_tflops) * 1e12;
+            c.flops() / peak
+        }
+    }
+}
+
+pub fn features_for(dev: &DeviceSpec, op: &Op, tile: TileGuess) -> [f32; FEATURE_DIM] {
+    match op {
+        Op::Gemm(g) => gemm_features(dev, g, tile),
+        Op::Util(u) => util_features(dev, u),
+        Op::Custom(_) => {
+            // NeuSight does not model custom kernels (a paper limitation);
+            // fall back to a GEMM-shaped encoding of the FLOP count.
+            let mut f = [0f32; FEATURE_DIM];
+            f[15] = 0.5;
+            f
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device_by_name;
+    use crate::ops::UtilKind;
+
+    #[test]
+    fn features_are_finite_and_bounded() {
+        let dev = device_by_name("a100").unwrap();
+        let f = gemm_features(&dev, &GemmOp::mm(4096, 4096, 8192, DType::Bf16), TileGuess::default());
+        for v in f {
+            assert!(v.is_finite());
+            assert!(v.abs() < 10.0, "feature too large: {v}");
+        }
+        assert_eq!(f[14], 1.0);
+    }
+
+    #[test]
+    fn gemm_vs_util_flag() {
+        let dev = device_by_name("t4").unwrap();
+        let g = gemm_features(&dev, &GemmOp::mm(128, 128, 128, DType::F32), TileGuess::default());
+        let u = util_features(&dev, &UtilOp::new(UtilKind::Relu, 128, 128, DType::F32));
+        assert_eq!(g[15], 0.0);
+        assert_eq!(u[15], 1.0);
+    }
+
+    #[test]
+    fn scale_is_lower_bound_on_latency() {
+        // scale = ideal time at 100% utilization — real executions are
+        // never faster.
+        let mut gpu = crate::gpusim::Gpu::by_name("rtx5070").unwrap();
+        let op = Op::Gemm(GemmOp::mm(2048, 2048, 2048, DType::F32));
+        let s = scale_seconds(&gpu.spec, &op);
+        let meas = gpu.exec(&op).unwrap();
+        assert!(meas.dur_s > s, "measured {} <= ideal {}", meas.dur_s, s);
+    }
+
+    #[test]
+    fn tile_guess_changes_wave_feature() {
+        let dev = device_by_name("l4").unwrap();
+        let op = GemmOp::mm(4096, 4096, 512, DType::F32);
+        let a = gemm_features(&dev, &op, TileGuess { tile_m: 64, tile_n: 64 });
+        let b = gemm_features(&dev, &op, TileGuess { tile_m: 256, tile_n: 128 });
+        assert_ne!(a[6], b[6]);
+    }
+}

@@ -1,0 +1,157 @@
+//! The NeuSight utilization MLP, executed through the L1 Pallas kernel
+//! via PJRT (`neusight_infer_*` artifacts). The training path keeps the
+//! parameters host-side between steps; inference batches queries to
+//! amortize executable launches. A pure-Rust forward mirror exists for
+//! verification (it must agree with the artifact — the same guarantee the
+//! pytest suite gives between the Pallas kernel and the jnp oracle).
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{load_params_init, ArgValue, Runtime};
+
+use super::features::FEATURE_DIM;
+
+/// MLP parameters: (w1, b1, w2, b2, w3, b3) flattened f32 with shapes.
+#[derive(Clone, Debug)]
+pub struct MlpParams {
+    pub tensors: Vec<(Vec<usize>, Vec<f32>)>,
+}
+
+impl MlpParams {
+    pub fn init_from_artifacts(_runtime: &Runtime) -> Result<MlpParams> {
+        let dir = crate::runtime::default_artifacts_dir()
+            .ok_or_else(|| anyhow!("artifacts dir not found"))?;
+        Ok(MlpParams { tensors: load_params_init(&dir)? })
+    }
+
+    pub fn hidden_dim(&self) -> usize {
+        self.tensors[0].0[1]
+    }
+
+    /// Pure-Rust forward (verification mirror of the Pallas kernel).
+    pub fn forward_host(&self, x: &[f32]) -> f32 {
+        assert_eq!(x.len(), self.tensors[0].0[0]);
+        let h = self.hidden_dim();
+        let (w1, b1) = (&self.tensors[0].1, &self.tensors[1].1);
+        let (w2, b2) = (&self.tensors[2].1, &self.tensors[3].1);
+        let (w3, b3) = (&self.tensors[4].1, &self.tensors[5].1);
+        let f = x.len();
+        let mut h1 = vec![0f32; h];
+        for j in 0..h {
+            let mut acc = b1[j];
+            for (i, &xi) in x.iter().enumerate() {
+                acc += xi * w1[i * h + j];
+            }
+            h1[j] = acc.max(0.0);
+        }
+        let _ = f;
+        let mut h2 = vec![0f32; h];
+        for j in 0..h {
+            let mut acc = b2[j];
+            for (i, &hi) in h1.iter().enumerate() {
+                acc += hi * w2[i * h + j];
+            }
+            h2[j] = acc.max(0.0);
+        }
+        let mut logit = b3[0];
+        for (i, &hi) in h2.iter().enumerate() {
+            logit += hi * w3[i];
+        }
+        1.0 / (1.0 + (-logit).exp())
+    }
+}
+
+/// PJRT-backed batched inference session.
+pub struct MlpSession<'rt> {
+    runtime: &'rt Runtime,
+    pub params: MlpParams,
+}
+
+impl<'rt> MlpSession<'rt> {
+    pub fn new(runtime: &'rt Runtime, params: MlpParams) -> MlpSession<'rt> {
+        MlpSession { runtime, params }
+    }
+
+    /// Predict utilization for a batch of feature vectors through the
+    /// Pallas-kernel artifact, choosing the smallest batch size that fits.
+    pub fn predict_util(&self, feats: &[[f32; FEATURE_DIM]]) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(feats.len());
+        let mut idx = 0;
+        while idx < feats.len() {
+            let remaining = feats.len() - idx;
+            let b = if remaining > 128 { 1024 } else { 128 };
+            let artifact = format!("neusight_infer_b{b}");
+            let take = remaining.min(b);
+            let mut x = vec![0f32; b * FEATURE_DIM];
+            for (i, f) in feats[idx..idx + take].iter().enumerate() {
+                x[i * FEATURE_DIM..(i + 1) * FEATURE_DIM].copy_from_slice(f);
+            }
+            let x_shape = [b, FEATURE_DIM];
+            let mut args: Vec<ArgValue> = vec![ArgValue::F32(&x, &x_shape)];
+            for (shape, data) in &self.params.tensors {
+                args.push(ArgValue::F32(data, shape));
+            }
+            let result = self.runtime.call(&artifact, &args)?;
+            out.extend(
+                result[0][..take]
+                    .iter()
+                    .map(|&u| (u as f64).clamp(1e-4, 1.0)),
+            );
+            idx += take;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_matches_host_mirror() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let params = MlpParams::init_from_artifacts(&rt).unwrap();
+        let session = MlpSession::new(&rt, params.clone());
+        let mut rng = crate::util::prng::Rng::new(3);
+        let feats: Vec<[f32; FEATURE_DIM]> = (0..50)
+            .map(|_| {
+                let mut f = [0f32; FEATURE_DIM];
+                for v in f.iter_mut() {
+                    *v = rng.normal() as f32 * 0.5;
+                }
+                f
+            })
+            .collect();
+        let via_pjrt = session.predict_util(&feats).unwrap();
+        for (f, got) in feats.iter().zip(&via_pjrt) {
+            let want = params.forward_host(f) as f64;
+            assert!(
+                (got - want).abs() < 1e-5,
+                "pjrt {got} vs host {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn batches_larger_than_1024_chunk() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let params = MlpParams::init_from_artifacts(&rt).unwrap();
+        let session = MlpSession::new(&rt, params);
+        let feats = vec![[0.1f32; FEATURE_DIM]; 2500];
+        let out = session.predict_util(&feats).unwrap();
+        assert_eq!(out.len(), 2500);
+        // All-equal inputs → all-equal outputs.
+        assert!(out.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-9));
+    }
+
+    #[test]
+    fn utilization_in_unit_interval() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let params = MlpParams::init_from_artifacts(&rt).unwrap();
+        let session = MlpSession::new(&rt, params);
+        let feats = vec![[2.0f32; FEATURE_DIM]; 8];
+        for u in session.predict_util(&feats).unwrap() {
+            assert!(u > 0.0 && u <= 1.0);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! # neusight — the baseline (Lee et al., ASPLOS'25), reimplemented
+//!
+//! Tile-dataset "sieve" collection + wave features + an MLP utilization
+//! predictor, trained and served through the L1/L2/L3 stack (Pallas
+//! kernel → JAX Adam step → HLO artifacts → PJRT from Rust). Faithful to
+//! the failure modes the paper documents (§III-B, §IV): dataset-matching
+//! overhead, out-of-domain degradation, latency-target loss imbalance,
+//! and blindness to the BF16 kernel-implementation dispersion.
+
+pub mod dataset;
+pub mod features;
+pub mod mlp;
+pub mod predictor;
+pub mod train;
+
+pub use predictor::{NeuSight, TrainConfig};

@@ -1,0 +1,225 @@
+//! NeuSight training: Adam + SMAPE-on-latency loss, executed entirely
+//! through the AOT `neusight_train_b512` artifact on PJRT — the L2 train
+//! step compiled once, driven by the Rust loop. The *latency-target
+//! relative loss* is kept faithful to the paper, inheriting its documented
+//! imbalance (small-latency samples dominate; device bias).
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{ArgValue, Runtime};
+use crate::util::prng::Rng;
+
+use super::dataset::Dataset;
+use super::features::FEATURE_DIM;
+use super::mlp::MlpParams;
+
+pub const TRAIN_BATCH: usize = 512;
+
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub epochs: usize,
+    pub first_loss: f64,
+    pub final_loss: f64,
+    pub loss_curve: Vec<f64>,
+}
+
+/// Train the MLP on a dataset; returns trained params + report.
+pub fn train(
+    runtime: &Runtime,
+    dataset: &Dataset,
+    epochs: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<(MlpParams, TrainReport)> {
+    if dataset.samples.is_empty() {
+        return Err(anyhow!("empty dataset"));
+    }
+    let artifact = format!("neusight_train_b{TRAIN_BATCH}");
+    runtime.warm(&artifact)?;
+    let mut params = MlpParams::init_from_artifacts(runtime)?;
+    let mut m: Vec<Vec<f32>> =
+        params.tensors.iter().map(|(_, d)| vec![0.0; d.len()]).collect();
+    let mut v = m.clone();
+    let mut step = 0f32;
+    let mut rng = Rng::new(seed);
+    let mut order: Vec<usize> = (0..dataset.samples.len()).collect();
+    let mut curve = Vec::with_capacity(epochs);
+    let mut first_loss = None;
+    for _epoch in 0..epochs {
+        rng.shuffle(&mut order);
+        let mut epoch_losses = Vec::new();
+        for chunk in order.chunks(TRAIN_BATCH) {
+            // Pad short batches by repeating samples (keeps shapes AOT-
+            // compatible; repeated samples only reweight slightly).
+            let mut x = vec![0f32; TRAIN_BATCH * FEATURE_DIM];
+            let mut scale = vec![0f32; TRAIN_BATCH];
+            let mut y = vec![0f32; TRAIN_BATCH];
+            for i in 0..TRAIN_BATCH {
+                let s = &dataset.samples[chunk[i % chunk.len()]];
+                x[i * FEATURE_DIM..(i + 1) * FEATURE_DIM]
+                    .copy_from_slice(&s.features);
+                scale[i] = s.scale_s as f32;
+                y[i] = s.latency_s as f32;
+            }
+            let mut args: Vec<ArgValue> = Vec::with_capacity(23);
+            for (shape, data) in &params.tensors {
+                args.push(ArgValue::F32(data, shape));
+            }
+            for (mi, (shape, _)) in m.iter().zip(&params.tensors) {
+                args.push(ArgValue::F32(mi, shape));
+            }
+            for (vi, (shape, _)) in v.iter().zip(&params.tensors) {
+                args.push(ArgValue::F32(vi, shape));
+            }
+            let batch_shape = [TRAIN_BATCH, FEATURE_DIM];
+            let vec_shape = [TRAIN_BATCH];
+            args.push(ArgValue::ScalarF32(step));
+            args.push(ArgValue::F32(&x, &batch_shape));
+            args.push(ArgValue::F32(&scale, &vec_shape));
+            args.push(ArgValue::F32(&y, &vec_shape));
+            args.push(ArgValue::ScalarF32(lr));
+            let out = runtime.call(&artifact, &args)?;
+            // out = (p×6, m×6, v×6, step, loss)
+            for (i, t) in params.tensors.iter_mut().enumerate() {
+                t.1 = out[i].clone();
+            }
+            for i in 0..6 {
+                m[i] = out[6 + i].clone();
+                v[i] = out[12 + i].clone();
+            }
+            step = out[18][0];
+            let loss = out[19][0] as f64;
+            if first_loss.is_none() {
+                first_loss = Some(loss);
+            }
+            epoch_losses.push(loss);
+        }
+        curve.push(crate::util::stats::mean(&epoch_losses));
+    }
+    let report = TrainReport {
+        epochs,
+        first_loss: first_loss.unwrap_or(0.0),
+        final_loss: *curve.last().unwrap_or(&0.0),
+        loss_curve: curve,
+    };
+    Ok((params, report))
+}
+
+/// Serialize trained params to JSON (cacheable across runs).
+pub fn params_to_json(params: &MlpParams) -> String {
+    use crate::util::json::Json;
+    let mut obj = Vec::new();
+    for (i, (shape, data)) in params.tensors.iter().enumerate() {
+        obj.push((
+            format!("p{i}"),
+            Json::obj(vec![
+                ("shape", Json::Arr(shape.iter().map(|&d| Json::Num(d as f64)).collect())),
+                ("data", Json::Arr(data.iter().map(|&x| Json::Num(x as f64)).collect())),
+            ]),
+        ));
+    }
+    Json::Obj(obj.into_iter().collect()).to_string()
+}
+
+pub fn params_from_json(text: &str) -> Result<MlpParams> {
+    use crate::util::json::Json;
+    let v = Json::parse(text)?;
+    let obj = v.as_obj().ok_or_else(|| anyhow!("not an object"))?;
+    let mut tensors = Vec::new();
+    for i in 0..obj.len() {
+        let p = v.get(&format!("p{i}")).ok_or_else(|| anyhow!("missing p{i}"))?;
+        let shape: Vec<usize> = p
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("bad shape"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let data: Vec<f32> = p
+            .get("data")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("bad data"))?
+            .iter()
+            .filter_map(|x| x.as_f64().map(|f| f as f32))
+            .collect();
+        tensors.push((shape, data));
+    }
+    Ok(MlpParams { tensors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neusight::dataset::Sample;
+
+    fn synthetic_dataset(n: usize) -> Dataset {
+        // Learnable structure: utilization is a sigmoid of two features.
+        let mut rng = Rng::new(11);
+        let mut d = Dataset::default();
+        for _ in 0..n {
+            let mut f = [0f32; FEATURE_DIM];
+            for v in f.iter_mut() {
+                *v = rng.normal() as f32 * 0.5;
+            }
+            let u = 1.0 / (1.0 + (-(0.9 * f[0] - 0.7 * f[5]) as f64).exp());
+            let u = u.clamp(0.05, 0.98);
+            let scale = 1e-4;
+            d.samples.push(Sample {
+                features: f,
+                scale_s: scale,
+                latency_s: scale / u,
+            });
+        }
+        d
+    }
+
+    #[test]
+    fn loss_decreases_via_pjrt_training() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let data = synthetic_dataset(1024);
+        let (_params, report) = train(&rt, &data, 30, 3e-3, 42).unwrap();
+        assert!(
+            report.final_loss < report.first_loss * 0.6,
+            "first {} final {}",
+            report.first_loss,
+            report.final_loss
+        );
+    }
+
+    #[test]
+    fn trained_model_beats_untrained() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let data = synthetic_dataset(1024);
+        let (params, _) = train(&rt, &data, 30, 3e-3, 42).unwrap();
+        let init = MlpParams::init_from_artifacts(&rt).unwrap();
+        let mut err_trained = 0.0;
+        let mut err_init = 0.0;
+        for s in &data.samples[..200] {
+            let ut = params.forward_host(&s.features) as f64;
+            let ui = init.forward_host(&s.features) as f64;
+            let true_u = s.scale_s / s.latency_s;
+            err_trained += (ut - true_u).abs();
+            err_init += (ui - true_u).abs();
+        }
+        assert!(err_trained < err_init * 0.7, "{err_trained} vs {err_init}");
+    }
+
+    #[test]
+    fn params_json_roundtrip() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let params = MlpParams::init_from_artifacts(&rt).unwrap();
+        let text = params_to_json(&params);
+        let back = params_from_json(&text).unwrap();
+        assert_eq!(params.tensors.len(), back.tensors.len());
+        for (a, b) in params.tensors.iter().zip(&back.tensors) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1, b.1);
+        }
+    }
+
+    #[test]
+    fn empty_dataset_rejected() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        assert!(train(&rt, &Dataset::default(), 1, 1e-3, 0).is_err());
+    }
+}

@@ -1,0 +1,344 @@
+//! Operation vocabulary shared by the simulator, the predictors and the
+//! model zoo: GEMM-family ops, memory-bound utility ops, and the custom
+//! fused kernels of paper §IV-C.
+
+use std::fmt;
+
+/// Numeric precision. FP32 executes on the CUDA-core path, BF16 on the
+/// tensor-core path — with very different kernel registries (paper §I:
+/// ~13 FP32 vs ~100 BF16 algorithm/tile combinations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DType {
+    F32,
+    Bf16,
+}
+
+impl DType {
+    pub fn bytes(&self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::Bf16 => 2,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "fp32",
+            DType::Bf16 => "bf16",
+        }
+    }
+    pub fn parse(s: &str) -> Option<DType> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp32" | "f32" | "float32" => Some(DType::F32),
+            "bf16" | "bfloat16" => Some(DType::Bf16),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Transpose mode of the A operand. PyTorch `Linear` uses TN (first matrix
+/// transposed); `torch.matmul` / ONNX / TF use NN — and the paper observed
+/// that this changes library/algorithm/tile selection (§III-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Trans {
+    NN,
+    TN,
+}
+
+/// Which framework-level API issued the GEMM. Affects the transpose mode
+/// and therefore kernel selection; also how the paper buckets its per-layer
+/// evaluation (Table II rows: BMM / MM / Linear).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GemmApi {
+    MatMul,
+    Linear,
+    Bmm,
+}
+
+impl GemmApi {
+    pub fn trans(&self) -> Trans {
+        match self {
+            GemmApi::Linear => Trans::TN,
+            _ => Trans::NN,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            GemmApi::MatMul => "MM",
+            GemmApi::Linear => "Linear",
+            GemmApi::Bmm => "BMM",
+        }
+    }
+}
+
+/// A dense GEMM: C[b] = A[b] (m×k) · B[b] (k×n) for b in 0..batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GemmOp {
+    pub api: GemmApi,
+    pub batch: usize,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub dtype: DType,
+}
+
+impl GemmOp {
+    pub fn mm(m: usize, n: usize, k: usize, dtype: DType) -> GemmOp {
+        GemmOp { api: GemmApi::MatMul, batch: 1, m, n, k, dtype }
+    }
+    pub fn linear(m: usize, n: usize, k: usize, dtype: DType) -> GemmOp {
+        GemmOp { api: GemmApi::Linear, batch: 1, m, n, k, dtype }
+    }
+    pub fn bmm(batch: usize, m: usize, n: usize, k: usize, dtype: DType) -> GemmOp {
+        GemmOp { api: GemmApi::Bmm, batch, m, n, k, dtype }
+    }
+    /// 2·b·m·n·k multiply-accumulate FLOPs.
+    pub fn flops(&self) -> f64 {
+        2.0 * self.batch as f64 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+    /// Minimal operand + output traffic in bytes (no tiling reuse).
+    pub fn io_bytes(&self) -> f64 {
+        let d = self.dtype.bytes() as f64;
+        self.batch as f64
+            * ((self.m * self.k + self.k * self.n) as f64 * d
+                + (self.m * self.n) as f64 * d)
+    }
+    pub fn trans(&self) -> Trans {
+        self.api.trans()
+    }
+}
+
+/// Memory-bound utility layer kinds (paper §III "Utility Layers").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum UtilKind {
+    Relu,
+    Gelu,
+    Add,
+    Mul,
+    Dropout,
+    Softmax,
+    LayerNorm,
+    MaxPool,
+}
+
+impl UtilKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            UtilKind::Relu => "ReLU",
+            UtilKind::Gelu => "GeLU",
+            UtilKind::Add => "Add",
+            UtilKind::Mul => "Mul",
+            UtilKind::Dropout => "Dropout",
+            UtilKind::Softmax => "SoftMax",
+            UtilKind::LayerNorm => "LayerNorm",
+            UtilKind::MaxPool => "MaxPool",
+        }
+    }
+    /// Elementwise "Vector" ops vs row-reduction ops: the paper's Table II
+    /// buckets ReLU/GeLU/Add/Mul/Dropout as "Vector" and reports SoftMax
+    /// separately (reductions behave differently).
+    pub fn is_reduction(&self) -> bool {
+        matches!(self, UtilKind::Softmax | UtilKind::LayerNorm | UtilKind::MaxPool)
+    }
+    pub fn all() -> &'static [UtilKind] {
+        &[
+            UtilKind::Relu,
+            UtilKind::Gelu,
+            UtilKind::Add,
+            UtilKind::Mul,
+            UtilKind::Dropout,
+            UtilKind::Softmax,
+            UtilKind::LayerNorm,
+            UtilKind::MaxPool,
+        ]
+    }
+}
+
+/// A utility op over a logical (rows × cols) tensor; reductions reduce
+/// along cols.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct UtilOp {
+    pub kind: UtilKind,
+    pub rows: usize,
+    pub cols: usize,
+    pub dtype: DType,
+}
+
+impl UtilOp {
+    pub fn new(kind: UtilKind, rows: usize, cols: usize, dtype: DType) -> UtilOp {
+        UtilOp { kind, rows, cols, dtype }
+    }
+    pub fn elems(&self) -> f64 {
+        self.rows as f64 * self.cols as f64
+    }
+    /// (reads + writes) per element for the ground memory model.
+    pub fn passes(&self) -> f64 {
+        match self.kind {
+            UtilKind::Relu | UtilKind::Gelu => 2.0,
+            UtilKind::Add | UtilKind::Mul => 3.0,
+            UtilKind::Dropout => 2.25, // mask stream is byte-wide
+            UtilKind::Softmax => 3.0,  // read, re-read after max, write
+            UtilKind::LayerNorm => 2.6,
+            UtilKind::MaxPool => 1.25, // 4:1 downsample write
+        }
+    }
+    /// Arithmetic instructions per element (transcendental ops cost more).
+    pub fn instrs_per_elem(&self) -> f64 {
+        match self.kind {
+            UtilKind::Relu => 1.0,
+            UtilKind::Gelu => 9.0,
+            UtilKind::Add | UtilKind::Mul => 1.0,
+            UtilKind::Dropout => 3.0,
+            UtilKind::Softmax => 7.0,
+            UtilKind::LayerNorm => 6.0,
+            UtilKind::MaxPool => 1.5,
+        }
+    }
+}
+
+/// Custom computation-intensive kernels of paper §IV-C / Table VI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CustomOp {
+    /// Triton matmul: autotuned from Triton's own config space.
+    TritonMM { m: usize, n: usize, k: usize, dtype: DType },
+    /// Triton fused elementwise vector kernel.
+    TritonVec { elems: usize, dtype: DType },
+    /// FlashAttention-2 fused attention.
+    FlashAttn { batch: usize, heads: usize, seq: usize, head_dim: usize, dtype: DType, causal: bool },
+    /// CUTLASS (xFormers) fused attention.
+    CutlassAttn { batch: usize, heads: usize, seq: usize, head_dim: usize, dtype: DType, causal: bool },
+}
+
+impl CustomOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CustomOp::TritonMM { .. } => "TritonMM",
+            CustomOp::TritonVec { .. } => "TritonVec",
+            CustomOp::FlashAttn { .. } => "F-Attn",
+            CustomOp::CutlassAttn { .. } => "C-Attn",
+        }
+    }
+    pub fn flops(&self) -> f64 {
+        match *self {
+            CustomOp::TritonMM { m, n, k, .. } => 2.0 * m as f64 * n as f64 * k as f64,
+            CustomOp::TritonVec { elems, .. } => elems as f64,
+            CustomOp::FlashAttn { batch, heads, seq, head_dim, causal, .. }
+            | CustomOp::CutlassAttn { batch, heads, seq, head_dim, causal, .. } => {
+                let full = 4.0
+                    * batch as f64
+                    * heads as f64
+                    * seq as f64
+                    * seq as f64
+                    * head_dim as f64;
+                if causal {
+                    full * 0.5
+                } else {
+                    full
+                }
+            }
+        }
+    }
+}
+
+/// Any simulated operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    Gemm(GemmOp),
+    Util(UtilOp),
+    Custom(CustomOp),
+}
+
+impl Op {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Op::Gemm(g) => g.dtype,
+            Op::Util(u) => u.dtype,
+            Op::Custom(c) => match *c {
+                CustomOp::TritonMM { dtype, .. }
+                | CustomOp::TritonVec { dtype, .. }
+                | CustomOp::FlashAttn { dtype, .. }
+                | CustomOp::CutlassAttn { dtype, .. } => dtype,
+            },
+        }
+    }
+    /// Stable 64-bit identity for noise seeding and caches.
+    pub fn stable_hash(&self) -> u64 {
+        crate::util::prng::hash64(format!("{self:?}").as_bytes())
+    }
+}
+
+/// NCU-style counters exported by the simulator for every executed op —
+/// the proxy metrics PM2Lat's utility-layer regression consumes (§III-C).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Counters {
+    pub flops: f64,
+    pub dram_bytes: f64,
+    pub l2_bytes: f64,
+    pub int_ops: f64,
+    pub mem_insts: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_flops_and_bytes() {
+        let g = GemmOp::mm(128, 256, 64, DType::F32);
+        assert_eq!(g.flops(), 2.0 * 128.0 * 256.0 * 64.0);
+        let bytes = (128 * 64 + 64 * 256 + 128 * 256) as f64 * 4.0;
+        assert_eq!(g.io_bytes(), bytes);
+    }
+
+    #[test]
+    fn bmm_scales_with_batch() {
+        let a = GemmOp::bmm(1, 64, 64, 64, DType::Bf16);
+        let b = GemmOp::bmm(8, 64, 64, 64, DType::Bf16);
+        assert_eq!(b.flops(), 8.0 * a.flops());
+        assert_eq!(b.io_bytes(), 8.0 * a.io_bytes());
+    }
+
+    #[test]
+    fn linear_uses_tn() {
+        assert_eq!(GemmOp::linear(1, 1, 1, DType::F32).trans(), Trans::TN);
+        assert_eq!(GemmOp::mm(1, 1, 1, DType::F32).trans(), Trans::NN);
+        assert_eq!(GemmOp::bmm(1, 1, 1, 1, DType::F32).trans(), Trans::NN);
+    }
+
+    #[test]
+    fn causal_attention_halves_flops() {
+        let mk = |causal| CustomOp::FlashAttn {
+            batch: 2, heads: 8, seq: 512, head_dim: 64, dtype: DType::Bf16, causal,
+        };
+        assert_eq!(mk(true).flops() * 2.0, mk(false).flops());
+    }
+
+    #[test]
+    fn dtype_parse_roundtrip() {
+        assert_eq!(DType::parse("fp32"), Some(DType::F32));
+        assert_eq!(DType::parse("BF16"), Some(DType::Bf16));
+        assert_eq!(DType::parse("int8"), None);
+        assert_eq!(DType::F32.bytes(), 4);
+        assert_eq!(DType::Bf16.bytes(), 2);
+    }
+
+    #[test]
+    fn op_hash_stable_and_distinct() {
+        let a = Op::Gemm(GemmOp::mm(128, 128, 128, DType::F32));
+        let b = Op::Gemm(GemmOp::mm(128, 128, 129, DType::F32));
+        assert_eq!(a.stable_hash(), a.stable_hash());
+        assert_ne!(a.stable_hash(), b.stable_hash());
+    }
+
+    #[test]
+    fn util_vector_vs_reduction_buckets() {
+        assert!(!UtilKind::Relu.is_reduction());
+        assert!(UtilKind::Softmax.is_reduction());
+        assert_eq!(UtilKind::all().len(), 8);
+    }
+}

@@ -1,0 +1,174 @@
+//! Batched PM2Lat prediction through the L1 Pallas kernel (via PJRT):
+//! pack a GemmTable into the (MAX_KERNELS × N_K_POINTS) tensor layout the
+//! `pm2lat_batch_predict_*` artifacts expect, resolve configs, and predict
+//! thousands of GEMM latencies per executable launch. This is the NAS
+//! preprocessing hot path of §IV-D2.
+
+use anyhow::{anyhow, Result};
+
+use crate::gpusim::{heuristic, Gpu};
+use crate::ops::GemmOp;
+use crate::runtime::{ArgValue, Runtime};
+
+use super::gemm_model::{GemmTable, K_GRID};
+
+/// GemmTable packed for the artifact: row `kernel_id` holds the profiled
+/// throughput normalized so the kernel's Eq. (1) evaluates directly.
+pub struct PackedTable {
+    pub table: Vec<f32>,
+    pub base_dur: Vec<f32>,
+    pub nk: usize,
+    pub npts: usize,
+}
+
+pub fn pack(table: &GemmTable, nk: usize, npts: usize) -> PackedTable {
+    assert_eq!(npts, K_GRID.len());
+    let mut t = vec![1.0f32; nk * npts];
+    let mut base = vec![0.0f32; nk];
+    for p in &table.profiles {
+        if p.kernel_id >= nk {
+            continue;
+        }
+        for (j, &thr) in p.throughput.iter().enumerate() {
+            // Normalize to the K=8192 throughput so values stay O(1).
+            t[p.kernel_id * npts + j] = (thr / p.throughput[npts - 1]) as f32;
+        }
+        // Per-wave work at K = 8192: the artifact multiplies by the K
+        // factor, the interpolated 1/throughput and the scale lane.
+        base[p.kernel_id] = p.work8192_s as f32;
+    }
+    PackedTable { table: t, base_dur: base, nk, npts }
+}
+
+/// Batched prediction session bound to one artifact batch size.
+pub struct BatchPredictor<'rt> {
+    runtime: &'rt Runtime,
+    artifact: String,
+    pub batch: usize,
+    packed: PackedTable,
+}
+
+impl<'rt> BatchPredictor<'rt> {
+    pub fn new(runtime: &'rt Runtime, table: &GemmTable, batch: usize) -> Result<Self> {
+        let artifact = format!("pm2lat_batch_predict_b{batch}");
+        if !runtime.manifest.artifacts.contains_key(&artifact) {
+            return Err(anyhow!("no artifact {artifact}"));
+        }
+        let nk = runtime.manifest.max_kernels;
+        let npts = runtime.manifest.n_k_points;
+        runtime.warm(&artifact)?;
+        Ok(BatchPredictor {
+            runtime,
+            artifact,
+            batch,
+            packed: pack(table, nk, npts),
+        })
+    }
+
+    /// Predict a batch of GEMMs. The per-query config is resolved through
+    /// the heuristic API; K/scale are packed into lanes; one PJRT launch
+    /// evaluates Eq. (1)/(2) for every lane. Short batches are padded.
+    pub fn predict(&self, gpu: &Gpu, table: &GemmTable, ops: &[GemmOp]) -> Result<Vec<Option<f64>>> {
+        let b = self.batch;
+        let mut k_vals = vec![0f32; b];
+        let mut kids = vec![0i32; b];
+        let mut scale = vec![0f32; b];
+        let mut offset = vec![0f64; ops.len()];
+        let mut valid = vec![false; ops.len()];
+        let mut out = vec![None; ops.len()];
+        if ops.len() > b {
+            return Err(anyhow!("batch too large: {} > {}", ops.len(), b));
+        }
+        for (i, op) in ops.iter().enumerate() {
+            let Some(cfg) = heuristic::algo_get_heuristic_cached(gpu, op) else {
+                continue;
+            };
+            let Some(s) = table.scale_factor(gpu, op, cfg) else {
+                continue;
+            };
+            let Some(off) = table.host_offset(op, cfg) else {
+                continue;
+            };
+            let kb = op.k.div_ceil(cfg.splitk) as f64;
+            k_vals[i] = kb as f32;
+            kids[i] = cfg.kernel_id as i32;
+            // The artifact computes work·(K/8192)·(orgThr/newThr)·scale
+            // with the *normalized* table (orgThr = 1), matching Eq. (1)
+            // exactly. K beyond the grid is clamped in-kernel; fold the
+            // linear extrapolation into the scale lane. Launch + split-K
+            // epilogue are additive host-side terms.
+            let k_clamped = kb.clamp(K_GRID[0] as f64, *K_GRID.last().unwrap() as f64);
+            scale[i] = (s * (kb / k_clamped)) as f32;
+            offset[i] = off;
+            valid[i] = true;
+        }
+        let result = self.runtime.call(
+            &self.artifact,
+            &[
+                ArgValue::F32(&self.packed.table, &[self.packed.nk, self.packed.npts]),
+                ArgValue::F32(&self.packed.base_dur, &[self.packed.nk]),
+                ArgValue::F32(&k_vals, &[b]),
+                ArgValue::I32(&kids, &[b]),
+                ArgValue::F32(&scale, &[b]),
+            ],
+        )?;
+        for (i, v) in valid.iter().enumerate() {
+            if *v {
+                out[i] = Some(result[0][i] as f64 + offset[i]);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::DType;
+    use crate::pm2lat::gemm_model;
+    use crate::profiler::ProfileSpec;
+
+    #[test]
+    fn batched_matches_scalar_path() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let mut gpu = Gpu::by_name("a100").unwrap();
+        let table = gemm_model::collect(&mut gpu, DType::F32, &ProfileSpec::quick()).unwrap();
+        gpu.reset();
+        let bp = BatchPredictor::new(&rt, &table, 1024).unwrap();
+        let mut rng = crate::util::prng::Rng::new(7);
+        let ops: Vec<GemmOp> = (0..200)
+            .map(|_| {
+                GemmOp::mm(
+                    rng.log_uniform_int(64, 8192) as usize,
+                    rng.log_uniform_int(64, 8192) as usize,
+                    rng.log_uniform_int(32, 20000) as usize,
+                    DType::F32,
+                )
+            })
+            .collect();
+        let batched = bp.predict(&gpu, &table, &ops).unwrap();
+        for (op, got) in ops.iter().zip(&batched) {
+            let want = table.predict(&gpu, op).unwrap();
+            let got = got.expect("valid op");
+            assert!(
+                (got - want).abs() / want < 2e-3,
+                "op {op:?}: batched {got} scalar {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn unsupported_lane_is_none() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let mut gpu = Gpu::by_name("t4").unwrap();
+        let table = gemm_model::collect(&mut gpu, DType::F32, &ProfileSpec::quick()).unwrap();
+        let bp = BatchPredictor::new(&rt, &table, 1024).unwrap();
+        let ops = vec![
+            GemmOp::mm(128, 128, 128, DType::F32),
+            GemmOp::mm(128, 128, 128, DType::Bf16), // unsupported on T4
+        ];
+        let out = bp.predict(&gpu, &table, &ops).unwrap();
+        assert!(out[0].is_some());
+        assert!(out[1].is_none());
+    }
+}

@@ -1,0 +1,469 @@
+//! PM2Lat GEMM path (paper §III-C "MatMul Latency Prediction"):
+//! per-kernel throughput tables on the power-of-two K grid, collected at a
+//! locked clock with complete blocks/waves, then Eq. (1)/(2) interpolation
+//! plus wave scaling at predict time. Partial (tail) waves are profiled
+//! explicitly — "the same strategy is also applied for partial MatMul
+//! cases" — via a measured tail-response curve per kernel.
+
+use crate::gpusim::{gemm, heuristic, FreqMode, Gpu};
+use crate::ops::{DType, GemmOp, Op};
+use crate::profiler::{self, ProfileSpec};
+
+/// The K grid: 32, 64, ..., 8192 (paper §III-C).
+pub const K_GRID: [usize; 9] = [32, 64, 128, 256, 512, 1024, 2048, 4096, 8192];
+pub const K_MAX: f64 = 8192.0;
+
+/// Tail waves quantize by resident blocks per SM: a tail of `t` blocks
+/// runs at occupancy r = ceil(t / SMs) ∈ [1, bpsm]. PM2Lat profiles every
+/// occupancy level (bpsm ≤ 8, so at most 8 extra points per kernel).
+pub fn tail_levels(bpsm: usize) -> Vec<usize> {
+    (1..=bpsm).collect()
+}
+
+/// Profiled characteristics of one kernel implementation.
+///
+/// The total duration model is
+///   dur(K, blocks) = launch + w(K) · (full_waves + tail(frac)) ,
+/// with w(K) from Eq. (1)/(2) over the *work* throughput table (launch
+/// subtracted), and tail(·) the measured partial-wave response.
+#[derive(Clone, Debug)]
+pub struct KernelProfile {
+    pub kernel_id: usize,
+    /// Base collection shape (complete blocks, complete waves).
+    pub base_m: usize,
+    pub base_n: usize,
+    /// Blocks per wave observed via the occupancy query.
+    pub wave_capacity: usize,
+    /// Waves in the base collection shape.
+    pub base_waves: usize,
+    /// Launch overhead (seconds), separated via the one-wave shape.
+    pub launch_s: f64,
+    /// Per-wave work at K = 8192 (seconds).
+    pub work8192_s: f64,
+    /// Work throughput (FLOP/s over duration-minus-launch) per K_GRID pt.
+    pub throughput: [f64; 9],
+    /// Measured tail response per occupancy level r = 1..=bpsm, in units
+    /// of a full wave's work (tail[r-1] = cost of a tail running r blocks
+    /// per SM; tail[bpsm-1] ≈ 1.0). Collected at K = 8192 (`tail`) and at
+    /// K = 512 (`tail_lo`) — the compute/memory balance of a partial wave
+    /// shifts with K, so the response is interpolated in log-K.
+    pub tail: Vec<f64>,
+    pub tail_lo: Vec<f64>,
+    /// SM count (public) — determines the tail occupancy level.
+    pub sm_count: usize,
+}
+
+/// K at which the low tail staircase is collected.
+pub const TAIL_K_LO: f64 = 512.0;
+
+impl KernelProfile {
+    /// Eq. (2): linear interpolation of throughput between the two
+    /// bracketing grid points (log-indexed — the grid is powers of two).
+    pub fn interp_throughput(&self, k: f64) -> f64 {
+        let kc = k.clamp(K_GRID[0] as f64, K_MAX);
+        let pos = (kc / K_GRID[0] as f64).log2();
+        let idx = (pos.floor() as usize).min(K_GRID.len() - 2);
+        let k1 = K_GRID[idx] as f64;
+        let t1 = self.throughput[idx];
+        let t3 = self.throughput[idx + 1];
+        t1 + (kc - k1) / k1 * (t3 - t1)
+    }
+
+    /// Eq. (1): per-wave work for a new K (beyond the grid, the K factor
+    /// keeps growing linearly while throughput saturates — the paper's
+    /// "beyond this point the throughput is unlikely to change further").
+    pub fn work_at_k(&self, k: f64) -> f64 {
+        let new_thr = self.interp_throughput(k);
+        let org_thr = self.throughput[K_GRID.len() - 1];
+        self.work8192_s * (k / K_MAX) * (org_thr / new_thr)
+    }
+
+    /// Tail response for `tail_blocks` residual blocks at depth `k`: the
+    /// measured cost at occupancy level r = ceil(tail_blocks / SMs),
+    /// log-K-interpolated between the two profiled staircases.
+    pub fn tail_response(&self, tail_blocks: usize, k: f64) -> f64 {
+        if tail_blocks == 0 {
+            return 0.0;
+        }
+        let r = tail_blocks.div_ceil(self.sm_count).min(self.tail.len());
+        let hi = self.tail[r - 1];
+        let lo = self.tail_lo[r - 1];
+        let t = ((k.max(1.0).log2() - TAIL_K_LO.log2())
+            / (K_MAX.log2() - TAIL_K_LO.log2()))
+        .clamp(0.0, 1.0);
+        lo + t * (hi - lo)
+    }
+
+    /// Effective wave count (full + tail response) for a block count at
+    /// per-block depth `k`.
+    pub fn effective_waves(&self, blocks: usize, k: f64) -> f64 {
+        let full = blocks / self.wave_capacity;
+        full as f64 + self.tail_response(blocks % self.wave_capacity, k)
+    }
+}
+
+/// Full per-(device, dtype) GEMM model: one profile per kernel in the
+/// registry, plus the clock calibration.
+#[derive(Clone, Debug)]
+pub struct GemmTable {
+    pub device: String,
+    pub dtype: DType,
+    pub profiles: Vec<KernelProfile>,
+    /// Locked collection clock (GHz).
+    pub locked_ghz: f64,
+    /// locked_dur / boost_dur from the calibration burn (≥1).
+    pub boost_speedup: f64,
+    /// Public DRAM bandwidth (for the split-K epilogue estimate).
+    pub dram_bw: f64,
+}
+
+/// Pick a base (m, n) giving exactly `blocks` complete tiles: factor into
+/// a near-square tile grid.
+fn tile_grid_shape(tile_m: usize, tile_n: usize, blocks: usize) -> (usize, usize) {
+    let mut best = (blocks, 1);
+    let mut best_gap = usize::MAX;
+    let mut d = 1;
+    while d * d <= blocks {
+        if blocks % d == 0 {
+            let other = blocks / d;
+            let gap = other - d;
+            if gap < best_gap {
+                best_gap = gap;
+                best = (other, d);
+            }
+        }
+        d += 1;
+    }
+    (tile_m * best.0, tile_n * best.1)
+}
+
+/// Collect the throughput table for every kernel of `dtype` on this
+/// device. This is PM2Lat's one-time, per-device data collection —
+/// deliberately at a locked (lower) clock so the die stays cool (§IV-A).
+pub fn collect(gpu: &mut Gpu, dtype: DType, spec: &ProfileSpec) -> Option<GemmTable> {
+    if !gpu.spec.supports(dtype) {
+        return None;
+    }
+    let locked_ghz = gpu.spec.max_freq_ghz * 0.7;
+    gpu.set_freq(FreqMode::Fixed(locked_ghz));
+    let kernels: Vec<_> = gpu.kernels(dtype).to_vec();
+    let mut profiles = Vec::with_capacity(kernels.len());
+    for kern in &kernels {
+        let capacity = match profiler::occupancy(gpu, dtype, kern.id) {
+            Some(bpsm) => bpsm * gpu.spec.sm_count,
+            None => continue,
+        };
+        let cfg = gemm::GemmConfig { kernel_id: kern.id, splitk: 1 };
+        let meas = |gpu: &mut Gpu, m: usize, n: usize, k: usize| {
+            profiler::measure_config(
+                gpu,
+                &Op::Gemm(GemmOp::mm(m, n, k, dtype)),
+                Some(cfg),
+                spec,
+            )
+            .map(|r| r.mean_s)
+        };
+        // 2 complete waves of complete blocks (wave-quantization-free).
+        let waves = 2;
+        let (m, n) = tile_grid_shape(kern.tile_m, kern.tile_n, capacity * waves);
+        // Launch overhead from one-block kernels: d(K) ≈ launch + work(K)
+        // with work(64) ≈ 2·work(32) ⇒ launch ≈ 2·d(32) − d(64). These
+        // are microsecond-scale measurements, so the subtraction is
+        // well-conditioned (unlike differencing two multi-ms waves).
+        let t32 = meas(gpu, kern.tile_m, kern.tile_n, 32).ok()?;
+        let t64 = meas(gpu, kern.tile_m, kern.tile_n, 64).ok()?;
+        let launch = (2.0 * t32 - t64).clamp(0.15 * t32, t32);
+        // K sweep at the base shape → work-throughput table.
+        let mut throughput = [0.0; 9];
+        let mut d8192 = 0.0;
+        for (i, &k) in K_GRID.iter().enumerate() {
+            let dur = meas(gpu, m, n, k).ok()?;
+            if k == 8192 {
+                d8192 = dur;
+            }
+            let op = GemmOp::mm(m, n, k, dtype);
+            throughput[i] = op.flops() / (dur - launch).max(dur * 0.05);
+        }
+        let work8192 = (d8192 - launch).max(d8192 * 0.25) / waves as f64;
+        // Partial-wave response: one point per occupancy level (tail of
+        // sm_count × r blocks runs r blocks per SM), at two K depths.
+        let bpsm = capacity / gpu.spec.sm_count;
+        let k_lo = TAIL_K_LO as usize;
+        let d512 = meas(gpu, m, n, k_lo).ok()?;
+        let work512 = (d512 - launch).max(d512 * 0.25) / waves as f64;
+        let mut tail = Vec::with_capacity(bpsm);
+        let mut tail_lo = Vec::with_capacity(bpsm);
+        for r in tail_levels(bpsm) {
+            let blocks = gpu.spec.sm_count * r;
+            let (mf, nf) = tile_grid_shape(kern.tile_m, kern.tile_n, blocks);
+            let df = meas(gpu, mf, nf, 8192).ok()?;
+            tail.push(((df - launch) / work8192).clamp(0.02, 1.2));
+            let dl = meas(gpu, mf, nf, k_lo).ok()?;
+            tail_lo.push(((dl - launch) / work512).clamp(0.02, 1.2));
+        }
+        // Enforce monotonicity (noise can invert close points).
+        for i in 1..tail.len() {
+            tail[i] = tail[i].max(tail[i - 1]);
+            tail_lo[i] = tail_lo[i].max(tail_lo[i - 1]);
+        }
+        profiles.push(KernelProfile {
+            kernel_id: kern.id,
+            base_m: m,
+            base_n: n,
+            wave_capacity: capacity,
+            base_waves: waves,
+            launch_s: launch,
+            work8192_s: work8192,
+            throughput,
+            tail,
+            tail_lo,
+            sm_count: gpu.spec.sm_count,
+        });
+    }
+    // Boost calibration burn (hot, like an evaluation run).
+    let boost_speedup =
+        profiler::calibrate_boost_ratio(gpu, dtype, locked_ghz).unwrap_or(1.0);
+    gpu.set_freq(FreqMode::Boost);
+    Some(GemmTable {
+        device: gpu.spec.name.to_string(),
+        dtype,
+        profiles,
+        locked_ghz,
+        boost_speedup,
+        dram_bw: gpu.spec.dram_bw(),
+    })
+}
+
+impl GemmTable {
+    /// Predict the boost-clock latency of a GEMM. `gpu` is only consulted
+    /// for the *public* interfaces a real deployment has: the cuBLASLt
+    /// heuristic (runs on the target device) and the occupancy calculator.
+    pub fn predict(&self, gpu: &Gpu, op: &GemmOp) -> Option<f64> {
+        let cfg = heuristic::algo_get_heuristic_cached(gpu, op)?;
+        self.predict_with_config(gpu, op, cfg)
+    }
+
+    /// Predict with a known kernel configuration (used by the TruthCFG
+    /// variant and by the batched PJRT path that pre-resolves configs).
+    pub fn predict_with_config(
+        &self,
+        gpu: &Gpu,
+        op: &GemmOp,
+        cfg: gemm::GemmConfig,
+    ) -> Option<f64> {
+        let profile = self.profiles.iter().find(|p| p.kernel_id == cfg.kernel_id)?;
+        let kern = gpu.kernel(op.dtype, cfg.kernel_id)?;
+        let kb = op.k.div_ceil(cfg.splitk) as f64;
+        let tiles_m = op.m.div_ceil(kern.tile_m);
+        let tiles_n = op.n.div_ceil(kern.tile_n);
+        let blocks = tiles_m * tiles_n * op.batch * cfg.splitk;
+        let work = profile.work_at_k(kb) * profile.effective_waves(blocks, kb)
+            / self.boost_speedup;
+        Some(profile.launch_s + work + self.splitk_epilogue(op, cfg, profile))
+    }
+
+    /// Split-K epilogue estimate from *public* quantities: partial-product
+    /// reduction traffic over the spec DRAM bandwidth plus a half launch.
+    fn splitk_epilogue(
+        &self,
+        op: &GemmOp,
+        cfg: gemm::GemmConfig,
+        profile: &KernelProfile,
+    ) -> f64 {
+        if cfg.splitk <= 1 {
+            return 0.0;
+        }
+        let bytes =
+            (op.batch * op.m * op.n) as f64 * (cfg.splitk as f64 + 1.0) * 4.0;
+        bytes / self.dram_bw + 0.5 * profile.launch_s
+    }
+
+    /// Work scale factor relative to the K=8192 per-wave work — the
+    /// `scale` input of the batched L1 prediction kernel (launch and
+    /// epilogue are added host-side after the PJRT call).
+    pub fn scale_factor(&self, gpu: &Gpu, op: &GemmOp, cfg: gemm::GemmConfig) -> Option<f64> {
+        let profile = self.profiles.iter().find(|p| p.kernel_id == cfg.kernel_id)?;
+        let kern = gpu.kernel(op.dtype, cfg.kernel_id)?;
+        let tiles_m = op.m.div_ceil(kern.tile_m);
+        let tiles_n = op.n.div_ceil(kern.tile_n);
+        let blocks = tiles_m * tiles_n * op.batch * cfg.splitk;
+        Some(profile.effective_waves(blocks, op.k.div_ceil(cfg.splitk) as f64) / self.boost_speedup)
+    }
+
+    /// Host-side additive part for the batched path (launch + epilogue).
+    pub fn host_offset(&self, op: &GemmOp, cfg: gemm::GemmConfig) -> Option<f64> {
+        let profile = self.profiles.iter().find(|p| p.kernel_id == cfg.kernel_id)?;
+        Some(profile.launch_s + self.splitk_epilogue(op, cfg, profile))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::rel_err_pct;
+
+    fn quick_table(dev: &str, dtype: DType) -> (Gpu, GemmTable) {
+        let mut gpu = Gpu::by_name(dev).unwrap();
+        let table = collect(&mut gpu, dtype, &ProfileSpec::quick()).unwrap();
+        gpu.reset();
+        (gpu, table)
+    }
+
+    #[test]
+    fn collects_profile_per_kernel() {
+        let (_, table) = quick_table("a100", DType::F32);
+        assert_eq!(table.profiles.len(), 13);
+        let mut ramps = Vec::new();
+        for p in &table.profiles {
+            assert!(p.work8192_s > 0.0);
+            assert!(p.launch_s >= 0.0);
+            // Throughput must ramp up with K (rational curve).
+            assert!(p.throughput[8] > p.throughput[0] * 1.2,
+                    "kernel {} barely ramps", p.kernel_id);
+            ramps.push(p.throughput[8] / p.throughput[0]);
+            // Tail response is monotone and bounded.
+            assert!(p.tail[0] <= p.tail[1] && p.tail[1] <= p.tail[2]);
+            assert!(p.tail[2] <= 1.2);
+        }
+        // Dispersion: some kernels ramp much harder than others.
+        assert!(ramps.iter().cloned().fold(0.0, f64::max) > 1.8);
+        assert!(table.boost_speedup > 1.0 && table.boost_speedup < 2.0);
+    }
+
+    #[test]
+    fn tile_grid_shape_is_exact_tiling() {
+        let (m, n) = tile_grid_shape(128, 64, 216 * 2);
+        assert_eq!(m % 128, 0);
+        assert_eq!(n % 64, 0);
+        assert_eq!((m / 128) * (n / 64), 216 * 2);
+    }
+
+    #[test]
+    fn interp_exact_on_grid_points() {
+        let (_, table) = quick_table("l4", DType::F32);
+        let p = &table.profiles[0];
+        for (i, &k) in K_GRID.iter().enumerate() {
+            let t = p.interp_throughput(k as f64);
+            assert!((t - p.throughput[i]).abs() / p.throughput[i] < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tail_response_is_occupancy_staircase() {
+        let p = KernelProfile {
+            kernel_id: 0,
+            base_m: 0,
+            base_n: 0,
+            wave_capacity: 400, // 100 SMs × bpsm 4
+            base_waves: 2,
+            launch_s: 0.0,
+            work8192_s: 1.0,
+            throughput: [1.0; 9],
+            tail: vec![0.25, 0.5, 0.75, 1.0],
+            tail_lo: vec![0.25, 0.5, 0.75, 1.0],
+            sm_count: 100,
+        };
+        // Equal staircases at both K depths → K interp is the identity.
+        assert_eq!(p.tail_response(0, 8192.0), 0.0);
+        assert_eq!(p.tail_response(1, 8192.0), 0.25); // 1 block → r=1
+        assert_eq!(p.tail_response(100, 512.0), 0.25); // exactly 1/SM
+        assert_eq!(p.tail_response(101, 8192.0), 0.5); // r=2
+        assert_eq!(p.tail_response(399, 1024.0), 1.0); // r=4
+        // effective_waves: 950 blocks = 2 full + 150 tail (r=2).
+        assert!((p.effective_waves(950, 8192.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tail_response_interpolates_in_k() {
+        let p = KernelProfile {
+            kernel_id: 0,
+            base_m: 0,
+            base_n: 0,
+            wave_capacity: 400,
+            base_waves: 2,
+            launch_s: 0.0,
+            work8192_s: 1.0,
+            throughput: [1.0; 9],
+            tail: vec![0.2],
+            tail_lo: vec![0.6],
+            sm_count: 400,
+        };
+        assert_eq!(p.tail_response(10, 512.0), 0.6);
+        assert_eq!(p.tail_response(10, 8192.0), 0.2);
+        assert_eq!(p.tail_response(10, 64.0), 0.6); // clamped below grid
+        let mid = p.tail_response(10, 2048.0); // log-midpoint of 512..8192
+        assert!((mid - 0.4).abs() < 1e-12, "mid={mid}");
+    }
+
+    #[test]
+    fn predict_accuracy_on_boost_ground_truth() {
+        // End-to-end sanity: PM2Lat predictions vs fresh boost-clock
+        // measurements must land under ~10% mean error.
+        let (mut gpu, table) = quick_table("a100", DType::F32);
+        gpu.reset();
+        gpu.set_freq(FreqMode::Boost);
+        let mut errs = Vec::new();
+        let mut rng = crate::util::prng::Rng::new(1234);
+        for _ in 0..25 {
+            let m = rng.log_uniform_int(64, 8192) as usize;
+            let n = rng.log_uniform_int(64, 8192) as usize;
+            let k = rng.log_uniform_int(32, 16384) as usize;
+            let op = GemmOp::mm(m, n, k, DType::F32);
+            let pred = table.predict(&gpu, &op).unwrap();
+            let truth = profiler::measure(
+                &mut gpu,
+                &Op::Gemm(op),
+                &ProfileSpec::quick(),
+            )
+            .unwrap()
+            .mean_s;
+            errs.push(rel_err_pct(pred, truth));
+        }
+        let mean = crate::util::stats::mean(&errs);
+        assert!(mean < 10.0, "mean rel err {mean}% errs={errs:?}");
+    }
+
+    #[test]
+    fn k_above_grid_extrapolates_linearly() {
+        let (gpu, table) = quick_table("rtx5070", DType::F32);
+        let op1 = GemmOp::mm(1024, 1024, 8192, DType::F32);
+        let op2 = GemmOp::mm(1024, 1024, 16384, DType::F32);
+        let t1 = table.predict(&gpu, &op1).unwrap();
+        let t2 = table.predict(&gpu, &op2).unwrap();
+        // K doubles past the grid end → duration ≈ doubles (same config).
+        let ratio = t2 / t1;
+        assert!(ratio > 1.5 && ratio < 2.6, "ratio={ratio}");
+    }
+
+    #[test]
+    fn bmm_scales_with_waves_not_batch_naively() {
+        let (gpu, table) = quick_table("l4", DType::F32);
+        let single = GemmOp::bmm(1, 128, 128, 256, DType::F32);
+        let batched = GemmOp::bmm(64, 128, 128, 256, DType::F32);
+        let t1 = table.predict(&gpu, &single).unwrap();
+        let t64 = table.predict(&gpu, &batched).unwrap();
+        // One tile per matrix: 64 small matrices still fit in ≤ a wave or
+        // two → far less than 64× slower.
+        assert!(t64 < t1 * 16.0, "wave quantization should compress cost");
+    }
+
+    #[test]
+    fn t4_bf16_collect_returns_none() {
+        let mut gpu = Gpu::by_name("t4").unwrap();
+        assert!(collect(&mut gpu, DType::Bf16, &ProfileSpec::quick()).is_none());
+    }
+
+    #[test]
+    fn scale_factor_plus_offset_matches_predict() {
+        let (gpu, table) = quick_table("a100", DType::F32);
+        let op = GemmOp::mm(2048, 512, 777, DType::F32);
+        let cfg = heuristic::algo_get_heuristic(&gpu.spec, &op).unwrap();
+        let profile = table.profiles.iter().find(|p| p.kernel_id == cfg.kernel_id).unwrap();
+        let via_predict = table.predict_with_config(&gpu, &op, cfg).unwrap();
+        let kb = op.k.div_ceil(cfg.splitk) as f64;
+        let via_scale = profile.work_at_k(kb)
+            * table.scale_factor(&gpu, &op, cfg).unwrap()
+            + table.host_offset(&op, cfg).unwrap();
+        assert!((via_predict - via_scale).abs() / via_predict < 1e-12);
+    }
+}

@@ -1,0 +1,22 @@
+//! # pm2lat — the paper's predictor
+//!
+//! Kernel-aware, lightweight, analytical latency prediction:
+//! * [`gemm_model`] — per-kernel throughput tables on the power-of-two K
+//!   grid + Eq. (1)/(2) interpolation + wave scaling (§III-C MatMul path);
+//! * [`utility_model`] — NCU-proxy-metric linear regression for
+//!   memory-bound layers (§III-C utility path);
+//! * [`custom_model`] — the same strategy adapted to Triton / Flash /
+//!   CUTLASS attention kernels (§IV-C);
+//! * [`predictor`] — the unified per-device facade + whole-model
+//!   sequential aggregation;
+//! * [`batch`] — the PJRT/Pallas-accelerated batched prediction path used
+//!   for NAS preprocessing (§IV-D2).
+
+pub mod batch;
+pub mod custom_model;
+pub mod gemm_model;
+pub mod predictor;
+pub mod utility_model;
+
+pub use gemm_model::{GemmTable, KernelProfile, K_GRID};
+pub use predictor::Pm2Lat;

@@ -1,0 +1,338 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them once on the PJRT CPU client, and
+//! execute them from the Rust request path. Python never runs here.
+//!
+//! Interchange is HLO *text* — jax ≥ 0.5 serialized protos use 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see DESIGN.md / aot.py).
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Typed host-side argument for an artifact call.
+pub enum ArgValue<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+    /// Rank-0 f32.
+    ScalarF32(f32),
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub feature_dim: usize,
+    pub hidden_dim: usize,
+    pub max_kernels: usize,
+    pub n_k_points: usize,
+    /// name → (file, arg shapes with dtype strings).
+    pub artifacts: BTreeMap<String, (String, Vec<(Vec<usize>, String)>)>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).context("manifest.json parse")?;
+        let num = |k: &str| -> Result<usize> {
+            v.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let mut artifacts = BTreeMap::new();
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        for (name, entry) in arts {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                .to_string();
+            let mut args = Vec::new();
+            for spec in entry
+                .get("args")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name} missing args"))?
+            {
+                let pair = spec.as_arr().ok_or_else(|| anyhow!("bad arg spec"))?;
+                let shape: Vec<usize> = pair[0]
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("bad shape"))?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect();
+                let dtype = pair[1].as_str().unwrap_or("float32").to_string();
+                args.push((shape, dtype));
+            }
+            artifacts.insert(name.clone(), (file, args));
+        }
+        Ok(Manifest {
+            feature_dim: num("feature_dim")?,
+            hidden_dim: num("hidden_dim")?,
+            max_kernels: num("max_kernels")?,
+            n_k_points: num("n_k_points")?,
+            artifacts,
+        })
+    }
+}
+
+/// Compile-once, execute-many PJRT runtime over the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    exes: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// Locate the artifacts directory: $PM2LAT_ARTIFACTS, then ./artifacts,
+/// then ancestors (so tests work from the crate root or target dirs).
+pub fn default_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("PM2LAT_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}
+
+impl Runtime {
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, exes: Mutex::new(HashMap::new()) })
+    }
+
+    /// Open using the default artifact search path.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = default_artifacts_dir()
+            .ok_or_else(|| anyhow!("artifacts/ not found — run `make artifacts`"))?;
+        Runtime::new(&dir)
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.keys().cloned().collect()
+    }
+
+    /// Get (compiling + caching on first use) the executable for `name`.
+    fn exe(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let (file, _) = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse HLO {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?,
+        );
+        self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (warm the cache explicitly).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        self.exe(name).map(|_| ())
+    }
+
+    fn literal(arg: &ArgValue) -> Result<xla::Literal> {
+        Ok(match arg {
+            ArgValue::F32(data, shape) => {
+                let n: usize = shape.iter().product();
+                if n != data.len() {
+                    bail!("arg shape {:?} != data len {}", shape, data.len());
+                }
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape: {e:?}"))?
+            }
+            ArgValue::I32(data, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape: {e:?}"))?
+            }
+            ArgValue::ScalarF32(v) => xla::Literal::scalar(*v),
+        })
+    }
+
+    /// Execute artifact `name`; returns every tuple element flattened to
+    /// f32 vectors (all our artifact outputs are f32).
+    pub fn call(&self, name: &str, args: &[ArgValue]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.exe(name)?;
+        let expected = &self.manifest.artifacts[name].1;
+        if args.len() != expected.len() {
+            bail!("artifact {name} expects {} args, got {}", expected.len(), args.len());
+        }
+        let literals: Vec<xla::Literal> =
+            args.iter().map(Self::literal).collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// Load `params_init.json` (the MLP init the Rust trainer starts from).
+pub fn load_params_init(dir: &Path) -> Result<Vec<(Vec<usize>, Vec<f32>)>> {
+    let text = std::fs::read_to_string(dir.join("params_init.json"))?;
+    let v = Json::parse(&text).context("params_init.json")?;
+    let obj = v.as_obj().ok_or_else(|| anyhow!("params_init not an object"))?;
+    let mut out = Vec::new();
+    for i in 0..obj.len() {
+        let p = v
+            .get(&format!("p{i}"))
+            .ok_or_else(|| anyhow!("missing p{i}"))?;
+        let shape: Vec<usize> = p
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("p{i} missing shape"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let data: Vec<f32> = p
+            .get("data")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("p{i} missing data"))?
+            .iter()
+            .filter_map(|x| x.as_f64().map(|f| f as f32))
+            .collect();
+        out.push((shape, data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Runtime {
+        Runtime::open_default().expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn manifest_lists_all_entries() {
+        let rt = runtime();
+        let names = rt.artifact_names();
+        assert!(names.iter().any(|n| n.starts_with("neusight_infer")));
+        assert!(names.iter().any(|n| n.starts_with("neusight_train")));
+        assert!(names.iter().any(|n| n.starts_with("pm2lat_batch_predict")));
+        assert!(names.iter().any(|n| n.starts_with("pm2lat_gram")));
+        assert_eq!(rt.manifest.feature_dim, 16);
+        assert_eq!(rt.manifest.n_k_points, 9);
+    }
+
+    #[test]
+    fn gram_artifact_plus_rust_solve_recovers_coefficients() {
+        let rt = runtime();
+        let n = 4096usize;
+        let p = 8usize;
+        let mut rng = crate::util::prng::Rng::new(3);
+        let truth: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        let mut x = vec![0f32; n * p];
+        let mut y = vec![0f32; n];
+        for i in 0..n {
+            let mut acc = 0.0;
+            for j in 0..p {
+                let v = rng.normal();
+                x[i * p + j] = v as f32;
+                acc += v * truth[j];
+            }
+            y[i] = acc as f32;
+        }
+        let out = rt
+            .call(
+                "pm2lat_gram_n4096_p8",
+                &[ArgValue::F32(&x, &[n, p]), ArgValue::F32(&y, &[n])],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let xtx: Vec<f64> = out[0].iter().map(|&v| v as f64).collect();
+        let xty: Vec<f64> = out[1].iter().map(|&v| v as f64).collect();
+        let coeffs =
+            crate::util::stats::cholesky_solve(&xtx, &xty, p).expect("solve");
+        for (got, want) in coeffs.iter().zip(&truth) {
+            assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn batch_predict_artifact_matches_eq12() {
+        let rt = runtime();
+        let nk = rt.manifest.max_kernels;
+        let npts = rt.manifest.n_k_points;
+        // Flat throughput rows → Eq 1 reduces to orgDur * K/8192 * scale.
+        let table = vec![2.0f32; nk * npts];
+        let base: Vec<f32> = (0..nk).map(|i| 1.0 + i as f32).collect();
+        let b = 1024usize;
+        let k_vals = vec![4096.0f32; b];
+        let kids: Vec<i32> = (0..b).map(|i| (i % nk) as i32).collect();
+        let scale = vec![2.0f32; b];
+        let out = rt
+            .call(
+                "pm2lat_batch_predict_b1024",
+                &[
+                    ArgValue::F32(&table, &[nk, npts]),
+                    ArgValue::F32(&base, &[nk]),
+                    ArgValue::F32(&k_vals, &[b]),
+                    ArgValue::I32(&kids, &[b]),
+                    ArgValue::F32(&scale, &[b]),
+                ],
+            )
+            .unwrap();
+        for (i, &v) in out[0].iter().enumerate() {
+            let want = (1.0 + (i % nk) as f32) * 0.5 * 2.0;
+            assert!((v - want).abs() < 1e-4, "i={i}: {v} vs {want}");
+        }
+    }
+
+    #[test]
+    fn params_init_shapes_match_manifest() {
+        let dir = default_artifacts_dir().unwrap();
+        let params = load_params_init(&dir).unwrap();
+        assert_eq!(params.len(), 6);
+        let f = 16;
+        let h = 128;
+        assert_eq!(params[0].0, vec![f, h]);
+        assert_eq!(params[4].0, vec![h, 1]);
+        for (shape, data) in &params {
+            assert_eq!(shape.iter().product::<usize>(), data.len());
+        }
+    }
+
+    #[test]
+    fn wrong_arg_count_rejected() {
+        let rt = runtime();
+        assert!(rt.call("pm2lat_gram_n4096_p8", &[]).is_err());
+        assert!(rt.call("no_such_artifact", &[]).is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Calibrates iteration count to a target measurement time, reports
+//! mean/median/p95 with outlier-robust statistics, and renders a compact
+//! report. Used by every `cargo bench` target (harness = false).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+    pub fn human(&self) -> String {
+        fn h(ns: f64) -> String {
+            if ns < 1e3 {
+                format!("{ns:.1} ns")
+            } else if ns < 1e6 {
+                format!("{:.2} µs", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.2} ms", ns / 1e6)
+            } else {
+                format!("{:.3} s", ns / 1e9)
+            }
+        }
+        format!(
+            "{:<44} {:>12}/iter (median {}, p95 {}, {} iters)",
+            self.name,
+            h(self.mean_ns),
+            h(self.median_ns),
+            h(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+pub struct Bench {
+    /// Target total measurement time per benchmark.
+    pub target: Duration,
+    /// Number of measurement samples.
+    pub samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // PM2LAT_BENCH_FAST=1 shrinks budgets for CI smoke runs.
+        let fast = std::env::var("PM2LAT_BENCH_FAST").is_ok();
+        Bench {
+            target: if fast {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(1)
+            },
+            samples: if fast { 10 } else { 30 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, auto-calibrating iterations per sample.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warm-up + calibration: find iters such that one sample takes
+        // roughly target/samples.
+        let mut iters = 1u64;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let el = t0.elapsed();
+            let per_sample = self.target.as_secs_f64() / self.samples as f64;
+            if el.as_secs_f64() >= per_sample || iters >= (1 << 30) {
+                let scale = per_sample / el.as_secs_f64().max(1e-12);
+                iters = ((iters as f64 * scale).ceil() as u64).max(1);
+                break;
+            }
+            iters *= 4;
+        }
+        let mut per_iter: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            per_iter.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: per_iter.iter().sum::<f64>() / per_iter.len() as f64,
+            median_ns: per_iter[per_iter.len() / 2],
+            p95_ns: per_iter
+                [((per_iter.len() as f64 * 0.95) as usize).min(per_iter.len() - 1)],
+            min_ns: per_iter[0],
+        };
+        println!("{}", result.human());
+        self.results.push(result.clone());
+        result
+    }
+
+    /// Time a one-shot (non-repeatable) operation.
+    pub fn run_once<F: FnOnce()>(&mut self, name: &str, f: F) -> BenchResult {
+        let t0 = Instant::now();
+        f();
+        let ns = t0.elapsed().as_nanos() as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean_ns: ns,
+            median_ns: ns,
+            p95_ns: ns,
+            min_ns: ns,
+        };
+        println!("{}", result.human());
+        self.results.push(result.clone());
+        result
+    }
+
+    pub fn section(&self, title: &str) {
+        println!("\n=== {title} ===");
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("PM2LAT_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.target = Duration::from_millis(20);
+        b.samples = 5;
+        let r = b.run("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn run_once_records() {
+        let mut b = Bench::new();
+        let r = b.run_once("sleep", || {
+            std::thread::sleep(Duration::from_millis(2))
+        });
+        assert!(r.mean_ns >= 2e6);
+    }
+}

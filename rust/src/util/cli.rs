@@ -1,0 +1,111 @@
+//! Tiny CLI argument parser (no clap in the offline vendor set).
+//!
+//! Model: `prog <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — first item is NOT the
+    /// program name.
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(name) = item.strip_prefix("--") {
+                // --key=value | --key value | --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(item);
+            } else {
+                out.positional.push(item);
+            }
+        }
+        out
+    }
+
+    pub fn parse_env() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse("predict gpt2 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("predict"));
+        assert_eq!(a.positional, vec!["gpt2", "extra"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let a = parse("run --device a100 --dtype=bf16");
+        assert_eq!(a.opt("device"), Some("a100"));
+        assert_eq!(a.opt("dtype"), Some("bf16"));
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_value() {
+        let a = parse("run --verbose --n 5 --quiet");
+        assert!(a.flag("verbose"));
+        assert!(a.flag("quiet"));
+        assert_eq!(a.opt_usize("n", 0), 5);
+    }
+
+    #[test]
+    fn typed_accessors_defaults() {
+        let a = parse("x");
+        assert_eq!(a.opt_usize("missing", 7), 7);
+        assert_eq!(a.opt_f64("missing", 1.5), 1.5);
+        assert_eq!(a.opt_or("missing", "d"), "d");
+    }
+}

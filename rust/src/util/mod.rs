@@ -1,0 +1,12 @@
+//! From-scratch utility substrate: JSON, PRNG, stats, CLI, thread pool,
+//! table formatting and a micro-bench harness. The offline vendor set has
+//! no serde/clap/criterion/rand/tokio, so these are first-class modules
+//! with their own test suites.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod stats;
+pub mod table;

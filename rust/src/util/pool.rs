@@ -1,0 +1,140 @@
+//! Scoped thread pool (no tokio/rayon in the offline vendor set).
+//!
+//! `parallel_map` fans a deterministic-order workload across worker threads
+//! using std::thread::scope; results come back in input order regardless of
+//! scheduling, so parallel experiment sweeps remain bit-reproducible.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers: respects PM2LAT_THREADS, defaults to available cores.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PM2LAT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Map `f` over `items` on `threads` workers; output order == input order.
+/// `f` must be Sync (called concurrently from many threads).
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> =
+        items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker panicked"))
+        .collect()
+}
+
+/// Chunked variant: hands each worker contiguous ranges to reduce
+/// coordination overhead for very cheap per-item work.
+pub fn parallel_map_chunked<T, R, F>(
+    items: &[T],
+    threads: usize,
+    chunk: usize,
+    f: F,
+) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.max(1);
+    let chunk = chunk.max(1);
+    if threads <= 1 || items.len() <= chunk {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Vec<R>>> = (0..items.len().div_ceil(chunk))
+        .map(|_| Mutex::new(Vec::new()))
+        .collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let c = next.fetch_add(1, Ordering::Relaxed);
+                let start = c * chunk;
+                if start >= items.len() {
+                    break;
+                }
+                let end = (start + chunk).min(items.len());
+                let out: Vec<R> = items[start..end].iter().map(&f).collect();
+                *results[c].lock().unwrap() = out;
+            });
+        }
+    });
+    results
+        .into_iter()
+        .flat_map(|m| m.into_inner().unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |&x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let items = vec![1, 2, 3];
+        assert_eq!(parallel_map(&items, 1, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u32> = vec![];
+        assert!(parallel_map(&items, 4, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn chunked_matches_plain() {
+        let items: Vec<usize> = (0..237).collect();
+        let a = parallel_map(&items, 4, |&x| x * x);
+        let b = parallel_map_chunked(&items, 4, 16, |&x| x * x);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn actually_parallel() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let seen = Mutex::new(HashSet::new());
+        let items: Vec<usize> = (0..64).collect();
+        parallel_map(&items, 8, |_| {
+            seen.lock().unwrap().insert(std::thread::current().id());
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert!(seen.lock().unwrap().len() > 1);
+    }
+}

@@ -1,0 +1,253 @@
+//! Deterministic PRNG: splitmix64 seeding + xoshiro256** core.
+//!
+//! Every stochastic element of the repo (measurement noise, sample
+//! generation, procedural kernel efficiencies) flows through this module so
+//! that the whole reproduction is bit-stable run to run. No external rand
+//! crates are used.
+
+/// splitmix64 — used to expand a u64 seed into xoshiro state and as a
+/// stateless hash for procedural parameters.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Stateless 64-bit hash of a byte string (FNV-1a folded through splitmix).
+/// Used to derive stable per-(device, kernel) procedural parameters.
+pub fn hash64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    let mut s = h;
+    splitmix64(&mut s)
+}
+
+/// xoshiro256** — fast, high-quality, deterministic.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal variate from Box-Muller.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent stream for a labelled sub-purpose.
+    pub fn fork(&self, label: &str) -> Rng {
+        let mut seed = self.s[0] ^ self.s[2];
+        seed ^= hash64(label.as_bytes());
+        Rng::new(seed)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn int_range(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(hi >= lo);
+        let span = (hi - lo) as u64 + 1;
+        lo + (self.next_u64() % span) as i64
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[(self.next_u64() % items.len() as u64) as usize]
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare_normal.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.uniform();
+            let u2 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.spare_normal = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Lognormal multiplicative noise with multiplicative sigma ~ `sigma`.
+    /// Mean-corrected so E[x] == 1.
+    pub fn lognormal_noise(&mut self, sigma: f64) -> f64 {
+        let mu = -0.5 * sigma * sigma;
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// log-uniform integer in [lo, hi] — matches how the paper samples
+    /// layer dimensions over wide ranges.
+    pub fn log_uniform_int(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo >= 1 && hi >= lo);
+        let l = (lo as f64).ln();
+        let h = (hi as f64).ln();
+        let v = self.range(l, h).exp().round() as u64;
+        v.clamp(lo, hi)
+    }
+
+    /// Shuffle a slice in place (Fisher-Yates).
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = (self.next_u64() % (i as u64 + 1)) as usize;
+            items.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn fork_streams_are_independent_and_stable() {
+        let root = Rng::new(99);
+        let mut f1 = root.fork("noise");
+        let mut f2 = root.fork("noise");
+        let mut g = root.fork("samples");
+        assert_eq!(f1.next_u64(), f2.next_u64());
+        assert_ne!(f1.next_u64(), g.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.uniform();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(4);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = r.normal();
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn lognormal_noise_mean_one() {
+        let mut r = Rng::new(5);
+        let n = 50_000;
+        let mean: f64 =
+            (0..n).map(|_| r.lognormal_noise(0.05)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.005, "mean={mean}");
+    }
+
+    #[test]
+    fn int_range_inclusive() {
+        let mut r = Rng::new(6);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..1000 {
+            let v = r.int_range(3, 5);
+            assert!((3..=5).contains(&v));
+            seen_lo |= v == 3;
+            seen_hi |= v == 5;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn log_uniform_spans_orders_of_magnitude() {
+        let mut r = Rng::new(8);
+        let vals: Vec<u64> =
+            (0..2000).map(|_| r.log_uniform_int(32, 8192)).collect();
+        let small = vals.iter().filter(|&&v| v < 256).count();
+        let large = vals.iter().filter(|&&v| v > 2048).count();
+        // log-uniform gives comparable mass per octave.
+        assert!(small > 400 && large > 400, "small={small} large={large}");
+    }
+
+    #[test]
+    fn hash64_stable_and_sensitive() {
+        assert_eq!(hash64(b"a100/k3"), hash64(b"a100/k3"));
+        assert_ne!(hash64(b"a100/k3"), hash64(b"a100/k4"));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(10);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

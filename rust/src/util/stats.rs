@@ -1,0 +1,274 @@
+//! Statistics helpers: summary stats, relative error, histograms, binning,
+//! and a small dense linear-algebra kit (Cholesky ridge solve) used as the
+//! pure-Rust mirror of the L1 lstsq artifact.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted copy; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+/// Relative error in percent: 100 * |pred - truth| / truth.
+/// The paper's per-layer metric (Table II).
+pub fn rel_err_pct(pred: f64, truth: f64) -> f64 {
+    debug_assert!(truth > 0.0);
+    100.0 * (pred - truth).abs() / truth
+}
+
+/// Signed relative error in percent: the paper's model-level metric
+/// (Tables IV/V report signed +/− deviations).
+pub fn signed_rel_err_pct(pred: f64, truth: f64) -> f64 {
+    debug_assert!(truth > 0.0);
+    100.0 * (pred - truth) / truth
+}
+
+/// Histogram with fixed-width bins over [lo, hi); values outside are
+/// clamped into the edge bins (matches the paper's error-distribution
+/// figures, where the last bin is ">= 95%").
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(bins > 0 && hi > lo);
+        Histogram { lo, hi, counts: vec![0; bins] }
+    }
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let idx = ((x - self.lo) / (self.hi - self.lo) * bins as f64)
+            .floor()
+            .clamp(0.0, (bins - 1) as f64) as usize;
+        self.counts[idx] += 1;
+    }
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+    /// Fraction of mass in bins fully below x.
+    pub fn frac_below(&self, x: f64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let bins = self.counts.len();
+        let width = (self.hi - self.lo) / bins as f64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            let upper = self.lo + (i as f64 + 1.0) * width;
+            if upper <= x {
+                acc += c;
+            }
+        }
+        acc as f64 / total as f64
+    }
+}
+
+/// Per-bin maxima over a keyed domain — Fig 5's "input domain divided into
+/// 100 bins, only the maximum error in each bin is plotted".
+pub fn binned_max(keys: &[f64], values: &[f64], bins: usize) -> Vec<f64> {
+    assert_eq!(keys.len(), values.len());
+    let lo = min(keys);
+    let hi = max(keys) + 1e-12;
+    let mut out = vec![f64::NAN; bins];
+    for (&k, &v) in keys.iter().zip(values) {
+        let idx = (((k - lo) / (hi - lo)) * bins as f64)
+            .floor()
+            .clamp(0.0, (bins - 1) as f64) as usize;
+        if out[idx].is_nan() || v > out[idx] {
+            out[idx] = v;
+        }
+    }
+    out
+}
+
+/// Dense column-major symmetric positive-definite solve via Cholesky.
+/// `a` is n×n row-major, `b` length n. Ridge-stabilized fit mirror of the
+/// L1 lstsq kernel; also the fallback when artifacts are absent.
+pub fn cholesky_solve(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    // Forward: L z = b
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[i * n + k] * z[k];
+        }
+        z[i] = sum / l[i * n + i];
+    }
+    // Backward: Lᵀ x = z
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = z[i];
+        for k in i + 1..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    Some(x)
+}
+
+/// Ridge least squares: rows of `xs` are feature vectors, `ys` targets.
+pub fn ridge_fit(xs: &[Vec<f64>], ys: &[f64], ridge: f64) -> Option<Vec<f64>> {
+    let n = xs.len();
+    if n == 0 {
+        return None;
+    }
+    let p = xs[0].len();
+    let mut xtx = vec![0.0; p * p];
+    let mut xty = vec![0.0; p];
+    for (row, &y) in xs.iter().zip(ys) {
+        debug_assert_eq!(row.len(), p);
+        for i in 0..p {
+            xty[i] += row[i] * y;
+            for j in 0..p {
+                xtx[i * p + j] += row[i] * row[j];
+            }
+        }
+    }
+    for i in 0..p {
+        xtx[i * p + i] += ridge;
+    }
+    cholesky_solve(&xtx, &xty, p)
+}
+
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((stddev(&xs) - 1.2909944).abs() < 1e-6);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn rel_err() {
+        assert_eq!(rel_err_pct(110.0, 100.0), 10.0);
+        assert_eq!(rel_err_pct(90.0, 100.0), 10.0);
+        assert_eq!(signed_rel_err_pct(90.0, 100.0), -10.0);
+    }
+
+    #[test]
+    fn histogram_clamps_edges() {
+        let mut h = Histogram::new(0.0, 100.0, 10);
+        h.add(-5.0);
+        h.add(50.0);
+        h.add(250.0);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[5], 1);
+        assert_eq!(h.counts[9], 1);
+        assert_eq!(h.total(), 3);
+        assert!((h.frac_below(60.0) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binned_max_takes_max_per_bin() {
+        let keys = [0.0, 0.1, 5.0, 9.9];
+        let vals = [1.0, 7.0, 2.0, 3.0];
+        let out = binned_max(&keys, &vals, 2);
+        assert_eq!(out[0], 7.0);
+        assert_eq!(out[1], 3.0);
+    }
+
+    #[test]
+    fn cholesky_solves_spd() {
+        // A = [[4,2],[2,3]], b = [2, 5] → x = [-0.5, 2.0]
+        let x = cholesky_solve(&[4.0, 2.0, 2.0, 3.0], &[2.0, 5.0], 2).unwrap();
+        assert!((x[0] + 0.5).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        assert!(cholesky_solve(&[1.0, 2.0, 2.0, 1.0], &[1.0, 1.0], 2).is_none());
+    }
+
+    #[test]
+    fn ridge_recovers_coefficients() {
+        let mut rng = crate::util::prng::Rng::new(11);
+        let truth = [2.0, -1.0, 0.5];
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..500 {
+            let row: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+            ys.push(dot(&row, &truth));
+            xs.push(row);
+        }
+        let fit = ridge_fit(&xs, &ys, 1e-9).unwrap();
+        for (f, t) in fit.iter().zip(truth.iter()) {
+            assert!((f - t).abs() < 1e-6, "{fit:?}");
+        }
+    }
+}

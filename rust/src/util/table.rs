@@ -1,0 +1,91 @@
+//! ASCII/markdown table formatting for experiment reports.
+
+/// Render rows as a GitHub-flavoured markdown table. `rows` excludes the
+/// header; all rows must have `header.len()` cells.
+pub fn markdown(header: &[&str], rows: &[Vec<String>]) -> String {
+    let cols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), cols, "row width mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<String>, widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (cell, w) in cells.iter().zip(widths) {
+            line.push_str(&format!(" {:<w$} |", cell, w = w));
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&fmt_row(
+        header.iter().map(|s| s.to_string()).collect(),
+        &widths,
+    ));
+    let mut sep = String::from("|");
+    for w in &widths {
+        sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+    }
+    sep.push('\n');
+    out.push_str(&sep);
+    for row in rows {
+        out.push_str(&fmt_row(row.clone(), &widths));
+    }
+    out
+}
+
+/// Format a float with fixed decimals, or "-" when None (the paper's OOM
+/// and unsupported-dtype cells).
+pub fn cell(v: Option<f64>, decimals: usize) -> String {
+    match v {
+        Some(x) => format!("{:.*}", decimals, x),
+        None => "-".to_string(),
+    }
+}
+
+/// Signed percent cell: "+3.1" / "-2.5" like Tables IV/V.
+pub fn signed_pct(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{}{:.1}", if x >= 0.0 { "+" } else { "" }, x),
+        None => "-".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let t = markdown(
+            &["name", "v"],
+            &[
+                vec!["a".into(), "1.0".into()],
+                vec!["long-name".into(), "2".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("| name"));
+        assert!(lines[1].starts_with("|--"));
+        let width = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == width));
+    }
+
+    #[test]
+    fn cells() {
+        assert_eq!(cell(Some(3.14159), 2), "3.14");
+        assert_eq!(cell(None, 2), "-");
+        assert_eq!(signed_pct(Some(3.14)), "+3.1");
+        assert_eq!(signed_pct(Some(-2.51)), "-2.5");
+        assert_eq!(signed_pct(None), "-");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged_rows() {
+        markdown(&["a", "b"], &[vec!["only-one".into()]]);
+    }
+}

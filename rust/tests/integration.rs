@@ -1,0 +1,214 @@
+//! Cross-module integration tests: the full pipeline (simulator →
+//! profiler → predictors → coordinator → applications) composed the way
+//! the experiments use it, plus property-style invariants that hold
+//! across randomized inputs.
+
+use pm2lat::coordinator::{Coordinator, PredictorKind, Request};
+use pm2lat::gpusim::{all_devices, heuristic, FreqMode, Gpu};
+use pm2lat::models::{runner, zoo};
+use pm2lat::ops::{DType, GemmOp, Op, UtilKind, UtilOp};
+use pm2lat::pm2lat::Pm2Lat;
+use pm2lat::profiler::{self, ProfileSpec};
+use pm2lat::runtime::Runtime;
+use pm2lat::util::prng::Rng;
+use pm2lat::util::stats;
+
+fn quick_pl(device: &str, dtypes: &[DType]) -> (Gpu, Pm2Lat) {
+    let mut gpu = Gpu::by_name(device).unwrap();
+    let pl = Pm2Lat::build_dtypes(&mut gpu, &ProfileSpec::quick(), dtypes, false);
+    gpu.reset();
+    (gpu, pl)
+}
+
+#[test]
+fn property_predictions_always_positive_and_finite() {
+    let (gpu, pl) = quick_pl("a100", &[DType::F32, DType::Bf16]);
+    let mut rng = Rng::new(1);
+    for _ in 0..300 {
+        let dt = if rng.uniform() < 0.5 { DType::F32 } else { DType::Bf16 };
+        let op = match rng.int_range(0, 2) {
+            0 => Op::Gemm(GemmOp::mm(
+                rng.log_uniform_int(1, 8192) as usize,
+                rng.log_uniform_int(1, 8192) as usize,
+                rng.log_uniform_int(1, 20000) as usize,
+                dt,
+            )),
+            1 => Op::Gemm(GemmOp::bmm(
+                rng.int_range(1, 64) as usize,
+                rng.log_uniform_int(1, 1024) as usize,
+                rng.log_uniform_int(1, 1024) as usize,
+                rng.log_uniform_int(1, 1024) as usize,
+                dt,
+            )),
+            _ => Op::Util(UtilOp::new(
+                *rng.choice(UtilKind::all()),
+                rng.log_uniform_int(8, 16384) as usize,
+                rng.log_uniform_int(8, 16384) as usize,
+                dt,
+            )),
+        };
+        if let Some(p) = pl.predict(&gpu, &op) {
+            assert!(p.is_finite() && p > 0.0, "op {op:?} → {p}");
+            assert!(p < 1e3, "absurd prediction {p}s for {op:?}");
+        }
+    }
+}
+
+#[test]
+fn property_prediction_monotone_in_flops_scale() {
+    // 8× the work in every dimension must not predict faster.
+    let (gpu, pl) = quick_pl("rtx5070", &[DType::F32]);
+    let mut rng = Rng::new(2);
+    for _ in 0..50 {
+        let m = rng.log_uniform_int(32, 2048) as usize;
+        let n = rng.log_uniform_int(32, 2048) as usize;
+        let k = rng.log_uniform_int(32, 4096) as usize;
+        let small = pl
+            .predict(&gpu, &Op::Gemm(GemmOp::mm(m, n, k, DType::F32)))
+            .unwrap();
+        let large = pl
+            .predict(&gpu, &Op::Gemm(GemmOp::mm(m * 2, n * 2, k * 2, DType::F32)))
+            .unwrap();
+        assert!(large > small, "m={m} n={n} k={k}: {large} <= {small}");
+    }
+}
+
+#[test]
+fn property_heuristic_choice_is_never_dominated() {
+    // The config the heuristic returns must beat (or tie) a fixed default
+    // config under the simulator's own physics.
+    let gpu = Gpu::by_name("l4").unwrap();
+    let mut rng = Rng::new(3);
+    for _ in 0..40 {
+        let op = GemmOp::mm(
+            rng.log_uniform_int(64, 4096) as usize,
+            rng.log_uniform_int(64, 4096) as usize,
+            rng.log_uniform_int(64, 8192) as usize,
+            DType::F32,
+        );
+        let best = heuristic::algo_get_heuristic_cached(&gpu, &op).unwrap();
+        let t_best = gpu
+            .model_latency(&Op::Gemm(op), Some(best), gpu.spec.max_freq_ghz)
+            .unwrap();
+        for kid in [0usize, 6, 12] {
+            let cfg = pm2lat::gpusim::GemmConfig { kernel_id: kid, splitk: 1 };
+            if let Ok(t) = gpu.model_latency(&Op::Gemm(op), Some(cfg), gpu.spec.max_freq_ghz) {
+                assert!(
+                    t_best <= t * 1.0001,
+                    "heuristic {best:?} ({t_best}) dominated by k{kid} ({t})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn full_pipeline_gpt2_under_15_pct() {
+    let (mut gpu, pl) = quick_pl("a100", &[DType::F32]);
+    let cfg = zoo::gpt2_large();
+    let trace = cfg.trace(4, 256);
+    let pred = pl.predict_trace(&gpu, &trace).unwrap();
+    let run = runner::run_model(&mut gpu, &cfg, 4, 256, 2, 5).unwrap();
+    let err = stats::rel_err_pct(pred, run.mean_s);
+    assert!(err < 15.0, "gpt2 BS=4 err {err}%");
+}
+
+#[test]
+fn coordinator_end_to_end_with_neusight() {
+    let rt = Runtime::open_default().expect("make artifacts");
+    let mut coord = Coordinator::new(&rt);
+    let (gpu, pl) = quick_pl("rtx5070", &[DType::F32]);
+    coord.register_device(gpu, pl).unwrap();
+    // Tiny NeuSight training through PJRT.
+    let mut gpus: Vec<Gpu> = all_devices().into_iter().map(Gpu::new).collect();
+    let ns = pm2lat::neusight::NeuSight::train_on(
+        &rt,
+        &mut gpus,
+        DType::F32,
+        pm2lat::neusight::TrainConfig { per_device: 40, epochs: 10, lr: 3e-3, seed: 4 },
+        &ProfileSpec::quick(),
+    )
+    .unwrap();
+    coord.register_neusight(ns);
+    let mut rng = Rng::new(5);
+    let reqs: Vec<Request> = (0..64)
+        .flat_map(|_| {
+            let op = Op::Gemm(GemmOp::mm(
+                rng.log_uniform_int(64, 4096) as usize,
+                rng.log_uniform_int(64, 4096) as usize,
+                rng.log_uniform_int(64, 4096) as usize,
+                DType::F32,
+            ));
+            [
+                Request { device: "rtx5070".into(), op, kind: PredictorKind::Pm2Lat },
+                Request { device: "rtx5070".into(), op, kind: PredictorKind::NeuSight },
+            ]
+        })
+        .collect();
+    let out = coord.submit(&reqs).unwrap();
+    assert_eq!(out.len(), 128);
+    assert!(out.iter().all(|o| o.map(|v| v > 0.0).unwrap_or(false)));
+}
+
+#[test]
+fn thermal_history_affects_measurements_but_not_reset_state() {
+    // Determinism + thermal statefulness: a hot device measures slower
+    // than a cold one; reset restores bit-identical behaviour.
+    let mut a = Gpu::by_name("t4").unwrap();
+    let mut b = Gpu::by_name("t4").unwrap();
+    let op = Op::Gemm(GemmOp::mm(4096, 4096, 4096, DType::F32));
+    // Heat device a to steady state (sustained compute-bound load).
+    a.set_freq(FreqMode::Boost);
+    for _ in 0..400 {
+        a.exec(&op).unwrap();
+    }
+    let hot = profiler::measure(&mut a, &op, &ProfileSpec::quick()).unwrap();
+    let cold = profiler::measure(&mut b, &op, &ProfileSpec::quick()).unwrap();
+    assert!(
+        hot.mean_s > cold.mean_s * 1.05,
+        "hot {} <= cold {}",
+        hot.mean_s,
+        cold.mean_s
+    );
+    // Reset → identical to a fresh device.
+    a.reset();
+    let after_reset: Vec<f64> =
+        (0..5).map(|_| a.exec(&op).unwrap().dur_s).collect();
+    let mut fresh = Gpu::by_name("t4").unwrap();
+    let fresh_runs: Vec<f64> =
+        (0..5).map(|_| fresh.exec(&op).unwrap().dur_s).collect();
+    assert_eq!(after_reset, fresh_runs);
+}
+
+#[test]
+fn partition_app_composes_with_predictors() {
+    let cfg = zoo::qwen3_4b();
+    let (d1, pl1) = quick_pl("rtx3060m", &[DType::Bf16]);
+    let (d2, pl2) = quick_pl("rtx5070", &[DType::Bf16]);
+    let plan = pm2lat::apps::partition::best_cut(&cfg, 8, 512, &d1, &d2, |gpu, trace| {
+        let pl = if gpu.spec.name == "rtx3060m" { &pl1 } else { &pl2 };
+        pl.predict_trace(gpu, trace)
+    })
+    .expect("feasible plan");
+    assert!(plan.cut >= 1 && plan.cut < cfg.layers);
+    assert!(plan.stage1_s > 0.0 && plan.stage2_s > 0.0);
+    // Memory feasibility is part of the contract.
+    assert!(pm2lat::apps::partition::cut_fits(&cfg, plan.cut, 8, 512, &d1, &d2));
+}
+
+#[test]
+fn batched_pjrt_path_agrees_with_scalar_at_scale() {
+    let rt = Runtime::open_default().expect("make artifacts");
+    let (gpu, pl) = quick_pl("a100", &[DType::F32]);
+    let table = pl.gemm_table(DType::F32).unwrap();
+    let bp = pm2lat::pm2lat::batch::BatchPredictor::new(&rt, table, 4096).unwrap();
+    let configs = pm2lat::apps::nas::sample_configs(4096, DType::F32, 11);
+    let batched = bp.predict(&gpu, table, &configs).unwrap();
+    let mut max_rel = 0.0f64;
+    for (op, got) in configs.iter().zip(&batched).take(500) {
+        let want = table.predict(&gpu, op).unwrap();
+        let got = got.unwrap();
+        max_rel = max_rel.max((got - want).abs() / want);
+    }
+    assert!(max_rel < 5e-3, "batched vs scalar max rel diff {max_rel}");
+}
