@@ -1,0 +1,32 @@
+# PM2Lat build / CI entrypoints.
+#
+#   make artifacts   — AOT-lower the L1/L2 Pallas+JAX kernels to HLO text
+#                      (required once before any Rust target that opens
+#                      the PJRT runtime).
+#   make ci          — tier-1 verification in one command: formatting,
+#                      clippy as errors, release build, full test suite.
+
+PYTHON ?= python3
+
+.PHONY: artifacts ci fmt clippy build test bench-fast
+
+# aot.py uses package-relative imports — must run as a module from python/.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+ci: fmt clippy test
+
+fmt:
+	cargo fmt --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+build:
+	cargo build --release
+
+test: build
+	cargo test -q
+
+bench-fast:
+	PM2LAT_BENCH_FAST=1 cargo bench

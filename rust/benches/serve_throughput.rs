@@ -1,0 +1,74 @@
+//! Bench: prediction-service throughput — the §IV-D2 serving regime the
+//! ROADMAP's north star scales toward. Runs the same `ab_phases` protocol
+//! as `pm2lat serve-bench` (same workload parameters and seed, so the two
+//! harnesses measure identically): serial no-cache baseline vs cold- and
+//! warm-cache concurrent service, for the scalar and batched-PJRT kinds,
+//! plus the trace-level whole-model API.
+
+use std::time::Instant;
+
+use pm2lat::coordinator::{
+    ab_phases, build_f32_service, mixed_workload, to_batched, AbReport, PredictorKind,
+    TraceRequest,
+};
+use pm2lat::models::zoo;
+use pm2lat::runtime::Runtime;
+use pm2lat::util::pool;
+
+fn print_ab(title: &str, n: usize, r: &AbReport) {
+    println!("-- {title} --");
+    println!("serial, no cache: {:>10.0} req/s", n as f64 / r.serial_s);
+    println!(
+        "cold cache      : {:>10.0} req/s ({:.1}x vs serial, phase hit rate {:.1}%)",
+        n as f64 / r.cold_s,
+        r.serial_s / r.cold_s,
+        r.cold_hit_rate * 100.0
+    );
+    println!(
+        "warm cache      : {:>10.0} req/s ({:.1}x vs serial, phase hit rate {:.1}%)",
+        n as f64 / r.warm_s,
+        r.serial_s / r.warm_s,
+        r.warm_hit_rate * 100.0
+    );
+}
+
+fn main() {
+    let rt = Runtime::open_default().expect("run `make artifacts` first");
+    let fast_mode = std::env::var("PM2LAT_BENCH_FAST").is_ok();
+    let n = if fast_mode { 10_000 } else { 60_000 };
+    let devices = ["a100", "t4", "l4"];
+    let dev_names: Vec<String> = devices.iter().map(|s| s.to_string()).collect();
+    // Same parameters as `pm2lat serve-bench` defaults.
+    let workload = mixed_workload(&dev_names, n, n / 12 + 1, 42);
+
+    println!("\n=== prediction-service throughput ({n} requests, 3 devices) ===");
+    let serial = build_f32_service(&rt, 1, 0, &devices).unwrap();
+    let coord = build_f32_service(&rt, pool::default_threads(), 1 << 17, &devices).unwrap();
+
+    let scalar = ab_phases(&serial, &coord, &workload, 2048).unwrap();
+    assert!(scalar.identical, "scalar cached results must be bit-identical to uncached");
+    print_ab("scalar kind", n, &scalar);
+
+    let batched = ab_phases(&serial, &coord, &to_batched(&workload), 2048).unwrap();
+    assert!(batched.identical, "batched cached results must be bit-identical to uncached");
+    print_ab("batched (PJRT) kind", n, &batched);
+
+    // Trace-level API: whole models per request through the batched path.
+    let traces: Vec<TraceRequest> = (0..24)
+        .map(|i| TraceRequest {
+            device: dev_names[i % dev_names.len()].clone(),
+            trace: zoo::gpt2_large().trace(1 + i % 4, 128),
+            kind: PredictorKind::Pm2LatBatched,
+        })
+        .collect();
+    let t0 = Instant::now();
+    let out = coord.submit_traces(&traces).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "trace API       : {:>10.1} models/s ({} of {} supported)",
+        traces.len() as f64 / dt,
+        out.iter().flatten().count(),
+        traces.len()
+    );
+    println!("{}", coord.metrics.summary());
+}

@@ -102,6 +102,37 @@ pub fn preprocess_pm2lat(
     SpeedReport::from_run(configs.len(), t0.elapsed().as_secs_f64())
 }
 
+/// Fill a cache through the prediction service (§IV-D2 at serving scale):
+/// NAS is a *consumer of the coordinator*, not of raw `Pm2Lat` — one
+/// submit round-trip rides the batched PJRT path, the parallel scalar
+/// fallback, and the coordinator's own LRU (repeat configurations across
+/// preprocessing rounds become cache hits).
+pub fn preprocess_service(
+    coord: &crate::coordinator::Coordinator<'_>,
+    device: &str,
+    configs: &[GemmOp],
+    cache: &mut LatencyCache,
+) -> anyhow::Result<SpeedReport> {
+    use crate::coordinator::{PredictorKind, Request};
+    use crate::ops::Op;
+    let t0 = Instant::now();
+    let requests: Vec<Request> = configs
+        .iter()
+        .map(|g| Request {
+            device: device.to_string(),
+            op: Op::Gemm(*g),
+            kind: PredictorKind::Pm2LatBatched,
+        })
+        .collect();
+    let results = coord.submit(&requests)?;
+    for (g, r) in configs.iter().zip(&results) {
+        if let Some(lat) = r {
+            cache.insert(g, *lat);
+        }
+    }
+    Ok(SpeedReport::from_run(configs.len(), t0.elapsed().as_secs_f64()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

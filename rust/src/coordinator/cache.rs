@@ -1,0 +1,292 @@
+//! Sharded, capacity-bounded LRU memoizing analytical predictions.
+//!
+//! PM2Lat is deterministic per device, so a cache hit is bit-identical to
+//! re-running the predictor — the cache is pure acceleration, never an
+//! approximation. The key carries the *computation path* (scalar vs
+//! batched-PJRT) because the two pipelines agree only to ~1e-3 relative;
+//! a hit must reproduce exactly what the missed path would have computed.
+//!
+//! Layout: 16 independently-locked shards, each a `HashMap` index over an
+//! arena-allocated intrusive doubly-linked recency list. Eviction is O(1);
+//! freed arena slots are reused, so shard memory is bounded by its
+//! capacity regardless of churn.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::Mutex;
+
+use crate::ops::Op;
+
+use super::service::PredictorKind;
+
+/// Cache key: (interned device id, computation path, op).
+pub type CacheKey = (u32, PredictorKind, Op);
+
+const N_SHARDS: usize = 16;
+const NIL: usize = usize::MAX;
+
+struct Node {
+    key: CacheKey,
+    value: f64,
+    prev: usize,
+    next: usize,
+}
+
+/// One shard: map index + arena LRU list (`head` = most recently used).
+struct Shard {
+    map: HashMap<CacheKey, usize>,
+    nodes: Vec<Node>,
+    head: usize,
+    tail: usize,
+    free: Vec<usize>,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            map: HashMap::new(),
+            nodes: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            free: Vec::new(),
+        }
+    }
+
+    /// Unlink node `i` from the recency list.
+    fn detach(&mut self, i: usize) {
+        let (p, n) = (self.nodes[i].prev, self.nodes[i].next);
+        if p == NIL {
+            self.head = n;
+        } else {
+            self.nodes[p].next = n;
+        }
+        if n == NIL {
+            self.tail = p;
+        } else {
+            self.nodes[n].prev = p;
+        }
+        self.nodes[i].prev = NIL;
+        self.nodes[i].next = NIL;
+    }
+
+    /// Link node `i` at the most-recently-used end.
+    fn attach_front(&mut self, i: usize) {
+        self.nodes[i].prev = NIL;
+        self.nodes[i].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    fn get(&mut self, key: &CacheKey) -> Option<f64> {
+        let i = *self.map.get(key)?;
+        if self.head != i {
+            self.detach(i);
+            self.attach_front(i);
+        }
+        Some(self.nodes[i].value)
+    }
+
+    fn insert(&mut self, key: CacheKey, value: f64, capacity: usize) {
+        if capacity == 0 {
+            return;
+        }
+        if let Some(&i) = self.map.get(&key) {
+            self.nodes[i].value = value;
+            if self.head != i {
+                self.detach(i);
+                self.attach_front(i);
+            }
+            return;
+        }
+        if self.map.len() >= capacity {
+            let lru = self.tail;
+            self.detach(lru);
+            let evicted = self.nodes[lru].key;
+            self.map.remove(&evicted);
+            self.free.push(lru);
+        }
+        let node = Node { key, value, prev: NIL, next: NIL };
+        let i = match self.free.pop() {
+            Some(slot) => {
+                self.nodes[slot] = node;
+                slot
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        };
+        self.map.insert(key, i);
+        self.attach_front(i);
+    }
+}
+
+/// The concurrent prediction cache. All methods take `&self`; per-shard
+/// `Mutex`es keep contention low under multi-threaded submission.
+pub struct PredictionCache {
+    shards: Vec<Mutex<Shard>>,
+    per_shard: usize,
+}
+
+impl PredictionCache {
+    /// `capacity` bounds total entries across shards (rounded up to shard
+    /// granularity); 0 disables the cache entirely.
+    pub fn new(capacity: usize) -> PredictionCache {
+        PredictionCache {
+            shards: (0..N_SHARDS).map(|_| Mutex::new(Shard::new())).collect(),
+            per_shard: capacity.div_ceil(N_SHARDS),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.per_shard > 0
+    }
+
+    /// Effective entry bound (0 when disabled).
+    pub fn capacity(&self) -> usize {
+        self.per_shard * N_SHARDS
+    }
+
+    fn shard_of(&self, key: &CacheKey) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % N_SHARDS
+    }
+
+    pub fn get(&self, device: u32, path: PredictorKind, op: &Op) -> Option<f64> {
+        if !self.enabled() {
+            return None;
+        }
+        let key = (device, path, *op);
+        self.shards[self.shard_of(&key)].lock().unwrap().get(&key)
+    }
+
+    pub fn insert(&self, device: u32, path: PredictorKind, op: &Op, value: f64) {
+        if !self.enabled() {
+            return;
+        }
+        let key = (device, path, *op);
+        self.shards[self.shard_of(&key)]
+            .lock()
+            .unwrap()
+            .insert(key, value, self.per_shard);
+    }
+
+    /// Current number of cached entries (sums shard sizes; O(shards)).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        for s in &self.shards {
+            *s.lock().unwrap() = Shard::new();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{DType, GemmOp};
+
+    const P: PredictorKind = PredictorKind::Pm2Lat;
+
+    fn op(i: usize) -> Op {
+        Op::Gemm(GemmOp::mm(i + 1, 64, 64, DType::F32))
+    }
+
+    #[test]
+    fn roundtrip_exact_values() {
+        let c = PredictionCache::new(1024);
+        let v = 0.1f64 + 0.2f64; // deliberately non-representable sum
+        c.insert(0, P, &op(0), v);
+        assert_eq!(c.get(0, P, &op(0)), Some(v), "hits must be bit-identical");
+        assert_eq!(c.get(0, P, &op(1)), None);
+        assert_eq!(c.get(1, P, &op(0)), None, "device id is part of the key");
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn distinct_paths_do_not_collide() {
+        let c = PredictionCache::new(1024);
+        c.insert(0, PredictorKind::Pm2Lat, &op(0), 1.0);
+        c.insert(0, PredictorKind::Pm2LatBatched, &op(0), 2.0);
+        assert_eq!(c.get(0, PredictorKind::Pm2Lat, &op(0)), Some(1.0));
+        assert_eq!(c.get(0, PredictorKind::Pm2LatBatched, &op(0)), Some(2.0));
+    }
+
+    #[test]
+    fn lru_evicts_oldest_first() {
+        let mut s = Shard::new();
+        s.insert((0, P, op(0)), 0.0, 2);
+        s.insert((0, P, op(1)), 1.0, 2);
+        // Touch op0 so op1 becomes least-recently used.
+        assert_eq!(s.get(&(0, P, op(0))), Some(0.0));
+        s.insert((0, P, op(2)), 2.0, 2);
+        assert_eq!(s.get(&(0, P, op(0))), Some(0.0));
+        assert_eq!(s.get(&(0, P, op(1))), None, "LRU entry evicted");
+        assert_eq!(s.get(&(0, P, op(2))), Some(2.0));
+        assert_eq!(s.map.len(), 2);
+    }
+
+    #[test]
+    fn arena_slots_are_reused() {
+        let mut s = Shard::new();
+        for i in 0..100 {
+            s.insert((0, P, op(i)), i as f64, 2);
+        }
+        assert_eq!(s.map.len(), 2);
+        assert!(s.nodes.len() <= 3, "churn must not grow the arena");
+    }
+
+    #[test]
+    fn capacity_bound_holds_globally() {
+        let c = PredictionCache::new(32);
+        for i in 0..500 {
+            c.insert(0, P, &op(i), i as f64);
+        }
+        assert!(c.len() <= c.capacity(), "{} > {}", c.len(), c.capacity());
+        assert!(c.capacity() >= 32);
+    }
+
+    #[test]
+    fn update_existing_key_replaces_value() {
+        let c = PredictionCache::new(64);
+        c.insert(0, P, &op(0), 1.0);
+        c.insert(0, P, &op(0), 5.0);
+        assert_eq!(c.get(0, P, &op(0)), Some(5.0));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn disabled_cache_is_noop() {
+        let c = PredictionCache::new(0);
+        assert!(!c.enabled());
+        c.insert(0, P, &op(0), 1.0);
+        assert_eq!(c.get(0, P, &op(0)), None);
+        assert!(c.is_empty());
+        assert_eq!(c.capacity(), 0);
+    }
+
+    #[test]
+    fn clear_empties_every_shard() {
+        let c = PredictionCache::new(256);
+        for i in 0..100 {
+            c.insert(0, P, &op(i), i as f64);
+        }
+        assert!(!c.is_empty());
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.get(0, P, &op(3)), None);
+    }
+}

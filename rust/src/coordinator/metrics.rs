@@ -1,62 +1,170 @@
-//! Service metrics: request counts, batch sizes, per-call service time.
+//! Service metrics: request/batch/PJRT/cache counters plus a *bounded*
+//! service-time reservoir.
+//!
+//! The seed kept every per-batch service time in an unbounded
+//! `Mutex<Vec<u64>>` — a memory leak under sustained traffic. Metrics now
+//! hold at most [`RESERVOIR_CAP`] samples (Vitter's algorithm R, uniform
+//! over the whole stream), so memory is O(1) regardless of request count
+//! while p50/p99 stay statistically faithful. Means remain exact via a
+//! running sum.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-#[derive(Default)]
+use crate::util::prng::Rng;
+use crate::util::stats;
+
+/// Fixed bound on retained service-time samples.
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Uniform reservoir over the stream of per-batch service times.
+struct Reservoir {
+    samples: Vec<u64>,
+    seen: u64,
+    rng: Rng,
+}
+
+impl Reservoir {
+    fn new() -> Reservoir {
+        Reservoir { samples: Vec::new(), seen: 0, rng: Rng::new(0xC0FFEE) }
+    }
+
+    fn record(&mut self, x: u64) {
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(x);
+        } else {
+            let j = self.rng.next_u64() % self.seen;
+            if (j as usize) < RESERVOIR_CAP {
+                self.samples[j as usize] = x;
+            }
+        }
+    }
+}
+
 pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub pjrt_calls: AtomicU64,
     pub unsupported: AtomicU64,
-    service_ns: Mutex<Vec<u64>>,
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    /// Batched-predictor builds that failed at device registration (the
+    /// device degrades to the scalar path).
+    pub batcher_errors: AtomicU64,
+    service_ns_sum: AtomicU64,
+    reservoir: Mutex<Reservoir>,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
-        Metrics::default()
+        Metrics {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            pjrt_calls: AtomicU64::new(0),
+            unsupported: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            batcher_errors: AtomicU64::new(0),
+            service_ns_sum: AtomicU64::new(0),
+            reservoir: Mutex::new(Reservoir::new()),
+        }
     }
 
     pub fn record_batch(&self, n_requests: usize, pjrt_calls: usize, service: std::time::Duration) {
         self.requests.fetch_add(n_requests as u64, Ordering::Relaxed);
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.pjrt_calls.fetch_add(pjrt_calls as u64, Ordering::Relaxed);
-        self.service_ns.lock().unwrap().push(service.as_nanos() as u64);
+        let ns = service.as_nanos() as u64;
+        self.service_ns_sum.fetch_add(ns, Ordering::Relaxed);
+        self.reservoir.lock().unwrap().record(ns);
     }
 
     pub fn record_unsupported(&self, n: usize) {
         self.unsupported.fetch_add(n as u64, Ordering::Relaxed);
     }
 
-    /// Mean service time per *batch* in microseconds.
-    pub fn mean_batch_us(&self) -> f64 {
-        let v = self.service_ns.lock().unwrap();
-        if v.is_empty() {
-            return 0.0;
+    pub fn record_cache(&self, hit: bool) {
+        if hit {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.cache_misses.fetch_add(1, Ordering::Relaxed);
         }
-        v.iter().sum::<u64>() as f64 / v.len() as f64 / 1e3
     }
 
-    /// Mean service time per *request* in microseconds.
+    pub fn record_batcher_error(&self) {
+        self.batcher_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mean service time per *batch* in microseconds (exact).
+    pub fn mean_batch_us(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.service_ns_sum.load(Ordering::Relaxed) as f64 / b as f64 / 1e3
+    }
+
+    /// Mean service time per *request* in microseconds (exact).
     pub fn mean_request_us(&self) -> f64 {
         let reqs = self.requests.load(Ordering::Relaxed);
         if reqs == 0 {
             return 0.0;
         }
-        let v = self.service_ns.lock().unwrap();
-        v.iter().sum::<u64>() as f64 / reqs as f64 / 1e3
+        self.service_ns_sum.load(Ordering::Relaxed) as f64 / reqs as f64 / 1e3
+    }
+
+    /// (p50, p99) per-batch service time in microseconds, estimated from
+    /// the bounded reservoir.
+    pub fn service_percentiles_us(&self) -> (f64, f64) {
+        let r = self.reservoir.lock().unwrap();
+        if r.samples.is_empty() {
+            return (0.0, 0.0);
+        }
+        let v: Vec<f64> = r.samples.iter().map(|&x| x as f64 / 1e3).collect();
+        (stats::percentile(&v, 50.0), stats::percentile(&v, 99.0))
+    }
+
+    /// Number of retained service-time samples — never exceeds
+    /// [`RESERVOIR_CAP`].
+    pub fn service_samples(&self) -> usize {
+        self.reservoir.lock().unwrap().samples.len()
+    }
+
+    /// Fraction of cache lookups that hit (0.0 when no lookups yet).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let h = self.cache_hits.load(Ordering::Relaxed) as f64;
+        let m = self.cache_misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
     }
 
     pub fn summary(&self) -> String {
+        let (p50, p99) = self.service_percentiles_us();
         format!(
-            "requests={} batches={} pjrt_calls={} unsupported={} mean_batch={:.1}µs mean_req={:.2}µs",
+            "requests={} batches={} pjrt_calls={} unsupported={} \
+             mean_batch={:.1}µs mean_req={:.2}µs p50_batch={:.1}µs p99_batch={:.1}µs \
+             cache_hit_rate={:.1}% batcher_errors={}",
             self.requests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.pjrt_calls.load(Ordering::Relaxed),
             self.unsupported.load(Ordering::Relaxed),
             self.mean_batch_us(),
             self.mean_request_us(),
+            p50,
+            p99,
+            self.cache_hit_rate() * 100.0,
+            self.batcher_errors.load(Ordering::Relaxed),
         )
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
     }
 }
 
@@ -82,5 +190,46 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.mean_batch_us(), 0.0);
         assert_eq!(m.mean_request_us(), 0.0);
+        assert_eq!(m.service_percentiles_us(), (0.0, 0.0));
+        assert_eq!(m.cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn reservoir_is_bounded_with_sane_percentiles() {
+        let m = Metrics::new();
+        // 20k batches, service times 1µs..21µs — far more than the cap.
+        for i in 0..20_000u64 {
+            m.record_batch(1, 0, Duration::from_nanos(1_000 + i));
+        }
+        assert!(m.service_samples() <= RESERVOIR_CAP);
+        let (p50, p99) = m.service_percentiles_us();
+        assert!(p50 > 0.0 && p50 <= p99, "p50 {p50} p99 {p99}");
+        assert!(p99 <= 21.0, "p99 {p99}µs exceeds stream max");
+        assert!((m.mean_batch_us() - 11.0).abs() < 0.5, "exact mean survives");
+    }
+
+    #[test]
+    fn cache_counters_and_rate() {
+        let m = Metrics::new();
+        m.record_cache(true);
+        m.record_cache(true);
+        m.record_cache(true);
+        m.record_cache(false);
+        assert_eq!(m.cache_hits.load(Ordering::Relaxed), 3);
+        assert_eq!(m.cache_misses.load(Ordering::Relaxed), 1);
+        assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_reports_percentiles_and_hit_rate() {
+        let m = Metrics::new();
+        m.record_batch(10, 1, Duration::from_micros(100));
+        m.record_cache(true);
+        m.record_batcher_error();
+        let s = m.summary();
+        assert!(s.contains("p50_batch="), "{s}");
+        assert!(s.contains("p99_batch="), "{s}");
+        assert!(s.contains("cache_hit_rate=100.0%"), "{s}");
+        assert!(s.contains("batcher_errors=1"), "{s}");
     }
 }

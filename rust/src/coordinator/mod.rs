@@ -1,15 +1,43 @@
 //! # coordinator — the prediction service (L3)
 //!
-//! A deployment-shaped front end over the predictors: clients submit
-//! prediction requests (op + device + predictor kind); the coordinator
-//! routes per device, *batches* NeuSight MLP queries and PM2Lat GEMM
-//! queries so each PJRT executable launch is amortized over up to 1024
-//! lanes, fans independent device groups across a thread pool, and
-//! exposes service metrics. This is the machinery the NAS-preprocessing
-//! application (§IV-D2) runs on at millions-of-queries scale.
+//! A deployment-shaped front end over the predictors, built in two layers:
+//!
+//! * [`Engine`] — the analytical core. Devices are interned at
+//!   registration, so request routing is a borrowed `&str` lookup and
+//!   group keys carry an integer id — the hot path allocates nothing per
+//!   request. Scalar PM2Lat predictions fan out over `util::pool` worker
+//!   threads in input-order-stable chunks, and every (device, path, op)
+//!   result is memoized in a sharded, capacity-bounded LRU
+//!   ([`PredictionCache`]) — PM2Lat is deterministic per device, so cache
+//!   hits are bit-identical to fresh predictions. The engine is plain
+//!   `Send + Sync` data: any number of client threads may call
+//!   [`Engine::submit_scalar`] concurrently on a shared reference.
+//! * [`Coordinator`] — the engine plus the PJRT-backed accelerators:
+//!   batched PM2Lat GEMM evaluation (up to 1024 lanes amortize one
+//!   executable launch) and the NeuSight MLP. PJRT work stays on the
+//!   calling thread (the FFI client is not known to be thread-safe);
+//!   batched-path cache misses are collected per (device, kind) group,
+//!   evaluated in as few launches as possible, and written back into the
+//!   shared cache, while non-batchable lanes spill into the engine's
+//!   parallel scalar fan-out.
+//!
+//! [`Metrics`] tracks request/batch/PJRT/cache counters plus a *bounded*
+//! service-time reservoir: p50/p99 come from at most
+//! [`RESERVOIR_CAP`] retained samples (Vitter's algorithm R), so metrics
+//! memory is O(1) under sustained traffic. The trace-level API
+//! ([`Coordinator::submit_traces`]) serves whole-model requests — the NAS
+//! preprocessing application (§IV-D2) and the model runner consume the
+//! service through it rather than driving raw `Pm2Lat`. `pm2lat
+//! serve-bench` and `benches/serve_throughput.rs` measure requests/sec
+//! against the serial no-cache baseline.
 
+pub mod cache;
 pub mod metrics;
 pub mod service;
 
-pub use metrics::Metrics;
-pub use service::{Coordinator, PredictorKind, Request};
+pub use cache::PredictionCache;
+pub use metrics::{Metrics, RESERVOIR_CAP};
+pub use service::{
+    ab_phases, build_f32_service, mixed_workload, timed_submit, to_batched, AbReport,
+    Coordinator, Engine, PredictorKind, Request, TraceRequest, DEFAULT_CACHE_CAPACITY,
+};

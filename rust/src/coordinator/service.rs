@@ -1,19 +1,42 @@
-//! The prediction service: device-keyed routing + request batching over
-//! the PJRT-backed predictors.
+//! The prediction service: device-keyed routing, a parallel cached scalar
+//! path, and request batching over the PJRT-backed predictors.
+//!
+//! Two layers:
+//!
+//! * [`Engine`] — the analytical core: interned devices (routing is a
+//!   borrowed `&str` lookup, group keys carry the integer id — no
+//!   per-request `String` clone on the hot path), the sharded LRU
+//!   prediction cache, service metrics, and the multi-threaded scalar
+//!   PM2Lat path. The engine is plain `Send + Sync` data; any number of
+//!   client threads may call [`Engine::submit_scalar`] concurrently on a
+//!   shared reference.
+//! * [`Coordinator`] — the engine plus the PJRT-backed accelerators
+//!   (batched GEMM artifact, NeuSight MLP). PJRT executions stay on the
+//!   calling thread — the FFI client is not known to be thread-safe — but
+//!   every analytical lane still fans out through the engine's pool, and
+//!   batched-path results are written back into the shared cache.
 
 use std::collections::HashMap;
+use std::ops::Deref;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::gpusim::Gpu;
 use crate::neusight::NeuSight;
-use crate::ops::{DType, GemmOp, Op};
+use crate::ops::{DType, GemmOp, Op, UtilKind, UtilOp};
 use crate::pm2lat::batch::BatchPredictor;
 use crate::pm2lat::Pm2Lat;
 use crate::runtime::Runtime;
+use crate::util::pool;
 
+use super::cache::PredictionCache;
 use super::metrics::Metrics;
+
+/// Default bound on cached predictions per service instance.
+pub const DEFAULT_CACHE_CAPACITY: usize = 1 << 16;
+/// Work items per chunk handed to a scalar-path worker thread.
+const SCALAR_CHUNK: usize = 64;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PredictorKind {
@@ -32,41 +55,255 @@ pub struct Request {
     pub kind: PredictorKind,
 }
 
-/// The service. Owns the per-device simulated GPUs (standing in for the
-/// target-device daemons that answer heuristic/occupancy queries), the
-/// fitted PM2Lat state, and the trained NeuSight sessions.
-pub struct Coordinator<'rt> {
-    runtime: &'rt Runtime,
-    gpus: HashMap<String, Gpu>,
-    pm2lat: HashMap<String, Pm2Lat>,
-    neusight: HashMap<DType, NeuSight<'rt>>,
-    batchers: HashMap<String, BatchPredictor<'rt>>,
+/// A whole-model prediction request: the response is the sequential-kernel
+/// sum over `trace` (paper §III), or `None` when any op is unsupported.
+#[derive(Clone, Debug)]
+pub struct TraceRequest {
+    pub device: String,
+    pub trace: Vec<Op>,
+    pub kind: PredictorKind,
+}
+
+/// A request after device interning: (device id, kind, op).
+type Resolved = (usize, PredictorKind, Op);
+
+/// One registered device: the simulated GPU standing in for the
+/// target-device daemon, plus its fitted PM2Lat state.
+struct DeviceEntry {
+    name: String,
+    gpu: Gpu,
+    pm2lat: Pm2Lat,
+}
+
+/// The analytical service core. See the module docs for the split between
+/// `Engine` and [`Coordinator`].
+pub struct Engine {
+    devices: Vec<DeviceEntry>,
+    index: HashMap<String, usize>,
+    cache: PredictionCache,
+    threads: usize,
     pub metrics: Metrics,
+}
+
+impl Engine {
+    pub fn new() -> Engine {
+        Engine {
+            devices: Vec::new(),
+            index: HashMap::new(),
+            cache: PredictionCache::new(DEFAULT_CACHE_CAPACITY),
+            threads: pool::default_threads(),
+            metrics: Metrics::new(),
+        }
+    }
+
+    /// Worker threads for the scalar path (1 = fully serial).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    /// Replace the cache with one bounded at `capacity` entries
+    /// (0 disables caching).
+    pub fn set_cache_capacity(&mut self, capacity: usize) {
+        self.cache = PredictionCache::new(capacity);
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Engine {
+        self.set_threads(threads);
+        self
+    }
+
+    pub fn with_cache_capacity(mut self, capacity: usize) -> Engine {
+        self.set_cache_capacity(capacity);
+        self
+    }
+
+    /// Register a device with its fitted PM2Lat state. Duplicate
+    /// registration is an error (the seed silently overwrote the previous
+    /// state). Returns the interned device id.
+    pub fn register_device(&mut self, gpu: Gpu, pm2lat: Pm2Lat) -> Result<usize> {
+        let name = gpu.spec.name.to_string();
+        if self.index.contains_key(&name) {
+            return Err(anyhow!("device {name} is already registered"));
+        }
+        let id = self.devices.len();
+        self.devices.push(DeviceEntry { name: name.clone(), gpu, pm2lat });
+        self.index.insert(name, id);
+        Ok(id)
+    }
+
+    /// Interned id for a device name — borrowed lookup, no allocation.
+    pub fn device_id(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    pub fn devices(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.devices.iter().map(|d| d.name.clone()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn gpu(&self, name: &str) -> Option<&Gpu> {
+        self.device_id(name).map(|i| &self.devices[i].gpu)
+    }
+
+    pub fn pm2lat(&self, name: &str) -> Option<&Pm2Lat> {
+        self.device_id(name).map(|i| &self.devices[i].pm2lat)
+    }
+
+    pub fn cache(&self) -> &PredictionCache {
+        &self.cache
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Scalar analytical prediction memoized in the shared cache. PM2Lat
+    /// is deterministic per device, so hits are bit-identical to fresh
+    /// predictions; unsupported ops stay uncached (cheap to re-derive).
+    /// With the cache disabled no lookup happens and no hit/miss is
+    /// counted — a no-cache service reports a clean zero, not all-miss.
+    fn predict_cached(&self, dev: usize, op: &Op) -> Option<f64> {
+        if self.cache.enabled() {
+            if let Some(v) = self.cache.get(dev as u32, PredictorKind::Pm2Lat, op) {
+                self.metrics.record_cache(true);
+                return Some(v);
+            }
+            self.metrics.record_cache(false);
+        }
+        let entry = &self.devices[dev];
+        let v = entry.pm2lat.predict(&entry.gpu, op);
+        if let Some(val) = v {
+            self.cache.insert(dev as u32, PredictorKind::Pm2Lat, op, val);
+        }
+        v
+    }
+
+    /// Run the scalar path over (device id, op) work items on the thread
+    /// pool. Results come back in input order regardless of scheduling,
+    /// and every value is deterministic — concurrent runs are
+    /// bit-reproducible.
+    fn run_scalar(&self, work: &[(usize, Op)]) -> Vec<Option<f64>> {
+        pool::parallel_map_chunked(work, self.threads, SCALAR_CHUNK, |(dev, op)| {
+            self.predict_cached(*dev, op)
+        })
+    }
+
+    /// Serve a batch of requests on the analytical path only; responses in
+    /// request order. `Pm2LatBatched` degrades to the scalar pipeline (no
+    /// runtime here); `NeuSight` lanes are counted unsupported and answer
+    /// `None`. Deliberately *not* named `submit`: [`Coordinator`] derefs
+    /// to `Engine`, and shadowing the full-service `submit` with these
+    /// degraded semantics would be a silent-misroute trap. Use
+    /// [`Coordinator::submit`] for the PJRT-accelerated paths.
+    pub fn submit_scalar(&self, requests: &[Request]) -> Result<Vec<Option<f64>>> {
+        let t0 = Instant::now();
+        // Resolve every device before touching metrics, so a rejected
+        // batch (unknown device) leaves no partial trace behind.
+        let mut resolved: Vec<usize> = Vec::with_capacity(requests.len());
+        for r in requests {
+            resolved.push(
+                self.device_id(&r.device)
+                    .ok_or_else(|| anyhow!("unknown device {}", r.device))?,
+            );
+        }
+        let mut out = vec![None; requests.len()];
+        let mut work: Vec<(usize, Op)> = Vec::with_capacity(requests.len());
+        let mut slots: Vec<usize> = Vec::with_capacity(requests.len());
+        let mut unsupported = 0usize;
+        for (i, (r, &dev)) in requests.iter().zip(&resolved).enumerate() {
+            match r.kind {
+                PredictorKind::NeuSight => unsupported += 1,
+                _ => {
+                    work.push((dev, r.op));
+                    slots.push(i);
+                }
+            }
+        }
+        if unsupported > 0 {
+            self.metrics.record_unsupported(unsupported);
+        }
+        for (slot, v) in slots.iter().zip(self.run_scalar(&work)) {
+            out[*slot] = v;
+        }
+        self.metrics.record_batch(requests.len(), 0, t0.elapsed());
+        Ok(out)
+    }
+}
+
+impl Default for Engine {
+    fn default() -> Engine {
+        Engine::new()
+    }
+}
+
+/// The full service: engine + PJRT-backed accelerators. Derefs to
+/// [`Engine`], so `coordinator.metrics`, `.devices()`, `.cache()` etc.
+/// resolve to the shared core.
+pub struct Coordinator<'rt> {
+    engine: Engine,
+    runtime: &'rt Runtime,
+    neusight: HashMap<DType, NeuSight<'rt>>,
+    /// Indexed by interned device id; `None` = scalar fallback only.
+    batchers: Vec<Option<BatchPredictor<'rt>>>,
+}
+
+impl<'rt> Deref for Coordinator<'rt> {
+    type Target = Engine;
+    fn deref(&self) -> &Engine {
+        &self.engine
+    }
 }
 
 impl<'rt> Coordinator<'rt> {
     pub fn new(runtime: &'rt Runtime) -> Coordinator<'rt> {
         Coordinator {
+            engine: Engine::new(),
             runtime,
-            gpus: HashMap::new(),
-            pm2lat: HashMap::new(),
             neusight: HashMap::new(),
-            batchers: HashMap::new(),
-            metrics: Metrics::new(),
+            batchers: Vec::new(),
         }
     }
 
-    /// Register a device with its fitted PM2Lat state.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.engine.set_threads(threads);
+        self
+    }
+
+    pub fn with_cache_capacity(mut self, capacity: usize) -> Self {
+        self.engine.set_cache_capacity(capacity);
+        self
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Register a device with its fitted PM2Lat state. Duplicate
+    /// registration is an error. A failed batched-predictor build is
+    /// surfaced in `metrics.batcher_errors` + stderr (the seed silently
+    /// discarded it) and the device degrades to the scalar path.
     pub fn register_device(&mut self, gpu: Gpu, pm2lat: Pm2Lat) -> Result<()> {
-        let name = gpu.spec.name.to_string();
-        // Pre-build the batched predictor when an F32 table exists.
-        if let Some(table) = pm2lat.gemm_table(DType::F32) {
-            if let Ok(bp) = BatchPredictor::new(self.runtime, table, 1024) {
-                self.batchers.insert(name.clone(), bp);
-            }
+        if self.engine.device_id(gpu.spec.name).is_some() {
+            return Err(anyhow!("device {} is already registered", gpu.spec.name));
         }
-        self.pm2lat.insert(name.clone(), pm2lat);
-        self.gpus.insert(name, gpu);
+        let batcher = match pm2lat.gemm_table(DType::F32) {
+            Some(table) => match BatchPredictor::new(self.runtime, table, 1024) {
+                Ok(bp) => Some(bp),
+                Err(e) => {
+                    self.engine.metrics.record_batcher_error();
+                    eprintln!(
+                        "coordinator: no batched path for {} ({e}); using scalar fallback",
+                        gpu.spec.name
+                    );
+                    None
+                }
+            },
+            None => None,
+        };
+        let id = self.engine.register_device(gpu, pm2lat)?;
+        debug_assert_eq!(id, self.batchers.len());
+        self.batchers.push(batcher);
         Ok(())
     }
 
@@ -74,112 +311,391 @@ impl<'rt> Coordinator<'rt> {
         self.neusight.insert(ns.dtype, ns);
     }
 
-    pub fn devices(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.gpus.keys().cloned().collect();
-        v.sort();
-        v
-    }
-
-    /// Serve a batch of requests; responses in request order.
+    /// Serve a batch of requests; responses in request order. Scalar
+    /// analytical lanes fan out across the engine's thread pool; PJRT-
+    /// backed lanes are grouped per (device, kind) and executed on the
+    /// calling thread, with cache misses amortized into batched launches.
     pub fn submit(&self, requests: &[Request]) -> Result<Vec<Option<f64>>> {
         let t0 = Instant::now();
-        let mut out = vec![None; requests.len()];
-        let mut pjrt_calls = 0usize;
-        // Group by (device, kind) to batch PJRT-backed paths.
-        let mut groups: HashMap<(String, PredictorKind), Vec<usize>> = HashMap::new();
-        for (i, r) in requests.iter().enumerate() {
-            groups
-                .entry((r.device.clone(), r.kind))
-                .or_default()
-                .push(i);
+        let mut resolved: Vec<Resolved> = Vec::with_capacity(requests.len());
+        for r in requests {
+            let dev = self
+                .engine
+                .device_id(&r.device)
+                .ok_or_else(|| anyhow!("unknown device {}", r.device))?;
+            resolved.push((dev, r.kind, r.op));
         }
-        for ((device, kind), idxs) in groups {
-            let gpu = self
-                .gpus
-                .get(&device)
-                .ok_or_else(|| anyhow!("unknown device {device}"))?;
+        let (out, pjrt_calls) = self.submit_resolved(&resolved)?;
+        self.engine.metrics.record_batch(requests.len(), pjrt_calls, t0.elapsed());
+        Ok(out)
+    }
+
+    /// Trace-level API: one response per model trace — the sequential-
+    /// kernel sum, or `None` when any op is unsupported on the device.
+    /// Whole traces ride the same batching/caching/concurrency machinery
+    /// as [`Coordinator::submit`]; the device is interned once per trace.
+    pub fn submit_traces(&self, traces: &[TraceRequest]) -> Result<Vec<Option<f64>>> {
+        let t0 = Instant::now();
+        let mut resolved: Vec<Resolved> = Vec::new();
+        let mut spans: Vec<(usize, usize)> = Vec::with_capacity(traces.len());
+        for t in traces {
+            let dev = self
+                .engine
+                .device_id(&t.device)
+                .ok_or_else(|| anyhow!("unknown device {}", t.device))?;
+            let start = resolved.len();
+            resolved.extend(t.trace.iter().map(|op| (dev, t.kind, *op)));
+            spans.push((start, resolved.len()));
+        }
+        let (per_op, pjrt_calls) = self.submit_resolved(&resolved)?;
+        self.engine
+            .metrics
+            .record_batch(resolved.len(), pjrt_calls, t0.elapsed());
+        Ok(spans
+            .into_iter()
+            .map(|(a, b)| {
+                let mut total = 0.0;
+                for v in &per_op[a..b] {
+                    total += (*v)?;
+                }
+                Some(total)
+            })
+            .collect())
+    }
+
+    /// Shared dispatch: scatter per-request answers, return the PJRT
+    /// launch count for metrics.
+    fn submit_resolved(&self, reqs: &[Resolved]) -> Result<(Vec<Option<f64>>, usize)> {
+        let mut out = vec![None; reqs.len()];
+        let mut pjrt_calls = 0usize;
+        let mut scalar: Vec<(usize, Op)> = Vec::new();
+        let mut scalar_slots: Vec<usize> = Vec::new();
+        let mut groups: HashMap<(usize, PredictorKind), Vec<usize>> = HashMap::new();
+        for (i, &(dev, kind, op)) in reqs.iter().enumerate() {
             match kind {
                 PredictorKind::Pm2Lat => {
-                    let pl = self
-                        .pm2lat
-                        .get(&device)
-                        .ok_or_else(|| anyhow!("no pm2lat for {device}"))?;
-                    for i in idxs {
-                        out[i] = pl.predict(gpu, &requests[i].op);
-                    }
+                    scalar.push((dev, op));
+                    scalar_slots.push(i);
                 }
+                _ => groups.entry((dev, kind)).or_default().push(i),
+            }
+        }
+        // PJRT-backed groups on the calling thread. Non-batchable lanes
+        // spill into `scalar` and join the parallel fan-out below.
+        for (&(dev, kind), idxs) in &groups {
+            match kind {
+                PredictorKind::Pm2Lat => unreachable!("scalar kinds are not grouped"),
                 PredictorKind::Pm2LatBatched => {
-                    let pl = self.pm2lat.get(&device).ok_or_else(|| anyhow!("no pm2lat"))?;
-                    // Split GEMM F32 lanes from everything else.
-                    let mut gemm_idx: Vec<usize> = Vec::new();
-                    let mut gemm_ops: Vec<GemmOp> = Vec::new();
-                    for &i in &idxs {
-                        if let Op::Gemm(g) = requests[i].op {
-                            if g.dtype == DType::F32 && self.batchers.contains_key(&device) {
-                                gemm_idx.push(i);
-                                gemm_ops.push(g);
-                                continue;
-                            }
-                        }
-                        out[i] = pl.predict(gpu, &requests[i].op);
-                    }
-                    if !gemm_ops.is_empty() {
-                        let bp = &self.batchers[&device];
-                        let table = pl.gemm_table(DType::F32).unwrap();
-                        for (chunk_i, chunk) in gemm_ops.chunks(bp.batch).enumerate() {
-                            let res = bp.predict(gpu, table, chunk)?;
-                            pjrt_calls += 1;
-                            for (j, v) in res.into_iter().enumerate() {
-                                out[gemm_idx[chunk_i * bp.batch + j]] = v;
-                            }
-                        }
-                    }
+                    pjrt_calls += self.run_batched(
+                        dev,
+                        idxs,
+                        reqs,
+                        &mut out,
+                        &mut scalar,
+                        &mut scalar_slots,
+                    )?;
                 }
                 PredictorKind::NeuSight => {
-                    // Group further by dtype → one batched MLP call each.
-                    let mut by_dtype: HashMap<DType, Vec<usize>> = HashMap::new();
-                    for &i in &idxs {
-                        by_dtype.entry(requests[i].op.dtype()).or_default().push(i);
-                    }
-                    for (dt, sub) in by_dtype {
-                        let Some(ns) = self.neusight.get(&dt) else {
-                            self.metrics.record_unsupported(sub.len());
-                            continue;
-                        };
-                        let ops: Vec<Op> = sub.iter().map(|&i| requests[i].op).collect();
-                        let res = ns.predict_batch(&gpu.spec, &ops)?;
-                        pjrt_calls += ops.len().div_ceil(1024);
-                        for (j, v) in res.into_iter().enumerate() {
-                            out[sub[j]] = v;
-                        }
-                    }
+                    pjrt_calls += self.run_neusight(dev, idxs, reqs, &mut out)?;
                 }
             }
         }
-        self.metrics.record_batch(requests.len(), pjrt_calls, t0.elapsed());
-        Ok(out)
+        for (slot, v) in scalar_slots.iter().zip(self.engine.run_scalar(&scalar)) {
+            out[*slot] = v;
+        }
+        Ok((out, pjrt_calls))
     }
+
+    /// Batched PM2Lat group for one device: cache hits answer immediately,
+    /// misses are evaluated in as few PJRT launches as possible and written
+    /// back; non-GEMM / non-F32 lanes spill to the scalar fan-out.
+    fn run_batched(
+        &self,
+        dev: usize,
+        idxs: &[usize],
+        reqs: &[Resolved],
+        out: &mut [Option<f64>],
+        scalar: &mut Vec<(usize, Op)>,
+        scalar_slots: &mut Vec<usize>,
+    ) -> Result<usize> {
+        let entry = &self.engine.devices[dev];
+        let bp = self.batchers[dev].as_ref();
+        let mut miss_slots: Vec<usize> = Vec::new();
+        let mut miss_ops: Vec<GemmOp> = Vec::new();
+        let cache_on = self.engine.cache.enabled();
+        for &i in idxs {
+            let op = &reqs[i].2;
+            let gemm = match op {
+                Op::Gemm(g) if g.dtype == DType::F32 && bp.is_some() => *g,
+                _ => {
+                    scalar.push((dev, *op));
+                    scalar_slots.push(i);
+                    continue;
+                }
+            };
+            if cache_on {
+                if let Some(v) =
+                    self.engine.cache.get(dev as u32, PredictorKind::Pm2LatBatched, op)
+                {
+                    self.engine.metrics.record_cache(true);
+                    out[i] = Some(v);
+                    continue;
+                }
+                self.engine.metrics.record_cache(false);
+            }
+            miss_slots.push(i);
+            miss_ops.push(gemm);
+        }
+        if miss_ops.is_empty() {
+            return Ok(0);
+        }
+        let bp = bp.expect("batchable lanes imply a batcher");
+        let table = entry
+            .pm2lat
+            .gemm_table(DType::F32)
+            .expect("batcher implies an F32 table");
+        let res = bp.predict_all(&entry.gpu, table, &miss_ops)?;
+        for ((slot, g), v) in miss_slots.iter().zip(&miss_ops).zip(res) {
+            if let Some(val) = v {
+                self.engine.cache.insert(
+                    dev as u32,
+                    PredictorKind::Pm2LatBatched,
+                    &Op::Gemm(*g),
+                    val,
+                );
+            }
+            out[*slot] = v;
+        }
+        Ok(miss_ops.len().div_ceil(bp.batch))
+    }
+
+    /// NeuSight group for one device: split by dtype, one batched MLP
+    /// launch per sub-group. Learned-model outputs are not memoized.
+    fn run_neusight(
+        &self,
+        dev: usize,
+        idxs: &[usize],
+        reqs: &[Resolved],
+        out: &mut [Option<f64>],
+    ) -> Result<usize> {
+        let entry = &self.engine.devices[dev];
+        let mut by_dtype: HashMap<DType, Vec<usize>> = HashMap::new();
+        for &i in idxs {
+            by_dtype.entry(reqs[i].2.dtype()).or_default().push(i);
+        }
+        let mut pjrt_calls = 0usize;
+        for (dt, sub) in by_dtype {
+            let Some(ns) = self.neusight.get(&dt) else {
+                self.engine.metrics.record_unsupported(sub.len());
+                continue;
+            };
+            let ops: Vec<Op> = sub.iter().map(|&i| reqs[i].2).collect();
+            let res = ns.predict_batch(&entry.gpu.spec, &ops)?;
+            pjrt_calls += ops.len().div_ceil(1024);
+            for (j, v) in res.into_iter().enumerate() {
+                out[sub[j]] = v;
+            }
+        }
+        Ok(pjrt_calls)
+    }
+}
+
+/// Deterministic mixed workload for service benchmarking: `unique` distinct
+/// F32 ops (≈70% GEMM, 30% utility) spread over `devices`, then sampled
+/// with repetition to `n` requests — a NAS-like distribution where hot
+/// configurations recur and the cache can earn its keep.
+pub fn mixed_workload(devices: &[String], n: usize, unique: usize, seed: u64) -> Vec<Request> {
+    let mut rng = crate::util::prng::Rng::new(seed);
+    let unique = unique.max(1);
+    let ops: Vec<Op> = (0..unique)
+        .map(|_| {
+            if rng.uniform() < 0.7 {
+                Op::Gemm(GemmOp::mm(
+                    rng.log_uniform_int(64, 4096) as usize,
+                    rng.log_uniform_int(64, 4096) as usize,
+                    rng.log_uniform_int(64, 8192) as usize,
+                    DType::F32,
+                ))
+            } else {
+                Op::Util(UtilOp::new(
+                    *rng.choice(UtilKind::all()),
+                    rng.log_uniform_int(64, 8192) as usize,
+                    rng.log_uniform_int(64, 8192) as usize,
+                    DType::F32,
+                ))
+            }
+        })
+        .collect();
+    (0..n)
+        .map(|_| Request {
+            device: rng.choice(devices).clone(),
+            op: *rng.choice(&ops),
+            kind: PredictorKind::Pm2Lat,
+        })
+        .collect()
+}
+
+/// Build an F32-only service over named devices (quick profile fit —
+/// serving benchmarks measure dispatch overhead, not fit quality).
+/// Shared by `pm2lat serve-bench` and `benches/serve_throughput.rs` so
+/// the two A/B harnesses cannot drift apart.
+pub fn build_f32_service<'rt>(
+    runtime: &'rt Runtime,
+    threads: usize,
+    cache_capacity: usize,
+    devices: &[&str],
+) -> Result<Coordinator<'rt>> {
+    let mut c = Coordinator::new(runtime)
+        .with_threads(threads)
+        .with_cache_capacity(cache_capacity);
+    for dev in devices {
+        let mut gpu =
+            Gpu::by_name(dev).ok_or_else(|| anyhow!("unknown device {dev}"))?;
+        let pl = crate::pm2lat::Pm2Lat::build_dtypes(
+            &mut gpu,
+            &crate::profiler::ProfileSpec::quick(),
+            &[DType::F32],
+            false,
+        );
+        gpu.reset();
+        c.register_device(gpu, pl)?;
+    }
+    Ok(c)
+}
+
+/// Submit `requests` in `chunk`-sized service batches, timing the whole
+/// run. Returns (elapsed seconds, answers in request order).
+pub fn timed_submit(
+    coord: &Coordinator<'_>,
+    requests: &[Request],
+    chunk: usize,
+) -> Result<(f64, Vec<Option<f64>>)> {
+    let chunk = chunk.max(1);
+    let t0 = Instant::now();
+    let mut out = Vec::with_capacity(requests.len());
+    for batch in requests.chunks(chunk) {
+        out.extend(coord.submit(batch)?);
+    }
+    Ok((t0.elapsed().as_secs_f64(), out))
+}
+
+/// Re-kind a workload onto the batched PJRT path.
+pub fn to_batched(requests: &[Request]) -> Vec<Request> {
+    requests
+        .iter()
+        .map(|r| Request {
+            device: r.device.clone(),
+            op: r.op,
+            kind: PredictorKind::Pm2LatBatched,
+        })
+        .collect()
+}
+
+/// One serial-baseline vs cold-cache vs warm-cache A/B measurement.
+pub struct AbReport {
+    pub serial_s: f64,
+    pub cold_s: f64,
+    pub warm_s: f64,
+    /// Cache hit rate during the cold / warm cached passes only
+    /// (computed from counter deltas, not the cumulative metric).
+    pub cold_hit_rate: f64,
+    pub warm_hit_rate: f64,
+    /// All three answer vectors bit-identical.
+    pub identical: bool,
+}
+
+/// Run the canonical service A/B: `requests` through `baseline` once,
+/// then twice through `cached` (cold, then warm). Shared by
+/// `pm2lat serve-bench` and `benches/serve_throughput.rs` so the two
+/// harnesses measure exactly the same protocol.
+pub fn ab_phases(
+    baseline: &Coordinator<'_>,
+    cached: &Coordinator<'_>,
+    requests: &[Request],
+    chunk: usize,
+) -> Result<AbReport> {
+    use std::sync::atomic::Ordering;
+    let snap = || {
+        (
+            cached.metrics.cache_hits.load(Ordering::Relaxed),
+            cached.metrics.cache_misses.load(Ordering::Relaxed),
+        )
+    };
+    let rate = |before: (u64, u64), after: (u64, u64)| {
+        let (h, m) = (after.0 - before.0, after.1 - before.1);
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    };
+    let (serial_s, o0) = timed_submit(baseline, requests, chunk)?;
+    let s0 = snap();
+    let (cold_s, o1) = timed_submit(cached, requests, chunk)?;
+    let s1 = snap();
+    let (warm_s, o2) = timed_submit(cached, requests, chunk)?;
+    let s2 = snap();
+    Ok(AbReport {
+        serial_s,
+        cold_s,
+        warm_s,
+        cold_hit_rate: rate(s0, s1),
+        warm_hit_rate: rate(s1, s2),
+        identical: o0 == o1 && o1 == o2,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::profiler::ProfileSpec;
+    use std::sync::atomic::Ordering;
+
+    fn fitted(dev: &str) -> (Gpu, Pm2Lat) {
+        let mut gpu = Gpu::by_name(dev).unwrap();
+        let pl = Pm2Lat::build_dtypes(&mut gpu, &ProfileSpec::quick(), &[DType::F32], false);
+        gpu.reset();
+        (gpu, pl)
+    }
 
     fn coordinator(rt: &Runtime) -> Coordinator<'_> {
         let mut c = Coordinator::new(rt);
         for dev in ["a100", "t4"] {
-            let mut gpu = Gpu::by_name(dev).unwrap();
-            let pl = Pm2Lat::build_dtypes(
-                &mut gpu,
-                &ProfileSpec::quick(),
-                &[DType::F32],
-                false,
-            );
-            gpu.reset();
+            let (gpu, pl) = fitted(dev);
             c.register_device(gpu, pl).unwrap();
         }
         c
+    }
+
+    fn engine() -> Engine {
+        let mut e = Engine::new();
+        for dev in ["a100", "t4"] {
+            let (gpu, pl) = fitted(dev);
+            e.register_device(gpu, pl).unwrap();
+        }
+        e
+    }
+
+    fn gemm_requests(n: usize, seed: u64) -> Vec<Request> {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        (0..n)
+            .map(|i| Request {
+                device: if i % 2 == 0 { "a100" } else { "t4" }.to_string(),
+                op: Op::Gemm(GemmOp::mm(
+                    rng.log_uniform_int(64, 4096) as usize,
+                    rng.log_uniform_int(64, 4096) as usize,
+                    rng.log_uniform_int(64, 8192) as usize,
+                    DType::F32,
+                )),
+                kind: PredictorKind::Pm2Lat,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn engine_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
     }
 
     #[test]
@@ -201,7 +717,7 @@ mod tests {
         let a100: f64 = out.iter().step_by(2).map(|o| o.unwrap()).sum();
         let t4: f64 = out.iter().skip(1).step_by(2).map(|o| o.unwrap()).sum();
         assert!(a100 < t4, "a100 {a100} vs t4 {t4}");
-        assert_eq!(c.metrics.requests.load(std::sync::atomic::Ordering::Relaxed), 40);
+        assert_eq!(c.metrics.requests.load(Ordering::Relaxed), 40);
     }
 
     #[test]
@@ -257,5 +773,129 @@ mod tests {
             kind: PredictorKind::Pm2Lat,
         };
         assert_eq!(c.submit(&[req]).unwrap(), vec![None]);
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let mut c = coordinator(&rt);
+        let (gpu, pl) = fitted("t4");
+        assert!(c.register_device(gpu, pl).is_err());
+        assert_eq!(c.devices().len(), 2, "failed re-registration must not clobber");
+    }
+
+    #[test]
+    fn engine_duplicate_registration_rejected() {
+        let mut e = engine();
+        let (gpu, pl) = fitted("a100");
+        assert!(e.register_device(gpu, pl).is_err());
+    }
+
+    #[test]
+    fn cache_hits_bit_identical_and_counted() {
+        let e = engine();
+        let reqs = gemm_requests(200, 31);
+        let fresh = e.submit_scalar(&reqs).unwrap();
+        assert!(fresh.iter().all(|o| o.is_some()));
+        let hits_before = e.metrics.cache_hits.load(Ordering::Relaxed);
+        let cached = e.submit_scalar(&reqs).unwrap();
+        assert_eq!(fresh, cached, "cache hits must be bit-identical");
+        let hits_after = e.metrics.cache_hits.load(Ordering::Relaxed);
+        assert_eq!(hits_after - hits_before, reqs.len() as u64, "second pass all-hit");
+    }
+
+    #[test]
+    fn parallel_and_cached_match_serial_uncached() {
+        let fast = engine(); // default threads + cache
+        let slow = engine().with_threads(1).with_cache_capacity(0);
+        let reqs = gemm_requests(300, 77);
+        let a = fast.submit_scalar(&reqs).unwrap();
+        let b = slow.submit_scalar(&reqs).unwrap();
+        assert_eq!(a, b, "parallelism and caching must not change results");
+    }
+
+    #[test]
+    fn engine_serves_concurrent_clients() {
+        let e = engine().with_threads(2);
+        let reqs = gemm_requests(40, 5);
+        let expected = e.submit_scalar(&reqs).unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..5 {
+                        assert_eq!(e.submit_scalar(&reqs).unwrap(), expected);
+                    }
+                });
+            }
+        });
+        // 1 warm-up + 4 clients × 5 batches, every request accounted for.
+        assert_eq!(e.metrics.requests.load(Ordering::Relaxed), 40 * 21);
+        assert!(e.metrics.cache_hit_rate() > 0.9);
+    }
+
+    #[test]
+    fn cache_capacity_bounds_entries() {
+        let e = engine().with_cache_capacity(64);
+        let reqs = gemm_requests(2000, 13);
+        e.submit_scalar(&reqs).unwrap();
+        assert!(e.cache().len() <= e.cache().capacity());
+        assert!(e.cache().capacity() >= 64);
+    }
+
+    #[test]
+    fn neusight_kind_unsupported_on_bare_engine() {
+        let e = engine();
+        let req = Request {
+            device: "a100".into(),
+            op: Op::Gemm(GemmOp::mm(64, 64, 64, DType::F32)),
+            kind: PredictorKind::NeuSight,
+        };
+        assert_eq!(e.submit_scalar(std::slice::from_ref(&req)).unwrap(), vec![None]);
+        assert_eq!(e.metrics.unsupported.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn trace_api_matches_scalar_trace_sum() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let c = coordinator(&rt);
+        let trace: Vec<Op> = (0..8)
+            .map(|i| Op::Gemm(GemmOp::mm(256 + 64 * i, 512, 512, DType::F32)))
+            .collect();
+        let direct: f64 = {
+            let gpu = c.gpu("a100").unwrap();
+            let pl = c.pm2lat("a100").unwrap();
+            pl.predict_trace(gpu, &trace).unwrap()
+        };
+        let req = TraceRequest {
+            device: "a100".into(),
+            trace: trace.clone(),
+            kind: PredictorKind::Pm2Lat,
+        };
+        let via = c.submit_traces(std::slice::from_ref(&req)).unwrap();
+        assert_eq!(via.len(), 1);
+        assert_eq!(via[0], Some(direct), "same ops, same order, same sum");
+        // A trace with an unsupported op answers None, not an error.
+        let bad = TraceRequest {
+            device: "t4".into(),
+            trace: vec![
+                Op::Gemm(GemmOp::mm(128, 128, 128, DType::F32)),
+                Op::Gemm(GemmOp::mm(128, 128, 128, DType::Bf16)),
+            ],
+            kind: PredictorKind::Pm2Lat,
+        };
+        assert_eq!(c.submit_traces(std::slice::from_ref(&bad)).unwrap(), vec![None]);
+    }
+
+    #[test]
+    fn mixed_workload_is_deterministic_and_mixed() {
+        let devs = vec!["a100".to_string(), "t4".to_string()];
+        let a = mixed_workload(&devs, 500, 50, 9);
+        let b = mixed_workload(&devs, 500, 50, 9);
+        assert_eq!(a.len(), 500);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.op == y.op && x.device == y.device));
+        assert!(a.iter().any(|r| matches!(r.op, Op::Gemm(_))));
+        assert!(a.iter().any(|r| matches!(r.op, Op::Util(_))));
+        assert!(a.iter().any(|r| r.device == "a100"));
+        assert!(a.iter().any(|r| r.device == "t4"));
     }
 }

@@ -7,10 +7,12 @@
 //! pm2lat experiments [--full]               # every table + figure
 //! pm2lat nas --n 1000                       # §IV-D2 speed study
 //! pm2lat partition                          # §IV-D1 case study
+//! pm2lat serve-bench --n 50000 --threads 8  # service throughput A/B
 //! ```
 
 use anyhow::{anyhow, Result};
 
+use pm2lat::coordinator::{ab_phases, build_f32_service, mixed_workload, to_batched, AbReport};
 use pm2lat::experiments::{self, Scale};
 use pm2lat::gpusim::Gpu;
 use pm2lat::models::{runner, zoo};
@@ -59,13 +61,65 @@ fn run(args: &Args) -> Result<()> {
             println!("{}", experiments::apps_exp::partition_experiment(&mut lab)?);
             Ok(())
         }
-        Some(cmd) => Err(anyhow!("unknown command `{cmd}` (try: report, layer, predict, experiments, nas, partition)")),
+        Some("serve-bench") => serve_bench(args),
+        Some(cmd) => Err(anyhow!("unknown command `{cmd}` (try: report, layer, predict, experiments, nas, partition, serve-bench)")),
         None => {
             println!("pm2lat {} — kernel-aware DNN latency prediction", pm2lat::version());
-            println!("commands: report | layer | predict | experiments | nas | partition");
+            println!("commands: report | layer | predict | experiments | nas | partition | serve-bench");
             Ok(())
         }
     }
+}
+
+/// §IV-D2 at service scale: requests/sec on a multi-device mixed workload,
+/// serial no-cache baseline vs the concurrent cache-accelerated service,
+/// for both the scalar and the batched-PJRT kinds.
+fn serve_bench(args: &Args) -> Result<()> {
+    let runtime = Runtime::open_default()?;
+    let n = args.opt_usize("n", 50_000);
+    let unique = args.opt_usize("unique", n / 12 + 1);
+    let batch = args.opt_usize("batch", 2_048);
+    let threads = args.opt_usize("threads", pm2lat::util::pool::default_threads());
+    let devices = ["a100", "t4", "l4"];
+    let dev_names: Vec<String> = devices.iter().map(|s| s.to_string()).collect();
+    let workload = mixed_workload(&dev_names, n, unique, 42);
+    println!(
+        "serve-bench: {n} requests ({unique} unique ops) over {} devices, batch {batch}",
+        devices.len()
+    );
+
+    // Baseline: the seed's serving regime — one thread, no cache — vs the
+    // concurrent, cache-accelerated service.
+    let base = build_f32_service(&runtime, 1, 0, &devices)?;
+    let fast = build_f32_service(&runtime, threads, 1 << 17, &devices)?;
+    let scalar = ab_phases(&base, &fast, &workload, batch)?;
+    let batched = ab_phases(&base, &fast, &to_batched(&workload), batch)?;
+
+    print_ab("scalar kind", n, threads, &scalar);
+    print_ab("batched (PJRT) kind", n, threads, &batched);
+    println!("metrics: {}", fast.metrics.summary());
+    if !scalar.identical || !batched.identical {
+        return Err(anyhow!("cached/parallel results diverged from uncached baseline"));
+    }
+    Ok(())
+}
+
+fn print_ab(title: &str, n: usize, threads: usize, r: &AbReport) {
+    println!("-- {title} --");
+    println!("serial, no cache      : {:>10.0} req/s", n as f64 / r.serial_s);
+    println!(
+        "cold cache, {threads} threads: {:>10.0} req/s ({:.1}x vs serial, phase hit rate {:.1}%)",
+        n as f64 / r.cold_s,
+        r.serial_s / r.cold_s,
+        r.cold_hit_rate * 100.0
+    );
+    println!(
+        "warm cache            : {:>10.0} req/s ({:.1}x vs serial, phase hit rate {:.1}%)",
+        n as f64 / r.warm_s,
+        r.serial_s / r.warm_s,
+        r.warm_hit_rate * 100.0
+    );
+    println!("cached results bit-identical to uncached: {}", r.identical);
 }
 
 fn layer(args: &Args) -> Result<()> {

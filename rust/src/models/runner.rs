@@ -24,6 +24,28 @@ pub fn run_trace_once(gpu: &mut Gpu, trace: &[Op]) -> Result<f64, ExecError> {
     Ok(total)
 }
 
+/// Predict a whole model through the prediction service (trace-level API):
+/// the coordinator batches GEMM lanes through the PJRT artifact, fans the
+/// rest across its thread pool, and memoizes repeated layers — so the
+/// runner is a *consumer of the service*, not of raw `Pm2Lat`. Returns
+/// `Ok(None)` when any op is unsupported on the device.
+pub fn predict_model(
+    coord: &crate::coordinator::Coordinator<'_>,
+    device: &str,
+    cfg: &TransformerConfig,
+    batch: usize,
+    seq: usize,
+) -> anyhow::Result<Option<f64>> {
+    use crate::coordinator::{PredictorKind, TraceRequest};
+    let req = TraceRequest {
+        device: device.to_string(),
+        trace: cfg.trace(batch, seq),
+        kind: PredictorKind::Pm2LatBatched,
+    };
+    let mut out = coord.submit_traces(std::slice::from_ref(&req))?;
+    Ok(out.pop().unwrap_or(None))
+}
+
 /// Paper protocol (§IV-B): warm-up ×5, then 25 measured repetitions.
 pub fn run_model(
     gpu: &mut Gpu,

@@ -119,6 +119,23 @@ impl<'rt> BatchPredictor<'rt> {
         }
         Ok(out)
     }
+
+    /// Predict arbitrarily many GEMMs, internally chunking to the artifact
+    /// batch size (`ops.len().div_ceil(self.batch)` PJRT launches).
+    /// Results in input order; the service's batched path routes through
+    /// this so callers never handle lane-count limits themselves.
+    pub fn predict_all(
+        &self,
+        gpu: &Gpu,
+        table: &GemmTable,
+        ops: &[GemmOp],
+    ) -> Result<Vec<Option<f64>>> {
+        let mut out = Vec::with_capacity(ops.len());
+        for chunk in ops.chunks(self.batch) {
+            out.extend(self.predict(gpu, table, chunk)?);
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -154,6 +171,34 @@ mod tests {
                 (got - want).abs() / want < 2e-3,
                 "op {op:?}: batched {got} scalar {want}"
             );
+        }
+    }
+
+    #[test]
+    fn predict_all_chunks_match_scalar() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let mut gpu = Gpu::by_name("a100").unwrap();
+        let table = gemm_model::collect(&mut gpu, DType::F32, &ProfileSpec::quick()).unwrap();
+        gpu.reset();
+        // Batch 1024 artifact, 2500 ops → 3 chunks.
+        let bp = BatchPredictor::new(&rt, &table, 1024).unwrap();
+        let mut rng = crate::util::prng::Rng::new(15);
+        let ops: Vec<GemmOp> = (0..2500)
+            .map(|_| {
+                GemmOp::mm(
+                    rng.log_uniform_int(64, 8192) as usize,
+                    rng.log_uniform_int(64, 8192) as usize,
+                    rng.log_uniform_int(64, 8192) as usize,
+                    DType::F32,
+                )
+            })
+            .collect();
+        let all = bp.predict_all(&gpu, &table, &ops).unwrap();
+        assert_eq!(all.len(), ops.len());
+        for (op, got) in ops.iter().zip(&all).step_by(97) {
+            let want = table.predict(&gpu, op).unwrap();
+            let got = got.expect("valid op");
+            assert!((got - want).abs() / want < 2e-3, "op {op:?}: {got} vs {want}");
         }
     }
 

@@ -65,11 +65,13 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
-    let threads = threads.max(1);
     let chunk = chunk.max(1);
     if threads <= 1 || items.len() <= chunk {
         return items.iter().map(&f).collect();
     }
+    // Never spawn more workers than there are chunks — small batches on a
+    // many-core host would otherwise pay thread-creation for idle workers.
+    let threads = threads.min(items.len().div_ceil(chunk));
     let next = AtomicUsize::new(0);
     let results: Vec<Mutex<Vec<R>>> = (0..items.len().div_ceil(chunk))
         .map(|_| Mutex::new(Vec::new()))
