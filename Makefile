@@ -3,18 +3,31 @@
 #   make artifacts   — AOT-lower the L1/L2 Pallas+JAX kernels to HLO text
 #                      (required once before any Rust target that opens
 #                      the PJRT runtime).
-#   make ci          — tier-1 verification in one command: formatting,
-#                      clippy as errors, release build, full test suite.
+#   make lint        — formatting + clippy-as-errors; skips gracefully in
+#                      toolchain-less containers so CI plumbing still runs.
+#   make ci          — tier-1 verification in one command: lint, release
+#                      build, full test suite.
 
 PYTHON ?= python3
 
-.PHONY: artifacts ci fmt clippy build test bench-fast
+.PHONY: artifacts ci lint fmt clippy build test bench-fast
 
 # aot.py uses package-relative imports — must run as a module from python/.
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
 
-ci: fmt clippy test
+ci: lint test
+
+# Graceful no-toolchain path: some dev containers ship without cargo, and
+# lint is the one stage that may safely no-op there (skipping style checks
+# loses nothing; skipping build/test would fake a green CI). `make ci`
+# still hard-fails without cargo at the build/test stages, by design.
+lint:
+	@if command -v cargo >/dev/null 2>&1; then \
+		cargo fmt --check && cargo clippy --all-targets -- -D warnings; \
+	else \
+		echo "lint: cargo not found — skipping (toolchain-less container)"; \
+	fi
 
 fmt:
 	cargo fmt --check

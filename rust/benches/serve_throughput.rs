@@ -2,16 +2,18 @@
 //! ROADMAP's north star scales toward. Runs the same `ab_phases` protocol
 //! as `pm2lat serve-bench` (same workload parameters and seed, so the two
 //! harnesses measure identically): serial no-cache baseline vs cold- and
-//! warm-cache concurrent service, for the scalar and batched-PJRT kinds,
-//! plus the trace-level whole-model API.
+//! warm-cache concurrent service, across the F32 scalar and batched-PJRT
+//! kinds, the BF16 tensor-core lane, and the NeuSight learned-baseline
+//! lane — plus the trace- and graph-level whole-model APIs.
 
 use std::time::Instant;
 
 use pm2lat::coordinator::{
-    ab_phases, build_f32_service, mixed_workload, to_batched, AbReport, PredictorKind,
-    TraceRequest,
+    ab_phases, build_service, mixed_workload, mixed_workload_dtyped, quick_neusight,
+    timed_submit, to_batched, to_kind, AbReport, GraphRequest, PredictorKind, TraceRequest,
 };
 use pm2lat::models::zoo;
+use pm2lat::ops::DType;
 use pm2lat::runtime::Runtime;
 use pm2lat::util::pool;
 
@@ -42,16 +44,37 @@ fn main() {
     let workload = mixed_workload(&dev_names, n, n / 12 + 1, 42);
 
     println!("\n=== prediction-service throughput ({n} requests, 3 devices) ===");
-    let serial = build_f32_service(&rt, 1, 0, &devices).unwrap();
-    let coord = build_f32_service(&rt, pool::default_threads(), 1 << 17, &devices).unwrap();
+    let dtypes = [DType::F32, DType::Bf16];
+    let serial = build_service(&rt, 1, 0, &devices, &dtypes).unwrap();
+    let mut coord =
+        build_service(&rt, pool::default_threads(), 1 << 17, &devices, &dtypes).unwrap();
+    coord.register_neusight(quick_neusight(&rt, DType::F32).unwrap());
 
     let scalar = ab_phases(&serial, &coord, &workload, 2048).unwrap();
     assert!(scalar.identical, "scalar cached results must be bit-identical to uncached");
-    print_ab("scalar kind", n, &scalar);
+    print_ab("scalar kind (f32)", n, &scalar);
 
     let batched = ab_phases(&serial, &coord, &to_batched(&workload), 2048).unwrap();
     assert!(batched.identical, "batched cached results must be bit-identical to uncached");
-    print_ab("batched (PJRT) kind", n, &batched);
+    print_ab("batched (PJRT) kind (f32)", n, &batched);
+
+    // BF16 lane: the tensor-core path (T4 answers None deterministically;
+    // BF16 GEMMs spill from the PJRT artifact to the scalar fan-out).
+    // Seed 42 mirrors the F32 workload shape for shape.
+    let bf16_workload = mixed_workload_dtyped(&dev_names, n, n / 12 + 1, 42, DType::Bf16);
+    let bf16 = ab_phases(&serial, &coord, &bf16_workload, 2048).unwrap();
+    assert!(bf16.identical, "bf16 cached results must be bit-identical to uncached");
+    print_ab("bf16 scalar kind", n, &bf16);
+
+    // NeuSight lane: learned-baseline MLP through PJRT. Not memoized, so
+    // the property of record is repeat-pass determinism + throughput.
+    let ns_reqs = to_kind(&workload, PredictorKind::NeuSight);
+    let (t1, o1) = timed_submit(&coord, &ns_reqs, 2048).unwrap();
+    let (t2, o2) = timed_submit(&coord, &ns_reqs, 2048).unwrap();
+    assert_eq!(o1, o2, "neusight lane must be deterministic across passes");
+    println!("-- neusight kind (f32) --");
+    println!("pass 1          : {:>10.0} req/s", n as f64 / t1);
+    println!("pass 2          : {:>10.0} req/s", n as f64 / t2);
 
     // Trace-level API: whole models per request through the batched path.
     let traces: Vec<TraceRequest> = (0..24)
@@ -69,6 +92,26 @@ fn main() {
         traces.len() as f64 / dt,
         out.iter().flatten().count(),
         traces.len()
+    );
+
+    // Graph-level API: the same models as dependency graphs — repeated
+    // blocks dedup within the batch and hit the cache across requests.
+    let graphs: Vec<GraphRequest> = (0..24)
+        .map(|i| GraphRequest {
+            device: dev_names[i % dev_names.len()].clone(),
+            graph: zoo::gpt2_large().graph(1 + i % 4, 128),
+            kind: PredictorKind::Pm2LatBatched,
+            streams: 1 + i % 4,
+        })
+        .collect();
+    let t0 = Instant::now();
+    let out = coord.submit_graphs(&graphs).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "graph API       : {:>10.1} models/s ({} of {} supported)",
+        graphs.len() as f64 / dt,
+        out.iter().flatten().count(),
+        graphs.len()
     );
     println!("{}", coord.metrics.summary());
 }

@@ -49,6 +49,10 @@ pub struct Metrics {
     pub unsupported: AtomicU64,
     pub cache_hits: AtomicU64,
     pub cache_misses: AtomicU64,
+    /// Lanes answered by within-batch dedup on the batched GEMM path:
+    /// identical `(device, op)` misses in one submission launch once and
+    /// fan the result out.
+    pub batched_dedup: AtomicU64,
     /// Batched-predictor builds that failed at device registration (the
     /// device degrades to the scalar path).
     pub batcher_errors: AtomicU64,
@@ -65,6 +69,7 @@ impl Metrics {
             unsupported: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
+            batched_dedup: AtomicU64::new(0),
             batcher_errors: AtomicU64::new(0),
             service_ns_sum: AtomicU64::new(0),
             reservoir: Mutex::new(Reservoir::new()),
@@ -94,6 +99,10 @@ impl Metrics {
 
     pub fn record_batcher_error(&self) {
         self.batcher_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_dedup(&self, n: usize) {
+        self.batched_dedup.fetch_add(n as u64, Ordering::Relaxed);
     }
 
     /// Mean service time per *batch* in microseconds (exact).
@@ -147,7 +156,7 @@ impl Metrics {
         format!(
             "requests={} batches={} pjrt_calls={} unsupported={} \
              mean_batch={:.1}µs mean_req={:.2}µs p50_batch={:.1}µs p99_batch={:.1}µs \
-             cache_hit_rate={:.1}% batcher_errors={}",
+             cache_hit_rate={:.1}% batched_dedup={} batcher_errors={}",
             self.requests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.pjrt_calls.load(Ordering::Relaxed),
@@ -157,6 +166,7 @@ impl Metrics {
             p50,
             p99,
             self.cache_hit_rate() * 100.0,
+            self.batched_dedup.load(Ordering::Relaxed),
             self.batcher_errors.load(Ordering::Relaxed),
         )
     }
@@ -226,10 +236,12 @@ mod tests {
         m.record_batch(10, 1, Duration::from_micros(100));
         m.record_cache(true);
         m.record_batcher_error();
+        m.record_dedup(3);
         let s = m.summary();
         assert!(s.contains("p50_batch="), "{s}");
         assert!(s.contains("p99_batch="), "{s}");
         assert!(s.contains("cache_hit_rate=100.0%"), "{s}");
+        assert!(s.contains("batched_dedup=3"), "{s}");
         assert!(s.contains("batcher_errors=1"), "{s}");
     }
 }

@@ -21,15 +21,22 @@
 //!   shared cache, while non-batchable lanes spill into the engine's
 //!   parallel scalar fan-out.
 //!
-//! [`Metrics`] tracks request/batch/PJRT/cache counters plus a *bounded*
-//! service-time reservoir: p50/p99 come from at most
+//! [`Metrics`] tracks request/batch/PJRT/cache/dedup counters plus a
+//! *bounded* service-time reservoir: p50/p99 come from at most
 //! [`RESERVOIR_CAP`] retained samples (Vitter's algorithm R), so metrics
-//! memory is O(1) under sustained traffic. The trace-level API
-//! ([`Coordinator::submit_traces`]) serves whole-model requests — the NAS
-//! preprocessing application (§IV-D2) and the model runner consume the
-//! service through it rather than driving raw `Pm2Lat`. `pm2lat
+//! memory is O(1) under sustained traffic. Identical `(device, op)` cache
+//! misses within one batched submission are deduplicated — one PJRT lane,
+//! fanned out to every requester. Two whole-model APIs sit on top:
+//! the trace-level [`Coordinator::submit_traces`] (sequential sum) and the
+//! graph-level [`Coordinator::submit_graphs`], which accepts
+//! [`crate::graph::ModelGraph`] requests, batches GEMM lanes across graph
+//! nodes, caches at subgraph granularity (repeated transformer blocks hit
+//! per-node), and aggregates latency as the stream-capped critical path.
+//! The NAS preprocessing application (§IV-D2) and the model runner consume
+//! the service through these rather than driving raw `Pm2Lat`. `pm2lat
 //! serve-bench` and `benches/serve_throughput.rs` measure requests/sec
-//! against the serial no-cache baseline.
+//! against the serial no-cache baseline, across F32 scalar/batched, BF16
+//! and NeuSight lanes.
 
 pub mod cache;
 pub mod metrics;
@@ -38,6 +45,7 @@ pub mod service;
 pub use cache::PredictionCache;
 pub use metrics::{Metrics, RESERVOIR_CAP};
 pub use service::{
-    ab_phases, build_f32_service, mixed_workload, timed_submit, to_batched, AbReport,
-    Coordinator, Engine, PredictorKind, Request, TraceRequest, DEFAULT_CACHE_CAPACITY,
+    ab_phases, build_f32_service, build_service, mixed_workload, mixed_workload_dtyped,
+    quick_neusight, timed_submit, to_batched, to_kind, AbReport, Coordinator, Engine,
+    GraphRequest, PredictorKind, Request, TraceRequest, DEFAULT_CACHE_CAPACITY,
 };

@@ -23,6 +23,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::gpusim::Gpu;
+use crate::graph::ModelGraph;
 use crate::neusight::NeuSight;
 use crate::ops::{DType, GemmOp, Op, UtilKind, UtilOp};
 use crate::pm2lat::batch::BatchPredictor;
@@ -62,6 +63,20 @@ pub struct TraceRequest {
     pub device: String,
     pub trace: Vec<Op>,
     pub kind: PredictorKind,
+}
+
+/// A whole-model graph prediction request: per-node predictions are
+/// aggregated as the `streams`-bounded critical path (1 = the sequential
+/// sum of [`TraceRequest`]). Node ops ride the same per-op cache as every
+/// other lane, so structurally repeated subgraphs (transformer blocks)
+/// hit at subgraph granularity, and GEMM lanes from all nodes of all
+/// graphs in one call share batched PJRT launches.
+#[derive(Clone, Debug)]
+pub struct GraphRequest {
+    pub device: String,
+    pub graph: ModelGraph,
+    pub kind: PredictorKind,
+    pub streams: usize,
 }
 
 /// A request after device interning: (device id, kind, op).
@@ -311,6 +326,25 @@ impl<'rt> Coordinator<'rt> {
         self.neusight.insert(ns.dtype, ns);
     }
 
+    /// Intern a device name or reject the whole batch — shared by every
+    /// submission API so routing semantics cannot drift between them.
+    fn resolve_device(&self, name: &str) -> Result<usize> {
+        self.engine
+            .device_id(name)
+            .ok_or_else(|| anyhow!("unknown device {name}"))
+    }
+
+    /// Dispatch one resolved batch and record service metrics — the
+    /// shared back half of [`Coordinator::submit`],
+    /// [`Coordinator::submit_traces`] and [`Coordinator::submit_graphs`].
+    fn dispatch_recorded(&self, t0: Instant, resolved: &[Resolved]) -> Result<Vec<Option<f64>>> {
+        let (out, pjrt_calls) = self.submit_resolved(resolved)?;
+        self.engine
+            .metrics
+            .record_batch(resolved.len(), pjrt_calls, t0.elapsed());
+        Ok(out)
+    }
+
     /// Serve a batch of requests; responses in request order. Scalar
     /// analytical lanes fan out across the engine's thread pool; PJRT-
     /// backed lanes are grouped per (device, kind) and executed on the
@@ -319,15 +353,9 @@ impl<'rt> Coordinator<'rt> {
         let t0 = Instant::now();
         let mut resolved: Vec<Resolved> = Vec::with_capacity(requests.len());
         for r in requests {
-            let dev = self
-                .engine
-                .device_id(&r.device)
-                .ok_or_else(|| anyhow!("unknown device {}", r.device))?;
-            resolved.push((dev, r.kind, r.op));
+            resolved.push((self.resolve_device(&r.device)?, r.kind, r.op));
         }
-        let (out, pjrt_calls) = self.submit_resolved(&resolved)?;
-        self.engine.metrics.record_batch(requests.len(), pjrt_calls, t0.elapsed());
-        Ok(out)
+        self.dispatch_recorded(t0, &resolved)
     }
 
     /// Trace-level API: one response per model trace — the sequential-
@@ -339,18 +367,12 @@ impl<'rt> Coordinator<'rt> {
         let mut resolved: Vec<Resolved> = Vec::new();
         let mut spans: Vec<(usize, usize)> = Vec::with_capacity(traces.len());
         for t in traces {
-            let dev = self
-                .engine
-                .device_id(&t.device)
-                .ok_or_else(|| anyhow!("unknown device {}", t.device))?;
+            let dev = self.resolve_device(&t.device)?;
             let start = resolved.len();
             resolved.extend(t.trace.iter().map(|op| (dev, t.kind, *op)));
             spans.push((start, resolved.len()));
         }
-        let (per_op, pjrt_calls) = self.submit_resolved(&resolved)?;
-        self.engine
-            .metrics
-            .record_batch(resolved.len(), pjrt_calls, t0.elapsed());
+        let per_op = self.dispatch_recorded(t0, &resolved)?;
         Ok(spans
             .into_iter()
             .map(|(a, b)| {
@@ -359,6 +381,42 @@ impl<'rt> Coordinator<'rt> {
                     total += (*v)?;
                 }
                 Some(total)
+            })
+            .collect())
+    }
+
+    /// Graph-level API: one response per model graph — the makespan of
+    /// the per-request `streams`-bounded schedule over per-node
+    /// predictions, or `None` when any node is unsupported on the device.
+    /// All node ops across all graphs join one resolved batch, so GEMM
+    /// lanes batch across graph nodes and identical nodes (repeated
+    /// transformer blocks) are served from the cache / deduped within the
+    /// batch. With `streams = 1` the response is bit-identical to
+    /// [`Coordinator::submit_traces`] over the lowered trace. Note that
+    /// serving *fused* graphs requires the device's `Pm2Lat` to carry
+    /// custom-kernel profiles (`Pm2Lat::build` / `build_dtypes` with
+    /// custom collection enabled); otherwise fused-attention nodes answer
+    /// `None`.
+    pub fn submit_graphs(&self, graphs: &[GraphRequest]) -> Result<Vec<Option<f64>>> {
+        let t0 = Instant::now();
+        let mut resolved: Vec<Resolved> = Vec::new();
+        let mut spans: Vec<(usize, usize)> = Vec::with_capacity(graphs.len());
+        for gr in graphs {
+            let dev = self.resolve_device(&gr.device)?;
+            let start = resolved.len();
+            resolved.extend(gr.graph.nodes().iter().map(|n| (dev, gr.kind, n.op)));
+            spans.push((start, resolved.len()));
+        }
+        let per_op = self.dispatch_recorded(t0, &resolved)?;
+        Ok(graphs
+            .iter()
+            .zip(spans)
+            .map(|(gr, (a, b))| {
+                let mut dur = Vec::with_capacity(b - a);
+                for v in &per_op[a..b] {
+                    dur.push((*v)?);
+                }
+                Some(crate::graph::schedule::schedule(&gr.graph, gr.streams, &dur).makespan_s)
             })
             .collect())
     }
@@ -407,8 +465,11 @@ impl<'rt> Coordinator<'rt> {
     }
 
     /// Batched PM2Lat group for one device: cache hits answer immediately,
-    /// misses are evaluated in as few PJRT launches as possible and written
-    /// back; non-GEMM / non-F32 lanes spill to the scalar fan-out.
+    /// misses are deduplicated within the batch (identical `(device, op)`
+    /// misses launch once and fan the result out — predictions are
+    /// deterministic, so the fan-out is exact), evaluated in as few PJRT
+    /// launches as possible and written back; non-GEMM / non-F32 lanes
+    /// spill to the scalar fan-out.
     fn run_batched(
         &self,
         dev: usize,
@@ -418,10 +479,14 @@ impl<'rt> Coordinator<'rt> {
         scalar: &mut Vec<(usize, Op)>,
         scalar_slots: &mut Vec<usize>,
     ) -> Result<usize> {
+        use std::collections::hash_map::Entry;
         let entry = &self.engine.devices[dev];
         let bp = self.batchers[dev].as_ref();
-        let mut miss_slots: Vec<usize> = Vec::new();
+        // One entry per *unique* missed op; each fans out to every
+        // requesting slot.
         let mut miss_ops: Vec<GemmOp> = Vec::new();
+        let mut miss_slots: Vec<Vec<usize>> = Vec::new();
+        let mut miss_index: HashMap<GemmOp, usize> = HashMap::new();
         let cache_on = self.engine.cache.enabled();
         for &i in idxs {
             let op = &reqs[i].2;
@@ -443,8 +508,17 @@ impl<'rt> Coordinator<'rt> {
                 }
                 self.engine.metrics.record_cache(false);
             }
-            miss_slots.push(i);
-            miss_ops.push(gemm);
+            match miss_index.entry(gemm) {
+                Entry::Occupied(e) => {
+                    miss_slots[*e.get()].push(i);
+                    self.engine.metrics.record_dedup(1);
+                }
+                Entry::Vacant(e) => {
+                    e.insert(miss_ops.len());
+                    miss_slots.push(vec![i]);
+                    miss_ops.push(gemm);
+                }
+            }
         }
         if miss_ops.is_empty() {
             return Ok(0);
@@ -455,7 +529,7 @@ impl<'rt> Coordinator<'rt> {
             .gemm_table(DType::F32)
             .expect("batcher implies an F32 table");
         let res = bp.predict_all(&entry.gpu, table, &miss_ops)?;
-        for ((slot, g), v) in miss_slots.iter().zip(&miss_ops).zip(res) {
+        for ((slots, g), v) in miss_slots.iter().zip(&miss_ops).zip(res) {
             if let Some(val) = v {
                 self.engine.cache.insert(
                     dev as u32,
@@ -464,7 +538,9 @@ impl<'rt> Coordinator<'rt> {
                     val,
                 );
             }
-            out[*slot] = v;
+            for &slot in slots {
+                out[slot] = v;
+            }
         }
         Ok(miss_ops.len().div_ceil(bp.batch))
     }
@@ -500,11 +576,19 @@ impl<'rt> Coordinator<'rt> {
     }
 }
 
-/// Deterministic mixed workload for service benchmarking: `unique` distinct
-/// F32 ops (≈70% GEMM, 30% utility) spread over `devices`, then sampled
-/// with repetition to `n` requests — a NAS-like distribution where hot
-/// configurations recur and the cache can earn its keep.
-pub fn mixed_workload(devices: &[String], n: usize, unique: usize, seed: u64) -> Vec<Request> {
+/// Deterministic mixed workload in an arbitrary dtype: `unique` distinct
+/// ops (≈70% GEMM, 30% utility) spread over `devices`, then sampled with
+/// repetition to `n` requests — a NAS-like distribution where hot
+/// configurations recur and the cache can earn its keep. The RNG stream
+/// is dtype-independent, so the BF16 workload mirrors the F32 one shape
+/// for shape.
+pub fn mixed_workload_dtyped(
+    devices: &[String],
+    n: usize,
+    unique: usize,
+    seed: u64,
+    dtype: DType,
+) -> Vec<Request> {
     let mut rng = crate::util::prng::Rng::new(seed);
     let unique = unique.max(1);
     let ops: Vec<Op> = (0..unique)
@@ -514,14 +598,14 @@ pub fn mixed_workload(devices: &[String], n: usize, unique: usize, seed: u64) ->
                     rng.log_uniform_int(64, 4096) as usize,
                     rng.log_uniform_int(64, 4096) as usize,
                     rng.log_uniform_int(64, 8192) as usize,
-                    DType::F32,
+                    dtype,
                 ))
             } else {
                 Op::Util(UtilOp::new(
                     *rng.choice(UtilKind::all()),
                     rng.log_uniform_int(64, 8192) as usize,
                     rng.log_uniform_int(64, 8192) as usize,
-                    DType::F32,
+                    dtype,
                 ))
             }
         })
@@ -535,15 +619,23 @@ pub fn mixed_workload(devices: &[String], n: usize, unique: usize, seed: u64) ->
         .collect()
 }
 
-/// Build an F32-only service over named devices (quick profile fit —
-/// serving benchmarks measure dispatch overhead, not fit quality).
-/// Shared by `pm2lat serve-bench` and `benches/serve_throughput.rs` so
-/// the two A/B harnesses cannot drift apart.
-pub fn build_f32_service<'rt>(
+/// The historical F32 mixed workload (same RNG stream as ever).
+pub fn mixed_workload(devices: &[String], n: usize, unique: usize, seed: u64) -> Vec<Request> {
+    mixed_workload_dtyped(devices, n, unique, seed, DType::F32)
+}
+
+/// Build a service over named devices with PM2Lat fitted for the given
+/// dtypes (quick profile fit — serving benchmarks measure dispatch
+/// overhead, not fit quality). Devices that lack a dtype simply skip that
+/// table and answer `None` for its lanes. Shared by `pm2lat serve-bench`
+/// and `benches/serve_throughput.rs` so the two A/B harnesses cannot
+/// drift apart.
+pub fn build_service<'rt>(
     runtime: &'rt Runtime,
     threads: usize,
     cache_capacity: usize,
     devices: &[&str],
+    dtypes: &[DType],
 ) -> Result<Coordinator<'rt>> {
     let mut c = Coordinator::new(runtime)
         .with_threads(threads)
@@ -554,13 +646,38 @@ pub fn build_f32_service<'rt>(
         let pl = crate::pm2lat::Pm2Lat::build_dtypes(
             &mut gpu,
             &crate::profiler::ProfileSpec::quick(),
-            &[DType::F32],
+            dtypes,
             false,
         );
         gpu.reset();
         c.register_device(gpu, pl)?;
     }
     Ok(c)
+}
+
+/// Build an F32-only service over named devices.
+pub fn build_f32_service<'rt>(
+    runtime: &'rt Runtime,
+    threads: usize,
+    cache_capacity: usize,
+    devices: &[&str],
+) -> Result<Coordinator<'rt>> {
+    build_service(runtime, threads, cache_capacity, devices, &[DType::F32])
+}
+
+/// Train a small NeuSight baseline over every simulated device — enough
+/// signal for serving benchmarks (which measure dispatch overhead, not
+/// fit quality). Deterministic for a fixed dtype.
+pub fn quick_neusight(runtime: &Runtime, dtype: DType) -> Result<NeuSight<'_>> {
+    let mut gpus: Vec<Gpu> =
+        crate::gpusim::all_devices().into_iter().map(Gpu::new).collect();
+    NeuSight::train_on(
+        runtime,
+        &mut gpus,
+        dtype,
+        crate::neusight::TrainConfig { per_device: 40, epochs: 10, lr: 3e-3, seed: 4 },
+        &crate::profiler::ProfileSpec::quick(),
+    )
 }
 
 /// Submit `requests` in `chunk`-sized service batches, timing the whole
@@ -579,16 +696,17 @@ pub fn timed_submit(
     Ok((t0.elapsed().as_secs_f64(), out))
 }
 
-/// Re-kind a workload onto the batched PJRT path.
-pub fn to_batched(requests: &[Request]) -> Vec<Request> {
+/// Re-kind a workload onto another predictor lane.
+pub fn to_kind(requests: &[Request], kind: PredictorKind) -> Vec<Request> {
     requests
         .iter()
-        .map(|r| Request {
-            device: r.device.clone(),
-            op: r.op,
-            kind: PredictorKind::Pm2LatBatched,
-        })
+        .map(|r| Request { device: r.device.clone(), op: r.op, kind })
         .collect()
+}
+
+/// Re-kind a workload onto the batched PJRT path.
+pub fn to_batched(requests: &[Request]) -> Vec<Request> {
+    to_kind(requests, PredictorKind::Pm2LatBatched)
 }
 
 /// One serial-baseline vs cold-cache vs warm-cache A/B measurement.
@@ -884,6 +1002,162 @@ mod tests {
             kind: PredictorKind::Pm2Lat,
         };
         assert_eq!(c.submit_traces(std::slice::from_ref(&bad)).unwrap(), vec![None]);
+    }
+
+    #[test]
+    fn graph_api_matches_trace_api_with_one_stream() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let c = coordinator(&rt);
+        let trace: Vec<Op> = (0..8)
+            .map(|i| Op::Gemm(GemmOp::mm(256 + 64 * i, 512, 512, DType::F32)))
+            .collect();
+        for kind in [PredictorKind::Pm2Lat, PredictorKind::Pm2LatBatched] {
+            let via_trace = c
+                .submit_traces(&[TraceRequest {
+                    device: "a100".into(),
+                    trace: trace.clone(),
+                    kind,
+                }])
+                .unwrap();
+            let via_graph = c
+                .submit_graphs(&[GraphRequest {
+                    device: "a100".into(),
+                    graph: ModelGraph::from_trace(&trace),
+                    kind,
+                    streams: 1,
+                }])
+                .unwrap();
+            assert_eq!(via_graph, via_trace, "kind {kind:?}: same ops, same sum");
+        }
+        // Unknown devices are errors; unsupported lanes answer None.
+        let bad = GraphRequest {
+            device: "h100".into(),
+            graph: ModelGraph::from_trace(&trace),
+            kind: PredictorKind::Pm2Lat,
+            streams: 1,
+        };
+        assert!(c.submit_graphs(std::slice::from_ref(&bad)).is_err());
+        let none = GraphRequest {
+            device: "t4".into(),
+            graph: ModelGraph::from_trace(&[Op::Gemm(GemmOp::mm(64, 64, 64, DType::Bf16))]),
+            kind: PredictorKind::Pm2Lat,
+            streams: 1,
+        };
+        assert_eq!(c.submit_graphs(std::slice::from_ref(&none)).unwrap(), vec![None]);
+    }
+
+    #[test]
+    fn batched_dedup_launches_identical_misses_once() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let c = coordinator(&rt);
+        let op = Op::Gemm(GemmOp::mm(1024, 1024, 1024, DType::F32));
+        let reqs: Vec<Request> = (0..50)
+            .map(|_| Request {
+                device: "a100".into(),
+                op,
+                kind: PredictorKind::Pm2LatBatched,
+            })
+            .collect();
+        let out = c.submit(&reqs).unwrap();
+        let v = out[0].expect("supported op");
+        assert!(out.iter().all(|o| *o == Some(v)), "fan-out is exact");
+        assert_eq!(c.metrics.batched_dedup.load(Ordering::Relaxed), 49);
+        assert_eq!(c.metrics.pjrt_calls.load(Ordering::Relaxed), 1, "one launch");
+        // Dedup without a cache is still exact (pure determinism).
+        let mut nc = Coordinator::new(&rt).with_cache_capacity(0);
+        let (gpu, pl) = fitted("a100");
+        nc.register_device(gpu, pl).unwrap();
+        let out2 = nc.submit(&reqs).unwrap();
+        assert_eq!(out, out2);
+    }
+
+    #[test]
+    fn submit_graphs_round_trips_model_blocks_through_the_cache() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let c = coordinator(&rt);
+        let cfg = crate::models::zoo::gpt2_large();
+        let req = GraphRequest {
+            device: "a100".into(),
+            graph: cfg.graph(1, 64),
+            kind: PredictorKind::Pm2LatBatched,
+            streams: 1,
+        };
+        let first = c.submit_graphs(std::slice::from_ref(&req)).unwrap();
+        assert!(first[0].is_some());
+        // 36 structurally identical blocks in one call: the batched path
+        // dedups repeated GEMM nodes within the batch.
+        assert!(
+            c.metrics.batched_dedup.load(Ordering::Relaxed) > 100,
+            "repeated blocks must dedup ({} lanes saved)",
+            c.metrics.batched_dedup.load(Ordering::Relaxed)
+        );
+        let hits_before = c.metrics.cache_hits.load(Ordering::Relaxed);
+        let second = c.submit_graphs(std::slice::from_ref(&req)).unwrap();
+        assert_eq!(first, second, "cache hits are bit-identical");
+        let gemm_nodes = req
+            .graph
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.op, Op::Gemm(_)))
+            .count();
+        let hits = c.metrics.cache_hits.load(Ordering::Relaxed) - hits_before;
+        assert!(
+            hits >= gemm_nodes as u64,
+            "repeated blocks must hit the cache ({hits} hits, {gemm_nodes} GEMM nodes)"
+        );
+    }
+
+    #[test]
+    fn fused_graph_round_trips_through_submit_graphs_with_cache_hits() {
+        use crate::graph::{AttentionFusion, Pass, PassCtx};
+        let rt = Runtime::open_default().expect("make artifacts");
+        let mut c = Coordinator::new(&rt);
+        // Fused attention nodes are priced by the custom-kernel profile,
+        // so the registered Pm2Lat must be built with custom collection.
+        let mut gpu = Gpu::by_name("a100").unwrap();
+        let pl = Pm2Lat::build_dtypes(&mut gpu, &ProfileSpec::quick(), &[DType::F32], true);
+        gpu.reset();
+        c.register_device(gpu, pl).unwrap();
+
+        let cfg = crate::models::zoo::gpt2_large();
+        let mut g = cfg.graph(1, 64);
+        let dev = crate::gpusim::device_by_name("a100").unwrap();
+        let rewrites = AttentionFusion::default().run(&mut g, &PassCtx::for_device(&dev));
+        assert_eq!(rewrites, cfg.layers, "one fused subgraph per transformer block");
+
+        let n_nodes = g.len();
+        let req = GraphRequest {
+            device: "a100".into(),
+            graph: g,
+            kind: PredictorKind::Pm2LatBatched,
+            streams: 1,
+        };
+        let first = c.submit_graphs(std::slice::from_ref(&req)).unwrap();
+        assert!(first[0].is_some(), "fused kernels priced via the custom profile");
+        let hits_before = c.metrics.cache_hits.load(Ordering::Relaxed);
+        let second = c.submit_graphs(std::slice::from_ref(&req)).unwrap();
+        assert_eq!(first, second, "cached round trip is bit-identical");
+        let hits = c.metrics.cache_hits.load(Ordering::Relaxed) - hits_before;
+        assert!(
+            hits >= n_nodes as u64,
+            "every node (incl. repeated fused blocks) must hit: {hits} of {n_nodes}"
+        );
+    }
+
+    #[test]
+    fn graph_streams_shorten_branchy_models() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let c = coordinator(&rt);
+        let cfg = crate::models::zoo::flan_t5_base(); // enc–dec branches
+        let mk = |streams| GraphRequest {
+            device: "a100".into(),
+            graph: cfg.graph(1, 64),
+            kind: PredictorKind::Pm2Lat,
+            streams,
+        };
+        let out = c.submit_graphs(&[mk(1), mk(4)]).unwrap();
+        let (one, four) = (out[0].unwrap(), out[1].unwrap());
+        assert!(four < one, "4 streams {four} vs sequential {one}");
     }
 
     #[test]

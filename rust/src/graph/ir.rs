@@ -1,0 +1,316 @@
+//! The typed model-graph IR: nodes carry an [`Op`] plus explicit data
+//! dependencies, and every graph lowers losslessly to a topologically
+//! ordered `Vec<Op>` — the flat-trace view all pre-graph consumers keep
+//! using. Graphs are append-only DAGs by construction: a node may only
+//! reference already-inserted nodes, so insertion order is always a valid
+//! topological order and [`ModelGraph::lower`] reproduces it exactly.
+//! That invariant is what makes the `streams = 1` graph path
+//! bit-identical to the legacy sequential-trace path.
+
+use crate::ops::{CustomOp, Op};
+
+/// Index of a node within one [`ModelGraph`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+impl NodeId {
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// One graph node: the op and the producers it consumes.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+}
+
+/// Logical output-tensor shape of an op (batch × rows × cols).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TensorShape {
+    pub batch: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl TensorShape {
+    pub fn elems(&self) -> usize {
+        self.batch * self.rows * self.cols
+    }
+}
+
+/// Output shape metadata derived from the op itself — the vocabulary in
+/// `ops.rs` fully determines it, so graphs never store shapes redundantly.
+pub fn output_shape(op: &Op) -> TensorShape {
+    match *op {
+        Op::Gemm(g) => TensorShape { batch: g.batch, rows: g.m, cols: g.n },
+        Op::Util(u) => TensorShape { batch: 1, rows: u.rows, cols: u.cols },
+        Op::Custom(c) => match c {
+            CustomOp::TritonMM { m, n, .. } => TensorShape { batch: 1, rows: m, cols: n },
+            CustomOp::TritonVec { elems, .. } => {
+                TensorShape { batch: 1, rows: 1, cols: elems }
+            }
+            CustomOp::FlashAttn { batch, heads, seq, head_dim, .. }
+            | CustomOp::CutlassAttn { batch, heads, seq, head_dim, .. } => {
+                TensorShape { batch: batch * heads, rows: seq, cols: head_dim }
+            }
+        },
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum GraphError {
+    #[error("node {node} consumes node {input}, which does not precede it")]
+    ForwardEdge { node: usize, input: usize },
+    #[error(
+        "node {node} ({kind}) produces more elements than its input {input} supplies"
+    )]
+    ShapeMismatch { node: usize, kind: &'static str, input: usize },
+    #[error("marked output {0} is not a node")]
+    BadOutput(usize),
+}
+
+/// A DNN model as a dependency graph of simulator ops.
+#[derive(Clone, Debug, Default)]
+pub struct ModelGraph {
+    nodes: Vec<Node>,
+    outputs: Vec<NodeId>,
+}
+
+impl ModelGraph {
+    pub fn new() -> ModelGraph {
+        ModelGraph::default()
+    }
+
+    /// Append a node. Inputs must reference already-inserted nodes — the
+    /// append-only discipline that keeps every graph acyclic and makes
+    /// insertion order a valid schedule.
+    pub fn add_node(&mut self, op: Op, inputs: &[NodeId]) -> NodeId {
+        let id = NodeId(self.nodes.len());
+        for inp in inputs {
+            assert!(
+                inp.0 < id.0,
+                "graph input {} must precede node {} (append-only DAG)",
+                inp.0,
+                id.0
+            );
+        }
+        self.nodes.push(Node { op, inputs: inputs.to_vec() });
+        id
+    }
+
+    /// Mark a node as a graph output (a root dead-node elimination must
+    /// preserve). Without any marked output, every sink is presumed live.
+    pub fn mark_output(&mut self, id: NodeId) {
+        if !self.outputs.contains(&id) {
+            self.outputs.push(id);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    /// Nodes in id (= insertion = lowered) order.
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Explicitly marked outputs (may be empty).
+    pub fn outputs(&self) -> &[NodeId] {
+        &self.outputs
+    }
+
+    /// Nodes no other node consumes.
+    pub fn sinks(&self) -> Vec<NodeId> {
+        let cons = self.consumers();
+        (0..self.nodes.len())
+            .filter(|&i| cons[i].is_empty())
+            .map(NodeId)
+            .collect()
+    }
+
+    /// Per-node consumer lists (reverse adjacency).
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            for inp in &n.inputs {
+                out[inp.0].push(NodeId(i));
+            }
+        }
+        out
+    }
+
+    /// Structural validation: every edge points backward (acyclicity), no
+    /// utility node produces more elements than any of its inputs supplies
+    /// (reductions and gated activations may consume *more*), and marked
+    /// outputs exist.
+    pub fn validate(&self) -> Result<(), GraphError> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            for inp in &n.inputs {
+                if inp.0 >= i {
+                    return Err(GraphError::ForwardEdge { node: i, input: inp.0 });
+                }
+            }
+            if let Op::Util(u) = n.op {
+                let need = output_shape(&n.op).elems();
+                for inp in &n.inputs {
+                    let have = output_shape(&self.nodes[inp.0].op).elems();
+                    if have < need {
+                        return Err(GraphError::ShapeMismatch {
+                            node: i,
+                            kind: u.kind.name(),
+                            input: inp.0,
+                        });
+                    }
+                }
+            }
+        }
+        for o in &self.outputs {
+            if o.0 >= self.nodes.len() {
+                return Err(GraphError::BadOutput(o.0));
+            }
+        }
+        Ok(())
+    }
+
+    /// Deterministic topological order. Append-only construction
+    /// (`add_node` rejects forward edges) makes insertion order both
+    /// topologically valid and the smallest-id-first such order — `0, 1,
+    /// 2, …` is the lexicographic minimum over all permutations — so the
+    /// canonical lowering is the identity order, computed in O(n). This
+    /// sits on hot paths: every `trace()` call, every simulator rep of
+    /// `run_graph_once`, every `submit_graphs` request.
+    pub fn lowered_ids(&self) -> Vec<NodeId> {
+        (0..self.nodes.len()).map(NodeId).collect()
+    }
+
+    /// The flat-trace view: ops in lowered order. Every pre-graph consumer
+    /// (simulator runs, trace prediction, partitioning) reads this.
+    pub fn lower(&self) -> Vec<Op> {
+        self.lowered_ids().into_iter().map(|id| self.nodes[id.0].op).collect()
+    }
+
+    /// Wrap a flat trace as a pure chain graph (each op depends on its
+    /// predecessor) — the adapter for callers that only have a `Vec<Op>`.
+    pub fn from_trace(trace: &[Op]) -> ModelGraph {
+        let mut g = ModelGraph::new();
+        let mut prev: Option<NodeId> = None;
+        for &op in trace {
+            let inputs: Vec<NodeId> = prev.into_iter().collect();
+            prev = Some(g.add_node(op, &inputs));
+        }
+        if let Some(p) = prev {
+            g.mark_output(p);
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{DType, GemmOp, UtilKind, UtilOp};
+
+    fn gemm(m: usize, n: usize, k: usize) -> Op {
+        Op::Gemm(GemmOp::mm(m, n, k, DType::F32))
+    }
+
+    fn util(kind: UtilKind, rows: usize, cols: usize) -> Op {
+        Op::Util(UtilOp::new(kind, rows, cols, DType::F32))
+    }
+
+    #[test]
+    fn chain_round_trips_through_lowering() {
+        let trace = vec![gemm(64, 128, 32), util(UtilKind::Gelu, 64, 128), gemm(64, 32, 128)];
+        let g = ModelGraph::from_trace(&trace);
+        assert_eq!(g.len(), 3);
+        g.validate().unwrap();
+        assert_eq!(g.lower(), trace, "lossless, order-preserving lowering");
+        assert_eq!(g.outputs(), &[NodeId(2)]);
+    }
+
+    #[test]
+    fn diamond_lowers_in_insertion_order() {
+        // a → {b, c} → d: insertion order is the canonical lowering.
+        let mut g = ModelGraph::new();
+        let a = g.add_node(gemm(32, 32, 32), &[]);
+        let b = g.add_node(util(UtilKind::Relu, 32, 32), &[a]);
+        let c = g.add_node(util(UtilKind::Gelu, 32, 32), &[a]);
+        let d = g.add_node(util(UtilKind::Add, 32, 32), &[b, c]);
+        g.mark_output(d);
+        g.validate().unwrap();
+        assert_eq!(g.lowered_ids(), vec![a, b, c, d]);
+        let cons = g.consumers();
+        assert_eq!(cons[a.index()], vec![b, c]);
+        assert_eq!(g.sinks(), vec![d]);
+    }
+
+    #[test]
+    fn validate_rejects_undersized_elementwise_input() {
+        let mut g = ModelGraph::new();
+        let small = g.add_node(gemm(8, 8, 8), &[]);
+        g.add_node(util(UtilKind::Add, 64, 64), &[small]);
+        assert!(matches!(
+            g.validate(),
+            Err(GraphError::ShapeMismatch { node: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn validate_accepts_reductions_and_gated_halving() {
+        // SoftMax consumes exactly what it produces; a gated activation
+        // consumes the doubled up+gate projection.
+        let mut g = ModelGraph::new();
+        let scores = g.add_node(Op::Gemm(GemmOp::bmm(4, 64, 64, 16, DType::F32)), &[]);
+        g.add_node(util(UtilKind::Softmax, 4 * 64, 64), &[scores]);
+        let upgate = g.add_node(gemm(64, 512, 128), &[]);
+        g.add_node(util(UtilKind::Gelu, 64, 256), &[upgate]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "append-only")]
+    fn forward_edges_are_rejected_at_insertion() {
+        let mut g = ModelGraph::new();
+        g.add_node(gemm(8, 8, 8), &[NodeId(5)]);
+    }
+
+    #[test]
+    fn empty_graph_lowers_to_empty_trace() {
+        let g = ModelGraph::new();
+        assert!(g.is_empty());
+        assert!(g.lower().is_empty());
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn output_shapes_cover_all_op_families() {
+        assert_eq!(output_shape(&gemm(3, 5, 7)).elems(), 15);
+        assert_eq!(output_shape(&util(UtilKind::Relu, 4, 6)).elems(), 24);
+        let fa = Op::Custom(CustomOp::FlashAttn {
+            batch: 2,
+            heads: 8,
+            seq: 64,
+            head_dim: 16,
+            dtype: DType::Bf16,
+            causal: false,
+        });
+        assert_eq!(output_shape(&fa).elems(), 2 * 8 * 64 * 16);
+    }
+}

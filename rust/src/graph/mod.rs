@@ -1,0 +1,36 @@
+//! # graph — the typed model-graph IR (canonical model representation)
+//!
+//! Every layer of the repo used to consume models as a flat `Vec<Op>` and
+//! aggregate latency by sequential summation — a representation that can
+//! express neither kernel fusion (you cannot fuse what has no structure)
+//! nor multi-stream concurrency (you cannot find a critical path on a
+//! list). This module replaces it end-to-end:
+//!
+//! * [`ir`] — [`ModelGraph`]: nodes (`Op` + input edges) with derived
+//!   tensor-shape metadata, structural validation (acyclicity by
+//!   append-only construction, shape agreement), and lossless lowering to
+//!   a topologically ordered `Vec<Op>`. Lowering reproduces insertion
+//!   order exactly, so every flat-trace consumer keeps working unchanged.
+//! * [`passes`] — the rewrite-pass framework ([`Pass`], [`PassManager`])
+//!   with attention fusion (unfused BMM→SoftMax→BMM → FlashAttn/CUTLASS,
+//!   device/dtype-gated, optionally cost-gated) and dead-node
+//!   elimination.
+//! * [`schedule`] — dependency-aware latency aggregation: list-schedule
+//!   the graph onto a bounded number of concurrent streams and report the
+//!   makespan. `streams = 1` reproduces the paper's sequential-kernel sum
+//!   bit-for-bit; more streams expose branch concurrency (gated-FFN
+//!   lanes, encoder/decoder prefixes, cross-attention Q/KV projections).
+//!
+//! The stack consumes the IR at every level: `TransformerConfig::graph`
+//! builds it (with `trace()` as the lowered view), `models::runner`
+//! executes schedules on the simulator, `Pm2Lat::predict_graph` predicts
+//! critical-path latency, and `Coordinator::submit_graphs` serves graphs
+//! with subgraph-granularity caching and cross-node GEMM batching.
+
+pub mod ir;
+pub mod passes;
+pub mod schedule;
+
+pub use ir::{output_shape, GraphError, ModelGraph, Node, NodeId, TensorShape};
+pub use passes::{AttentionFusion, DeadNodeElimination, Pass, PassCtx, PassManager};
+pub use schedule::{critical_path_s, predict_graph_latency, Schedule, ScheduledOp};

@@ -1,0 +1,484 @@
+//! Graph rewrite passes: pattern-match subgraphs and replace them with
+//! cheaper equivalents, tract/XLA style — match, build a patch, rebuild.
+//!
+//! Two concrete passes ship today:
+//!
+//! * [`AttentionFusion`] — rewrites the unfused BMM→SoftMax→BMM attention
+//!   subgraph the transformer builder emits into a fused
+//!   `FlashAttn`/`CutlassAttn` kernel, gated on device/dtype support
+//!   (Table VI's "-" cells) and optionally on a cost model proving the
+//!   fused kernel is no slower (`only_if_faster`).
+//! * [`DeadNodeElimination`] — removes nodes that cannot reach a marked
+//!   graph output.
+//!
+//! Every rewrite rebuilds the graph through `add_node`, so the
+//! append-only/topological invariants of [`ModelGraph`] survive passes and
+//! lowering stays deterministic.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::gpusim::custom;
+use crate::gpusim::DeviceSpec;
+use crate::ops::{CustomOp, GemmApi, Op, UtilKind};
+
+use super::ir::{ModelGraph, Node, NodeId};
+
+/// Rebuild `g` node by node: `emit` returns `None` to drop a node, or
+/// `Some((op, inputs))` to re-add it — inputs named by *old* ids, which
+/// must resolve to surviving nodes. Marked outputs are remapped (and
+/// silently dropped if their node was). Shared by every structural pass
+/// so the remap/outputs invariants live in exactly one place.
+fn rebuild_graph(
+    g: &mut ModelGraph,
+    mut emit: impl FnMut(usize, &Node) -> Option<(Op, Vec<NodeId>)>,
+) {
+    let n = g.len();
+    let mut out = ModelGraph::new();
+    let mut remap: Vec<Option<NodeId>> = vec![None; n];
+    for i in 0..n {
+        let Some((op, srcs)) = emit(i, g.node(NodeId(i))) else { continue };
+        let ins: Vec<NodeId> = srcs
+            .iter()
+            .map(|x| remap[x.index()].expect("emitted inputs must survive the rebuild"))
+            .collect();
+        remap[i] = Some(out.add_node(op, &ins));
+    }
+    for &o in g.outputs() {
+        if let Some(m) = remap[o.index()] {
+            out.mark_output(m);
+        }
+    }
+    *g = out;
+}
+
+/// Context shared by all passes: the target device (None = purely
+/// structural rewriting, no hardware gate) and an optional per-op cost
+/// model (used by cost-gated rewrites).
+#[derive(Clone, Copy, Default)]
+pub struct PassCtx<'a> {
+    pub device: Option<&'a DeviceSpec>,
+    pub cost: Option<&'a dyn Fn(&Op) -> Option<f64>>,
+}
+
+impl<'a> PassCtx<'a> {
+    /// No device gate, no cost model.
+    pub fn structural() -> PassCtx<'static> {
+        PassCtx { device: None, cost: None }
+    }
+
+    pub fn for_device(device: &'a DeviceSpec) -> PassCtx<'a> {
+        PassCtx { device: Some(device), cost: None }
+    }
+
+    pub fn with_cost(
+        device: &'a DeviceSpec,
+        cost: &'a dyn Fn(&Op) -> Option<f64>,
+    ) -> PassCtx<'a> {
+        PassCtx { device: Some(device), cost: Some(cost) }
+    }
+}
+
+/// A graph rewrite pass. `run` mutates the graph in place and returns the
+/// number of rewrites applied (0 = fixed point).
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, g: &mut ModelGraph, ctx: &PassCtx<'_>) -> usize;
+}
+
+/// Ordered pass pipeline.
+#[derive(Default)]
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl PassManager {
+    pub fn new() -> PassManager {
+        PassManager { passes: Vec::new() }
+    }
+
+    pub fn with(mut self, pass: impl Pass + 'static) -> PassManager {
+        self.passes.push(Box::new(pass));
+        self
+    }
+
+    /// The standard pipeline: attention fusion, then dead-node cleanup.
+    pub fn standard() -> PassManager {
+        PassManager::new()
+            .with(AttentionFusion::default())
+            .with(DeadNodeElimination)
+    }
+
+    /// Run every pass once, returning (pass name, rewrite count) pairs.
+    pub fn run(&self, g: &mut ModelGraph, ctx: &PassCtx<'_>) -> Vec<(&'static str, usize)> {
+        self.passes.iter().map(|p| (p.name(), p.run(g, ctx))).collect()
+    }
+}
+
+/// Fuse the unfused attention core. The matched pattern is the exact
+/// shape `TransformerConfig` emits (paper Table II "BMM" rows):
+///
+/// ```text
+/// scores = BMM(lanes, S, S, d)   — consumed only by the softmax
+/// probs  = SoftMax(lanes·S, S)   — consumed only by the second BMM
+/// ctx    = BMM(lanes, S, d, S)
+/// ```
+///
+/// and the replacement is one fused attention kernel over the same
+/// `lanes = batch·heads` blocks (the fused-kernel cost model depends only
+/// on the product, so the head split needs no extra metadata). FlashAttn
+/// is preferred, CUTLASS attention is the fallback; both are gated on the
+/// architecture/dtype support table.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AttentionFusion {
+    /// Rewrite only when `ctx.cost` proves the fused kernel is no slower
+    /// than the three ops it replaces (requires a cost model in the ctx).
+    pub only_if_faster: bool,
+}
+
+impl Pass for AttentionFusion {
+    fn name(&self) -> &'static str {
+        "attention-fusion"
+    }
+
+    fn run(&self, g: &mut ModelGraph, ctx: &PassCtx<'_>) -> usize {
+        let n = g.len();
+        let cons = g.consumers();
+        let mut used: HashSet<usize> = HashSet::new();
+        // b2 node id → (b1 id, softmax id, fused op).
+        let mut fused_at: HashMap<usize, (usize, usize, Op)> = HashMap::new();
+        for si in 0..n {
+            let s_node = g.node(NodeId(si));
+            let Op::Util(u) = s_node.op else { continue };
+            if u.kind != UtilKind::Softmax || s_node.inputs.len() != 1 {
+                continue;
+            }
+            let b1 = s_node.inputs[0].index();
+            let Op::Gemm(g1) = g.node(NodeId(b1)).op else { continue };
+            if g1.api != GemmApi::Bmm || g1.m != g1.n {
+                continue;
+            }
+            if u.rows != g1.batch * g1.m || u.cols != g1.m || u.dtype != g1.dtype {
+                continue;
+            }
+            // Scores feed only the softmax; probs feed only one consumer.
+            if cons[b1].len() != 1 || cons[b1][0].index() != si || cons[si].len() != 1 {
+                continue;
+            }
+            let b2 = cons[si][0].index();
+            let Op::Gemm(g2) = g.node(NodeId(b2)).op else { continue };
+            if g2.api != GemmApi::Bmm
+                || g2.batch != g1.batch
+                || g2.m != g1.m
+                || g2.k != g1.m
+                || g2.n != g1.k
+                || g2.dtype != g1.dtype
+            {
+                continue;
+            }
+            if used.contains(&b1) || used.contains(&si) || used.contains(&b2) {
+                continue;
+            }
+            let (lanes, seq, head_dim) = (g1.batch, g1.m, g1.k);
+            let candidates = [
+                CustomOp::FlashAttn {
+                    batch: lanes,
+                    heads: 1,
+                    seq,
+                    head_dim,
+                    dtype: g1.dtype,
+                    causal: false,
+                },
+                CustomOp::CutlassAttn {
+                    batch: lanes,
+                    heads: 1,
+                    seq,
+                    head_dim,
+                    dtype: g1.dtype,
+                    causal: false,
+                },
+            ];
+            let mut chosen = None;
+            for cand in candidates {
+                if let Some(dev) = ctx.device {
+                    if !custom::supported(dev, &cand) {
+                        continue;
+                    }
+                }
+                let fused = Op::Custom(cand);
+                if self.only_if_faster {
+                    let Some(cost) = ctx.cost else { continue };
+                    let Some(fused_cost) = cost(&fused) else { continue };
+                    let parts = [
+                        g.node(NodeId(b1)).op,
+                        g.node(NodeId(si)).op,
+                        g.node(NodeId(b2)).op,
+                    ];
+                    let mut unfused_cost = 0.0;
+                    let mut priced = true;
+                    for p in &parts {
+                        match cost(p) {
+                            Some(v) => unfused_cost += v,
+                            None => {
+                                priced = false;
+                                break;
+                            }
+                        }
+                    }
+                    if !priced || fused_cost > unfused_cost {
+                        continue;
+                    }
+                }
+                chosen = Some(fused);
+                break;
+            }
+            let Some(fused) = chosen else { continue };
+            used.extend([b1, si, b2]);
+            fused_at.insert(b2, (b1, si, fused));
+        }
+        if fused_at.is_empty() {
+            return 0;
+        }
+        let count = fused_at.len();
+
+        // Rebuild: drop b1/softmax, emit the fused op at b2's position
+        // with the union of the matched subgraph's external inputs. The
+        // input snapshot lets the emitter read the *replaced* nodes'
+        // edges while the rebuild walks the graph.
+        let inputs_of: Vec<Vec<NodeId>> =
+            g.nodes().iter().map(|nd| nd.inputs.clone()).collect();
+        rebuild_graph(g, |i, node| {
+            if used.contains(&i) && !fused_at.contains_key(&i) {
+                return None; // b1 or softmax: replaced by the fused node
+            }
+            let Some(&(b1, si, fused)) = fused_at.get(&i) else {
+                return Some((node.op, node.inputs.clone()));
+            };
+            let mut srcs: Vec<NodeId> = Vec::new();
+            for &x in inputs_of[b1]
+                .iter()
+                .chain(inputs_of[si].iter())
+                .chain(inputs_of[i].iter())
+            {
+                if x.index() == b1 || x.index() == si || srcs.contains(&x) {
+                    continue;
+                }
+                srcs.push(x);
+            }
+            Some((fused, srcs))
+        });
+        count
+    }
+}
+
+/// Remove nodes that cannot reach a marked output. A graph with no marked
+/// outputs is left untouched — every sink is then presumed live, so there
+/// is nothing provably dead.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeadNodeElimination;
+
+impl Pass for DeadNodeElimination {
+    fn name(&self) -> &'static str {
+        "dead-node-elimination"
+    }
+
+    fn run(&self, g: &mut ModelGraph, _ctx: &PassCtx<'_>) -> usize {
+        if g.outputs().is_empty() {
+            return 0;
+        }
+        let n = g.len();
+        let mut live = vec![false; n];
+        let mut stack: Vec<usize> = g.outputs().iter().map(|r| r.index()).collect();
+        while let Some(i) = stack.pop() {
+            if live[i] {
+                continue;
+            }
+            live[i] = true;
+            for inp in &g.node(NodeId(i)).inputs {
+                stack.push(inp.index());
+            }
+        }
+        let dead = live.iter().filter(|l| !**l).count();
+        if dead == 0 {
+            return 0;
+        }
+        rebuild_graph(g, |i, node| {
+            live[i].then(|| (node.op, node.inputs.clone()))
+        });
+        dead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device_by_name;
+    use crate::models::zoo;
+    use crate::ops::{DType, GemmOp, UtilOp};
+
+    fn fused_count(g: &ModelGraph) -> usize {
+        g.nodes()
+            .iter()
+            .filter(|n| {
+                matches!(
+                    n.op,
+                    Op::Custom(CustomOp::FlashAttn { .. } | CustomOp::CutlassAttn { .. })
+                )
+            })
+            .count()
+    }
+
+    fn softmax_count(g: &ModelGraph) -> usize {
+        g.nodes()
+            .iter()
+            .filter(|n| matches!(n.op, Op::Util(u) if u.kind == UtilKind::Softmax))
+            .count()
+    }
+
+    #[test]
+    fn fuses_one_subgraph_per_block_on_ampere() {
+        let dev = device_by_name("a100").unwrap();
+        for cfg in [zoo::gpt2_large(), zoo::qwen3_0_6b()] {
+            let mut g = cfg.graph(1, 128);
+            let before = g.len();
+            let rewrites = AttentionFusion::default()
+                .run(&mut g, &PassCtx::for_device(&dev));
+            assert_eq!(rewrites, cfg.layers, "{}: one match per block", cfg.name);
+            assert_eq!(fused_count(&g), cfg.layers);
+            assert_eq!(softmax_count(&g), 0, "no unfused attention left");
+            assert_eq!(g.len(), before - 2 * cfg.layers, "3 nodes became 1");
+            g.validate().unwrap();
+            // FlashAttn preferred on Ampere.
+            assert!(g
+                .nodes()
+                .iter()
+                .any(|n| matches!(n.op, Op::Custom(CustomOp::FlashAttn { .. }))));
+        }
+    }
+
+    #[test]
+    fn enc_dec_fuses_self_and_cross_attention() {
+        let dev = device_by_name("a100").unwrap();
+        let cfg = zoo::flan_t5_base();
+        let mut g = cfg.graph(1, 64);
+        let rewrites =
+            AttentionFusion::default().run(&mut g, &PassCtx::for_device(&dev));
+        // Encoder blocks + decoder blocks + decoder cross-attention.
+        assert_eq!(rewrites, cfg.enc_layers + 2 * cfg.layers);
+        g.validate().unwrap();
+        assert_eq!(g.lower().len(), g.len(), "lowering still covers every node");
+    }
+
+    #[test]
+    fn turing_falls_back_to_cutlass_and_blackwell_declines() {
+        let cfg = zoo::gpt2_large(); // F32 — runs on every device
+        let t4 = device_by_name("t4").unwrap();
+        let mut g = cfg.graph(1, 64);
+        let rewrites = AttentionFusion::default().run(&mut g, &PassCtx::for_device(&t4));
+        assert_eq!(rewrites, cfg.layers);
+        assert!(
+            g.nodes()
+                .iter()
+                .all(|n| !matches!(n.op, Op::Custom(CustomOp::FlashAttn { .. }))),
+            "no FlashAttention-2 on Turing"
+        );
+        assert!(g
+            .nodes()
+            .iter()
+            .any(|n| matches!(n.op, Op::Custom(CustomOp::CutlassAttn { .. }))));
+
+        let b5070 = device_by_name("rtx5070").unwrap();
+        let mut g2 = cfg.graph(1, 64);
+        assert_eq!(
+            AttentionFusion::default().run(&mut g2, &PassCtx::for_device(&b5070)),
+            0,
+            "no attention kernels on Blackwell"
+        );
+        assert_eq!(g2.lower(), cfg.trace(1, 64), "declined pass leaves graph intact");
+    }
+
+    #[test]
+    fn cost_gate_requires_a_cost_model() {
+        let dev = device_by_name("a100").unwrap();
+        let mut g = zoo::gpt2_large().graph(1, 64);
+        let pass = AttentionFusion { only_if_faster: true };
+        assert_eq!(pass.run(&mut g, &PassCtx::for_device(&dev)), 0);
+        // A cost model that prices the fused kernel cheaper admits it.
+        let cost = |op: &Op| match op {
+            Op::Custom(_) => Some(1.0),
+            _ => Some(10.0),
+        };
+        let ctx = PassCtx::with_cost(&dev, &cost);
+        assert_eq!(pass.run(&mut g, &ctx), zoo::gpt2_large().layers);
+        // And one that prices it dearer rejects it.
+        let mut g2 = zoo::gpt2_large().graph(1, 64);
+        let dear = |op: &Op| match op {
+            Op::Custom(_) => Some(1e9),
+            _ => Some(1.0),
+        };
+        let ctx2 = PassCtx::with_cost(&dev, &dear);
+        assert_eq!(pass.run(&mut g2, &ctx2), 0);
+    }
+
+    #[test]
+    fn fusion_preserves_external_wiring() {
+        // qkv → [scores → softmax → ctx] → proj becomes qkv → fused → proj.
+        let dt = DType::F32;
+        let mut g = ModelGraph::new();
+        let qkv = g.add_node(Op::Gemm(GemmOp::linear(64, 192, 64, dt)), &[]);
+        let scores = g.add_node(Op::Gemm(GemmOp::bmm(4, 64, 64, 16, dt)), &[qkv]);
+        let probs =
+            g.add_node(Op::Util(UtilOp::new(UtilKind::Softmax, 4 * 64, 64, dt)), &[scores]);
+        let ctx_v = g.add_node(Op::Gemm(GemmOp::bmm(4, 64, 16, 64, dt)), &[probs, qkv]);
+        let proj = g.add_node(Op::Gemm(GemmOp::linear(64, 64, 64, dt)), &[ctx_v]);
+        g.mark_output(proj);
+        assert_eq!(
+            AttentionFusion::default().run(&mut g, &PassCtx::structural()),
+            1
+        );
+        g.validate().unwrap();
+        assert_eq!(g.len(), 3);
+        let fused = &g.node(NodeId(1));
+        assert!(matches!(fused.op, Op::Custom(CustomOp::FlashAttn { .. })));
+        assert_eq!(fused.inputs, vec![NodeId(0)], "external input deduped to qkv");
+        assert_eq!(g.node(NodeId(2)).inputs, vec![NodeId(1)], "consumer rewired");
+        assert_eq!(g.outputs(), &[NodeId(2)]);
+    }
+
+    #[test]
+    fn dce_removes_unreachable_nodes_only_with_marked_outputs() {
+        let dt = DType::F32;
+        let mut g = ModelGraph::new();
+        let a = g.add_node(Op::Gemm(GemmOp::mm(32, 32, 32, dt)), &[]);
+        let b = g.add_node(Op::Util(UtilOp::new(UtilKind::Relu, 32, 32, dt)), &[a]);
+        g.add_node(Op::Gemm(GemmOp::mm(64, 64, 64, dt)), &[]); // orphan
+        let mut unmarked = g.clone();
+        assert_eq!(DeadNodeElimination.run(&mut unmarked, &PassCtx::structural()), 0);
+        g.mark_output(b);
+        assert_eq!(DeadNodeElimination.run(&mut g, &PassCtx::structural()), 1);
+        assert_eq!(g.len(), 2);
+        g.validate().unwrap();
+        assert_eq!(g.outputs(), &[NodeId(1)]);
+    }
+
+    #[test]
+    fn transformer_graph_has_no_dead_nodes() {
+        let cfg = zoo::qwen3_0_6b();
+        let mut g = cfg.graph(2, 128);
+        let before = g.len();
+        assert_eq!(DeadNodeElimination.run(&mut g, &PassCtx::structural()), 0);
+        assert_eq!(g.len(), before);
+    }
+
+    #[test]
+    fn standard_pipeline_reports_per_pass_counts() {
+        let dev = device_by_name("a100").unwrap();
+        let cfg = zoo::qwen3_0_6b();
+        let mut g = cfg.graph(1, 128);
+        let report = PassManager::standard().run(&mut g, &PassCtx::for_device(&dev));
+        assert_eq!(report.len(), 2);
+        assert_eq!(report[0], ("attention-fusion", cfg.layers));
+        assert_eq!(report[1].0, "dead-node-elimination");
+        assert_eq!(report[1].1, 0, "fusion leaves no garbage behind");
+        g.validate().unwrap();
+    }
+}

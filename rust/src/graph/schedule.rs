@@ -1,0 +1,215 @@
+//! Dependency-aware latency aggregation: list-schedule a [`ModelGraph`]
+//! onto a bounded number of concurrent streams and report the makespan.
+//!
+//! The paper aggregates whole-model latency as a sequential kernel sum
+//! (§III) — that is exactly the `streams = 1` schedule, reproduced
+//! bit-for-bit (same additions in the same order). With more streams,
+//! independent branches (gated-FFN lanes, encoder vs. decoder prefixes,
+//! cross-attention Q/KV projections) overlap and the predicted latency
+//! becomes the critical-path length under the stream cap — the
+//! multi-stream scenario axis flat traces cannot express.
+
+use crate::ops::Op;
+
+use super::ir::{ModelGraph, NodeId};
+
+/// Placement of one node in a schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct ScheduledOp {
+    pub id: NodeId,
+    pub stream: usize,
+    pub start_s: f64,
+    pub finish_s: f64,
+}
+
+/// A complete schedule over `streams` concurrent streams.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// In issue (lowered) order.
+    pub ops: Vec<ScheduledOp>,
+    pub streams: usize,
+    pub makespan_s: f64,
+}
+
+/// List-schedule `g` given per-node durations (indexed by node id).
+/// Nodes are issued in lowered order; each waits for its producers, then
+/// takes the stream where it can *start* earliest (lowest index on ties)
+/// — picking by free time alone would idle-block a stream behind a
+/// dependency stall. Deterministic for a given graph and durations.
+pub fn schedule(g: &ModelGraph, streams: usize, dur_s: &[f64]) -> Schedule {
+    assert_eq!(dur_s.len(), g.len(), "one duration per node");
+    let streams = streams.max(1).min(g.len().max(1));
+    let mut free = vec![0.0f64; streams];
+    let mut finish = vec![0.0f64; g.len()];
+    let mut ops = Vec::with_capacity(g.len());
+    let mut makespan = 0.0f64;
+    for id in g.lowered_ids() {
+        let i = id.index();
+        let mut ready = 0.0f64;
+        for inp in &g.node(id).inputs {
+            ready = ready.max(finish[inp.index()]);
+        }
+        // On one stream `ready <= free[0]` always holds (producers ran
+        // earlier on the same stream), so `start` accumulates exactly the
+        // sequential sum `total += dur` of the legacy trace path.
+        let mut stream = 0usize;
+        let mut start = ready.max(free[0]);
+        for (s, &t) in free.iter().enumerate().skip(1) {
+            let candidate = ready.max(t);
+            if candidate < start {
+                stream = s;
+                start = candidate;
+            }
+        }
+        let end = start + dur_s[i];
+        finish[i] = end;
+        free[stream] = end;
+        makespan = makespan.max(end);
+        ops.push(ScheduledOp { id, stream, start_s: start, finish_s: end });
+    }
+    Schedule { ops, streams, makespan_s: makespan }
+}
+
+/// Dependency-only lower bound: the longest duration-weighted path. No
+/// stream cap can beat it; `schedule` approaches it as streams grow.
+pub fn critical_path_s(g: &ModelGraph, dur_s: &[f64]) -> f64 {
+    assert_eq!(dur_s.len(), g.len());
+    let mut finish = vec![0.0f64; g.len()];
+    let mut longest = 0.0f64;
+    for id in g.lowered_ids() {
+        let i = id.index();
+        let mut ready = 0.0f64;
+        for inp in &g.node(id).inputs {
+            ready = ready.max(finish[inp.index()]);
+        }
+        finish[i] = ready + dur_s[i];
+        longest = longest.max(finish[i]);
+    }
+    longest
+}
+
+/// Predict whole-graph latency: per-node costs from `cost` (None when any
+/// op is unsupported), aggregated as the `streams`-bounded makespan.
+/// `streams = 1` is bit-identical to the sequential trace sum.
+pub fn predict_graph_latency<F>(g: &ModelGraph, streams: usize, cost: F) -> Option<f64>
+where
+    F: Fn(&Op) -> Option<f64>,
+{
+    let mut dur = Vec::with_capacity(g.len());
+    for n in g.nodes() {
+        dur.push(cost(&n.op)?);
+    }
+    Some(schedule(g, streams, &dur).makespan_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{DType, GemmOp, UtilKind, UtilOp};
+
+    fn gemm() -> Op {
+        Op::Gemm(GemmOp::mm(64, 64, 64, DType::F32))
+    }
+
+    fn chain(durs: &[f64]) -> (ModelGraph, Vec<f64>) {
+        let trace: Vec<Op> = durs.iter().map(|_| gemm()).collect();
+        (ModelGraph::from_trace(&trace), durs.to_vec())
+    }
+
+    #[test]
+    fn one_stream_is_the_sequential_sum_bit_for_bit() {
+        let durs = [0.1, 0.2, 0.3, 0.07, 1e-9];
+        let (g, d) = chain(&durs);
+        let mut total = 0.0f64;
+        for x in &durs {
+            total += x;
+        }
+        let s = schedule(&g, 1, &d);
+        assert_eq!(s.makespan_s, total, "same additions in the same order");
+        assert!(s.ops.iter().all(|o| o.stream == 0));
+    }
+
+    #[test]
+    fn diamond_overlaps_on_two_streams() {
+        // a(1) → {b(2), c(3)} → d(1): 2 streams run b ∥ c.
+        let mut g = ModelGraph::new();
+        let a = g.add_node(gemm(), &[]);
+        let b = g.add_node(gemm(), &[a]);
+        let c = g.add_node(gemm(), &[a]);
+        g.add_node(gemm(), &[b, c]);
+        let d = vec![1.0, 2.0, 3.0, 1.0];
+        assert_eq!(schedule(&g, 1, &d).makespan_s, 7.0);
+        let two = schedule(&g, 2, &d);
+        assert_eq!(two.makespan_s, 5.0, "1 + max(2,3) + 1");
+        assert_eq!(critical_path_s(&g, &d), 5.0);
+        // Streams beyond the branch width change nothing.
+        assert_eq!(schedule(&g, 8, &d).makespan_s, 5.0);
+    }
+
+    #[test]
+    fn independent_roots_fan_out_across_streams() {
+        let mut g = ModelGraph::new();
+        for _ in 0..4 {
+            g.add_node(gemm(), &[]);
+        }
+        let d = vec![1.0; 4];
+        assert_eq!(schedule(&g, 1, &d).makespan_s, 4.0);
+        assert_eq!(schedule(&g, 2, &d).makespan_s, 2.0);
+        assert_eq!(schedule(&g, 4, &d).makespan_s, 1.0);
+        assert_eq!(critical_path_s(&g, &d), 1.0);
+    }
+
+    #[test]
+    fn dependent_node_does_not_idle_block_a_free_stream() {
+        // a(10) → b(1); c(5) independent. Greedy earliest-*free* stream
+        // placement would park b on the idle stream until t=10 and push c
+        // behind a (makespan 15); placing by earliest *start* leaves the
+        // second stream open for c (makespan 11).
+        let mut g = ModelGraph::new();
+        let a = g.add_node(gemm(), &[]);
+        g.add_node(gemm(), &[a]);
+        g.add_node(gemm(), &[]);
+        let d = vec![10.0, 1.0, 5.0];
+        assert_eq!(schedule(&g, 2, &d).makespan_s, 11.0);
+    }
+
+    #[test]
+    fn makespan_bounded_by_work_and_critical_path() {
+        let mut g = ModelGraph::new();
+        let a = g.add_node(gemm(), &[]);
+        let b = g.add_node(gemm(), &[]);
+        let c = g.add_node(gemm(), &[a, b]);
+        for _ in 0..3 {
+            g.add_node(gemm(), &[c]);
+        }
+        let d = vec![0.5, 1.0, 0.25, 2.0, 0.1, 0.4];
+        let total: f64 = d.iter().sum();
+        for streams in 1..=6 {
+            let m = schedule(&g, streams, &d).makespan_s;
+            assert!(m <= total * (1.0 + 1e-12));
+            assert!(m >= critical_path_s(&g, &d) * (1.0 - 1e-12));
+        }
+    }
+
+    #[test]
+    fn predict_latency_none_when_any_cost_missing() {
+        let (g, d) = chain(&[1.0, 1.0]);
+        let _ = d;
+        assert_eq!(predict_graph_latency(&g, 1, |_| Some(1.0)), Some(2.0));
+        assert_eq!(predict_graph_latency(&g, 1, |_| None), None);
+        let u = Op::Util(UtilOp::new(UtilKind::Relu, 8, 8, DType::F32));
+        let g2 = ModelGraph::from_trace(&[gemm(), u]);
+        let only_gemm = |op: &Op| match op {
+            Op::Gemm(_) => Some(1.0),
+            _ => None,
+        };
+        assert_eq!(predict_graph_latency(&g2, 1, only_gemm), None);
+    }
+
+    #[test]
+    fn empty_graph_schedules_to_zero() {
+        let g = ModelGraph::new();
+        assert_eq!(schedule(&g, 4, &[]).makespan_s, 0.0);
+        assert_eq!(predict_graph_latency(&g, 1, |_| None), Some(0.0));
+    }
+}

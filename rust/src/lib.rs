@@ -8,9 +8,10 @@
 //! - **L3 (this crate)** — everything at runtime: the simulated-GPU
 //!   substrate ([`gpusim`]), the CUPTI/NCU-style [`profiler`], the paper's
 //!   predictor ([`pm2lat`]), the NeuSight baseline ([`neusight`]) whose MLP
-//!   runs through PJRT ([`runtime`]), the transformer model zoo
-//!   ([`models`]), the prediction service ([`coordinator`]), and the two
-//!   applications from §IV-D ([`apps`]).
+//!   runs through PJRT ([`runtime`]), the typed model-graph IR with
+//!   fusion passes and dependency-aware scheduling ([`graph`]), the
+//!   transformer model zoo ([`models`]), the prediction service
+//!   ([`coordinator`]), and the two applications from §IV-D ([`apps`]).
 //!
 //! The physical GPUs of the paper are replaced by `gpusim` per the
 //! substitution table in DESIGN.md §1; everything downstream consumes only
@@ -21,6 +22,7 @@ pub mod apps;
 pub mod coordinator;
 pub mod experiments;
 pub mod gpusim;
+pub mod graph;
 pub mod models;
 pub mod neusight;
 pub mod ops;

@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! pm2lat report devices                     # Table I
-//! pm2lat predict --device a100 --model gpt2-large --batch 8
+//! pm2lat predict --device a100 --model gpt2-large --batch 8 \
+//!                [--streams 4] [--fuse]   # graph schedule + attention fusion
 //! pm2lat layer --device l4 --dtype bf16 --m 1024 --n 1024 --k 4096
 //! pm2lat experiments [--full]               # every table + figure
 //! pm2lat nas --n 1000                       # §IV-D2 speed study
@@ -12,9 +13,13 @@
 
 use anyhow::{anyhow, Result};
 
-use pm2lat::coordinator::{ab_phases, build_f32_service, mixed_workload, to_batched, AbReport};
+use pm2lat::coordinator::{
+    ab_phases, build_service, mixed_workload, mixed_workload_dtyped, quick_neusight,
+    timed_submit, to_batched, to_kind, AbReport, PredictorKind,
+};
 use pm2lat::experiments::{self, Scale};
 use pm2lat::gpusim::Gpu;
+use pm2lat::graph::{AttentionFusion, Pass, PassCtx};
 use pm2lat::models::{runner, zoo};
 use pm2lat::ops::{DType, GemmOp, Op};
 use pm2lat::pm2lat::Pm2Lat;
@@ -73,7 +78,8 @@ fn run(args: &Args) -> Result<()> {
 
 /// §IV-D2 at service scale: requests/sec on a multi-device mixed workload,
 /// serial no-cache baseline vs the concurrent cache-accelerated service,
-/// for both the scalar and the batched-PJRT kinds.
+/// across the F32 scalar + batched-PJRT kinds, the BF16 tensor-core lane
+/// and the NeuSight learned-baseline lane.
 fn serve_bench(args: &Args) -> Result<()> {
     let runtime = Runtime::open_default()?;
     let n = args.opt_usize("n", 50_000);
@@ -89,17 +95,41 @@ fn serve_bench(args: &Args) -> Result<()> {
     );
 
     // Baseline: the seed's serving regime — one thread, no cache — vs the
-    // concurrent, cache-accelerated service.
-    let base = build_f32_service(&runtime, 1, 0, &devices)?;
-    let fast = build_f32_service(&runtime, threads, 1 << 17, &devices)?;
+    // concurrent, cache-accelerated service. Both carry F32 + BF16 tables
+    // (T4 has no BF16 path and answers None deterministically).
+    let dtypes = [DType::F32, DType::Bf16];
+    let base = build_service(&runtime, 1, 0, &devices, &dtypes)?;
+    let mut fast = build_service(&runtime, threads, 1 << 17, &devices, &dtypes)?;
+    fast.register_neusight(quick_neusight(&runtime, DType::F32)?);
     let scalar = ab_phases(&base, &fast, &workload, batch)?;
     let batched = ab_phases(&base, &fast, &to_batched(&workload), batch)?;
+    // Seed 42 mirrors the F32 workload shape for shape (the RNG stream is
+    // dtype-independent), so the lanes compare like for like.
+    let bf16_workload = mixed_workload_dtyped(&dev_names, n, unique, 42, DType::Bf16);
+    let bf16 = ab_phases(&base, &fast, &bf16_workload, batch)?;
 
-    print_ab("scalar kind", n, threads, &scalar);
-    print_ab("batched (PJRT) kind", n, threads, &batched);
+    print_ab("scalar kind (f32)", n, threads, &scalar);
+    print_ab("batched (PJRT) kind (f32)", n, threads, &batched);
+    print_ab("bf16 scalar kind", n, threads, &bf16);
+
+    // NeuSight lane: the learned baseline's MLP through PJRT. Outputs are
+    // not memoized, so the A/B of interest is repeat-pass determinism.
+    let ns_reqs = to_kind(&workload, PredictorKind::NeuSight);
+    let (t1, o1) = timed_submit(&fast, &ns_reqs, batch)?;
+    let (t2, o2) = timed_submit(&fast, &ns_reqs, batch)?;
+    println!("-- neusight kind (f32) --");
+    println!("pass 1               : {:>10.0} req/s", n as f64 / t1);
+    println!("pass 2               : {:>10.0} req/s (repeat passes identical: {})",
+        n as f64 / t2,
+        o1 == o2
+    );
+
     println!("metrics: {}", fast.metrics.summary());
-    if !scalar.identical || !batched.identical {
+    if !scalar.identical || !batched.identical || !bf16.identical {
         return Err(anyhow!("cached/parallel results diverged from uncached baseline"));
+    }
+    if o1 != o2 {
+        return Err(anyhow!("neusight lane nondeterministic across repeat passes"));
     }
     Ok(())
 }
@@ -151,21 +181,36 @@ fn predict_model(args: &Args) -> Result<()> {
     let model = args.opt_or("model", "gpt2-large").to_string();
     let batch = args.opt_usize("batch", 1);
     let seq = args.opt_usize("seq", 512);
+    let streams = args.opt_usize("streams", 1).max(1);
+    let fuse = args.flag("fuse");
     let cfg = zoo::by_name(&model).ok_or_else(|| anyhow!("unknown model"))?;
     let mut gpu = Gpu::by_name(&device).ok_or_else(|| anyhow!("unknown device"))?;
-    let pl = Pm2Lat::build_dtypes(&mut gpu, &ProfileSpec::experiment(), &[cfg.dtype], false);
+    // Fusion needs the custom-kernel profile to price fused attention.
+    let pl = Pm2Lat::build_dtypes(&mut gpu, &ProfileSpec::experiment(), &[cfg.dtype], fuse);
     gpu.reset();
-    let trace = cfg.trace(batch, seq);
+    let mut g = cfg.graph(batch, seq);
+    if fuse {
+        let cost = |op: &Op| pl.predict(&gpu, op);
+        let ctx = PassCtx::with_cost(&gpu.spec, &cost);
+        let rewrites = AttentionFusion { only_if_faster: true }.run(&mut g, &ctx);
+        println!("fusion: rewrote {rewrites} attention subgraphs");
+    }
     let pred = pl
-        .predict_trace(&gpu, &trace)
+        .predict_graph(&gpu, &g, streams)
         .ok_or_else(|| anyhow!("model unsupported on this device"))?;
-    println!("{model} BS={batch} seq={seq} on {device}: predicted {:.1} ms", pred * 1e3);
-    match runner::run_model(&mut gpu, &cfg, batch, seq, 5, 25) {
-        Ok(run) => println!(
-            "measured {:.1} ms → error {:+.1}%",
-            run.mean_s * 1e3,
-            pm2lat::util::stats::signed_rel_err_pct(pred, run.mean_s)
-        ),
+    println!(
+        "{model} BS={batch} seq={seq} on {device} (streams={streams}): predicted {:.1} ms",
+        pred * 1e3
+    );
+    match gpu.check_memory(cfg.memory_bytes(batch, seq)) {
+        Ok(()) => match runner::run_graph(&mut gpu, &g, 5, 25, streams) {
+            Ok(run) => println!(
+                "measured {:.1} ms → error {:+.1}%",
+                run.mean_s * 1e3,
+                pm2lat::util::stats::signed_rel_err_pct(pred, run.mean_s)
+            ),
+            Err(e) => println!("(measurement unavailable: {e})"),
+        },
         Err(e) => println!("(measurement unavailable: {e})"),
     }
     Ok(())

@@ -1,8 +1,13 @@
-//! Ground-truth model execution on the simulator: run a model's kernel
-//! trace end-to-end (with the paper's 5-warmup / 25-measurement protocol)
-//! and report the mean latency — the MeanT columns of Tables IV/V.
+//! Ground-truth model execution on the simulator: run a model graph (or
+//! its lowered kernel trace) end-to-end with the paper's 5-warmup /
+//! 25-measurement protocol and report the mean latency — the MeanT
+//! columns of Tables IV/V. Graph execution issues kernels in lowered
+//! order (identical device-state evolution to the flat trace) and
+//! aggregates the measured durations through the dependency-aware
+//! scheduler; `streams = 1` reproduces the sequential sum bit-for-bit.
 
 use crate::gpusim::{ExecError, FreqMode, Gpu};
+use crate::graph::{schedule, ModelGraph};
 use crate::ops::Op;
 
 use super::transformer::TransformerConfig;
@@ -22,6 +27,20 @@ pub fn run_trace_once(gpu: &mut Gpu, trace: &[Op]) -> Result<f64, ExecError> {
         total += gpu.exec(op)?.dur_s;
     }
     Ok(total)
+}
+
+/// Execute a model graph once on up to `streams` concurrent streams.
+/// Kernels are issued in lowered order — the same op sequence, and
+/// therefore the same JIT/thermal/noise evolution, as the flat-trace
+/// path — and the measured durations are aggregated as the makespan of
+/// the dependency-aware schedule. `streams = 1` is bit-identical to
+/// [`run_trace_once`] over the lowered trace.
+pub fn run_graph_once(gpu: &mut Gpu, g: &ModelGraph, streams: usize) -> Result<f64, ExecError> {
+    let mut dur = vec![0.0f64; g.len()];
+    for id in g.lowered_ids() {
+        dur[id.index()] = gpu.exec(&g.node(id).op)?.dur_s;
+    }
+    Ok(schedule::schedule(g, streams, &dur).makespan_s)
 }
 
 /// Predict a whole model through the prediction service (trace-level API):
@@ -46,6 +65,32 @@ pub fn predict_model(
     Ok(out.pop().unwrap_or(None))
 }
 
+/// Graph-level service prediction: the whole model as one [`ModelGraph`]
+/// through [`Coordinator::submit_graphs`] — subgraph-granularity caching,
+/// GEMM lanes batched across graph nodes, and latency aggregated as the
+/// `streams`-bounded critical path. `streams = 1` matches
+/// [`predict_model`] bit-for-bit.
+///
+/// [`Coordinator::submit_graphs`]: crate::coordinator::Coordinator::submit_graphs
+pub fn predict_model_graph(
+    coord: &crate::coordinator::Coordinator<'_>,
+    device: &str,
+    cfg: &TransformerConfig,
+    batch: usize,
+    seq: usize,
+    streams: usize,
+) -> anyhow::Result<Option<f64>> {
+    use crate::coordinator::{GraphRequest, PredictorKind};
+    let req = GraphRequest {
+        device: device.to_string(),
+        graph: cfg.graph(batch, seq),
+        kind: PredictorKind::Pm2LatBatched,
+        streams,
+    };
+    let mut out = coord.submit_graphs(std::slice::from_ref(&req))?;
+    Ok(out.pop().unwrap_or(None))
+}
+
 /// Paper protocol (§IV-B): warm-up ×5, then 25 measured repetitions.
 pub fn run_model(
     gpu: &mut Gpu,
@@ -66,6 +111,43 @@ pub fn run_model(
         total += run_trace_once(gpu, &trace)?;
     }
     Ok(ModelRun { mean_s: total / reps as f64, reps })
+}
+
+/// Measurement protocol over an arbitrary graph (e.g. after fusion
+/// passes). The caller is responsible for a memory check when the graph
+/// came from a model config — see [`run_model_graph`].
+pub fn run_graph(
+    gpu: &mut Gpu,
+    g: &ModelGraph,
+    warmup: usize,
+    reps: usize,
+    streams: usize,
+) -> Result<ModelRun, ExecError> {
+    gpu.set_freq(FreqMode::Boost);
+    for _ in 0..warmup {
+        run_graph_once(gpu, g, streams)?;
+    }
+    let mut total = 0.0;
+    for _ in 0..reps {
+        total += run_graph_once(gpu, g, streams)?;
+    }
+    Ok(ModelRun { mean_s: total / reps as f64, reps })
+}
+
+/// Graph analogue of [`run_model`]: memory check, then the measurement
+/// protocol over the model graph. `streams = 1` reproduces [`run_model`]
+/// bit-for-bit.
+pub fn run_model_graph(
+    gpu: &mut Gpu,
+    cfg: &TransformerConfig,
+    batch: usize,
+    seq: usize,
+    warmup: usize,
+    reps: usize,
+    streams: usize,
+) -> Result<ModelRun, ExecError> {
+    gpu.check_memory(cfg.memory_bytes(batch, seq))?;
+    run_graph(gpu, &cfg.graph(batch, seq), warmup, reps, streams)
 }
 
 #[cfg(test)]
@@ -94,6 +176,12 @@ mod tests {
         // And DS-R1-14B not even on the 24 GB L4 at batch 8.
         let mut l4 = Gpu::by_name("l4").unwrap();
         assert!(run_model(&mut l4, &zoo::deepseek_r1_14b(), 8, 512, 0, 1).is_err());
+        // The graph path enforces the same capacity contract.
+        let mut small = Gpu::by_name("rtx3060m").unwrap();
+        assert!(matches!(
+            run_model_graph(&mut small, &cfg, 1, 512, 0, 1, 2),
+            Err(ExecError::OutOfMemory { .. })
+        ));
     }
 
     #[test]
@@ -114,5 +202,39 @@ mod tests {
         // ...but sublinearly (wave quantization + underutilized small
         // batches — the paper's A100 anomaly).
         assert!(b8 < b1 * 8.0);
+    }
+
+    #[test]
+    fn graph_execution_with_one_stream_is_bit_identical_to_trace() {
+        let cfg = zoo::qwen3_0_6b();
+        let g = cfg.graph(1, 64);
+        let trace = cfg.trace(1, 64);
+        let mut gpu_a = Gpu::by_name("a100").unwrap();
+        let mut gpu_b = Gpu::by_name("a100").unwrap();
+        for _ in 0..3 {
+            let a = run_trace_once(&mut gpu_a, &trace).unwrap();
+            let b = run_graph_once(&mut gpu_b, &g, 1).unwrap();
+            assert_eq!(a, b, "streams=1 must reproduce the sequential sum exactly");
+        }
+        // And the full protocol agrees too.
+        gpu_a.reset();
+        gpu_b.reset();
+        let legacy = run_model(&mut gpu_a, &cfg, 1, 64, 1, 3).unwrap();
+        let graphed = run_model_graph(&mut gpu_b, &cfg, 1, 64, 1, 3, 1).unwrap();
+        assert_eq!(legacy.mean_s, graphed.mean_s);
+    }
+
+    #[test]
+    fn extra_streams_never_slow_a_model_down() {
+        let cfg = zoo::flan_t5_base(); // enc–dec: real branch concurrency
+        let mut gpu_a = Gpu::by_name("a100").unwrap();
+        let mut gpu_b = Gpu::by_name("a100").unwrap();
+        let g = cfg.graph(1, 64);
+        let one = run_graph_once(&mut gpu_a, &g, 1).unwrap();
+        let four = run_graph_once(&mut gpu_b, &g, 4).unwrap();
+        // Same measured kernel durations (identical issue order), so the
+        // multi-stream makespan can only shrink.
+        assert!(four <= one * (1.0 + 1e-12), "4 streams {four} vs 1 stream {one}");
+        assert!(four < one, "enc–dec branches must actually overlap");
     }
 }

@@ -1,9 +1,13 @@
-//! Transformer graph builder: a model configuration expands into the
-//! per-layer CUDA-kernel trace (the `Op` sequence) that both the simulator
-//! executes for ground truth and the predictors sum over (paper §IV-B).
-//! Inference/prefill only — the paper evaluates inference and notes the
-//! backward pass reuses the same kernel types.
+//! Transformer graph builder: a model configuration expands into a typed
+//! [`ModelGraph`] — the canonical representation the simulator executes,
+//! the predictors schedule, and the fusion passes rewrite. The legacy
+//! flat kernel trace (paper §IV-B) is the graph's lossless lowered view:
+//! `trace()` returns exactly the op sequence the pre-graph builder
+//! emitted, so every sequential consumer is unchanged. Inference/prefill
+//! only — the paper evaluates inference and notes the backward pass
+//! reuses the same kernel types.
 
+use crate::graph::{ModelGraph, NodeId};
 use crate::ops::{DType, GemmOp, Op, UtilKind, UtilOp};
 
 /// Architecture description (decoder-only or encoder–decoder).
@@ -74,78 +78,182 @@ impl TransformerConfig {
         self.weight_bytes() + self.activation_bytes(batch, seq) + 0.7e9
     }
 
-    /// One attention + FFN block's kernel trace (self-attention).
-    fn block_trace(&self, batch: usize, seq: usize, out: &mut Vec<Op>) {
+    /// One attention + FFN block (self-attention) appended to the graph.
+    /// `input` is the incoming residual stream (None for the first block,
+    /// where embeddings are not modeled as ops); the returned node is the
+    /// block's residual output. Node insertion order matches the legacy
+    /// flat trace exactly, so lowering reproduces it.
+    fn block_graph(
+        &self,
+        batch: usize,
+        seq: usize,
+        g: &mut ModelGraph,
+        input: Option<NodeId>,
+    ) -> NodeId {
         let dt = self.dtype;
         let h = self.hidden;
         let hd = self.head_dim();
         let rows = batch * seq;
         let kv_dim = self.kv_heads * hd;
+        let residual: Vec<NodeId> = input.into_iter().collect();
         // Pre-norm.
-        out.push(Op::Util(UtilOp::new(UtilKind::LayerNorm, rows, h, dt)));
+        let ln1 = g.add_node(Op::Util(UtilOp::new(UtilKind::LayerNorm, rows, h, dt)), &residual);
         // QKV projection (fused as one Linear, TN like torch Linear).
-        out.push(Op::Gemm(GemmOp::linear(rows, h + 2 * kv_dim, h, dt)));
+        let qkv = g.add_node(Op::Gemm(GemmOp::linear(rows, h + 2 * kv_dim, h, dt)), &[ln1]);
         // Attention scores + weighted values as batched MatMul (the
         // non-fused PyTorch/ONNX path the paper's Table II "BMM" row
-        // profiles), plus the softmax.
-        out.push(Op::Gemm(GemmOp::bmm(batch * self.heads, seq, seq, hd, dt)));
-        out.push(Op::Util(UtilOp::new(
-            UtilKind::Softmax,
-            batch * self.heads * seq,
-            seq,
-            dt,
-        )));
-        out.push(Op::Gemm(GemmOp::bmm(batch * self.heads, seq, hd, seq, dt)));
+        // profiles), plus the softmax — the exact subgraph the attention
+        // fusion pass rewrites to FlashAttn/CutlassAttn.
+        let scores =
+            g.add_node(Op::Gemm(GemmOp::bmm(batch * self.heads, seq, seq, hd, dt)), &[qkv]);
+        let probs = g.add_node(
+            Op::Util(UtilOp::new(UtilKind::Softmax, batch * self.heads * seq, seq, dt)),
+            &[scores],
+        );
+        let ctx = g.add_node(
+            Op::Gemm(GemmOp::bmm(batch * self.heads, seq, hd, seq, dt)),
+            &[probs, qkv],
+        );
         // Output projection + residual.
-        out.push(Op::Gemm(GemmOp::linear(rows, h, h, dt)));
-        out.push(Op::Util(UtilOp::new(UtilKind::Add, rows, h, dt)));
+        let proj = g.add_node(Op::Gemm(GemmOp::linear(rows, h, h, dt)), &[ctx]);
+        let mut add1_in = vec![proj];
+        add1_in.extend(input);
+        let add1 = g.add_node(Op::Util(UtilOp::new(UtilKind::Add, rows, h, dt)), &add1_in);
         // FFN.
-        out.push(Op::Util(UtilOp::new(UtilKind::LayerNorm, rows, h, dt)));
-        if self.gated_ffn {
-            out.push(Op::Gemm(GemmOp::linear(rows, 2 * self.ffn_hidden, h, dt)));
-            out.push(Op::Util(UtilOp::new(UtilKind::Gelu, rows, self.ffn_hidden, dt)));
-            out.push(Op::Util(UtilOp::new(UtilKind::Mul, rows, self.ffn_hidden, dt)));
+        let ln2 = g.add_node(Op::Util(UtilOp::new(UtilKind::LayerNorm, rows, h, dt)), &[add1]);
+        let ffn_out = if self.gated_ffn {
+            let upgate = g.add_node(
+                Op::Gemm(GemmOp::linear(rows, 2 * self.ffn_hidden, h, dt)),
+                &[ln2],
+            );
+            let act = g.add_node(
+                Op::Util(UtilOp::new(UtilKind::Gelu, rows, self.ffn_hidden, dt)),
+                &[upgate],
+            );
+            // Gate: the activated half times the gate half of `upgate`.
+            g.add_node(
+                Op::Util(UtilOp::new(UtilKind::Mul, rows, self.ffn_hidden, dt)),
+                &[act, upgate],
+            )
         } else {
-            out.push(Op::Gemm(GemmOp::linear(rows, self.ffn_hidden, h, dt)));
-            out.push(Op::Util(UtilOp::new(UtilKind::Gelu, rows, self.ffn_hidden, dt)));
-        }
-        out.push(Op::Gemm(GemmOp::linear(rows, h, self.ffn_hidden, dt)));
-        out.push(Op::Util(UtilOp::new(UtilKind::Add, rows, h, dt)));
+            let up = g.add_node(
+                Op::Gemm(GemmOp::linear(rows, self.ffn_hidden, h, dt)),
+                &[ln2],
+            );
+            g.add_node(
+                Op::Util(UtilOp::new(UtilKind::Gelu, rows, self.ffn_hidden, dt)),
+                &[up],
+            )
+        };
+        let down =
+            g.add_node(Op::Gemm(GemmOp::linear(rows, h, self.ffn_hidden, dt)), &[ffn_out]);
+        g.add_node(Op::Util(UtilOp::new(UtilKind::Add, rows, h, dt)), &[down, add1])
     }
 
-    /// Full inference (prefill) trace for (batch, seq).
-    pub fn trace(&self, batch: usize, seq: usize) -> Vec<Op> {
-        let mut out = Vec::new();
+    /// Decoder cross-attention (enc–dec models): attends from the decoder
+    /// residual `dec` over the encoder output `enc`. The Q and KV
+    /// projections read different streams, so they are independent
+    /// branches a multi-stream schedule can overlap.
+    fn cross_attn_graph(
+        &self,
+        batch: usize,
+        seq: usize,
+        g: &mut ModelGraph,
+        dec: NodeId,
+        enc: NodeId,
+    ) -> NodeId {
+        let dt = self.dtype;
+        let h = self.hidden;
+        let hd = self.head_dim();
+        let rows = batch * seq;
+        let ln = g.add_node(Op::Util(UtilOp::new(UtilKind::LayerNorm, rows, h, dt)), &[dec]);
+        let q = g.add_node(Op::Gemm(GemmOp::linear(rows, h, h, dt)), &[ln]);
+        let kv = g.add_node(Op::Gemm(GemmOp::linear(rows, 2 * h, h, dt)), &[enc]);
+        let scores =
+            g.add_node(Op::Gemm(GemmOp::bmm(batch * self.heads, seq, seq, hd, dt)), &[q, kv]);
+        let probs = g.add_node(
+            Op::Util(UtilOp::new(UtilKind::Softmax, batch * self.heads * seq, seq, dt)),
+            &[scores],
+        );
+        let ctx = g.add_node(
+            Op::Gemm(GemmOp::bmm(batch * self.heads, seq, hd, seq, dt)),
+            &[probs, kv],
+        );
+        let proj = g.add_node(Op::Gemm(GemmOp::linear(rows, h, h, dt)), &[ctx]);
+        g.add_node(Op::Util(UtilOp::new(UtilKind::Add, rows, h, dt)), &[proj, dec])
+    }
+
+    /// Final norm + LM head; marks the head as the graph output.
+    fn head_graph(&self, batch: usize, seq: usize, g: &mut ModelGraph, input: Option<NodeId>) {
+        let residual: Vec<NodeId> = input.into_iter().collect();
+        let ln = g.add_node(
+            Op::Util(UtilOp::new(UtilKind::LayerNorm, batch * seq, self.hidden, self.dtype)),
+            &residual,
+        );
+        let head = g.add_node(
+            Op::Gemm(GemmOp::linear(batch * seq, self.vocab, self.hidden, self.dtype)),
+            &[ln],
+        );
+        g.mark_output(head);
+    }
+
+    /// Full inference (prefill) model graph for (batch, seq). The decoder
+    /// stack depends on the encoder only through cross-attention KV, so
+    /// decoder self-attention prefixes are schedulable concurrently with
+    /// the encoder on multi-stream devices.
+    pub fn graph(&self, batch: usize, seq: usize) -> ModelGraph {
+        let mut g = ModelGraph::new();
         // Encoder stack (enc–dec models).
+        let mut enc_last: Option<NodeId> = None;
         for _ in 0..self.enc_layers {
-            self.block_trace(batch, seq, &mut out);
+            enc_last = Some(self.block_graph(batch, seq, &mut g, enc_last));
         }
         // Decoder stack (+ cross-attention for enc–dec).
+        let mut cur: Option<NodeId> = None;
         for _ in 0..self.layers {
-            self.block_trace(batch, seq, &mut out);
-            if self.enc_layers > 0 {
-                let dt = self.dtype;
-                let h = self.hidden;
-                let hd = self.head_dim();
-                let rows = batch * seq;
-                out.push(Op::Util(UtilOp::new(UtilKind::LayerNorm, rows, h, dt)));
-                out.push(Op::Gemm(GemmOp::linear(rows, h, h, dt))); // Q
-                out.push(Op::Gemm(GemmOp::linear(rows, 2 * h, h, dt))); // KV from enc
-                out.push(Op::Gemm(GemmOp::bmm(batch * self.heads, seq, seq, hd, dt)));
-                out.push(Op::Util(UtilOp::new(UtilKind::Softmax, batch * self.heads * seq, seq, dt)));
-                out.push(Op::Gemm(GemmOp::bmm(batch * self.heads, seq, hd, seq, dt)));
-                out.push(Op::Gemm(GemmOp::linear(rows, h, h, dt)));
-                out.push(Op::Util(UtilOp::new(UtilKind::Add, rows, h, dt)));
-            }
+            let block = self.block_graph(batch, seq, &mut g, cur);
+            cur = Some(if self.enc_layers > 0 {
+                let enc = enc_last.expect("encoder stack precedes cross-attention");
+                self.cross_attn_graph(batch, seq, &mut g, block, enc)
+            } else {
+                block
+            });
         }
-        // Final norm + LM head.
-        out.push(Op::Util(UtilOp::new(UtilKind::LayerNorm, batch * seq, self.hidden, self.dtype)));
-        out.push(Op::Gemm(GemmOp::linear(batch * seq, self.vocab, self.hidden, self.dtype)));
-        out
+        self.head_graph(batch, seq, &mut g, cur);
+        g
     }
 
-    /// Trace of a contiguous decoder-block range [lo, hi) — the unit the
+    /// Full inference (prefill) trace for (batch, seq): the lowered view
+    /// of [`TransformerConfig::graph`] — identical to the legacy flat
+    /// builder's output, op for op.
+    pub fn trace(&self, batch: usize, seq: usize) -> Vec<Op> {
+        self.graph(batch, seq).lower()
+    }
+
+    /// Graph of a contiguous decoder-block range [lo, hi) — the unit the
     /// partitioner (§IV-D1) splits on. `include_head` appends the LM head.
+    pub fn block_range_graph(
+        &self,
+        batch: usize,
+        seq: usize,
+        lo: usize,
+        hi: usize,
+        include_head: bool,
+    ) -> ModelGraph {
+        let mut g = ModelGraph::new();
+        let mut cur: Option<NodeId> = None;
+        for _ in lo..hi.min(self.layers) {
+            cur = Some(self.block_graph(batch, seq, &mut g, cur));
+        }
+        if include_head {
+            self.head_graph(batch, seq, &mut g, cur);
+        } else if let Some(c) = cur {
+            g.mark_output(c);
+        }
+        g
+    }
+
+    /// Lowered view of [`TransformerConfig::block_range_graph`].
     pub fn block_range_trace(
         &self,
         batch: usize,
@@ -154,15 +262,7 @@ impl TransformerConfig {
         hi: usize,
         include_head: bool,
     ) -> Vec<Op> {
-        let mut out = Vec::new();
-        for _ in lo..hi.min(self.layers) {
-            self.block_trace(batch, seq, &mut out);
-        }
-        if include_head {
-            out.push(Op::Util(UtilOp::new(UtilKind::LayerNorm, batch * seq, self.hidden, self.dtype)));
-            out.push(Op::Gemm(GemmOp::linear(batch * seq, self.vocab, self.hidden, self.dtype)));
-        }
-        out
+        self.block_range_graph(batch, seq, lo, hi, include_head).lower()
     }
 
     /// Weight bytes of a block range (+ embeddings/head on the end hosts).
@@ -191,6 +291,86 @@ impl TransformerConfig {
 mod tests {
     use super::*;
     use crate::models::zoo;
+
+    /// The pre-graph flat builder, kept verbatim as the regression anchor
+    /// for lossless lowering: graphs must reproduce this op sequence
+    /// exactly (the acceptance bar for the graph-IR refactor).
+    fn legacy_trace(cfg: &TransformerConfig, batch: usize, seq: usize) -> Vec<Op> {
+        let dt = cfg.dtype;
+        let h = cfg.hidden;
+        let hd = cfg.head_dim();
+        let rows = batch * seq;
+        let kv_dim = cfg.kv_heads * hd;
+        let block = |out: &mut Vec<Op>| {
+            out.push(Op::Util(UtilOp::new(UtilKind::LayerNorm, rows, h, dt)));
+            out.push(Op::Gemm(GemmOp::linear(rows, h + 2 * kv_dim, h, dt)));
+            out.push(Op::Gemm(GemmOp::bmm(batch * cfg.heads, seq, seq, hd, dt)));
+            out.push(Op::Util(UtilOp::new(
+                UtilKind::Softmax,
+                batch * cfg.heads * seq,
+                seq,
+                dt,
+            )));
+            out.push(Op::Gemm(GemmOp::bmm(batch * cfg.heads, seq, hd, seq, dt)));
+            out.push(Op::Gemm(GemmOp::linear(rows, h, h, dt)));
+            out.push(Op::Util(UtilOp::new(UtilKind::Add, rows, h, dt)));
+            out.push(Op::Util(UtilOp::new(UtilKind::LayerNorm, rows, h, dt)));
+            if cfg.gated_ffn {
+                out.push(Op::Gemm(GemmOp::linear(rows, 2 * cfg.ffn_hidden, h, dt)));
+                out.push(Op::Util(UtilOp::new(UtilKind::Gelu, rows, cfg.ffn_hidden, dt)));
+                out.push(Op::Util(UtilOp::new(UtilKind::Mul, rows, cfg.ffn_hidden, dt)));
+            } else {
+                out.push(Op::Gemm(GemmOp::linear(rows, cfg.ffn_hidden, h, dt)));
+                out.push(Op::Util(UtilOp::new(UtilKind::Gelu, rows, cfg.ffn_hidden, dt)));
+            }
+            out.push(Op::Gemm(GemmOp::linear(rows, h, cfg.ffn_hidden, dt)));
+            out.push(Op::Util(UtilOp::new(UtilKind::Add, rows, h, dt)));
+        };
+        let mut out = Vec::new();
+        for _ in 0..cfg.enc_layers {
+            block(&mut out);
+        }
+        for _ in 0..cfg.layers {
+            block(&mut out);
+            if cfg.enc_layers > 0 {
+                out.push(Op::Util(UtilOp::new(UtilKind::LayerNorm, rows, h, dt)));
+                out.push(Op::Gemm(GemmOp::linear(rows, h, h, dt)));
+                out.push(Op::Gemm(GemmOp::linear(rows, 2 * h, h, dt)));
+                out.push(Op::Gemm(GemmOp::bmm(batch * cfg.heads, seq, seq, hd, dt)));
+                out.push(Op::Util(UtilOp::new(
+                    UtilKind::Softmax,
+                    batch * cfg.heads * seq,
+                    seq,
+                    dt,
+                )));
+                out.push(Op::Gemm(GemmOp::bmm(batch * cfg.heads, seq, hd, seq, dt)));
+                out.push(Op::Gemm(GemmOp::linear(rows, h, h, dt)));
+                out.push(Op::Util(UtilOp::new(UtilKind::Add, rows, h, dt)));
+            }
+        }
+        out.push(Op::Util(UtilOp::new(UtilKind::LayerNorm, rows, h, dt)));
+        out.push(Op::Gemm(GemmOp::linear(rows, cfg.vocab, h, dt)));
+        out
+    }
+
+    #[test]
+    fn property_lowered_graph_matches_legacy_trace_for_every_zoo_model() {
+        for cfg in zoo::all_models() {
+            for (batch, seq) in [(1, 128), (2, 256)] {
+                let g = cfg.graph(batch, seq);
+                g.validate().unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+                let lowered = g.lower();
+                let legacy = legacy_trace(&cfg, batch, seq);
+                assert_eq!(
+                    lowered, legacy,
+                    "{} b={batch} s={seq}: lowering must be a permutation-free \
+                     (order-exact) match of the legacy flat trace",
+                    cfg.name
+                );
+                assert_eq!(cfg.trace(batch, seq), legacy);
+            }
+        }
+    }
 
     #[test]
     fn trace_structure_counts() {
@@ -248,5 +428,20 @@ mod tests {
             + (cfg.vocab * cfg.hidden * cfg.dtype.bytes()) as f64;
         let sum = a + b;
         assert!((sum - total).abs() / total < 0.01, "{sum} vs {total}");
+    }
+
+    #[test]
+    fn graph_wires_residuals_and_marks_the_head_output() {
+        let cfg = zoo::gpt2_large();
+        let g = cfg.graph(1, 64);
+        assert_eq!(g.outputs().len(), 1, "LM head is the single marked output");
+        assert_eq!(g.sinks(), g.outputs().to_vec(), "no dangling nodes");
+        // Every non-initial LayerNorm consumes the running residual.
+        let cons = g.consumers();
+        let orphans = (0..g.len())
+            .filter(|&i| g.node(crate::graph::NodeId(i)).inputs.is_empty())
+            .count();
+        assert_eq!(orphans, 1, "only the first pre-norm has no producer");
+        assert!(cons.iter().take(g.len() - 2).all(|c| !c.is_empty()));
     }
 }

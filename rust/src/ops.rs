@@ -266,9 +266,12 @@ impl Op {
             },
         }
     }
-    /// Stable 64-bit identity for noise seeding and caches.
+    /// Stable 64-bit identity for noise seeding and caches. Hashes the
+    /// structured fields directly through the deterministic
+    /// [`StableHasher`](crate::util::prng::StableHasher) — no `format!`
+    /// allocation on the service hot path.
     pub fn stable_hash(&self) -> u64 {
-        crate::util::prng::hash64(format!("{self:?}").as_bytes())
+        crate::util::prng::StableHasher::hash_of(self)
     }
 }
 
@@ -333,6 +336,17 @@ mod tests {
         let b = Op::Gemm(GemmOp::mm(128, 128, 129, DType::F32));
         assert_eq!(a.stable_hash(), a.stable_hash());
         assert_ne!(a.stable_hash(), b.stable_hash());
+        // Variant discriminants, dtypes and APIs all feed the hash.
+        let c = Op::Gemm(GemmOp::mm(128, 128, 128, DType::Bf16));
+        let d = Op::Gemm(GemmOp::linear(128, 128, 128, DType::F32));
+        let e = Op::Util(UtilOp::new(UtilKind::Relu, 128, 128, DType::F32));
+        let f = Op::Util(UtilOp::new(UtilKind::Gelu, 128, 128, DType::F32));
+        let hashes = [a, c, d, e, f].map(|op| op.stable_hash());
+        for (i, x) in hashes.iter().enumerate() {
+            for y in &hashes[i + 1..] {
+                assert_ne!(x, y);
+            }
+        }
     }
 
     #[test]

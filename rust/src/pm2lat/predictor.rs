@@ -99,6 +99,22 @@ impl Pm2Lat {
         Some(total)
     }
 
+    /// Whole-model latency over the graph IR: per-node predictions
+    /// aggregated as the `streams`-bounded critical path. `streams = 1`
+    /// reproduces [`Pm2Lat::predict_trace`] over the lowered trace
+    /// bit-for-bit; more streams expose branch concurrency. `None` when
+    /// any node's op is unsupported on the device (fused attention nodes
+    /// require the custom-kernel profile, i.e. `build` with custom
+    /// collection enabled).
+    pub fn predict_graph(
+        &self,
+        gpu: &Gpu,
+        graph: &crate::graph::ModelGraph,
+        streams: usize,
+    ) -> Option<f64> {
+        crate::graph::predict_graph_latency(graph, streams, |op| self.predict(gpu, op))
+    }
+
     /// Per-prediction cost is the headline of §IV-D2 — expose a cheap
     /// query used by the speed benchmarks: number of fitted tables.
     pub fn n_tables(&self) -> usize {
@@ -190,6 +206,21 @@ mod tests {
             Op::Gemm(GemmOp::mm(128, 128, 128, DType::Bf16)),
         ];
         assert!(pl.predict_trace(&gpu, &trace).is_none());
+        let g = crate::graph::ModelGraph::from_trace(&trace);
+        assert!(pl.predict_graph(&gpu, &g, 2).is_none());
+    }
+
+    #[test]
+    fn predict_graph_one_stream_matches_predict_trace_exactly() {
+        let (gpu, pl) = build("a100", &[DType::F32]);
+        let cfg = crate::models::zoo::gpt2_large();
+        let g = cfg.graph(1, 128);
+        let via_trace = pl.predict_trace(&gpu, &cfg.trace(1, 128)).unwrap();
+        let via_graph = pl.predict_graph(&gpu, &g, 1).unwrap();
+        assert_eq!(via_graph, via_trace, "streams=1 is the sequential sum");
+        // More streams can only shorten the predicted critical path.
+        let wide = pl.predict_graph(&gpu, &g, 4).unwrap();
+        assert!(wide <= via_trace * (1.0 + 1e-12));
     }
 
     #[test]

@@ -19,13 +19,90 @@ pub fn splitmix64(state: &mut u64) -> u64 {
 /// Stateless 64-bit hash of a byte string (FNV-1a folded through splitmix).
 /// Used to derive stable per-(device, kernel) procedural parameters.
 pub fn hash64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
+    let mut h = StableHasher::new();
+    std::hash::Hasher::write(&mut h, bytes);
+    std::hash::Hasher::finish(&h)
+}
+
+/// A `std::hash::Hasher` over the same FNV-1a + splitmix construction as
+/// [`hash64`] — deterministic across runs and independent of the standard
+/// library's (unspecified, randomizable) default hasher. Lets `#[derive
+/// (Hash)]` types produce stable identities without allocating a debug
+/// string first: `Op::stable_hash` on the service hot path feeds every
+/// structured field straight through this.
+#[derive(Clone, Debug)]
+pub struct StableHasher {
+    h: u64,
+}
+
+impl StableHasher {
+    pub fn new() -> StableHasher {
+        StableHasher { h: 0xcbf2_9ce4_8422_2325 }
     }
-    let mut s = h;
-    splitmix64(&mut s)
+
+    /// Hash any `Hash` value through the stable construction.
+    pub fn hash_of<T: std::hash::Hash + ?Sized>(value: &T) -> u64 {
+        use std::hash::Hasher;
+        let mut h = StableHasher::new();
+        value.hash(&mut h);
+        h.finish()
+    }
+}
+
+impl Default for StableHasher {
+    fn default() -> StableHasher {
+        StableHasher::new()
+    }
+}
+
+impl std::hash::Hasher for StableHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h ^= b as u64;
+            self.h = self.h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    // The std default methods feed integers through `to_ne_bytes`, which
+    // would make derived hashes differ across endianness/word size.
+    // Canonicalize every integer to little-endian (usize widened to u64)
+    // so `stable_hash` identities — and the simulator noise streams they
+    // seed — are the same on every platform.
+    #[inline]
+    fn write_u8(&mut self, x: u8) {
+        self.write(&[x]);
+    }
+    #[inline]
+    fn write_u16(&mut self, x: u16) {
+        self.write(&x.to_le_bytes());
+    }
+    #[inline]
+    fn write_u32(&mut self, x: u32) {
+        self.write(&x.to_le_bytes());
+    }
+    #[inline]
+    fn write_u64(&mut self, x: u64) {
+        self.write(&x.to_le_bytes());
+    }
+    #[inline]
+    fn write_u128(&mut self, x: u128) {
+        self.write(&x.to_le_bytes());
+    }
+    #[inline]
+    fn write_usize(&mut self, x: usize) {
+        self.write_u64(x as u64);
+    }
+    #[inline]
+    fn write_isize(&mut self, x: isize) {
+        self.write_u64(x as i64 as u64);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        let mut s = self.h;
+        splitmix64(&mut s)
+    }
 }
 
 /// xoshiro256** — fast, high-quality, deterministic.
@@ -238,6 +315,21 @@ mod tests {
     fn hash64_stable_and_sensitive() {
         assert_eq!(hash64(b"a100/k3"), hash64(b"a100/k3"));
         assert_ne!(hash64(b"a100/k3"), hash64(b"a100/k4"));
+    }
+
+    #[test]
+    fn stable_hasher_matches_hash64_on_raw_bytes() {
+        use std::hash::Hasher;
+        let mut h = StableHasher::new();
+        h.write(b"a100/k3");
+        assert_eq!(h.finish(), hash64(b"a100/k3"));
+    }
+
+    #[test]
+    fn stable_hasher_distinguishes_structured_values() {
+        assert_eq!(StableHasher::hash_of(&(1u32, 2u32)), StableHasher::hash_of(&(1u32, 2u32)));
+        assert_ne!(StableHasher::hash_of(&(1u32, 2u32)), StableHasher::hash_of(&(2u32, 1u32)));
+        assert_ne!(StableHasher::hash_of(&1u64), StableHasher::hash_of(&2u64));
     }
 
     #[test]

@@ -240,6 +240,74 @@ fn service_trace_api_predicts_models() {
 }
 
 #[test]
+fn property_fused_attention_predicts_no_slower_on_every_zoo_model() {
+    use pm2lat::graph::{AttentionFusion, Pass, PassCtx};
+    let mut gpu = Gpu::by_name("a100").unwrap();
+    // Custom-kernel profiles price the fused attention candidates.
+    let pl = Pm2Lat::build_dtypes(
+        &mut gpu,
+        &ProfileSpec::quick(),
+        &[DType::F32, DType::Bf16],
+        true,
+    );
+    gpu.reset();
+    let mut total_rewrites = 0usize;
+    for cfg in zoo::all_models() {
+        let unfused = cfg.graph(1, 512);
+        let base = pl
+            .predict_graph(&gpu, &unfused, 1)
+            .expect("every zoo model is predictable on a100");
+        let mut fused = cfg.graph(1, 512);
+        let cost = |op: &Op| pl.predict(&gpu, op);
+        let ctx = PassCtx::with_cost(&gpu.spec, &cost);
+        let rewrites = AttentionFusion { only_if_faster: true }.run(&mut fused, &ctx);
+        fused.validate().unwrap();
+        total_rewrites += rewrites;
+        let pred = pl
+            .predict_graph(&gpu, &fused, 1)
+            .expect("fused ops priced by the custom-kernel model");
+        assert!(
+            pred <= base * (1.0 + 1e-9),
+            "{}: fused {pred} > unfused {base} ({rewrites} rewrites)",
+            cfg.name
+        );
+    }
+    // The cost gate may decline individual models, but across the zoo the
+    // fused kernels must win somewhere for the pass to be meaningful.
+    assert!(total_rewrites > 0, "cost-gated fusion never fired across the zoo");
+}
+
+#[test]
+fn property_graph_lowering_is_lossless_for_every_zoo_model() {
+    for cfg in zoo::all_models() {
+        let g = cfg.graph(2, 128);
+        g.validate().unwrap();
+        assert_eq!(g.lower(), cfg.trace(2, 128), "{}: trace is the lowered view", cfg.name);
+        assert_eq!(g.len(), cfg.trace(2, 128).len());
+    }
+}
+
+#[test]
+fn service_graph_api_matches_trace_api_and_streams_help() {
+    let rt = Runtime::open_default().expect("make artifacts");
+    let mut coord = Coordinator::new(&rt);
+    let (gpu, pl) = quick_pl("a100", &[DType::F32]);
+    coord.register_device(gpu, pl).unwrap();
+    let cfg = zoo::flan_t5_base(); // enc–dec: real branch concurrency
+    let via_trace = runner::predict_model(&coord, "a100", &cfg, 2, 128)
+        .unwrap()
+        .expect("t5 F32 supported on a100");
+    let via_graph = runner::predict_model_graph(&coord, "a100", &cfg, 2, 128, 1)
+        .unwrap()
+        .expect("graph path supported");
+    assert_eq!(via_graph, via_trace, "streams=1 graph path is bit-identical");
+    let wide = runner::predict_model_graph(&coord, "a100", &cfg, 2, 128, 4)
+        .unwrap()
+        .unwrap();
+    assert!(wide < via_trace, "multi-stream schedule must shorten enc–dec");
+}
+
+#[test]
 fn service_concurrency_and_cache_do_not_change_answers() {
     let rt = Runtime::open_default().expect("make artifacts");
     let mut fast = Coordinator::new(&rt).with_threads(8).with_cache_capacity(1 << 16);
