@@ -5,18 +5,20 @@
 #                      the PJRT runtime).
 #   make lint        — formatting + clippy-as-errors; skips gracefully in
 #                      toolchain-less containers so CI plumbing still runs.
-#   make ci          — tier-1 verification in one command: lint, release
-#                      build, full test suite.
+#   make doc         — rustdoc for the crate (no deps); same graceful
+#                      no-toolchain skip as lint.
+#   make ci          — tier-1 verification in one command: lint, docs,
+#                      release build, full test suite.
 
 PYTHON ?= python3
 
-.PHONY: artifacts ci lint fmt clippy build test bench-fast
+.PHONY: artifacts ci lint doc fmt clippy build test bench-fast
 
 # aot.py uses package-relative imports — must run as a module from python/.
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
 
-ci: lint test
+ci: lint doc test
 
 # Graceful no-toolchain path: some dev containers ship without cargo, and
 # lint is the one stage that may safely no-op there (skipping style checks
@@ -27,6 +29,16 @@ lint:
 		cargo fmt --check && cargo clippy --all-targets -- -D warnings; \
 	else \
 		echo "lint: cargo not found — skipping (toolchain-less container)"; \
+	fi
+
+# Docs are load-bearing (README/ARCHITECTURE link into rustdoc): build
+# them in CI, with the same graceful skip as lint when cargo is absent
+# (skipping doc generation loses nothing; build/test still hard-fail).
+doc:
+	@if command -v cargo >/dev/null 2>&1; then \
+		cargo doc --no-deps; \
+	else \
+		echo "doc: cargo not found — skipping (toolchain-less container)"; \
 	fi
 
 fmt:

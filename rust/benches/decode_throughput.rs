@@ -1,0 +1,91 @@
+//! Bench: autoregressive-decode prediction throughput — the generation
+//! serving lane of PR 3. Sweeps (prompt, gen) shapes across an F32 and a
+//! BF16 model through `Coordinator::submit_generations`, reporting the
+//! prefill latency, the time-per-output-token curve (first → last step,
+//! showing KV-cache growth), prediction throughput in decode steps/s, and
+//! the warm-cache speedup that comes from consecutive steps sharing every
+//! projection op (scalar + batched within-batch dedup plus the LRU).
+
+use std::time::Instant;
+
+use pm2lat::coordinator::{build_service, GenerationRequest, PredictorKind};
+use pm2lat::models::transformer::GenerationSpec;
+use pm2lat::models::zoo;
+use pm2lat::ops::DType;
+use pm2lat::runtime::Runtime;
+use pm2lat::util::pool;
+
+fn main() {
+    let rt = Runtime::open_default().expect("run `make artifacts` first");
+    let fast_mode = std::env::var("PM2LAT_BENCH_FAST").is_ok();
+    let devices = ["a100", "l4"];
+    let coord = build_service(
+        &rt,
+        pool::default_threads(),
+        1 << 17,
+        &devices,
+        &[DType::F32, DType::Bf16],
+    )
+    .unwrap();
+
+    let shapes: &[(usize, usize)] = if fast_mode {
+        &[(128, 16), (512, 32)]
+    } else {
+        &[(128, 16), (512, 32), (1024, 64), (2048, 128)]
+    };
+    let models = [zoo::gpt2_large(), zoo::qwen3_0_6b()];
+
+    println!("\n=== decode-throughput: generation prediction via submit_generations ===");
+    for cfg in &models {
+        println!("\n-- {} ({}) --", cfg.name, cfg.dtype);
+        for &(prompt, gen_len) in shapes {
+            let reqs: Vec<GenerationRequest> = devices
+                .iter()
+                .map(|d| GenerationRequest {
+                    device: d.to_string(),
+                    config: cfg.clone(),
+                    batch: 1,
+                    spec: GenerationSpec::new(prompt, gen_len),
+                    kind: PredictorKind::Pm2LatBatched,
+                    streams: 1,
+                })
+                .collect();
+            let graphs = (reqs.len() * (gen_len + 1)) as f64;
+            let t0 = Instant::now();
+            let cold = coord.submit_generations(&reqs).unwrap();
+            let cold_s = t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let warm = coord.submit_generations(&reqs).unwrap();
+            let warm_s = t0.elapsed().as_secs_f64();
+            assert_eq!(cold, warm, "generation predictions must be deterministic");
+            // First supported device's curve (BF16 models answer None on
+            // F32-only devices — that's the support table, not an error).
+            let p = cold.iter().flatten().next();
+            match p {
+                Some(p) => {
+                    let first = p.step_s.first().copied().unwrap_or(0.0);
+                    let last = p.step_s.last().copied().unwrap_or(0.0);
+                    assert!(
+                        last >= first,
+                        "decode steps must not get cheaper as the cache grows"
+                    );
+                    println!(
+                        "prompt {prompt:>5} gen {gen_len:>4}: prefill {:>8.2} ms | tpot {:>7.1} µs \
+                         (step1 {:>7.1} → step{gen_len} {:>7.1}) | {:>8.0} graphs/s cold, {:>8.0} warm ({:.1}x)",
+                        p.prefill_s * 1e3,
+                        p.time_per_output_token_s() * 1e6,
+                        first * 1e6,
+                        last * 1e6,
+                        graphs / cold_s,
+                        graphs / warm_s,
+                        cold_s / warm_s,
+                    );
+                }
+                None => println!(
+                    "prompt {prompt:>5} gen {gen_len:>4}: unsupported on every bench device"
+                ),
+            }
+        }
+    }
+    println!("\n{}", coord.metrics.summary());
+}

@@ -1,7 +1,11 @@
 //! # apps — the two §IV-D applications
 //!
 //! [`partition`]: pipeline partitioning of Qwen3-4B across heterogeneous
-//! edge devices; [`nas`]: NAS-preprocessing latency caching at scale.
+//! edge devices (block-range traces + memory feasibility + predicted
+//! stage balance); [`nas`]: NAS-preprocessing latency caching at scale —
+//! the §IV-D2 headline that PM2Lat's analytical predictions are cheap
+//! enough to enumerate 400M-configuration search spaces. Both consume
+//! the prediction *service* (`coordinator`), not raw `Pm2Lat`.
 
 pub mod nas;
 pub mod partition;

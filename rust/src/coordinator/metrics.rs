@@ -53,6 +53,11 @@ pub struct Metrics {
     /// identical `(device, op)` misses in one submission launch once and
     /// fan the result out.
     pub batched_dedup: AtomicU64,
+    /// Lanes answered by within-batch dedup on the *scalar* fan-out path:
+    /// identical `(device, op)` work items are predicted once per batch.
+    /// Decode workloads make these common — consecutive decode steps
+    /// share every projection op.
+    pub scalar_dedup: AtomicU64,
     /// Batched-predictor builds that failed at device registration (the
     /// device degrades to the scalar path).
     pub batcher_errors: AtomicU64,
@@ -70,6 +75,7 @@ impl Metrics {
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             batched_dedup: AtomicU64::new(0),
+            scalar_dedup: AtomicU64::new(0),
             batcher_errors: AtomicU64::new(0),
             service_ns_sum: AtomicU64::new(0),
             reservoir: Mutex::new(Reservoir::new()),
@@ -103,6 +109,10 @@ impl Metrics {
 
     pub fn record_dedup(&self, n: usize) {
         self.batched_dedup.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_scalar_dedup(&self, n: usize) {
+        self.scalar_dedup.fetch_add(n as u64, Ordering::Relaxed);
     }
 
     /// Mean service time per *batch* in microseconds (exact).
@@ -156,7 +166,7 @@ impl Metrics {
         format!(
             "requests={} batches={} pjrt_calls={} unsupported={} \
              mean_batch={:.1}µs mean_req={:.2}µs p50_batch={:.1}µs p99_batch={:.1}µs \
-             cache_hit_rate={:.1}% batched_dedup={} batcher_errors={}",
+             cache_hit_rate={:.1}% batched_dedup={} scalar_dedup={} batcher_errors={}",
             self.requests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.pjrt_calls.load(Ordering::Relaxed),
@@ -167,6 +177,7 @@ impl Metrics {
             p99,
             self.cache_hit_rate() * 100.0,
             self.batched_dedup.load(Ordering::Relaxed),
+            self.scalar_dedup.load(Ordering::Relaxed),
             self.batcher_errors.load(Ordering::Relaxed),
         )
     }
@@ -237,11 +248,13 @@ mod tests {
         m.record_cache(true);
         m.record_batcher_error();
         m.record_dedup(3);
+        m.record_scalar_dedup(7);
         let s = m.summary();
         assert!(s.contains("p50_batch="), "{s}");
         assert!(s.contains("p99_batch="), "{s}");
         assert!(s.contains("cache_hit_rate=100.0%"), "{s}");
         assert!(s.contains("batched_dedup=3"), "{s}");
+        assert!(s.contains("scalar_dedup=7"), "{s}");
         assert!(s.contains("batcher_errors=1"), "{s}");
     }
 }

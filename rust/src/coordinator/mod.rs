@@ -24,19 +24,30 @@
 //! [`Metrics`] tracks request/batch/PJRT/cache/dedup counters plus a
 //! *bounded* service-time reservoir: p50/p99 come from at most
 //! [`RESERVOIR_CAP`] retained samples (Vitter's algorithm R), so metrics
-//! memory is O(1) under sustained traffic. Identical `(device, op)` cache
-//! misses within one batched submission are deduplicated — one PJRT lane,
-//! fanned out to every requester. Two whole-model APIs sit on top:
-//! the trace-level [`Coordinator::submit_traces`] (sequential sum) and the
-//! graph-level [`Coordinator::submit_graphs`], which accepts
+//! memory is O(1) under sustained traffic. Identical `(device, op)` work
+//! items within one submission are deduplicated on *both* fan-out paths:
+//! batched misses launch one PJRT lane and fan the result out
+//! (`batched_dedup`), and scalar work items are predicted once per batch
+//! (`scalar_dedup`) — decode workloads repeat every projection op across
+//! steps, so the scalar dedup is what makes generation serving cheap.
+//! Three whole-model APIs sit on top: the trace-level
+//! [`Coordinator::submit_traces`] (sequential sum), the graph-level
+//! [`Coordinator::submit_graphs`], which accepts
 //! [`crate::graph::ModelGraph`] requests, batches GEMM lanes across graph
 //! nodes, caches at subgraph granularity (repeated transformer blocks hit
-//! per-node), and aggregates latency as the stream-capped critical path.
-//! The NAS preprocessing application (§IV-D2) and the model runner consume
-//! the service through these rather than driving raw `Pm2Lat`. `pm2lat
-//! serve-bench` and `benches/serve_throughput.rs` measure requests/sec
-//! against the serial no-cache baseline, across F32 scalar/batched, BF16
-//! and NeuSight lanes.
+//! per-node), and aggregates latency as the stream-capped critical path —
+//! and the generation-level [`Coordinator::submit_generations`], which
+//! expands a (prompt, generate) request into prefill + per-step decode
+//! graphs and answers the full latency curve
+//! ([`crate::pm2lat::predictor::GenerationPrediction`]: prefill, per-step
+//! decode, time-per-output-token). The NAS preprocessing application
+//! (§IV-D2) and the model runner consume the service through these rather
+//! than driving raw `Pm2Lat`. `pm2lat serve-bench` and
+//! `benches/serve_throughput.rs` measure requests/sec against the serial
+//! no-cache baseline, across F32 scalar/batched, BF16 and NeuSight lanes;
+//! `benches/decode_throughput.rs` sweeps generation shapes through
+//! `submit_generations`, and `serve-bench --slo-p99-us N` turns the p99
+//! reservoir into a CI gate.
 
 pub mod cache;
 pub mod metrics;
@@ -47,5 +58,6 @@ pub use metrics::{Metrics, RESERVOIR_CAP};
 pub use service::{
     ab_phases, build_f32_service, build_service, mixed_workload, mixed_workload_dtyped,
     quick_neusight, timed_submit, to_batched, to_kind, AbReport, Coordinator, Engine,
-    GraphRequest, PredictorKind, Request, TraceRequest, DEFAULT_CACHE_CAPACITY,
+    GenerationRequest, GraphRequest, PredictorKind, Request, TraceRequest,
+    DEFAULT_CACHE_CAPACITY,
 };

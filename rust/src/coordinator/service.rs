@@ -79,6 +79,24 @@ pub struct GraphRequest {
     pub streams: usize,
 }
 
+/// A whole-generation prediction request: prefill over `prompt_len`
+/// tokens, then `gen_len` autoregressive decode steps. The service
+/// expands the request into the prefill graph plus per-step decode
+/// graphs; all node ops across all steps (and all requests in the batch)
+/// join one resolved submission, so batched GEMM lanes amortize across
+/// steps and the cache + within-batch dedup absorb the projections that
+/// repeat identically from step to step (only the attention ops change
+/// with kv_len).
+#[derive(Clone, Debug)]
+pub struct GenerationRequest {
+    pub device: String,
+    pub config: crate::models::TransformerConfig,
+    pub batch: usize,
+    pub spec: crate::models::transformer::GenerationSpec,
+    pub kind: PredictorKind,
+    pub streams: usize,
+}
+
 /// A request after device interning: (device id, kind, op).
 type Resolved = (usize, PredictorKind, Op);
 
@@ -198,10 +216,55 @@ impl Engine {
     /// pool. Results come back in input order regardless of scheduling,
     /// and every value is deterministic — concurrent runs are
     /// bit-reproducible.
+    ///
+    /// Identical `(device, op)` items within one batch are predicted once
+    /// and fanned out (predictions are deterministic, so the fan-out is
+    /// exact). Decode workloads make duplicates the common case: step
+    /// `t+1` differs from step `t` only in kv_len, so every projection op
+    /// repeats across the steps of one submission. Deduped lanes are
+    /// tallied in `metrics.scalar_dedup`, and count as cache hits only
+    /// when the cache is enabled *and* the unique lane produced a value
+    /// (it is then cached — a non-deduped lookup would have hit);
+    /// duplicates of unsupported ops never inflate the hit rate.
     fn run_scalar(&self, work: &[(usize, Op)]) -> Vec<Option<f64>> {
-        pool::parallel_map_chunked(work, self.threads, SCALAR_CHUNK, |(dev, op)| {
+        let mut index: HashMap<(usize, Op), usize> = HashMap::with_capacity(work.len());
+        let mut uniq: Vec<(usize, Op)> = Vec::with_capacity(work.len());
+        let mut mult: Vec<u64> = Vec::with_capacity(work.len());
+        let mut slot: Vec<usize> = Vec::with_capacity(work.len());
+        for &(dev, op) in work {
+            let next = uniq.len();
+            let e = *index.entry((dev, op)).or_insert(next);
+            if e == next {
+                uniq.push((dev, op));
+                mult.push(0);
+            }
+            mult[e] += 1;
+            slot.push(e);
+        }
+        let dups = work.len() - uniq.len();
+        if dups > 0 {
+            self.metrics.record_scalar_dedup(dups);
+        }
+        let res = pool::parallel_map_chunked(&uniq, self.threads, SCALAR_CHUNK, |(dev, op)| {
             self.predict_cached(*dev, op)
-        })
+        });
+        if dups > 0 && self.cache.enabled() {
+            // Count dedup-served lanes as cache hits only when the unique
+            // lane actually produced (and therefore cached) a value —
+            // duplicates of an unsupported op were never cacheable and
+            // must not inflate the hit rate.
+            let extra: u64 = res
+                .iter()
+                .zip(&mult)
+                .filter(|(r, _)| r.is_some())
+                .map(|(_, m)| m - 1)
+                .sum();
+            if extra > 0 {
+                use std::sync::atomic::Ordering;
+                self.metrics.cache_hits.fetch_add(extra, Ordering::Relaxed);
+            }
+        }
+        slot.into_iter().map(|i| res[i]).collect()
     }
 
     /// Serve a batch of requests on the analytical path only; responses in
@@ -421,6 +484,67 @@ impl<'rt> Coordinator<'rt> {
             .collect())
     }
 
+    /// Generation-level API: one response per generation request — the
+    /// prefill makespan plus every decode step's makespan, or `None` when
+    /// any op is unsupported on the device. The whole batch (prefill +
+    /// all steps of all requests) is one resolved submission: decode step
+    /// `t+1` differs from step `t` only in kv_len, so the batched GEMM
+    /// lanes, the within-batch dedup (scalar and batched) and the LRU
+    /// absorb the per-step projections — the marginal cost of a longer
+    /// generation is just its attention ops.
+    pub fn submit_generations(
+        &self,
+        reqs: &[GenerationRequest],
+    ) -> Result<Vec<Option<crate::pm2lat::predictor::GenerationPrediction>>> {
+        let t0 = Instant::now();
+        let mut resolved: Vec<Resolved> = Vec::new();
+        // Per request: the graphs (prefill first) and each graph's span.
+        let mut shapes: Vec<(Vec<ModelGraph>, Vec<(usize, usize)>, usize)> =
+            Vec::with_capacity(reqs.len());
+        for r in reqs {
+            let dev = self.resolve_device(&r.device)?;
+            let (prefill, steps) = r.config.generation_graphs(r.batch, &r.spec);
+            let mut graphs = Vec::with_capacity(1 + steps.len());
+            graphs.push(prefill);
+            graphs.extend(steps);
+            let mut spans = Vec::with_capacity(graphs.len());
+            for g in &graphs {
+                let start = resolved.len();
+                resolved.extend(g.nodes().iter().map(|n| (dev, r.kind, n.op)));
+                spans.push((start, resolved.len()));
+            }
+            shapes.push((graphs, spans, r.streams));
+        }
+        let per_op = self.dispatch_recorded(t0, &resolved)?;
+        let mut out = Vec::with_capacity(reqs.len());
+        for (graphs, spans, streams) in &shapes {
+            let mut makespans = Vec::with_capacity(graphs.len());
+            let mut ok = true;
+            for (g, &(a, b)) in graphs.iter().zip(spans) {
+                let mut dur = Vec::with_capacity(b - a);
+                for v in &per_op[a..b] {
+                    match v {
+                        Some(x) => dur.push(*x),
+                        None => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if !ok {
+                    break;
+                }
+                makespans
+                    .push(crate::graph::schedule::schedule(g, *streams, &dur).makespan_s);
+            }
+            out.push(ok.then(|| crate::pm2lat::predictor::GenerationPrediction {
+                prefill_s: makespans[0],
+                step_s: makespans[1..].to_vec(),
+            }));
+        }
+        Ok(out)
+    }
+
     /// Shared dispatch: scatter per-request answers, return the PJRT
     /// launch count for metrics.
     fn submit_resolved(&self, reqs: &[Resolved]) -> Result<(Vec<Option<f64>>, usize)> {
@@ -491,7 +615,17 @@ impl<'rt> Coordinator<'rt> {
         for &i in idxs {
             let op = &reqs[i].2;
             let gemm = match op {
-                Op::Gemm(g) if g.dtype == DType::F32 && bp.is_some() => *g,
+                // Gemv-degenerate (decode-step) GEMMs spill to the scalar
+                // path: the PJRT artifact evaluates the tensor-core wave
+                // model, and decode shapes must route to the measured
+                // memory-bound profile instead.
+                Op::Gemm(g)
+                    if g.dtype == DType::F32
+                        && bp.is_some()
+                        && !crate::gpusim::gemm::is_gemv_degenerate(g) =>
+                {
+                    *g
+                }
                 _ => {
                     scalar.push((dev, *op));
                     scalar_slots.push(i);
@@ -1142,6 +1276,93 @@ mod tests {
             hits >= n_nodes as u64,
             "every node (incl. repeated fused blocks) must hit: {hits} of {n_nodes}"
         );
+    }
+
+    #[test]
+    fn scalar_dedup_predicts_identical_lanes_once() {
+        let e = engine();
+        let op = Op::Gemm(GemmOp::mm(1536, 1536, 1536, DType::F32));
+        let reqs: Vec<Request> = (0..64)
+            .map(|_| Request { device: "a100".into(), op, kind: PredictorKind::Pm2Lat })
+            .collect();
+        let out = e.submit_scalar(&reqs).unwrap();
+        let v = out[0].expect("supported op");
+        assert!(out.iter().all(|o| *o == Some(v)), "fan-out is exact");
+        assert_eq!(e.metrics.scalar_dedup.load(Ordering::Relaxed), 63);
+        // Only the unique lane consulted the predictor: one miss, and the
+        // deduped lanes count as hits (the value is cached by the time a
+        // non-deduped lookup would run).
+        assert_eq!(e.metrics.cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(e.metrics.cache_hits.load(Ordering::Relaxed), 63);
+        // Dedup without a cache is still exact (pure determinism).
+        let mut nc = Engine::new().with_cache_capacity(0);
+        let (gpu, pl) = fitted("a100");
+        nc.register_device(gpu, pl).unwrap();
+        let out2 = nc.submit_scalar(&reqs).unwrap();
+        assert_eq!(out, out2);
+        assert_eq!(nc.metrics.scalar_dedup.load(Ordering::Relaxed), 63);
+        assert_eq!(nc.metrics.cache_hits.load(Ordering::Relaxed), 0, "no cache, no hits");
+        // Duplicates of an *unsupported* op dedup but never count as
+        // hits — nothing was cached, so the hit rate must not inflate.
+        let bad_op = Op::Gemm(GemmOp::mm(64, 64, 64, DType::Bf16));
+        let bad: Vec<Request> = (0..8)
+            .map(|_| Request { device: "t4".into(), op: bad_op, kind: PredictorKind::Pm2Lat })
+            .collect();
+        let hits_before = e.metrics.cache_hits.load(Ordering::Relaxed);
+        let none = e.submit_scalar(&bad).unwrap();
+        assert!(none.iter().all(|o| o.is_none()));
+        assert_eq!(e.metrics.cache_hits.load(Ordering::Relaxed), hits_before);
+        assert_eq!(e.metrics.scalar_dedup.load(Ordering::Relaxed), 63 + 7);
+    }
+
+    #[test]
+    fn submit_generations_matches_direct_prediction_and_amortizes_steps() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let c = coordinator(&rt);
+        let cfg = crate::models::zoo::gpt2_large();
+        let spec = crate::models::transformer::GenerationSpec::new(64, 6);
+        let req = GenerationRequest {
+            device: "a100".into(),
+            config: cfg.clone(),
+            batch: 1,
+            spec,
+            kind: PredictorKind::Pm2Lat,
+            streams: 1,
+        };
+        let out = c.submit_generations(std::slice::from_ref(&req)).unwrap();
+        let gen = out[0].clone().expect("gpt2 F32 supported");
+        assert_eq!(gen.step_s.len(), 6);
+        // Bit-identical to the direct predictor path: same ops, same
+        // per-op predictions, same schedule aggregation.
+        let direct = {
+            let gpu = c.gpu("a100").unwrap();
+            let pl = c.pm2lat("a100").unwrap();
+            pl.predict_generation(gpu, &cfg, 1, &spec, 1).unwrap()
+        };
+        assert_eq!(gen, direct, "service generation == direct prediction");
+        // Decode-step cost grows with kv_len through the service too.
+        for t in 1..gen.step_s.len() {
+            assert!(gen.step_s[t] > gen.step_s[t - 1]);
+        }
+        // Steps repeat every projection op: the scalar dedup must have
+        // absorbed a large share of the lanes.
+        assert!(
+            c.metrics.scalar_dedup.load(Ordering::Relaxed) > 100,
+            "decode steps must dedup ({} lanes saved)",
+            c.metrics.scalar_dedup.load(Ordering::Relaxed)
+        );
+        // Unknown device errors; unsupported dtype answers None.
+        let bad = GenerationRequest { device: "h100".into(), ..req.clone() };
+        assert!(c.submit_generations(std::slice::from_ref(&bad)).is_err());
+        let none = GenerationRequest {
+            device: "t4".into(),
+            config: crate::models::zoo::qwen3_0_6b(), // BF16 on T4
+            batch: 1,
+            spec,
+            kind: PredictorKind::Pm2Lat,
+            streams: 1,
+        };
+        assert_eq!(c.submit_generations(std::slice::from_ref(&none)).unwrap(), vec![None]);
     }
 
     #[test]

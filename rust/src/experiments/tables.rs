@@ -255,22 +255,27 @@ pub fn table6(lab: &mut Lab) -> Result<String> {
                         elems: rng.log_uniform_int(1 << 14, 1 << 26) as usize,
                         dtype,
                     },
-                    "F-Attn" => CustomOp::FlashAttn {
-                        batch: rng.int_range(1, 8) as usize,
-                        heads: rng.int_range(8, 32) as usize,
-                        seq: rng.log_uniform_int(128, 4096) as usize,
-                        head_dim: 64,
-                        dtype,
-                        causal: false,
-                    },
-                    _ => CustomOp::CutlassAttn {
-                        batch: rng.int_range(1, 8) as usize,
-                        heads: rng.int_range(8, 32) as usize,
-                        seq: rng.log_uniform_int(128, 4096) as usize,
-                        head_dim: 64,
-                        dtype,
-                        causal: false,
-                    },
+                    "F-Attn" => {
+                        // Draw order (batch, heads, seq) preserved from
+                        // the pre-q/kv vocabulary: same RNG stream, same
+                        // evaluation shapes.
+                        let batch = rng.int_range(1, 8) as usize;
+                        let heads = rng.int_range(8, 32) as usize;
+                        let seq = rng.log_uniform_int(128, 4096) as usize;
+                        CustomOp::FlashAttn {
+                            batch, heads, q_len: seq, kv_len: seq,
+                            head_dim: 64, dtype, causal: false,
+                        }
+                    }
+                    _ => {
+                        let batch = rng.int_range(1, 8) as usize;
+                        let heads = rng.int_range(8, 32) as usize;
+                        let seq = rng.log_uniform_int(128, 4096) as usize;
+                        CustomOp::CutlassAttn {
+                            batch, heads, q_len: seq, kv_len: seq,
+                            head_dim: 64, dtype, causal: false,
+                        }
+                    }
                 };
                 let supported = crate::gpusim::custom::supported(&lab.gpu(device).spec, &op);
                 if !supported {

@@ -114,41 +114,58 @@ pub fn supported(dev: &DeviceSpec, op: &CustomOp) -> bool {
     }
 }
 
-/// Fused-attention latency: wave model over B·H·ceil(S/block_q) blocks,
-/// each streaming K/V once (O(S·d) memory — the whole point of fusing).
+/// Fused-attention latency: wave model over B·H·ceil(q/block_q) blocks,
+/// each streaming K/V once (O(kv·d) memory — the whole point of fusing).
+///
+/// Prefill (`q == kv == S`) keeps the historical behaviour: partial
+/// Q-tiles execute fully, like the GEMM model's partial blocks. A decode
+/// step (`q < block_q`, typically `q == 1`) takes the flash-decoding
+/// layout instead — one thin tile whose compute scales with the actual
+/// query rows while the memory stream is the whole KV cache — so decode
+/// kernels land in the memory-bound regime, not the tensor-core one.
+#[allow(clippy::too_many_arguments)]
 fn attn_latency(
     dev: &DeviceSpec,
     family: &str,
     batch: usize,
     heads: usize,
-    seq: usize,
+    q_len: usize,
+    kv_len: usize,
     head_dim: usize,
     dtype: DType,
     causal: bool,
     freq_ghz: f64,
 ) -> f64 {
     let p = attn_params(dev, family, dtype);
-    let blocks = batch * heads * seq.div_ceil(p.block_q);
+    // Degenerate window: nothing to attend — a launch-only kernel (and a
+    // guard against 0/0 in the causal ratio below).
+    if q_len == 0 || kv_len == 0 {
+        return dev.launch_us * 1e-6;
+    }
+    let blocks = batch * heads * q_len.div_ceil(p.block_q);
     let bpsm = 2usize;
     let capacity = dev.sm_count * bpsm;
     let full_waves = blocks / capacity;
     let tail = blocks % capacity;
     let dsize = dtype.bytes() as f64;
-    // Per-block compute: Q-block (block_q × d) against all S keys, twice
-    // (QKᵀ and PV); causal masking halves average work.
-    let mut block_flops =
-        4.0 * p.block_q as f64 * seq as f64 * head_dim as f64;
-    if causal {
-        block_flops *= 0.5;
-    }
-    let eff = p.base_eff * seq as f64 / (seq as f64 + p.seq_half);
+    // Rows a Q-tile actually computes: full tiles when q ≥ block_q
+    // (partial trailing tiles execute fully, §III-C), the thin
+    // flash-decoding tile otherwise.
+    let q_rows = q_len.min(p.block_q) as f64;
+    // Per-block compute: Q-tile rows against all kv keys, twice (QKᵀ and
+    // PV); the causal mask skips exactly the unattended pairs.
+    let causal_ratio = crate::ops::attended_pairs(q_len, kv_len, causal)
+        / crate::ops::attended_pairs(q_len, kv_len, false);
+    let block_flops =
+        4.0 * q_rows * kv_len as f64 * head_dim as f64 * causal_ratio;
+    let eff = p.base_eff * kv_len as f64 / (kv_len as f64 + p.seq_half);
     let peak = dev.peak_tflops(dtype).unwrap_or(dev.fp32_tflops) * 1e12
         * (freq_ghz / dev.max_freq_ghz);
     let per_sm = peak / dev.sm_count as f64;
     let t_compute = block_flops * bpsm as f64 / (per_sm * eff);
-    // Per-block memory: stream K,V (S×d each) + Q/O block.
-    let block_bytes = (2.0 * seq as f64 * head_dim as f64
-        + 2.0 * p.block_q as f64 * head_dim as f64)
+    // Per-block memory: stream K,V (kv×d each) + the Q/O rows.
+    let block_bytes = (2.0 * kv_len as f64 * head_dim as f64
+        + 2.0 * q_rows * head_dim as f64)
         * dsize;
     let wave_bytes = block_bytes * capacity as f64;
     let t_mem = wave_bytes * (1.0 - p.l2_frac) / (dev.dram_bw() * p.mem_eff)
@@ -183,28 +200,22 @@ pub fn custom_latency(dev: &DeviceSpec, op: &CustomOp, freq_ghz: f64) -> Option<
             let t_alu = elems as f64 * 4.0 / (dev.int_gops * 1e9 * freq_scale);
             Some(dev.launch_us * 1e-6 + (bytes / bw).max(t_alu))
         }
-        CustomOp::FlashAttn { batch, heads, seq, head_dim, dtype, causal } => {
-            Some(attn_latency(dev, "flash", batch, heads, seq, head_dim, dtype, causal, freq_ghz))
+        CustomOp::FlashAttn { batch, heads, q_len, kv_len, head_dim, dtype, causal } => {
+            Some(attn_latency(dev, "flash", batch, heads, q_len, kv_len, head_dim, dtype, causal, freq_ghz))
         }
-        CustomOp::CutlassAttn { batch, heads, seq, head_dim, dtype, causal } => {
-            Some(attn_latency(dev, "cutlass", batch, heads, seq, head_dim, dtype, causal, freq_ghz))
+        CustomOp::CutlassAttn { batch, heads, q_len, kv_len, head_dim, dtype, causal } => {
+            Some(attn_latency(dev, "cutlass", batch, heads, q_len, kv_len, head_dim, dtype, causal, freq_ghz))
         }
     }
 }
 
-/// Counters for custom ops (coarser than GEMM — fused kernels expose less).
+/// Counters for custom ops (coarser than GEMM — fused kernels expose
+/// less). Byte totals come from the op's own traffic model
+/// ([`CustomOp::io_bytes`]), which for attention includes the KV-cache
+/// stream and append.
 pub fn custom_counters(dev: &DeviceSpec, op: &CustomOp) -> Counters {
     let flops = op.flops();
-    let bytes = match *op {
-        CustomOp::TritonMM { m, n, k, dtype } => {
-            ((m * k + k * n + m * n) * dtype.bytes()) as f64
-        }
-        CustomOp::TritonVec { elems, dtype } => (elems * dtype.bytes() * 2) as f64,
-        CustomOp::FlashAttn { batch, heads, seq, head_dim, dtype, .. }
-        | CustomOp::CutlassAttn { batch, heads, seq, head_dim, dtype, .. } => {
-            (batch * heads * seq * head_dim * 4 * dtype.bytes()) as f64
-        }
-    };
+    let bytes = op.io_bytes();
     let l2_share = if bytes < dev.l2_bytes() { 0.7 } else { 0.3 };
     Counters {
         flops,
@@ -226,11 +237,11 @@ mod tests {
         let b5070 = device_by_name("rtx5070").unwrap();
         let a100 = device_by_name("a100").unwrap();
         let fa = CustomOp::FlashAttn {
-            batch: 1, heads: 8, seq: 512, head_dim: 64,
+            batch: 1, heads: 8, q_len: 512, kv_len: 512, head_dim: 64,
             dtype: DType::F32, causal: false,
         };
         let ca = CustomOp::CutlassAttn {
-            batch: 1, heads: 8, seq: 512, head_dim: 64,
+            batch: 1, heads: 8, q_len: 512, kv_len: 512, head_dim: 64,
             dtype: DType::F32, causal: false,
         };
         assert!(!supported(&t4, &fa), "FA2 unsupported on Turing");
@@ -255,7 +266,7 @@ mod tests {
     fn attention_latency_scales_superlinearly_in_seq() {
         let d = device_by_name("a100").unwrap();
         let mk = |seq| CustomOp::FlashAttn {
-            batch: 4, heads: 16, seq, head_dim: 64,
+            batch: 4, heads: 16, q_len: seq, kv_len: seq, head_dim: 64,
             dtype: DType::Bf16, causal: false,
         };
         let t1 = custom_latency(&d, &mk(512), d.max_freq_ghz).unwrap();
@@ -268,7 +279,7 @@ mod tests {
     fn causal_cheaper_than_full() {
         let d = device_by_name("l4").unwrap();
         let mk = |causal| CustomOp::FlashAttn {
-            batch: 2, heads: 8, seq: 2048, head_dim: 64,
+            batch: 2, heads: 8, q_len: 2048, kv_len: 2048, head_dim: 64,
             dtype: DType::Bf16, causal,
         };
         let tc = custom_latency(&d, &mk(true), d.max_freq_ghz).unwrap();
@@ -277,14 +288,61 @@ mod tests {
     }
 
     #[test]
+    fn decode_step_latency_monotone_in_kv_and_far_cheaper_than_prefill() {
+        // The decode regime: one query streaming a growing KV cache.
+        let d = device_by_name("a100").unwrap();
+        let dec = |kv| CustomOp::FlashAttn {
+            batch: 8, heads: 16, q_len: 1, kv_len: kv, head_dim: 64,
+            dtype: DType::Bf16, causal: true,
+        };
+        let mut prev = 0.0;
+        for kv in [128usize, 512, 2048, 8192] {
+            let t = custom_latency(&d, &dec(kv), d.max_freq_ghz).unwrap();
+            assert!(t > prev, "kv={kv}: {t} <= {prev}");
+            prev = t;
+        }
+        // A decode step at kv = 2048 does ~1/2048 of the prefill pairs —
+        // it must be orders of magnitude cheaper than the square kernel.
+        let prefill = CustomOp::FlashAttn {
+            batch: 8, heads: 16, q_len: 2048, kv_len: 2048, head_dim: 64,
+            dtype: DType::Bf16, causal: true,
+        };
+        let tp = custom_latency(&d, &prefill, d.max_freq_ghz).unwrap();
+        let td = custom_latency(&d, &dec(2048), d.max_freq_ghz).unwrap();
+        assert!(tp / td > 20.0, "prefill {tp} vs decode step {td}");
+    }
+
+    #[test]
+    fn decode_step_is_memory_bound_not_compute_bound() {
+        // At q = 1 the Q-tile is thin: halving the clock (a pure compute
+        // effect) must barely move a decode step, while it clearly slows
+        // the compute-bound prefill kernel.
+        let d = device_by_name("a100").unwrap();
+        let dec = CustomOp::FlashAttn {
+            batch: 8, heads: 16, q_len: 1, kv_len: 4096, head_dim: 64,
+            dtype: DType::F32, causal: true,
+        };
+        let t_full = custom_latency(&d, &dec, d.max_freq_ghz).unwrap();
+        let t_half = custom_latency(&d, &dec, d.max_freq_ghz / 2.0).unwrap();
+        assert!(t_half < t_full * 1.15, "decode step must be memory-bound");
+        let pre = CustomOp::FlashAttn {
+            batch: 8, heads: 16, q_len: 4096, kv_len: 4096, head_dim: 64,
+            dtype: DType::F32, causal: false,
+        };
+        let p_full = custom_latency(&d, &pre, d.max_freq_ghz).unwrap();
+        let p_half = custom_latency(&d, &pre, d.max_freq_ghz / 2.0).unwrap();
+        assert!(p_half > p_full * 1.5, "prefill stays compute-bound");
+    }
+
+    #[test]
     fn flash_vs_cutlass_differ() {
         let d = device_by_name("a100").unwrap();
         let fa = CustomOp::FlashAttn {
-            batch: 2, heads: 8, seq: 1024, head_dim: 64,
+            batch: 2, heads: 8, q_len: 1024, kv_len: 1024, head_dim: 64,
             dtype: DType::Bf16, causal: false,
         };
         let ca = CustomOp::CutlassAttn {
-            batch: 2, heads: 8, seq: 1024, head_dim: 64,
+            batch: 2, heads: 8, q_len: 1024, kv_len: 1024, head_dim: 64,
             dtype: DType::Bf16, causal: false,
         };
         let tf = custom_latency(&d, &fa, d.max_freq_ghz).unwrap();
@@ -306,7 +364,7 @@ mod tests {
     fn gated_op_returns_none() {
         let t4 = device_by_name("t4").unwrap();
         let fa = CustomOp::FlashAttn {
-            batch: 1, heads: 1, seq: 128, head_dim: 64,
+            batch: 1, heads: 1, q_len: 128, kv_len: 128, head_dim: 64,
             dtype: DType::F32, causal: false,
         };
         assert!(custom_latency(&t4, &fa, t4.max_freq_ghz).is_none());

@@ -141,6 +141,14 @@ impl Gpu {
     ) -> Result<f64, ExecError> {
         match op {
             Op::Gemm(g) => {
+                // Library dispatch: gemv-degenerate shapes (decode-step
+                // projections) take the memory-bound streaming path. An
+                // explicitly pinned config still runs the pinned tile
+                // kernel — PM2Lat's controlled collection depends on it.
+                if cfg.is_none() && gemm::is_gemv_degenerate(g) {
+                    return gemm::gemv_latency(&self.spec, g, freq_ghz)
+                        .ok_or(ExecError::UnsupportedDtype);
+                }
                 let cfg = match cfg {
                     Some(c) => c,
                     None => heuristic::algo_get_heuristic(&self.spec, g)
@@ -167,6 +175,12 @@ impl Gpu {
     pub fn counters(&self, op: &Op, cfg: Option<GemmConfig>) -> Result<Counters, ExecError> {
         match op {
             Op::Gemm(g) => {
+                if cfg.is_none() && gemm::is_gemv_degenerate(g) {
+                    if !self.spec.supports(g.dtype) {
+                        return Err(ExecError::UnsupportedDtype);
+                    }
+                    return Ok(gemm::gemv_counters(&self.spec, g));
+                }
                 let cfg = match cfg {
                     Some(c) => c,
                     None => heuristic::algo_get_heuristic(&self.spec, g)

@@ -12,6 +12,57 @@ use crate::ops::{Counters, GemmOp};
 
 use super::device::DeviceSpec;
 use super::kernel::GemmKernel;
+use super::utility;
+
+/// Largest `min(m, n)` the library still dispatches to the gemv-family
+/// (memory-bound streaming) path instead of a tiled tensor-core kernel.
+/// Autoregressive decode lives here: every projection of a decode step is
+/// a `batch × n × k` GEMM with `batch ≤` a handful, whose cost is set by
+/// streaming the `k × n` weight matrix — not by tensor-core throughput.
+pub const GEMV_DEGENERATE_MAX: usize = 8;
+
+/// Is this GEMM gemv-degenerate (skinny enough that the library routes it
+/// to the memory-bound path)? Shared by the simulator's dispatch and the
+/// predictor's routing so the two can never disagree.
+pub fn is_gemv_degenerate(op: &GemmOp) -> bool {
+    op.m.min(op.n) <= GEMV_DEGENERATE_MAX
+}
+
+/// Noise-free gemv-family latency: stream the operands once at the
+/// composite (L2/DRAM-blended) bandwidth, with a CUDA-core MAC floor that
+/// only binds far outside the degenerate domain. No tile grid, no waves —
+/// the whole point is that skinny shapes cannot fill one.
+pub fn gemv_latency(dev: &DeviceSpec, op: &GemmOp, freq_ghz: f64) -> Option<f64> {
+    if !dev.supports(op.dtype) {
+        return None;
+    }
+    let bytes = op.io_bytes();
+    // Skinny access patterns fall slightly short of the streaming optimum.
+    let t_mem = bytes / (utility::effective_bw(dev, bytes) * 0.92);
+    let freq_scale = freq_ghz / dev.max_freq_ghz;
+    let t_compute = op.flops() / (dev.fp32_tflops * 1e12 * 0.5 * freq_scale);
+    Some(dev.launch_us * 1e-6 + t_mem.max(t_compute) + 0.2 * t_mem.min(t_compute))
+}
+
+/// NCU-style counters for the gemv path (residency split mirrors the
+/// composite-bandwidth blend, like the utility kernels).
+pub fn gemv_counters(dev: &DeviceSpec, op: &GemmOp) -> Counters {
+    let bytes = op.io_bytes();
+    let l2_share = if bytes <= 0.45 * dev.l2_bytes() {
+        0.9
+    } else if bytes >= 3.0 * dev.l2_bytes() {
+        0.15
+    } else {
+        0.5
+    };
+    Counters {
+        flops: op.flops(),
+        dram_bytes: bytes * (1.0 - l2_share),
+        l2_bytes: bytes * l2_share,
+        int_ops: op.flops() * 0.1,
+        mem_insts: bytes / 128.0,
+    }
+}
 
 /// Kernel selection for one GEMM: which implementation + split-K factor.
 /// This is what `algo_get_heuristic` returns — and what PM2Lat profiles
@@ -342,5 +393,45 @@ mod tests {
         let op = GemmOp::mm(4096, 4096, 4096, DType::F32);
         let u = utilization(&d, &op, 0.02);
         assert!(u > 0.0 && u <= 1.0);
+    }
+
+    #[test]
+    fn gemv_degenerate_classification() {
+        assert!(is_gemv_degenerate(&GemmOp::linear(1, 5120, 1280, DType::F32)));
+        assert!(is_gemv_degenerate(&GemmOp::linear(8, 5120, 1280, DType::F32)));
+        assert!(is_gemv_degenerate(&GemmOp::bmm(160, 1, 512, 64, DType::Bf16)));
+        assert!(!is_gemv_degenerate(&GemmOp::linear(64, 5120, 1280, DType::F32)));
+        assert!(!is_gemv_degenerate(&GemmOp::mm(512, 512, 512, DType::F32)));
+    }
+
+    #[test]
+    fn gemv_latency_is_memory_bound_and_monotone_in_weight_bytes() {
+        let (d, _) = a100_fp32();
+        // Decode-step projection: m = batch, streaming a k×n weight.
+        let mut prev = 0.0;
+        for k in [256usize, 1024, 4096, 16384] {
+            let op = GemmOp::linear(1, 4096, k, DType::F32);
+            let t = gemv_latency(&d, &op, d.max_freq_ghz).unwrap();
+            assert!(t > prev, "k={k}: {t} <= {prev}");
+            prev = t;
+        }
+        // Frequency insensitivity: the route is bandwidth-limited.
+        let op = GemmOp::linear(4, 8192, 4096, DType::F32);
+        let t_full = gemv_latency(&d, &op, d.max_freq_ghz).unwrap();
+        let t_half = gemv_latency(&d, &op, d.max_freq_ghz / 2.0).unwrap();
+        assert!(t_half < t_full * 1.1, "gemv must not be clock-bound");
+        // Unsupported dtypes still gate.
+        let t4 = crate::gpusim::device::device_by_name("t4").unwrap();
+        assert!(gemv_latency(&t4, &GemmOp::linear(1, 64, 64, DType::Bf16), 1.0).is_none());
+    }
+
+    #[test]
+    fn gemv_counters_split_residency_and_sum_to_io() {
+        let (d, _) = a100_fp32();
+        let op = GemmOp::linear(2, 4096, 4096, DType::F32);
+        let c = gemv_counters(&d, &op);
+        assert_eq!(c.flops, op.flops());
+        let total = c.dram_bytes + c.l2_bytes;
+        assert!((total - op.io_bytes()).abs() / total < 1e-9);
     }
 }

@@ -20,5 +20,5 @@ pub mod utility;
 
 pub use device::{all_devices, device_by_name, Arch, Cooling, DeviceSpec};
 pub use executor::{ExecError, FreqMode, Gpu, Sample};
-pub use gemm::{GemmConfig, WaveInfo};
+pub use gemm::{is_gemv_degenerate, GemmConfig, WaveInfo, GEMV_DEGENERATE_MAX};
 pub use kernel::GemmKernel;

@@ -25,11 +25,16 @@ impl std::fmt::Display for NodeId {
     }
 }
 
-/// One graph node: the op and the producers it consumes.
+/// One graph node: the op and the producers it consumes. `causal` is the
+/// mask annotation causal-mask propagation reads and writes: the op's
+/// *shape* cannot express masking (an attention-scores BMM looks the same
+/// masked or not), so the builder records it on the node and rewrite
+/// passes carry it to the fused kernels that can exploit it.
 #[derive(Clone, Debug)]
 pub struct Node {
     pub op: Op,
     pub inputs: Vec<NodeId>,
+    pub causal: bool,
 }
 
 /// Logical output-tensor shape of an op (batch × rows × cols).
@@ -57,9 +62,9 @@ pub fn output_shape(op: &Op) -> TensorShape {
             CustomOp::TritonVec { elems, .. } => {
                 TensorShape { batch: 1, rows: 1, cols: elems }
             }
-            CustomOp::FlashAttn { batch, heads, seq, head_dim, .. }
-            | CustomOp::CutlassAttn { batch, heads, seq, head_dim, .. } => {
-                TensorShape { batch: batch * heads, rows: seq, cols: head_dim }
+            CustomOp::FlashAttn { batch, heads, q_len, head_dim, .. }
+            | CustomOp::CutlassAttn { batch, heads, q_len, head_dim, .. } => {
+                TensorShape { batch: batch * heads, rows: q_len, cols: head_dim }
             }
         },
     }
@@ -102,7 +107,7 @@ impl ModelGraph {
                 id.0
             );
         }
-        self.nodes.push(Node { op, inputs: inputs.to_vec() });
+        self.nodes.push(Node { op, inputs: inputs.to_vec(), causal: false });
         id
     }
 
@@ -112,6 +117,18 @@ impl ModelGraph {
         if !self.outputs.contains(&id) {
             self.outputs.push(id);
         }
+    }
+
+    /// Annotate a node as causally masked (attention scores under an
+    /// autoregressive mask). Builders set this; causal-mask propagation
+    /// spreads it through the attention pattern; fusion emits
+    /// `causal: true` kernels from it.
+    pub fn mark_causal(&mut self, id: NodeId) {
+        self.nodes[id.0].causal = true;
+    }
+
+    pub fn is_causal(&self, id: NodeId) -> bool {
+        self.nodes[id.0].causal
     }
 
     pub fn len(&self) -> usize {
@@ -306,11 +323,34 @@ mod tests {
         let fa = Op::Custom(CustomOp::FlashAttn {
             batch: 2,
             heads: 8,
-            seq: 64,
+            q_len: 64,
+            kv_len: 64,
             head_dim: 16,
             dtype: DType::Bf16,
             causal: false,
         });
         assert_eq!(output_shape(&fa).elems(), 2 * 8 * 64 * 16);
+        // Decode-shaped attention produces one row per lane.
+        let dec = Op::Custom(CustomOp::FlashAttn {
+            batch: 2,
+            heads: 8,
+            q_len: 1,
+            kv_len: 777,
+            head_dim: 16,
+            dtype: DType::Bf16,
+            causal: true,
+        });
+        assert_eq!(output_shape(&dec).elems(), 2 * 8 * 16);
+    }
+
+    #[test]
+    fn causal_marks_are_per_node_annotations() {
+        let mut g = ModelGraph::new();
+        let a = g.add_node(gemm(8, 8, 8), &[]);
+        let b = g.add_node(util(UtilKind::Softmax, 8, 8), &[a]);
+        assert!(!g.is_causal(a) && !g.is_causal(b));
+        g.mark_causal(a);
+        assert!(g.is_causal(a) && !g.is_causal(b));
+        g.validate().unwrap();
     }
 }

@@ -12,9 +12,11 @@
 //!   a topologically ordered `Vec<Op>`. Lowering reproduces insertion
 //!   order exactly, so every flat-trace consumer keeps working unchanged.
 //! * [`passes`] — the rewrite-pass framework ([`Pass`], [`PassManager`])
-//!   with attention fusion (unfused BMM→SoftMax→BMM → FlashAttn/CUTLASS,
-//!   device/dtype-gated, optionally cost-gated) and dead-node
-//!   elimination.
+//!   with causal-mask propagation (annotation spreading + decode-shape
+//!   inference, so fusion can emit `causal: true` kernels), attention
+//!   fusion (unfused BMM→SoftMax→BMM → FlashAttn/CUTLASS for both
+//!   prefill and decode-step shapes, device/dtype-gated, optionally
+//!   cost-gated) and dead-node elimination.
 //! * [`schedule`] — dependency-aware latency aggregation: list-schedule
 //!   the graph onto a bounded number of concurrent streams and report the
 //!   makespan. `streams = 1` reproduces the paper's sequential-kernel sum
@@ -32,5 +34,7 @@ pub mod passes;
 pub mod schedule;
 
 pub use ir::{output_shape, GraphError, ModelGraph, Node, NodeId, TensorShape};
-pub use passes::{AttentionFusion, DeadNodeElimination, Pass, PassCtx, PassManager};
+pub use passes::{
+    AttentionFusion, CausalMaskPropagation, DeadNodeElimination, Pass, PassCtx, PassManager,
+};
 pub use schedule::{critical_path_s, predict_graph_latency, Schedule, ScheduledOp};

@@ -1,13 +1,22 @@
 //! Graph rewrite passes: pattern-match subgraphs and replace them with
 //! cheaper equivalents, tract/XLA style — match, build a patch, rebuild.
 //!
-//! Two concrete passes ship today:
+//! Three concrete passes ship today:
 //!
+//! * [`CausalMaskPropagation`] — spreads the builder's causal-mask
+//!   annotations across the whole unfused attention pattern (scores →
+//!   softmax → context) and *infers* causality for decode-shaped
+//!   patterns (`q_len == 1` reading a longer KV window is autoregressive
+//!   by construction). Runs before fusion so the fused kernels inherit
+//!   the mask.
 //! * [`AttentionFusion`] — rewrites the unfused BMM→SoftMax→BMM attention
 //!   subgraph the transformer builder emits into a fused
-//!   `FlashAttn`/`CutlassAttn` kernel, gated on device/dtype support
-//!   (Table VI's "-" cells) and optionally on a cost model proving the
-//!   fused kernel is no slower (`only_if_faster`).
+//!   `FlashAttn`/`CutlassAttn` kernel. Matches both prefill
+//!   (`q_len == kv_len`) and decode-step (`q_len == 1, kv_len == t`)
+//!   shapes, emits `causal: true` kernels wherever the mask annotation
+//!   reaches the pattern, and is gated on device/dtype support (Table
+//!   VI's "-" cells) and optionally on a cost model proving the fused
+//!   kernel is no slower (`only_if_faster`).
 //! * [`DeadNodeElimination`] — removes nodes that cannot reach a marked
 //!   graph output.
 //!
@@ -19,15 +28,16 @@ use std::collections::{HashMap, HashSet};
 
 use crate::gpusim::custom;
 use crate::gpusim::DeviceSpec;
-use crate::ops::{CustomOp, GemmApi, Op, UtilKind};
+use crate::ops::{CustomOp, DType, GemmApi, Op, UtilKind};
 
 use super::ir::{ModelGraph, Node, NodeId};
 
 /// Rebuild `g` node by node: `emit` returns `None` to drop a node, or
 /// `Some((op, inputs))` to re-add it — inputs named by *old* ids, which
 /// must resolve to surviving nodes. Marked outputs are remapped (and
-/// silently dropped if their node was). Shared by every structural pass
-/// so the remap/outputs invariants live in exactly one place.
+/// silently dropped if their node was); per-node causal annotations
+/// survive on every surviving node. Shared by every structural pass so
+/// the remap/outputs invariants live in exactly one place.
 fn rebuild_graph(
     g: &mut ModelGraph,
     mut emit: impl FnMut(usize, &Node) -> Option<(Op, Vec<NodeId>)>,
@@ -36,12 +46,18 @@ fn rebuild_graph(
     let mut out = ModelGraph::new();
     let mut remap: Vec<Option<NodeId>> = vec![None; n];
     for i in 0..n {
-        let Some((op, srcs)) = emit(i, g.node(NodeId(i))) else { continue };
+        let node = g.node(NodeId(i));
+        let causal = node.causal;
+        let Some((op, srcs)) = emit(i, node) else { continue };
         let ins: Vec<NodeId> = srcs
             .iter()
             .map(|x| remap[x.index()].expect("emitted inputs must survive the rebuild"))
             .collect();
-        remap[i] = Some(out.add_node(op, &ins));
+        let id = out.add_node(op, &ins);
+        if causal {
+            out.mark_causal(id);
+        }
+        remap[i] = Some(id);
     }
     for &o in g.outputs() {
         if let Some(m) = remap[o.index()] {
@@ -49,6 +65,83 @@ fn rebuild_graph(
         }
     }
     *g = out;
+}
+
+/// One matched unfused-attention subgraph (paper Table II "BMM" rows):
+///
+/// ```text
+/// scores = BMM(lanes, q, kv, d)    — consumed only by the softmax
+/// probs  = SoftMax(lanes·q, kv)    — consumed only by the second BMM
+/// ctx    = BMM(lanes, q, d, kv)
+/// ```
+///
+/// Prefill emits `q == kv == seq`; a decode step emits `q == 1,
+/// kv == cache length`. `lanes = batch·heads`.
+#[derive(Clone, Copy, Debug)]
+struct AttnMatch {
+    scores: usize,
+    softmax: usize,
+    ctx: usize,
+    lanes: usize,
+    q_len: usize,
+    kv_len: usize,
+    head_dim: usize,
+    dtype: DType,
+}
+
+/// Find every disjoint unfused-attention pattern, in softmax-id order.
+/// Shared by [`CausalMaskPropagation`] (annotates the pattern) and
+/// [`AttentionFusion`] (rewrites it) so the two passes can never disagree
+/// about what "attention" looks like.
+fn match_attention(g: &ModelGraph, cons: &[Vec<NodeId>]) -> Vec<AttnMatch> {
+    let mut used: HashSet<usize> = HashSet::new();
+    let mut out = Vec::new();
+    for si in 0..g.len() {
+        let s_node = g.node(NodeId(si));
+        let Op::Util(u) = s_node.op else { continue };
+        if u.kind != UtilKind::Softmax || s_node.inputs.len() != 1 {
+            continue;
+        }
+        let b1 = s_node.inputs[0].index();
+        let Op::Gemm(g1) = g.node(NodeId(b1)).op else { continue };
+        if g1.api != GemmApi::Bmm {
+            continue;
+        }
+        // Softmax rows/cols must be exactly the scores layout.
+        if u.rows != g1.batch * g1.m || u.cols != g1.n || u.dtype != g1.dtype {
+            continue;
+        }
+        // Scores feed only the softmax; probs feed only one consumer.
+        if cons[b1].len() != 1 || cons[b1][0].index() != si || cons[si].len() != 1 {
+            continue;
+        }
+        let b2 = cons[si][0].index();
+        let Op::Gemm(g2) = g.node(NodeId(b2)).op else { continue };
+        if g2.api != GemmApi::Bmm
+            || g2.batch != g1.batch
+            || g2.m != g1.m
+            || g2.k != g1.n
+            || g2.n != g1.k
+            || g2.dtype != g1.dtype
+        {
+            continue;
+        }
+        if used.contains(&b1) || used.contains(&si) || used.contains(&b2) {
+            continue;
+        }
+        used.extend([b1, si, b2]);
+        out.push(AttnMatch {
+            scores: b1,
+            softmax: si,
+            ctx: b2,
+            lanes: g1.batch,
+            q_len: g1.m,
+            kv_len: g1.n,
+            head_dim: g1.k,
+            dtype: g1.dtype,
+        });
+    }
+    out
 }
 
 /// Context shared by all passes: the target device (None = purely
@@ -101,9 +194,11 @@ impl PassManager {
         self
     }
 
-    /// The standard pipeline: attention fusion, then dead-node cleanup.
+    /// The standard pipeline: causal-mask propagation, attention fusion,
+    /// then dead-node cleanup.
     pub fn standard() -> PassManager {
         PassManager::new()
+            .with(CausalMaskPropagation)
             .with(AttentionFusion::default())
             .with(DeadNodeElimination)
     }
@@ -114,20 +209,56 @@ impl PassManager {
     }
 }
 
-/// Fuse the unfused attention core. The matched pattern is the exact
-/// shape `TransformerConfig` emits (paper Table II "BMM" rows):
+/// Propagate causal-mask annotations across unfused attention patterns,
+/// and infer them where structure proves them:
 ///
-/// ```text
-/// scores = BMM(lanes, S, S, d)   — consumed only by the softmax
-/// probs  = SoftMax(lanes·S, S)   — consumed only by the second BMM
-/// ctx    = BMM(lanes, S, d, S)
-/// ```
+/// * any mark on the scores BMM, the softmax or the context BMM spreads
+///   to all three nodes, so downstream rewrites can test whichever node
+///   survives;
+/// * a decode-shaped pattern (`q_len == 1` reading `kv_len > 1` cached
+///   entries) is marked causal by construction — a single new query over
+///   a longer key window only occurs in autoregressive generation, and
+///   the mask removes nothing at `q == 1`, so the annotation is exact.
 ///
-/// and the replacement is one fused attention kernel over the same
-/// `lanes = batch·heads` blocks (the fused-kernel cost model depends only
-/// on the product, so the head split needs no extra metadata). FlashAttn
-/// is preferred, CUTLASS attention is the fallback; both are gated on the
-/// architecture/dtype support table.
+/// Purely an annotation pass: ops, edges and lowering are untouched.
+/// Returns the number of newly marked nodes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CausalMaskPropagation;
+
+impl Pass for CausalMaskPropagation {
+    fn name(&self) -> &'static str {
+        "causal-mask-propagation"
+    }
+
+    fn run(&self, g: &mut ModelGraph, _ctx: &PassCtx<'_>) -> usize {
+        let cons = g.consumers();
+        let mut marked = 0usize;
+        for m in match_attention(g, &cons) {
+            let ids = [m.scores, m.softmax, m.ctx];
+            let annotated = ids.iter().any(|&i| g.is_causal(NodeId(i)));
+            let decode_shaped = m.q_len == 1 && m.kv_len > 1;
+            if !annotated && !decode_shaped {
+                continue;
+            }
+            for &i in &ids {
+                if !g.is_causal(NodeId(i)) {
+                    g.mark_causal(NodeId(i));
+                    marked += 1;
+                }
+            }
+        }
+        marked
+    }
+}
+
+/// Fuse the unfused attention core ([`AttnMatch`]) into one fused
+/// attention kernel over the same `lanes = batch·heads` blocks (the
+/// fused-kernel cost model depends only on the product, so the head split
+/// needs no extra metadata). Both prefill (`q == kv`) and decode-step
+/// (`q == 1`) shapes fuse; causal-mask annotations on the pattern become
+/// `causal: true` on the emitted kernel. FlashAttn is preferred, CUTLASS
+/// attention is the fallback; both are gated on the architecture/dtype
+/// support table.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AttentionFusion {
     /// Rewrite only when `ctx.cost` proves the fused kernel is no slower
@@ -141,60 +272,31 @@ impl Pass for AttentionFusion {
     }
 
     fn run(&self, g: &mut ModelGraph, ctx: &PassCtx<'_>) -> usize {
-        let n = g.len();
         let cons = g.consumers();
-        let mut used: HashSet<usize> = HashSet::new();
-        // b2 node id → (b1 id, softmax id, fused op).
+        // ctx node id → (scores id, softmax id, fused op).
         let mut fused_at: HashMap<usize, (usize, usize, Op)> = HashMap::new();
-        for si in 0..n {
-            let s_node = g.node(NodeId(si));
-            let Op::Util(u) = s_node.op else { continue };
-            if u.kind != UtilKind::Softmax || s_node.inputs.len() != 1 {
-                continue;
-            }
-            let b1 = s_node.inputs[0].index();
-            let Op::Gemm(g1) = g.node(NodeId(b1)).op else { continue };
-            if g1.api != GemmApi::Bmm || g1.m != g1.n {
-                continue;
-            }
-            if u.rows != g1.batch * g1.m || u.cols != g1.m || u.dtype != g1.dtype {
-                continue;
-            }
-            // Scores feed only the softmax; probs feed only one consumer.
-            if cons[b1].len() != 1 || cons[b1][0].index() != si || cons[si].len() != 1 {
-                continue;
-            }
-            let b2 = cons[si][0].index();
-            let Op::Gemm(g2) = g.node(NodeId(b2)).op else { continue };
-            if g2.api != GemmApi::Bmm
-                || g2.batch != g1.batch
-                || g2.m != g1.m
-                || g2.k != g1.m
-                || g2.n != g1.k
-                || g2.dtype != g1.dtype
-            {
-                continue;
-            }
-            if used.contains(&b1) || used.contains(&si) || used.contains(&b2) {
-                continue;
-            }
-            let (lanes, seq, head_dim) = (g1.batch, g1.m, g1.k);
+        for m in match_attention(g, &cons) {
+            let causal = [m.scores, m.softmax, m.ctx]
+                .iter()
+                .any(|&i| g.is_causal(NodeId(i)));
             let candidates = [
                 CustomOp::FlashAttn {
-                    batch: lanes,
+                    batch: m.lanes,
                     heads: 1,
-                    seq,
-                    head_dim,
-                    dtype: g1.dtype,
-                    causal: false,
+                    q_len: m.q_len,
+                    kv_len: m.kv_len,
+                    head_dim: m.head_dim,
+                    dtype: m.dtype,
+                    causal,
                 },
                 CustomOp::CutlassAttn {
-                    batch: lanes,
+                    batch: m.lanes,
                     heads: 1,
-                    seq,
-                    head_dim,
-                    dtype: g1.dtype,
-                    causal: false,
+                    q_len: m.q_len,
+                    kv_len: m.kv_len,
+                    head_dim: m.head_dim,
+                    dtype: m.dtype,
+                    causal,
                 },
             ];
             let mut chosen = None;
@@ -209,9 +311,9 @@ impl Pass for AttentionFusion {
                     let Some(cost) = ctx.cost else { continue };
                     let Some(fused_cost) = cost(&fused) else { continue };
                     let parts = [
-                        g.node(NodeId(b1)).op,
-                        g.node(NodeId(si)).op,
-                        g.node(NodeId(b2)).op,
+                        g.node(NodeId(m.scores)).op,
+                        g.node(NodeId(m.softmax)).op,
+                        g.node(NodeId(m.ctx)).op,
                     ];
                     let mut unfused_cost = 0.0;
                     let mut priced = true;
@@ -232,13 +334,21 @@ impl Pass for AttentionFusion {
                 break;
             }
             let Some(fused) = chosen else { continue };
-            used.extend([b1, si, b2]);
-            fused_at.insert(b2, (b1, si, fused));
+            if causal {
+                // The fused node is emitted at the ctx position; carry the
+                // mask annotation onto it through the rebuild.
+                g.mark_causal(NodeId(m.ctx));
+            }
+            fused_at.insert(m.ctx, (m.scores, m.softmax, fused));
         }
         if fused_at.is_empty() {
             return 0;
         }
         let count = fused_at.len();
+        let used: HashSet<usize> = fused_at
+            .iter()
+            .flat_map(|(&b2, &(b1, si, _))| [b1, si, b2])
+            .collect();
 
         // Rebuild: drop b1/softmax, emit the fused op at b2's position
         // with the union of the matched subgraph's external inputs. The
@@ -347,12 +457,80 @@ mod tests {
             assert_eq!(softmax_count(&g), 0, "no unfused attention left");
             assert_eq!(g.len(), before - 2 * cfg.layers, "3 nodes became 1");
             g.validate().unwrap();
-            // FlashAttn preferred on Ampere.
+            // FlashAttn preferred on Ampere; decoder-only self-attention
+            // carries the builder's causal mark onto the fused kernels.
             assert!(g
                 .nodes()
                 .iter()
                 .any(|n| matches!(n.op, Op::Custom(CustomOp::FlashAttn { .. }))));
+            assert!(
+                g.nodes().iter().all(|n| match n.op {
+                    Op::Custom(
+                        CustomOp::FlashAttn { causal, q_len, kv_len, .. }
+                        | CustomOp::CutlassAttn { causal, q_len, kv_len, .. },
+                    ) => causal && q_len == 128 && kv_len == 128,
+                    _ => true,
+                }),
+                "{}: prefill fusion must emit causal square kernels",
+                cfg.name
+            );
         }
+    }
+
+    #[test]
+    fn decode_step_pattern_fuses_to_kv_shaped_kernel() {
+        // Decode-shaped attention (q = 1, kv = cache length) must fuse
+        // into a decode-shaped kernel, and the causal pass must infer the
+        // mask without any builder annotation.
+        let dt = DType::F32;
+        let (lanes, kv, hd) = (16usize, 384usize, 64usize);
+        let mut g = ModelGraph::new();
+        let qkv = g.add_node(Op::Gemm(GemmOp::linear(1, 3 * lanes * hd, lanes * hd, dt)), &[]);
+        let scores = g.add_node(Op::Gemm(GemmOp::bmm(lanes, 1, kv, hd, dt)), &[qkv]);
+        let probs =
+            g.add_node(Op::Util(UtilOp::new(UtilKind::Softmax, lanes, kv, dt)), &[scores]);
+        let ctx_v = g.add_node(Op::Gemm(GemmOp::bmm(lanes, 1, hd, kv, dt)), &[probs, qkv]);
+        let proj = g.add_node(Op::Gemm(GemmOp::linear(1, lanes * hd, lanes * hd, dt)), &[ctx_v]);
+        g.mark_output(proj);
+        let marked = CausalMaskPropagation.run(&mut g, &PassCtx::structural());
+        assert_eq!(marked, 3, "decode shape inferred causal across the pattern");
+        let rewrites = AttentionFusion::default().run(&mut g, &PassCtx::structural());
+        assert_eq!(rewrites, 1);
+        g.validate().unwrap();
+        let fused = g
+            .nodes()
+            .iter()
+            .find_map(|n| match n.op {
+                Op::Custom(c @ CustomOp::FlashAttn { .. }) => Some(c),
+                _ => None,
+            })
+            .expect("decode pattern fused");
+        assert!(matches!(
+            fused,
+            CustomOp::FlashAttn { q_len: 1, kv_len: 384, causal: true, .. }
+        ));
+    }
+
+    #[test]
+    fn causal_propagation_spreads_builder_marks_and_is_idempotent() {
+        let cfg = zoo::gpt2_large();
+        let mut g = cfg.graph(1, 64);
+        // The builder marks one scores BMM per decoder block; propagation
+        // extends each mark to the softmax + context BMM.
+        let marked = CausalMaskPropagation.run(&mut g, &PassCtx::structural());
+        assert_eq!(marked, 2 * cfg.layers);
+        assert_eq!(
+            CausalMaskPropagation.run(&mut g, &PassCtx::structural()),
+            0,
+            "fixed point on the second run"
+        );
+        assert_eq!(g.lower(), cfg.trace(1, 64), "annotation-only pass");
+        // Encoder self-attention stays unmasked: T5's encoder blocks gain
+        // no causal marks, its decoder blocks do.
+        let t5 = zoo::flan_t5_base();
+        let mut tg = t5.graph(1, 64);
+        let t5_marked = CausalMaskPropagation.run(&mut tg, &PassCtx::structural());
+        assert_eq!(t5_marked, 2 * t5.layers, "decoder self-attention only");
     }
 
     #[test]
@@ -475,10 +653,11 @@ mod tests {
         let cfg = zoo::qwen3_0_6b();
         let mut g = cfg.graph(1, 128);
         let report = PassManager::standard().run(&mut g, &PassCtx::for_device(&dev));
-        assert_eq!(report.len(), 2);
-        assert_eq!(report[0], ("attention-fusion", cfg.layers));
-        assert_eq!(report[1].0, "dead-node-elimination");
-        assert_eq!(report[1].1, 0, "fusion leaves no garbage behind");
+        assert_eq!(report.len(), 3);
+        assert_eq!(report[0], ("causal-mask-propagation", 2 * cfg.layers));
+        assert_eq!(report[1], ("attention-fusion", cfg.layers));
+        assert_eq!(report[2].0, "dead-node-elimination");
+        assert_eq!(report[2].1, 0, "fusion leaves no garbage behind");
         g.validate().unwrap();
     }
 }

@@ -9,9 +9,16 @@
 //!   substrate ([`gpusim`]), the CUPTI/NCU-style [`profiler`], the paper's
 //!   predictor ([`pm2lat`]), the NeuSight baseline ([`neusight`]) whose MLP
 //!   runs through PJRT ([`runtime`]), the typed model-graph IR with
-//!   fusion passes and dependency-aware scheduling ([`graph`]), the
-//!   transformer model zoo ([`models`]), the prediction service
-//!   ([`coordinator`]), and the two applications from §IV-D ([`apps`]).
+//!   causal-mask propagation, fusion passes and dependency-aware
+//!   scheduling ([`graph`]), the transformer model zoo with prefill *and*
+//!   autoregressive-decode graphs ([`models`]), the prediction service
+//!   ([`coordinator`], including whole-generation serving), and the two
+//!   applications from §IV-D ([`apps`]).
+//!
+//! See `README.md` for the quickstart and CLI tour, and
+//! `docs/ARCHITECTURE.md` for the end-to-end dataflow (graph IR → passes
+//! → scheduler → predictors → coordinator) and the design decisions
+//! behind the service, graph and decode layers.
 //!
 //! The physical GPUs of the paper are replaced by `gpusim` per the
 //! substitution table in DESIGN.md §1; everything downstream consumes only

@@ -4,22 +4,25 @@
 //! pm2lat report devices                     # Table I
 //! pm2lat predict --device a100 --model gpt2-large --batch 8 \
 //!                [--streams 4] [--fuse]   # graph schedule + attention fusion
+//! pm2lat generate --device a100 --model qwen3-0.6b --prompt 512 --gen 64 \
+//!                [--streams 4] [--fuse]   # autoregressive decode loop
 //! pm2lat layer --device l4 --dtype bf16 --m 1024 --n 1024 --k 4096
 //! pm2lat experiments [--full]               # every table + figure
 //! pm2lat nas --n 1000                       # §IV-D2 speed study
 //! pm2lat partition                          # §IV-D1 case study
-//! pm2lat serve-bench --n 50000 --threads 8  # service throughput A/B
+//! pm2lat serve-bench --n 50000 --threads 8 [--decode] [--slo-p99-us 500]
 //! ```
 
 use anyhow::{anyhow, Result};
 
 use pm2lat::coordinator::{
     ab_phases, build_service, mixed_workload, mixed_workload_dtyped, quick_neusight,
-    timed_submit, to_batched, to_kind, AbReport, PredictorKind,
+    timed_submit, to_batched, to_kind, AbReport, GenerationRequest, PredictorKind,
 };
 use pm2lat::experiments::{self, Scale};
 use pm2lat::gpusim::Gpu;
-use pm2lat::graph::{AttentionFusion, Pass, PassCtx};
+use pm2lat::graph::{AttentionFusion, CausalMaskPropagation, Pass, PassCtx};
+use pm2lat::models::transformer::GenerationSpec;
 use pm2lat::models::{runner, zoo};
 use pm2lat::ops::{DType, GemmOp, Op};
 use pm2lat::pm2lat::Pm2Lat;
@@ -43,6 +46,7 @@ fn run(args: &Args) -> Result<()> {
         }
         Some("layer") => layer(args),
         Some("predict") => predict_model(args),
+        Some("generate") => generate(args),
         Some("experiments") => {
             let runtime = Runtime::open_default()?;
             if args.flag("full") {
@@ -67,19 +71,95 @@ fn run(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("serve-bench") => serve_bench(args),
-        Some(cmd) => Err(anyhow!("unknown command `{cmd}` (try: report, layer, predict, experiments, nas, partition, serve-bench)")),
+        Some(cmd) => Err(anyhow!("unknown command `{cmd}` (try: report, layer, predict, generate, experiments, nas, partition, serve-bench)")),
         None => {
             println!("pm2lat {} — kernel-aware DNN latency prediction", pm2lat::version());
-            println!("commands: report | layer | predict | experiments | nas | partition | serve-bench");
+            println!("commands: report | layer | predict | generate | experiments | nas | partition | serve-bench");
             Ok(())
         }
     }
 }
 
+/// Autoregressive generation: prefill the prompt, then predict every
+/// decode step of the generation loop — per-step latency curve, time per
+/// output token, steady-state tokens/s — and compare against the
+/// simulator's ground-truth generation when the model fits the device.
+fn generate(args: &Args) -> Result<()> {
+    let device = args.opt_or("device", "a100").to_string();
+    let model = args.opt_or("model", "gpt2-large").to_string();
+    let batch = args.opt_usize("batch", 1).max(1);
+    let prompt = args.opt_usize("prompt", 512).max(1);
+    let gen_len = args.opt_usize("gen", 64);
+    let streams = args.opt_usize("streams", 1).max(1);
+    let fuse = args.flag("fuse");
+    let cfg = zoo::by_name(&model).ok_or_else(|| anyhow!("unknown model"))?;
+    let mut gpu = Gpu::by_name(&device).ok_or_else(|| anyhow!("unknown device"))?;
+    let pl = Pm2Lat::build_dtypes(&mut gpu, &ProfileSpec::experiment(), &[cfg.dtype], fuse);
+    gpu.reset();
+    let spec = GenerationSpec::new(prompt, gen_len);
+    let pred = if fuse {
+        // Causal propagation + cost-gated fusion on the prefill graph and
+        // every decode step, then predict each rewritten graph.
+        let cost = |op: &Op| pl.predict(&gpu, op);
+        let ctx = PassCtx::with_cost(&gpu.spec, &cost);
+        let (mut prefill, mut steps) = cfg.generation_graphs(batch, &spec);
+        let mut rewrites = 0usize;
+        for g in std::iter::once(&mut prefill).chain(steps.iter_mut()) {
+            CausalMaskPropagation.run(g, &ctx);
+            rewrites += AttentionFusion { only_if_faster: true }.run(g, &ctx);
+        }
+        println!("fusion: rewrote {rewrites} attention subgraphs across prefill + {gen_len} steps");
+        pl.predict_generation_graphs(&gpu, &prefill, &steps, streams)
+            .ok_or_else(|| anyhow!("model unsupported on this device"))?
+    } else {
+        pl.predict_generation(&gpu, &cfg, batch, &spec, streams)
+            .ok_or_else(|| anyhow!("model unsupported on this device"))?
+    };
+    println!(
+        "{model} BS={batch} prompt={prompt} gen={gen_len} on {device} (streams={streams}):"
+    );
+    println!("  prefill (TTFT)     : {:>10.2} ms", pred.prefill_s * 1e3);
+    if gen_len > 0 {
+        println!(
+            "  decode step 1 → {gen_len:<4}: {:>10.1} µs → {:.1} µs (kv {} → {})",
+            pred.step_s[0] * 1e6,
+            pred.step_s[gen_len - 1] * 1e6,
+            spec.kv_len_at(0),
+            spec.kv_len_at(gen_len - 1),
+        );
+        println!(
+            "  time/output token  : {:>10.1} µs ({:.0} tok/s steady-state)",
+            pred.time_per_output_token_s() * 1e6,
+            pred.tokens_per_s()
+        );
+    }
+    println!("  total              : {:>10.2} ms", pred.total_s() * 1e3);
+    println!(
+        "  kv-cache at end    : {:>10.1} MB",
+        cfg.kv_cache_bytes(batch, spec.total_len()) / 1e6
+    );
+    if fuse {
+        return Ok(()); // measured baseline below runs the unfused graphs
+    }
+    match runner::run_generation(&mut gpu, &cfg, batch, &spec, streams) {
+        Ok(run) => {
+            println!(
+                "  measured           : prefill {:.2} ms, total {:.2} ms → error {:+.1}%",
+                run.prefill_s * 1e3,
+                run.total_s() * 1e3,
+                pm2lat::util::stats::signed_rel_err_pct(pred.total_s(), run.total_s())
+            );
+        }
+        Err(e) => println!("  (measurement unavailable: {e})"),
+    }
+    Ok(())
+}
+
 /// §IV-D2 at service scale: requests/sec on a multi-device mixed workload,
 /// serial no-cache baseline vs the concurrent cache-accelerated service,
 /// across the F32 scalar + batched-PJRT kinds, the BF16 tensor-core lane
-/// and the NeuSight learned-baseline lane.
+/// and the NeuSight learned-baseline lane — plus the `--decode`
+/// generation-serving lane and the `--slo-p99-us` latency gate.
 fn serve_bench(args: &Args) -> Result<()> {
     let runtime = Runtime::open_default()?;
     let n = args.opt_usize("n", 50_000);
@@ -124,12 +204,80 @@ fn serve_bench(args: &Args) -> Result<()> {
         o1 == o2
     );
 
+    // Snapshot the serving percentiles *before* the optional decode lane:
+    // each submit_generations call is one giant dispatch (3 devices ×
+    // dozens of graphs), and letting its wall-clock samples into the
+    // reservoir would make the SLO gate measure the decode mega-batch
+    // instead of per-batch serving latency.
+    let (_, serving_p99_us) = fast.metrics.service_percentiles_us();
+
+    // Decode lane (--decode): whole generation loops through
+    // submit_generations — the per-step cache/dedup amortization is the
+    // property of record, plus cold/warm determinism.
+    if args.flag("decode") {
+        let prompt = args.opt_usize("prompt", 128).max(1);
+        let gen_len = args.opt_usize("gen", 32);
+        let gens: Vec<GenerationRequest> = devices
+            .iter()
+            .map(|d| GenerationRequest {
+                device: d.to_string(),
+                config: zoo::gpt2_large(),
+                batch: 1,
+                spec: GenerationSpec::new(prompt, gen_len),
+                kind: PredictorKind::Pm2LatBatched,
+                streams: 1,
+            })
+            .collect();
+        let steps_total = (gens.len() * (gen_len + 1)) as f64;
+        let t0 = std::time::Instant::now();
+        let cold = fast.submit_generations(&gens)?;
+        let cold_s = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let warm = fast.submit_generations(&gens)?;
+        let warm_s = t0.elapsed().as_secs_f64();
+        println!("-- decode lane (prompt={prompt}, gen={gen_len}, gpt2-large f32) --");
+        println!(
+            "cold: {:>8.0} graphs/s | warm: {:>8.0} graphs/s ({:.1}x, identical: {})",
+            steps_total / cold_s,
+            steps_total / warm_s,
+            cold_s / warm_s,
+            cold == warm
+        );
+        for (req, p) in gens.iter().zip(&cold) {
+            if let Some(p) = p {
+                println!(
+                    "  {:>8}: prefill {:.2} ms, tpot {:.1} µs, {:.0} tok/s",
+                    req.device,
+                    p.prefill_s * 1e3,
+                    p.time_per_output_token_s() * 1e6,
+                    p.tokens_per_s()
+                );
+            }
+        }
+        if cold != warm {
+            return Err(anyhow!("decode lane nondeterministic across cold/warm passes"));
+        }
+    }
+
     println!("metrics: {}", fast.metrics.summary());
     if !scalar.identical || !batched.identical || !bf16.identical {
         return Err(anyhow!("cached/parallel results diverged from uncached baseline"));
     }
     if o1 != o2 {
         return Err(anyhow!("neusight lane nondeterministic across repeat passes"));
+    }
+    // Latency-SLO gate (--slo-p99-us N): exit non-zero when the serving
+    // lanes' p99 per-batch time (snapshotted above, decode lane excluded)
+    // exceeds the bound — CI's serving-regression trip wire once a
+    // toolchain lands.
+    let slo = args.opt_f64("slo-p99-us", 0.0);
+    if slo > 0.0 {
+        if serving_p99_us > slo {
+            return Err(anyhow!(
+                "SLO violation: p99 batch service time {serving_p99_us:.1}µs exceeds --slo-p99-us {slo}"
+            ));
+        }
+        println!("SLO ok: p99 batch service time {serving_p99_us:.1}µs ≤ {slo}µs");
     }
     Ok(())
 }

@@ -1,11 +1,13 @@
 //! # models — the Table III transformer zoo
 //!
-//! Architecture configs ([`zoo`]), the kernel-trace expansion
-//! ([`transformer`]), and ground-truth execution on the simulator
-//! ([`runner`]).
+//! Architecture configs ([`zoo`]), the graph/kernel-trace expansion for
+//! both generation phases — prefill ([`TransformerConfig::graph`]) and
+//! autoregressive decode ([`TransformerConfig::decode_graph`],
+//! [`GenerationSpec`]) — and ground-truth execution on the simulator
+//! ([`runner`], including whole-generation runs).
 
 pub mod runner;
 pub mod transformer;
 pub mod zoo;
 
-pub use transformer::TransformerConfig;
+pub use transformer::{GenerationSpec, TransformerConfig};

@@ -10,7 +10,7 @@ use crate::gpusim::{ExecError, FreqMode, Gpu};
 use crate::graph::{schedule, ModelGraph};
 use crate::ops::Op;
 
-use super::transformer::TransformerConfig;
+use super::transformer::{GenerationSpec, TransformerConfig};
 
 /// Measured model execution.
 #[derive(Clone, Copy, Debug)]
@@ -134,6 +134,35 @@ pub fn run_graph(
     Ok(ModelRun { mean_s: total / reps as f64, reps })
 }
 
+/// Ground-truth autoregressive generation: memory check against the
+/// fully grown KV cache, then the prefill graph followed by one decode
+/// graph per emitted token, all on up to `streams` concurrent streams.
+/// The device state (thermals, JIT cache, noise stream) evolves across
+/// steps exactly as a real generation loop's would — generation is
+/// inherently serial (step `t+1` consumes step `t`'s token), so there is
+/// no rep-averaging. Returns the measured latency curve in the same
+/// [`GenerationPrediction`] shape the predictors answer with, so
+/// predicted and measured generations compare field-for-field.
+///
+/// [`GenerationPrediction`]: crate::pm2lat::GenerationPrediction
+pub fn run_generation(
+    gpu: &mut Gpu,
+    cfg: &TransformerConfig,
+    batch: usize,
+    spec: &GenerationSpec,
+    streams: usize,
+) -> Result<crate::pm2lat::GenerationPrediction, ExecError> {
+    gpu.check_memory(cfg.generation_memory_bytes(batch, spec))?;
+    gpu.set_freq(FreqMode::Boost);
+    let (prefill, steps) = cfg.generation_graphs(batch, spec);
+    let prefill_s = run_graph_once(gpu, &prefill, streams)?;
+    let mut step_s = Vec::with_capacity(steps.len());
+    for g in &steps {
+        step_s.push(run_graph_once(gpu, g, streams)?);
+    }
+    Ok(crate::pm2lat::GenerationPrediction { prefill_s, step_s })
+}
+
 /// Graph analogue of [`run_model`]: memory check, then the measurement
 /// protocol over the model graph. `streams = 1` reproduces [`run_model`]
 /// bit-for-bit.
@@ -222,6 +251,36 @@ mod tests {
         let legacy = run_model(&mut gpu_a, &cfg, 1, 64, 1, 3).unwrap();
         let graphed = run_model_graph(&mut gpu_b, &cfg, 1, 64, 1, 3, 1).unwrap();
         assert_eq!(legacy.mean_s, graphed.mean_s);
+    }
+
+    #[test]
+    fn generation_ground_truth_decode_steps_are_cheap_and_grow_with_cache() {
+        let mut gpu = Gpu::by_name("a100").unwrap();
+        let cfg = zoo::gpt2_large();
+        let spec = GenerationSpec::new(256, 24);
+        let run = run_generation(&mut gpu, &cfg, 1, &spec, 1).unwrap();
+        assert_eq!(run.step_s.len(), 24);
+        assert!(run.prefill_s > 0.0);
+        // A decode step touches ~1/seq of the prefill FLOPs: it must be
+        // far cheaper than the prompt pass.
+        let tpot = run.time_per_output_token_s();
+        assert!(tpot > 0.0 && tpot < run.prefill_s / 4.0, "tpot {tpot} vs prefill {}", run.prefill_s);
+        assert!((run.total_s() - (run.prefill_s + run.step_s.iter().sum::<f64>())).abs() < 1e-15);
+        // Decode-step cost grows with the cache: steps over a ~4k-token
+        // cache stream ~16× the attention bytes of steps over ~260 tokens
+        // (well above the ~2.5% single-execution noise).
+        gpu.reset();
+        let long = run_generation(&mut gpu, &cfg, 1, &GenerationSpec::new(4096, 8), 1).unwrap();
+        let short_tpot = tpot;
+        let long_tpot = long.time_per_output_token_s();
+        assert!(
+            long_tpot > short_tpot * 1.1,
+            "kv≈4100 step {long_tpot} vs kv≈260 step {short_tpot}"
+        );
+        // OOM contract includes the grown KV cache.
+        let mut small = Gpu::by_name("rtx3060m").unwrap();
+        let big = GenerationSpec::new(512, 8192);
+        assert!(run_generation(&mut small, &zoo::qwen3_4b(), 8, &big, 1).is_err());
     }
 
     #[test]

@@ -3,12 +3,55 @@
 //! the predictors schedule, and the fusion passes rewrite. The legacy
 //! flat kernel trace (paper §IV-B) is the graph's lossless lowered view:
 //! `trace()` returns exactly the op sequence the pre-graph builder
-//! emitted, so every sequential consumer is unchanged. Inference/prefill
-//! only — the paper evaluates inference and notes the backward pass
-//! reuses the same kernel types.
+//! emitted, so every sequential consumer is unchanged.
+//!
+//! Both generation phases are first-class:
+//!
+//! * **prefill** ([`TransformerConfig::graph`]): the whole prompt in one
+//!   forward pass (`q == kv == seq`), decoder self-attention annotated
+//!   causal so the fusion pass can emit masked kernels;
+//! * **decode** ([`TransformerConfig::decode_graph`]): one autoregressive
+//!   step (`q == 1`) reading a KV cache of `kv_len` entries — every GEMM
+//!   collapses to a gemv-degenerate projection and attention becomes a
+//!   KV-bound cache stream, the regime where NeuSight-style predictors
+//!   degrade hardest. [`GenerationSpec`] expands a (prompt, generate)
+//!   request into the prefill graph plus one decode graph per emitted
+//!   token; KV shapes are GQA-aware throughout (`kv_heads` drive the
+//!   projection widths and cache footprint).
 
 use crate::graph::{ModelGraph, NodeId};
 use crate::ops::{DType, GemmOp, Op, UtilKind, UtilOp};
+
+/// One generation request: run the prompt through prefill, then emit
+/// `gen_len` tokens autoregressively. Decode step `t` attends a cache of
+/// [`GenerationSpec::kv_len_at`]`(t) = prompt_len + t + 1` entries (the
+/// prompt, the previously generated tokens, and the token being
+/// processed, whose K/V rows are appended this step).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GenerationSpec {
+    pub prompt_len: usize,
+    pub gen_len: usize,
+}
+
+impl GenerationSpec {
+    /// Panics on an empty prompt (a contract violation, like feeding a
+    /// zero-dimension GEMM anywhere else in the op vocabulary); callers
+    /// holding user input should clamp or validate first — the CLI does.
+    pub fn new(prompt_len: usize, gen_len: usize) -> GenerationSpec {
+        assert!(prompt_len >= 1, "generation needs a non-empty prompt");
+        GenerationSpec { prompt_len, gen_len }
+    }
+
+    /// KV-cache length decode step `t` (0-based) attends.
+    pub fn kv_len_at(&self, step: usize) -> usize {
+        self.prompt_len + step + 1
+    }
+
+    /// Total context length after the final step.
+    pub fn total_len(&self) -> usize {
+        self.prompt_len + self.gen_len
+    }
+}
 
 /// Architecture description (decoder-only or encoder–decoder).
 #[derive(Clone, Debug)]
@@ -83,35 +126,51 @@ impl TransformerConfig {
     /// where embeddings are not modeled as ops); the returned node is the
     /// block's residual output. Node insertion order matches the legacy
     /// flat trace exactly, so lowering reproduces it.
+    ///
+    /// The block is phase-generic: prefill passes `q_len == kv_len ==
+    /// seq`; a decode step passes `q_len == 1` and the cache length, so
+    /// the scores/context BMMs become KV-cache streams and every
+    /// projection a gemv-degenerate `batch × n × k` GEMM. `causal` marks
+    /// the scores node for causal-mask propagation (decoder
+    /// self-attention; encoders stay bidirectional).
     fn block_graph(
         &self,
         batch: usize,
-        seq: usize,
+        q_len: usize,
+        kv_len: usize,
+        causal: bool,
         g: &mut ModelGraph,
         input: Option<NodeId>,
     ) -> NodeId {
         let dt = self.dtype;
         let h = self.hidden;
         let hd = self.head_dim();
-        let rows = batch * seq;
+        let rows = batch * q_len;
         let kv_dim = self.kv_heads * hd;
         let residual: Vec<NodeId> = input.into_iter().collect();
         // Pre-norm.
         let ln1 = g.add_node(Op::Util(UtilOp::new(UtilKind::LayerNorm, rows, h, dt)), &residual);
-        // QKV projection (fused as one Linear, TN like torch Linear).
+        // QKV projection (fused as one Linear, TN like torch Linear) —
+        // in decode this projects the new token only; its K/V rows are
+        // the cache append.
         let qkv = g.add_node(Op::Gemm(GemmOp::linear(rows, h + 2 * kv_dim, h, dt)), &[ln1]);
         // Attention scores + weighted values as batched MatMul (the
         // non-fused PyTorch/ONNX path the paper's Table II "BMM" row
         // profiles), plus the softmax — the exact subgraph the attention
         // fusion pass rewrites to FlashAttn/CutlassAttn.
-        let scores =
-            g.add_node(Op::Gemm(GemmOp::bmm(batch * self.heads, seq, seq, hd, dt)), &[qkv]);
+        let scores = g.add_node(
+            Op::Gemm(GemmOp::bmm(batch * self.heads, q_len, kv_len, hd, dt)),
+            &[qkv],
+        );
+        if causal {
+            g.mark_causal(scores);
+        }
         let probs = g.add_node(
-            Op::Util(UtilOp::new(UtilKind::Softmax, batch * self.heads * seq, seq, dt)),
+            Op::Util(UtilOp::new(UtilKind::Softmax, batch * self.heads * q_len, kv_len, dt)),
             &[scores],
         );
         let ctx = g.add_node(
-            Op::Gemm(GemmOp::bmm(batch * self.heads, seq, hd, seq, dt)),
+            Op::Gemm(GemmOp::bmm(batch * self.heads, q_len, hd, kv_len, dt)),
             &[probs, qkv],
         );
         // Output projection + residual.
@@ -200,18 +259,20 @@ impl TransformerConfig {
     /// Full inference (prefill) model graph for (batch, seq). The decoder
     /// stack depends on the encoder only through cross-attention KV, so
     /// decoder self-attention prefixes are schedulable concurrently with
-    /// the encoder on multi-stream devices.
+    /// the encoder on multi-stream devices. Decoder self-attention scores
+    /// are annotated causal (encoders stay bidirectional), so the
+    /// standard pass pipeline fuses them into masked kernels.
     pub fn graph(&self, batch: usize, seq: usize) -> ModelGraph {
         let mut g = ModelGraph::new();
-        // Encoder stack (enc–dec models).
+        // Encoder stack (enc–dec models): bidirectional.
         let mut enc_last: Option<NodeId> = None;
         for _ in 0..self.enc_layers {
-            enc_last = Some(self.block_graph(batch, seq, &mut g, enc_last));
+            enc_last = Some(self.block_graph(batch, seq, seq, false, &mut g, enc_last));
         }
-        // Decoder stack (+ cross-attention for enc–dec).
+        // Decoder stack (+ cross-attention for enc–dec): causal.
         let mut cur: Option<NodeId> = None;
         for _ in 0..self.layers {
-            let block = self.block_graph(batch, seq, &mut g, cur);
+            let block = self.block_graph(batch, seq, seq, true, &mut g, cur);
             cur = Some(if self.enc_layers > 0 {
                 let enc = enc_last.expect("encoder stack precedes cross-attention");
                 self.cross_attn_graph(batch, seq, &mut g, block, enc)
@@ -221,6 +282,122 @@ impl TransformerConfig {
         }
         self.head_graph(batch, seq, &mut g, cur);
         g
+    }
+
+    /// One autoregressive decode step as a model graph: `q_len = 1` per
+    /// sample, self-attention reading a KV cache of `kv_len` entries
+    /// (`kv_len` counts the token being generated — its K/V rows are
+    /// appended by this step's QKV projection). Every projection is a
+    /// `batch × n × k` gemv-degenerate GEMM and the attention BMMs are
+    /// KV-cache streams, so the whole step prices through the
+    /// memory-bound routes. For enc–dec models the per-layer
+    /// cross-attention reads its cached encoder KV, approximated at
+    /// `kv_len` entries (the cached cross KV never grows; callers that
+    /// know the true prompt length overestimate late steps slightly).
+    pub fn decode_graph(&self, batch: usize, kv_len: usize) -> ModelGraph {
+        assert!(kv_len >= 1, "decode step needs a non-empty KV cache");
+        let mut g = ModelGraph::new();
+        let mut cur: Option<NodeId> = None;
+        for _ in 0..self.layers {
+            let block = self.block_graph(batch, 1, kv_len, true, &mut g, cur);
+            cur = Some(if self.enc_layers > 0 {
+                self.cross_attn_decode_graph(batch, kv_len, &mut g, block)
+            } else {
+                block
+            });
+        }
+        self.head_graph(batch, 1, &mut g, cur);
+        g
+    }
+
+    /// Lowered view of [`TransformerConfig::decode_graph`].
+    pub fn decode_trace(&self, batch: usize, kv_len: usize) -> Vec<Op> {
+        self.decode_graph(batch, kv_len).lower()
+    }
+
+    /// Decode-step cross-attention (enc–dec models): the new token's
+    /// query against the *cached* encoder KV — no per-step KV projection,
+    /// that cost was paid once at prefill.
+    fn cross_attn_decode_graph(
+        &self,
+        batch: usize,
+        cross_len: usize,
+        g: &mut ModelGraph,
+        dec: NodeId,
+    ) -> NodeId {
+        let dt = self.dtype;
+        let h = self.hidden;
+        let hd = self.head_dim();
+        let ln = g.add_node(Op::Util(UtilOp::new(UtilKind::LayerNorm, batch, h, dt)), &[dec]);
+        let q = g.add_node(Op::Gemm(GemmOp::linear(batch, h, h, dt)), &[ln]);
+        let scores = g.add_node(
+            Op::Gemm(GemmOp::bmm(batch * self.heads, 1, cross_len, hd, dt)),
+            &[q],
+        );
+        let probs = g.add_node(
+            Op::Util(UtilOp::new(UtilKind::Softmax, batch * self.heads, cross_len, dt)),
+            &[scores],
+        );
+        let ctx = g.add_node(
+            Op::Gemm(GemmOp::bmm(batch * self.heads, 1, hd, cross_len, dt)),
+            &[probs],
+        );
+        let proj = g.add_node(Op::Gemm(GemmOp::linear(batch, h, h, dt)), &[ctx]);
+        g.add_node(Op::Util(UtilOp::new(UtilKind::Add, batch, h, dt)), &[proj, dec])
+    }
+
+    /// Expand a generation request: the prefill graph over the prompt
+    /// plus one decode graph per generated token (step `t` reads a cache
+    /// of `prompt_len + t + 1` entries). Consecutive steps differ only in
+    /// their attention ops, so per-op caches absorb the projections.
+    pub fn generation_graphs(
+        &self,
+        batch: usize,
+        spec: &GenerationSpec,
+    ) -> (ModelGraph, Vec<ModelGraph>) {
+        let prefill = self.graph(batch, spec.prompt_len);
+        let steps = (0..spec.gen_len)
+            .map(|t| self.decode_graph(batch, spec.kv_len_at(t)))
+            .collect();
+        (prefill, steps)
+    }
+
+    /// KV-cache footprint at a context of `kv_len` tokens: per decoder
+    /// layer, K and V of `kv_heads · head_dim` per token (GQA models
+    /// cache `kv_heads`, not `heads` — an 4–8× footprint saving that is
+    /// the point of grouped-query attention).
+    pub fn kv_cache_bytes(&self, batch: usize, kv_len: usize) -> f64 {
+        let per_token = 2.0 * (self.kv_heads * self.head_dim()) as f64;
+        self.layers as f64
+            * per_token
+            * kv_len as f64
+            * batch as f64
+            * self.dtype.bytes() as f64
+    }
+
+    /// Cached cross-attention KV for enc–dec models: each decoder layer
+    /// holds K and V of the full hidden width per encoder token (the
+    /// prefill emits one `Linear(rows, 2h, h)` per layer over the
+    /// encoder output). Zero for decoder-only models.
+    pub fn cross_kv_cache_bytes(&self, batch: usize, prompt_len: usize) -> f64 {
+        if self.enc_layers == 0 {
+            return 0.0;
+        }
+        self.layers as f64
+            * 2.0
+            * self.hidden as f64
+            * prompt_len as f64
+            * batch as f64
+            * self.dtype.bytes() as f64
+    }
+
+    /// Total memory for a generation run: weights, prefill activations,
+    /// the fully grown self-attention KV cache, the cached cross KV
+    /// (enc–dec models), and CUDA context.
+    pub fn generation_memory_bytes(&self, batch: usize, spec: &GenerationSpec) -> f64 {
+        self.memory_bytes(batch, spec.prompt_len)
+            + self.kv_cache_bytes(batch, spec.total_len())
+            + self.cross_kv_cache_bytes(batch, spec.prompt_len)
     }
 
     /// Full inference (prefill) trace for (batch, seq): the lowered view
@@ -243,7 +420,7 @@ impl TransformerConfig {
         let mut g = ModelGraph::new();
         let mut cur: Option<NodeId> = None;
         for _ in lo..hi.min(self.layers) {
-            cur = Some(self.block_graph(batch, seq, &mut g, cur));
+            cur = Some(self.block_graph(batch, seq, seq, true, &mut g, cur));
         }
         if include_head {
             self.head_graph(batch, seq, &mut g, cur);
@@ -428,6 +605,104 @@ mod tests {
             + (cfg.vocab * cfg.hidden * cfg.dtype.bytes()) as f64;
         let sum = a + b;
         assert!((sum - total).abs() / total < 0.01, "{sum} vs {total}");
+    }
+
+    #[test]
+    fn property_decode_graph_validates_and_lowers_losslessly() {
+        // ISSUE decode invariant: for every zoo model and several
+        // (batch, kv) points, the decode-step graph passes structural
+        // validation and its lowering is the exact lossless view.
+        for cfg in zoo::all_models() {
+            for (batch, kv) in [(1usize, 1usize), (1, 128), (4, 513), (8, 2048)] {
+                let g = cfg.decode_graph(batch, kv);
+                g.validate().unwrap_or_else(|e| panic!("{} kv={kv}: {e}", cfg.name));
+                let trace = cfg.decode_trace(batch, kv);
+                assert_eq!(g.lower(), trace, "{}: lossless lowering", cfg.name);
+                assert_eq!(g.len(), trace.len());
+                assert_eq!(g.outputs().len(), 1, "LM head marked");
+                // Every GEMM in a decode step is decode-shaped: either a
+                // batch-rows projection or a q=1 attention stream — all
+                // gemv-degenerate at decode batch sizes.
+                for op in &trace {
+                    if let Op::Gemm(gm) = op {
+                        assert!(
+                            gm.m <= batch.max(1),
+                            "{}: decode GEMM with m={} (batch {batch})",
+                            cfg.name,
+                            gm.m
+                        );
+                        if batch <= 8 {
+                            assert!(crate::gpusim::gemm::is_gemv_degenerate(gm));
+                        }
+                    }
+                }
+                // Self-attention reads the whole cache.
+                let has_kv_stream = trace.iter().any(|op| {
+                    matches!(op, Op::Gemm(gm) if gm.m == 1 || gm.batch > 1)
+                        && matches!(op, Op::Gemm(gm) if gm.n == kv || gm.k == kv)
+                });
+                assert!(has_kv_stream, "{}: no kv-shaped BMM at kv={kv}", cfg.name);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_graph_marks_self_attention_causal() {
+        let cfg = zoo::qwen3_0_6b();
+        let g = cfg.decode_graph(2, 77);
+        let causal_scores = (0..g.len())
+            .filter(|&i| {
+                let id = crate::graph::NodeId(i);
+                g.is_causal(id)
+                    && matches!(g.node(id).op, Op::Gemm(gm) if gm.m == 1 && gm.n == 77)
+            })
+            .count();
+        assert_eq!(causal_scores, cfg.layers, "one causal scores BMM per layer");
+    }
+
+    #[test]
+    fn generation_spec_expands_to_prefill_plus_growing_steps() {
+        let cfg = zoo::gpt2_large();
+        let spec = GenerationSpec::new(128, 5);
+        assert_eq!(spec.kv_len_at(0), 129);
+        assert_eq!(spec.total_len(), 133);
+        let (prefill, steps) = cfg.generation_graphs(2, &spec);
+        assert_eq!(prefill.lower(), cfg.trace(2, 128), "prefill is the plain graph");
+        assert_eq!(steps.len(), 5);
+        for (t, step) in steps.iter().enumerate() {
+            assert_eq!(step.lower(), cfg.decode_trace(2, 129 + t));
+        }
+        // gen_len = 0 degenerates to prefill-only.
+        let (_, none) = cfg.generation_graphs(2, &GenerationSpec::new(128, 0));
+        assert!(none.is_empty());
+        // Consecutive steps share every non-attention op — the property
+        // that lets the service cache absorb the projections.
+        let a = steps[0].lower();
+        let b = steps[1].lower();
+        let shared = a.iter().filter(|op| b.contains(op)).count();
+        assert!(shared * 10 >= a.len() * 7, "{shared} of {} ops shared", a.len());
+    }
+
+    #[test]
+    fn kv_cache_is_gqa_aware() {
+        let cfg = zoo::qwen3_4b(); // 32 heads, 8 kv_heads
+        let mut mha = cfg.clone();
+        mha.kv_heads = mha.heads;
+        let gqa_bytes = cfg.kv_cache_bytes(1, 4096);
+        let mha_bytes = mha.kv_cache_bytes(1, 4096);
+        assert_eq!(mha_bytes, 4.0 * gqa_bytes, "kv_heads drive the cache footprint");
+        // And the decode QKV projection width follows kv_heads too.
+        let trace = cfg.decode_trace(1, 64);
+        let qkv_width = cfg.hidden + 2 * cfg.kv_heads * cfg.head_dim();
+        assert!(trace
+            .iter()
+            .any(|op| matches!(op, Op::Gemm(gm) if gm.n == qkv_width)));
+        // Generation memory includes the grown cache.
+        let spec = GenerationSpec::new(512, 512);
+        assert!(
+            cfg.generation_memory_bytes(1, &spec)
+                > cfg.memory_bytes(1, 512) + cfg.kv_cache_bytes(1, 1024) * 0.99
+        );
     }
 
     #[test]

@@ -201,7 +201,32 @@ impl UtilOp {
     }
 }
 
+/// Query–key pairs an attention kernel actually evaluates. The query
+/// window is aligned to the *end* of the key window (the autoregressive
+/// convention): query `i` of `q_len` attends `kv_len - q_len + 1 + i`
+/// keys under a causal mask. Prefill (`q == kv`) evaluates the lower
+/// triangle `q·(q+1)/2`; a decode step (`q == 1`) sees the whole cache —
+/// the mask removes nothing, every kernel is KV-bound instead.
+pub fn attended_pairs(q_len: usize, kv_len: usize, causal: bool) -> f64 {
+    let (q, kv) = (q_len as f64, kv_len as f64);
+    if !causal {
+        return q * kv;
+    }
+    if kv_len >= q_len {
+        q * kv - q * (q - 1.0) / 2.0
+    } else {
+        // Degenerate window (more queries than keys): only the trailing
+        // kv_len queries attend anything.
+        kv * (kv + 1.0) / 2.0
+    }
+}
+
 /// Custom computation-intensive kernels of paper §IV-C / Table VI.
+///
+/// Attention kernels distinguish the query length from the key/value
+/// length: prefill is `q_len == kv_len == seq`, an autoregressive decode
+/// step is `q_len == 1, kv_len == t` (the kernel streams a KV cache of
+/// `t` entries per lane and appends the new token's K/V rows).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum CustomOp {
     /// Triton matmul: autotuned from Triton's own config space.
@@ -209,9 +234,9 @@ pub enum CustomOp {
     /// Triton fused elementwise vector kernel.
     TritonVec { elems: usize, dtype: DType },
     /// FlashAttention-2 fused attention.
-    FlashAttn { batch: usize, heads: usize, seq: usize, head_dim: usize, dtype: DType, causal: bool },
+    FlashAttn { batch: usize, heads: usize, q_len: usize, kv_len: usize, head_dim: usize, dtype: DType, causal: bool },
     /// CUTLASS (xFormers) fused attention.
-    CutlassAttn { batch: usize, heads: usize, seq: usize, head_dim: usize, dtype: DType, causal: bool },
+    CutlassAttn { batch: usize, heads: usize, q_len: usize, kv_len: usize, head_dim: usize, dtype: DType, causal: bool },
 }
 
 impl CustomOp {
@@ -227,19 +252,36 @@ impl CustomOp {
         match *self {
             CustomOp::TritonMM { m, n, k, .. } => 2.0 * m as f64 * n as f64 * k as f64,
             CustomOp::TritonVec { elems, .. } => elems as f64,
-            CustomOp::FlashAttn { batch, heads, seq, head_dim, causal, .. }
-            | CustomOp::CutlassAttn { batch, heads, seq, head_dim, causal, .. } => {
-                let full = 4.0
-                    * batch as f64
+            CustomOp::FlashAttn { batch, heads, q_len, kv_len, head_dim, causal, .. }
+            | CustomOp::CutlassAttn { batch, heads, q_len, kv_len, head_dim, causal, .. } => {
+                4.0 * batch as f64
                     * heads as f64
-                    * seq as f64
-                    * seq as f64
-                    * head_dim as f64;
-                if causal {
-                    full * 0.5
-                } else {
-                    full
-                }
+                    * attended_pairs(q_len, kv_len, causal)
+                    * head_dim as f64
+            }
+        }
+    }
+
+    /// Minimal operand + output traffic in bytes. For attention this is
+    /// the KV-cache traffic model: per (batch, head) lane the kernel reads
+    /// the query block (`q·d`) and streams the whole K and V cache
+    /// (`2·kv·d`), then writes the output block (`q·d`) and appends the
+    /// new tokens' K/V rows to the cache (`2·q·d`). Prefill (`q == kv`)
+    /// degenerates to reading Q/K/V once and writing O plus the full
+    /// cache; a decode step (`q == 1`) is dominated by the `2·kv·d` cache
+    /// stream — the memory-bound regime of autoregressive generation.
+    pub fn io_bytes(&self) -> f64 {
+        match *self {
+            CustomOp::TritonMM { m, n, k, dtype } => {
+                ((m * k + k * n + m * n) * dtype.bytes()) as f64
+            }
+            CustomOp::TritonVec { elems, dtype } => (elems * dtype.bytes() * 2) as f64,
+            CustomOp::FlashAttn { batch, heads, q_len, kv_len, head_dim, dtype, .. }
+            | CustomOp::CutlassAttn { batch, heads, q_len, kv_len, head_dim, dtype, .. } => {
+                let lanes = batch as f64 * heads as f64;
+                let d = head_dim as f64;
+                let per_lane = (4.0 * q_len as f64 + 2.0 * kv_len as f64) * d;
+                lanes * per_lane * dtype.bytes() as f64
             }
         }
     }
@@ -254,6 +296,17 @@ pub enum Op {
 }
 
 impl Op {
+    /// Minimal memory traffic of any op (operands + outputs; for attention,
+    /// KV-cache streams and appends). The numerator of every
+    /// arithmetic-intensity / memory-bound-routing decision.
+    pub fn io_bytes(&self) -> f64 {
+        match self {
+            Op::Gemm(g) => g.io_bytes(),
+            Op::Util(u) => u.elems() * u.dtype.bytes() as f64 * u.passes(),
+            Op::Custom(c) => c.io_bytes(),
+        }
+    }
+
     pub fn dtype(&self) -> DType {
         match self {
             Op::Gemm(g) => g.dtype,
@@ -314,11 +367,73 @@ mod tests {
     }
 
     #[test]
-    fn causal_attention_halves_flops() {
+    fn causal_prefill_attention_evaluates_the_lower_triangle() {
         let mk = |causal| CustomOp::FlashAttn {
-            batch: 2, heads: 8, seq: 512, head_dim: 64, dtype: DType::Bf16, causal,
+            batch: 2, heads: 8, q_len: 512, kv_len: 512, head_dim: 64,
+            dtype: DType::Bf16, causal,
         };
-        assert_eq!(mk(true).flops() * 2.0, mk(false).flops());
+        // Exact triangular accounting: q·(q+1)/2 of q² pairs survive the
+        // mask — asymptotically half the full square.
+        let ratio = mk(true).flops() / mk(false).flops();
+        assert_eq!(ratio, (512.0 * 513.0 / 2.0) / (512.0 * 512.0));
+        assert!(ratio > 0.5 && ratio < 0.51);
+        assert_eq!(attended_pairs(512, 512, true), 512.0 * 513.0 / 2.0);
+        assert_eq!(attended_pairs(512, 512, false), 512.0 * 512.0);
+    }
+
+    #[test]
+    fn decode_step_sees_the_whole_cache_regardless_of_mask() {
+        // q = 1: the causal mask removes nothing — decode work is set by
+        // the cache length alone.
+        for kv in [1usize, 17, 512, 4096] {
+            assert_eq!(attended_pairs(1, kv, true), attended_pairs(1, kv, false));
+        }
+        // Degenerate window (more queries than keys) stays triangular.
+        assert_eq!(attended_pairs(8, 4, true), 4.0 * 5.0 / 2.0);
+    }
+
+    #[test]
+    fn property_decode_attention_flops_and_io_monotone_in_kv_len() {
+        // ISSUE decode invariant: at q_len = 1, both FLOPs and memory
+        // traffic grow strictly with the KV-cache length, for both fused
+        // families, both dtypes, causal or not.
+        for dtype in [DType::F32, DType::Bf16] {
+            for causal in [false, true] {
+                let mut prev = (0.0f64, 0.0f64);
+                for kv in [1usize, 2, 64, 129, 1024, 8191] {
+                    let fa = CustomOp::FlashAttn {
+                        batch: 4, heads: 8, q_len: 1, kv_len: kv, head_dim: 64,
+                        dtype, causal,
+                    };
+                    let ca = CustomOp::CutlassAttn {
+                        batch: 4, heads: 8, q_len: 1, kv_len: kv, head_dim: 64,
+                        dtype, causal,
+                    };
+                    assert_eq!(fa.flops(), ca.flops(), "families share the math");
+                    assert!(fa.flops() > prev.0, "flops not monotone at kv={kv}");
+                    assert!(fa.io_bytes() > prev.1, "io not monotone at kv={kv}");
+                    prev = (fa.flops(), fa.io_bytes());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attention_io_bytes_model_kv_cache_traffic() {
+        // One decode step: read Q (1·d) + stream the cache (2·kv·d),
+        // write O (1·d) + append K/V (2·d) — per lane, times dtype width.
+        let op = CustomOp::FlashAttn {
+            batch: 2, heads: 4, q_len: 1, kv_len: 100, head_dim: 64,
+            dtype: DType::Bf16, causal: true,
+        };
+        let per_lane = (4.0 * 1.0 + 2.0 * 100.0) * 64.0 * 2.0;
+        assert_eq!(op.io_bytes(), 8.0 * per_lane);
+        // Unified Op::io_bytes covers every family.
+        assert_eq!(Op::Custom(op).io_bytes(), op.io_bytes());
+        let g = GemmOp::mm(64, 64, 64, DType::F32);
+        assert_eq!(Op::Gemm(g).io_bytes(), g.io_bytes());
+        let u = UtilOp::new(UtilKind::Add, 32, 32, DType::F32);
+        assert_eq!(Op::Util(u).io_bytes(), u.elems() * 4.0 * u.passes());
     }
 
     #[test]

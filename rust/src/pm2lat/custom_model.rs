@@ -25,10 +25,26 @@ pub const ELEMS_GRID: [usize; 8] = [
 /// stores per-wave durations on the seq grid and predictions scale by the
 /// query's wave count (block_q and per-SM residency are public kernel
 /// launch parameters).
+///
+/// Two collection grids cover the two generation regimes:
+///
+/// * **prefill** (`q == kv == S`): square kernels on `SEQ_GRID`, the
+///   compute-bound wave-quantized path (unchanged from §IV-C);
+/// * **decode** (`q == 1, kv == S`): single-query kernels streaming a
+///   KV cache of `S` entries. Decode launches `batch·heads` thin blocks —
+///   almost always a fraction of one wave — so predictions scale with the
+///   *block* count over the measured launch-free staircase, not with wave
+///   counts. This is the memory-bound route of the ISSUE: decode-shaped
+///   attention never prices through the tensor-core wave model.
 #[derive(Clone, Debug)]
 pub struct AttnProfile {
-    /// Durations at SEQ_GRID with the base (batch, heads, head_dim).
+    /// Prefill durations at SEQ_GRID with the base (batch, heads, head_dim).
     pub dur_s: [f64; 7],
+    /// Decode-step durations (q = 1, kv = SEQ_GRID[i]) at the base shape.
+    pub decode_dur_s: [f64; 7],
+    /// Launch overhead, measured from a single-block decode kernel whose
+    /// stream time is negligible.
+    pub launch_s: f64,
     pub base_batch: usize,
     pub base_heads: usize,
     pub base_head_dim: usize,
@@ -39,33 +55,72 @@ pub struct AttnProfile {
 }
 
 impl AttnProfile {
-    fn waves(&self, batch: usize, heads: usize, seq: usize) -> usize {
-        let blocks = batch * heads * seq.div_ceil(self.block_q);
-        blocks.div_ceil(self.wave_capacity)
+    fn blocks(&self, batch: usize, heads: usize, q_len: usize) -> usize {
+        batch * heads * q_len.div_ceil(self.block_q)
     }
 
-    /// Interpolate duration in seq, then rescale by wave count and
-    /// head_dim work.
-    pub fn predict(&self, batch: usize, heads: usize, seq: usize, head_dim: usize, causal_ratio: f64) -> f64 {
-        let s = (seq as f64).clamp(SEQ_GRID[0] as f64, *SEQ_GRID.last().unwrap() as f64);
+    fn waves(&self, batch: usize, heads: usize, q_len: usize) -> usize {
+        self.blocks(batch, heads, q_len).div_ceil(self.wave_capacity)
+    }
+
+    /// Bracket `kv` on the seq grid: (index, clamped kv, linear fraction,
+    /// beyond-grid extrapolation factor).
+    fn bracket(kv_len: usize) -> (usize, f64, f64, f64) {
+        let s = (kv_len as f64)
+            .clamp(SEQ_GRID[0] as f64, *SEQ_GRID.last().unwrap() as f64);
         let pos = (s / SEQ_GRID[0] as f64).log2();
         let idx = (pos.floor() as usize).min(SEQ_GRID.len() - 2);
         let s1 = SEQ_GRID[idx] as f64;
-        let (d1, d3) = (self.dur_s[idx], self.dur_s[idx + 1]);
         let frac = (s - s1) / s1;
+        let extra = if (kv_len as f64) > s { kv_len as f64 / s } else { 1.0 };
+        (idx, s, frac, extra)
+    }
+
+    /// Predict a fused attention kernel of any (q, kv) shape. Prefill
+    /// shapes (`q ≥ block_q`) take the wave-quantized path; decode shapes
+    /// take the measured block-proportional staircase, with the thin
+    /// tile's compute share as a secondary floor.
+    pub fn predict(
+        &self,
+        batch: usize,
+        heads: usize,
+        q_len: usize,
+        kv_len: usize,
+        head_dim: usize,
+        causal: bool,
+    ) -> f64 {
+        // Degenerate window: launch-only (mirrors the simulator's gate
+        // and guards the 0/0 causal ratio).
+        if q_len == 0 || kv_len == 0 {
+            return self.launch_s;
+        }
+        let ratio = crate::ops::attended_pairs(q_len, kv_len, causal)
+            / crate::ops::attended_pairs(q_len, kv_len, false);
+        let hd = head_dim as f64 / self.base_head_dim as f64;
+        let (idx, _, frac, extra) = Self::bracket(kv_len);
         // Per-wave duration at the bracketing grid points (per-block work
-        // is linear in S; the S² total lives in the block count).
+        // is linear in kv; the q·kv total lives in the block count).
+        let (d1, d3) = (self.dur_s[idx], self.dur_s[idx + 1]);
         let w1 = self.waves(self.base_batch, self.base_heads, SEQ_GRID[idx]) as f64;
         let w3 = self.waves(self.base_batch, self.base_heads, SEQ_GRID[idx + 1]) as f64;
         let per_wave = d1 / w1 + frac * (d3 / w3 - d1 / w1);
-        // Extrapolate per-wave work linearly beyond the grid (∝ S).
-        let extra = if (seq as f64) > s { seq as f64 / s } else { 1.0 };
-        per_wave
-            * extra
-            * self.waves(batch, heads, seq) as f64
-            * head_dim as f64
-            / self.base_head_dim as f64
-            * causal_ratio
+        let tile_cost =
+            per_wave * extra * self.waves(batch, heads, q_len) as f64 * hd;
+        if q_len >= self.block_q {
+            return tile_cost * ratio;
+        }
+        // Decode regime: launch-free staircase interpolated in kv, scaled
+        // by the query's block count (decode runs sub-wave, so cost is
+        // proportional to resident blocks, not quantized waves).
+        let (e1, e3) = (self.decode_dur_s[idx], self.decode_dur_s[idx + 1]);
+        let work1 = (e1 - self.launch_s).max(e1 * 0.05);
+        let work3 = (e3 - self.launch_s).max(e3 * 0.05);
+        let work = work1 + frac * (work3 - work1);
+        let base_blocks = self.blocks(self.base_batch, self.base_heads, 1) as f64;
+        let floor = self.launch_s
+            + work * extra * hd * self.blocks(batch, heads, q_len) as f64
+                / base_blocks;
+        floor.max(tile_cost * q_len as f64 / self.block_q as f64) * ratio
     }
 }
 
@@ -301,23 +356,40 @@ fn collect_attn(gpu: &mut Gpu, dtype: DType, spec: &ProfileSpec, flash: bool) ->
     let (base_batch, base_heads, base_head_dim) = (8usize, 16usize, 64usize);
     let params =
         crate::gpusim::custom::attn_params(&gpu.spec, if flash { "flash" } else { "cutlass" }, dtype);
-    let mut dur_s = [0.0; 7];
-    for (i, &seq) in SEQ_GRID.iter().enumerate() {
-        let op = if flash {
+    let mk = |batch: usize, heads: usize, q_len: usize, kv_len: usize| {
+        if flash {
             CustomOp::FlashAttn {
-                batch: base_batch, heads: base_heads, seq,
+                batch, heads, q_len, kv_len,
                 head_dim: base_head_dim, dtype, causal: false,
             }
         } else {
             CustomOp::CutlassAttn {
-                batch: base_batch, heads: base_heads, seq,
+                batch, heads, q_len, kv_len,
                 head_dim: base_head_dim, dtype, causal: false,
             }
-        };
-        dur_s[i] = profiler::measure(gpu, &Op::Custom(op), spec).ok()?.mean_s;
+        }
+    };
+    let mut dur_s = [0.0; 7];
+    let mut decode_dur_s = [0.0; 7];
+    for (i, &seq) in SEQ_GRID.iter().enumerate() {
+        // Prefill point (q = kv = S) and decode point (q = 1, kv = S).
+        dur_s[i] = profiler::measure(gpu, &Op::Custom(mk(base_batch, base_heads, seq, seq)), spec)
+            .ok()?
+            .mean_s;
+        decode_dur_s[i] =
+            profiler::measure(gpu, &Op::Custom(mk(base_batch, base_heads, 1, seq)), spec)
+                .ok()?
+                .mean_s;
     }
+    // Launch overhead: a single-block decode kernel over the smallest
+    // cache streams negligible bytes — its duration is ≈ pure launch.
+    let launch_s = profiler::measure(gpu, &Op::Custom(mk(1, 1, 1, SEQ_GRID[0])), spec)
+        .ok()?
+        .mean_s;
     Some(AttnProfile {
         dur_s,
+        decode_dur_s,
+        launch_s,
         base_batch,
         base_heads,
         base_head_dim,
@@ -336,16 +408,14 @@ impl CustomModel {
             CustomOp::TritonVec { elems, .. } => {
                 Some(self.triton_vec.as_ref()?.predict(elems))
             }
-            CustomOp::FlashAttn { batch, heads, seq, head_dim, causal, .. } => {
+            CustomOp::FlashAttn { batch, heads, q_len, kv_len, head_dim, causal, .. } => {
                 Some(self.flash_attn.as_ref()?.predict(
-                    batch, heads, seq, head_dim,
-                    if causal { 0.5 } else { 1.0 },
+                    batch, heads, q_len, kv_len, head_dim, causal,
                 ))
             }
-            CustomOp::CutlassAttn { batch, heads, seq, head_dim, causal, .. } => {
+            CustomOp::CutlassAttn { batch, heads, q_len, kv_len, head_dim, causal, .. } => {
                 Some(self.cutlass_attn.as_ref()?.predict(
-                    batch, heads, seq, head_dim,
-                    if causal { 0.5 } else { 1.0 },
+                    batch, heads, q_len, kv_len, head_dim, causal,
                 ))
             }
         }
@@ -416,7 +486,7 @@ mod tests {
         let mut errs = Vec::new();
         for (b, h, s) in [(2, 16, 512), (8, 8, 1024), (4, 32, 2048), (1, 8, 4096)] {
             let op = CustomOp::FlashAttn {
-                batch: b, heads: h, seq: s, head_dim: 64,
+                batch: b, heads: h, q_len: s, kv_len: s, head_dim: 64,
                 dtype: DType::Bf16, causal: false,
             };
             let pred = m.predict(&gpu, &op).unwrap();
@@ -426,6 +496,46 @@ mod tests {
             errs.push(rel_err_pct(pred, truth));
         }
         assert!(mean(&errs) < 25.0, "F-Attn errs {errs:?}");
+    }
+
+    #[test]
+    fn decode_attention_prediction_tracks_truth_and_grows_with_kv() {
+        // The decode staircase: q = 1 kernels streaming a growing cache,
+        // off the base collection shape in batch/heads and between grid
+        // points in kv.
+        let (mut gpu, m) = model("a100", DType::Bf16);
+        let mut errs = Vec::new();
+        for (b, h, kv) in [
+            (4usize, 8usize, 256usize),
+            (2, 16, 700),
+            (8, 16, 1024),
+            (1, 32, 3000),
+            (4, 16, 8192),
+        ] {
+            let op = CustomOp::FlashAttn {
+                batch: b, heads: h, q_len: 1, kv_len: kv, head_dim: 64,
+                dtype: DType::Bf16, causal: true,
+            };
+            let pred = m.predict(&gpu, &op).unwrap();
+            let truth = profiler::measure(&mut gpu, &Op::Custom(op), &ProfileSpec::quick())
+                .unwrap()
+                .mean_s;
+            errs.push(rel_err_pct(pred, truth));
+        }
+        assert!(mean(&errs) < 30.0, "decode F-Attn errs {errs:?}");
+        // Monotone in kv at fixed lanes: the per-step cost of a decode
+        // loop grows as the cache fills.
+        let mut prev = 0.0;
+        for kv in [128usize, 300, 512, 1024, 2048, 4096, 8192, 16000] {
+            let p = m
+                .predict(&gpu, &CustomOp::FlashAttn {
+                    batch: 4, heads: 16, q_len: 1, kv_len: kv, head_dim: 64,
+                    dtype: DType::Bf16, causal: true,
+                })
+                .unwrap();
+            assert!(p > prev, "kv={kv}: {p} <= {prev}");
+            prev = p;
+        }
     }
 
     #[test]

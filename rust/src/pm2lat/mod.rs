@@ -18,5 +18,5 @@ pub mod gemm_model;
 pub mod predictor;
 pub mod utility_model;
 
-pub use gemm_model::{GemmTable, KernelProfile, K_GRID};
-pub use predictor::Pm2Lat;
+pub use gemm_model::{GemmTable, GemvProfile, KernelProfile, K_GRID};
+pub use predictor::{GenerationPrediction, Pm2Lat};

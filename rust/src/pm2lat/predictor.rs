@@ -4,12 +4,50 @@
 //! (paper §III).
 
 use crate::gpusim::Gpu;
+use crate::models::transformer::{GenerationSpec, TransformerConfig};
 use crate::ops::{DType, Op};
 use crate::profiler::ProfileSpec;
 
 use super::custom_model::{self, CustomModel};
 use super::gemm_model::{self, GemmTable};
 use super::utility_model::{self, UtilityModel};
+
+/// Predicted latency of one autoregressive generation: the prefill pass
+/// plus every decode step. Decode-step cost grows with the KV cache, so
+/// the vector is the full latency *curve*, not just a total.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenerationPrediction {
+    pub prefill_s: f64,
+    /// Per-step decode latency; `step_s[t]` reads a cache of
+    /// `prompt_len + t + 1` entries.
+    pub step_s: Vec<f64>,
+}
+
+impl GenerationPrediction {
+    pub fn total_s(&self) -> f64 {
+        self.prefill_s + self.step_s.iter().sum::<f64>()
+    }
+
+    /// Mean decode-step latency — the serving TPOT metric; 0 when
+    /// nothing is generated.
+    pub fn time_per_output_token_s(&self) -> f64 {
+        if self.step_s.is_empty() {
+            0.0
+        } else {
+            self.step_s.iter().sum::<f64>() / self.step_s.len() as f64
+        }
+    }
+
+    /// Steady-state decode throughput (tokens/s); 0 without decode steps.
+    pub fn tokens_per_s(&self) -> f64 {
+        let tpot = self.time_per_output_token_s();
+        if tpot > 0.0 {
+            1.0 / tpot
+        } else {
+            0.0
+        }
+    }
+}
 
 /// All fitted PM2Lat state for one device.
 pub struct Pm2Lat {
@@ -113,6 +151,47 @@ impl Pm2Lat {
         streams: usize,
     ) -> Option<f64> {
         crate::graph::predict_graph_latency(graph, streams, |op| self.predict(gpu, op))
+    }
+
+    /// Whole-generation latency: the prefill graph plus one decode graph
+    /// per emitted token, each aggregated as the `streams`-bounded
+    /// critical path. With `gen_len == 0` this is bit-for-bit the plain
+    /// prefill prediction (`predict_graph` over `cfg.graph(batch,
+    /// prompt_len)`). Decode steps route through the memory-bound models
+    /// (gemv projections, KV-bound attention) automatically — the regime
+    /// split lives in [`Pm2Lat::predict`], not here. `None` when any op
+    /// is unsupported on the device.
+    pub fn predict_generation(
+        &self,
+        gpu: &Gpu,
+        cfg: &TransformerConfig,
+        batch: usize,
+        spec: &GenerationSpec,
+        streams: usize,
+    ) -> Option<GenerationPrediction> {
+        let (prefill, steps) = cfg.generation_graphs(batch, spec);
+        self.predict_generation_graphs(gpu, &prefill, &steps, streams)
+    }
+
+    /// Aggregate an already-expanded generation — the prefill graph plus
+    /// per-step decode graphs, possibly rewritten by passes (causal
+    /// propagation, fusion) — into one [`GenerationPrediction`]. This is
+    /// the single place generation aggregation lives; `predict_generation`
+    /// and pass-driving callers (e.g. `pm2lat generate --fuse`) both feed
+    /// it.
+    pub fn predict_generation_graphs(
+        &self,
+        gpu: &Gpu,
+        prefill: &crate::graph::ModelGraph,
+        steps: &[crate::graph::ModelGraph],
+        streams: usize,
+    ) -> Option<GenerationPrediction> {
+        let prefill_s = self.predict_graph(gpu, prefill, streams)?;
+        let mut step_s = Vec::with_capacity(steps.len());
+        for g in steps {
+            step_s.push(self.predict_graph(gpu, g, streams)?);
+        }
+        Some(GenerationPrediction { prefill_s, step_s })
     }
 
     /// Per-prediction cost is the headline of §IV-D2 — expose a cheap
@@ -227,5 +306,62 @@ mod tests {
     fn n_tables_counts_fits() {
         let (_, pl) = build("a100", &[DType::F32]);
         assert_eq!(pl.n_tables(), 2); // gemm + util, no custom
+    }
+
+    #[test]
+    fn property_generation_with_zero_tokens_is_plain_prefill_bit_for_bit() {
+        use crate::models::transformer::GenerationSpec;
+        let (gpu, pl) = build("a100", &[DType::F32]);
+        let cfg = crate::models::zoo::gpt2_large();
+        for (batch, prompt, streams) in [(1usize, 128usize, 1usize), (4, 256, 2)] {
+            let spec = GenerationSpec::new(prompt, 0);
+            let gen = pl.predict_generation(&gpu, &cfg, batch, &spec, streams).unwrap();
+            let plain = pl.predict_graph(&gpu, &cfg.graph(batch, prompt), streams).unwrap();
+            assert_eq!(gen.prefill_s, plain, "prefill must be the identical prediction");
+            assert_eq!(gen.total_s(), plain);
+            assert!(gen.step_s.is_empty());
+            assert_eq!(gen.time_per_output_token_s(), 0.0);
+            assert_eq!(gen.tokens_per_s(), 0.0);
+        }
+    }
+
+    #[test]
+    fn property_decode_step_prediction_grows_with_kv_len() {
+        // ISSUE acceptance: per-step latencies where decode-step cost
+        // grows with kv_len. Strict monotonicity over the whole curve is
+        // the predictor-level decode invariant.
+        use crate::models::transformer::GenerationSpec;
+        let (gpu, pl) = build("a100", &[DType::F32]);
+        let cfg = crate::models::zoo::gpt2_large();
+        let spec = GenerationSpec::new(512, 16);
+        let gen = pl.predict_generation(&gpu, &cfg, 1, &spec, 1).unwrap();
+        assert_eq!(gen.step_s.len(), 16);
+        for t in 1..gen.step_s.len() {
+            assert!(
+                gen.step_s[t] > gen.step_s[t - 1],
+                "step {t}: {} <= {}",
+                gen.step_s[t],
+                gen.step_s[t - 1]
+            );
+        }
+        // And decode is far cheaper than prefill (memory-bound single
+        // token vs compute-bound prompt pass).
+        assert!(gen.time_per_output_token_s() < gen.prefill_s / 4.0);
+        assert!(gen.tokens_per_s() > 0.0);
+        // Widely separated caches differ strongly.
+        let far = pl
+            .predict_generation(&gpu, &cfg, 1, &GenerationSpec::new(8192, 1), 1)
+            .unwrap();
+        assert!(far.step_s[0] > gen.step_s[0] * 1.1);
+    }
+
+    #[test]
+    fn generation_unsupported_dtype_is_none() {
+        use crate::models::transformer::GenerationSpec;
+        let (gpu, pl) = build("t4", &[DType::F32]);
+        let cfg = crate::models::zoo::qwen3_0_6b(); // BF16 — no T4 path
+        assert!(pl
+            .predict_generation(&gpu, &cfg, 1, &GenerationSpec::new(64, 4), 1)
+            .is_none());
     }
 }

@@ -1,9 +1,13 @@
-//! CUPTI/NCU-style measurement collection with the paper's discipline
-//! (§III-C): warm-up repetitions discarded, each config executed ≥25 times
-//! with ≥500 ms total execution floor, averaged. Also exposes the
-//! occupancy query (the CUDA occupancy-calculator equivalent) and the
-//! boost-clock calibration PM2Lat uses to map locked-clock profiles to
-//! boost-clock predictions.
+//! # profiler — CUPTI/NCU-style measurement collection
+//!
+//! The paper's collection discipline (§III-C): warm-up repetitions
+//! discarded, each config executed ≥25 times with a ≥500 ms total
+//! execution floor, averaged. Also exposes the occupancy query (the CUDA
+//! occupancy-calculator equivalent) and the boost-clock calibration
+//! PM2Lat uses to map locked-clock profiles to boost-clock predictions.
+//! Every fitted model in `pm2lat/` — kernel tables, the gemv streaming
+//! profile, utility regression, custom-kernel (incl. decode-attention)
+//! profiles — consumes only what this module measures.
 
 use crate::gpusim::{gemm, ExecError, FreqMode, Gpu};
 use crate::ops::{Counters, DType, GemmOp, Op};

@@ -1,6 +1,10 @@
-//! PJRT runtime: load the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py`, compile them once on the PJRT CPU client, and
-//! execute them from the Rust request path. Python never runs here.
+//! # runtime — the PJRT execution layer (L2→L3 boundary)
+//!
+//! Load the AOT HLO-text artifacts produced by `python/compile/aot.py`,
+//! compile them once on the PJRT CPU client, and execute them from the
+//! Rust request path. Python never runs here: the batched PM2Lat GEMM
+//! kernel and the NeuSight MLP arrive as HLO text under `artifacts/`
+//! (`make artifacts`), and everything downstream is `Runtime::call`.
 //!
 //! Interchange is HLO *text* — jax ≥ 0.5 serialized protos use 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser

@@ -1,4 +1,9 @@
-//! ASCII/markdown table formatting for experiment reports.
+//! # util::table — ASCII/markdown table formatting
+//!
+//! Renders experiment reports (the paper's Tables I–VI and the serving
+//! benchmarks) as GitHub-flavoured markdown: header + rows, cells padded
+//! for terminal readability. No external table crate in the offline
+//! vendor set, so this stays deliberately tiny.
 
 /// Render rows as a GitHub-flavoured markdown table. `rows` excludes the
 /// header; all rows must have `header.len()` cells.
