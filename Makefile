@@ -8,17 +8,20 @@
 #   make doc         — rustdoc for the crate (no deps); same graceful
 #                      no-toolchain skip as lint.
 #   make ci          — tier-1 verification in one command: lint, docs,
-#                      release build, full test suite.
+#                      release build, full test suite, serve-sim smoke.
+#   make serve-sim-smoke — fast serving-simulator end-to-end check
+#                      (tiny trace, quick profile; graceful no-cargo skip).
+#   make bench-serving — the serving-capacity sweep on the fast setting.
 
 PYTHON ?= python3
 
-.PHONY: artifacts ci lint doc fmt clippy build test bench-fast
+.PHONY: artifacts ci lint doc fmt clippy build test bench-fast bench-serving serve-sim-smoke
 
 # aot.py uses package-relative imports — must run as a module from python/.
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
 
-ci: lint doc test
+ci: lint doc test serve-sim-smoke
 
 # Graceful no-toolchain path: some dev containers ship without cargo, and
 # lint is the one stage that may safely no-op there (skipping style checks
@@ -55,3 +58,18 @@ test: build
 
 bench-fast:
 	PM2LAT_BENCH_FAST=1 cargo bench
+
+bench-serving:
+	PM2LAT_BENCH_FAST=1 cargo bench --bench serving_capacity
+
+# End-to-end serving-simulator smoke: drives `pm2lat serve-sim --smoke`
+# (tiny Poisson trace, quick profile, sweep + SLO search) as an execution
+# check on top of the unit suite. Same graceful no-cargo skip as lint/doc
+# — in a toolchain-less container `make ci` already hard-fails at the
+# build/test stages, so skipping here fakes nothing.
+serve-sim-smoke:
+	@if command -v cargo >/dev/null 2>&1; then \
+		cargo run --release --quiet -- serve-sim --smoke; \
+	else \
+		echo "serve-sim-smoke: cargo not found — skipping (toolchain-less container)"; \
+	fi

@@ -23,11 +23,14 @@ fn main() {
         let ops = [
             CustomOp::TritonMM { m: 1024, n: 2048, k: 4096, dtype },
             CustomOp::TritonVec { elems: 1 << 22, dtype },
-            CustomOp::FlashAttn { batch: 4, heads: 16, q_len: 1024, kv_len: 1024, head_dim: 64, dtype, causal: true },
-            CustomOp::CutlassAttn { batch: 4, heads: 16, q_len: 1024, kv_len: 1024, head_dim: 64, dtype, causal: true },
+            CustomOp::FlashAttn { batch: 4, heads: 16, kv_heads: 16, q_len: 1024, kv_len: 1024, head_dim: 64, dtype, causal: true },
+            CustomOp::CutlassAttn { batch: 4, heads: 16, kv_heads: 16, q_len: 1024, kv_len: 1024, head_dim: 64, dtype, causal: true },
             // One decode step over a 1024-token KV cache: the KV-bound
             // regime of autoregressive generation.
-            CustomOp::FlashAttn { batch: 4, heads: 16, q_len: 1, kv_len: 1024, head_dim: 64, dtype, causal: true },
+            CustomOp::FlashAttn { batch: 4, heads: 16, kv_heads: 16, q_len: 1, kv_len: 1024, head_dim: 64, dtype, causal: true },
+            // The same step with a grouped (GQA, 4 kv heads) cache:
+            // 4x less KV traffic, visibly cheaper.
+            CustomOp::FlashAttn { batch: 4, heads: 16, kv_heads: 4, q_len: 1, kv_len: 1024, head_dim: 64, dtype, causal: true },
         ];
         for op in ops {
             if !custom::supported(&gpu.spec, &op) {

@@ -1,0 +1,133 @@
+//! Bench: serving capacity under a p99 TTFT SLO — the cluster-planning
+//! question the serving simulator exists to answer. For each (device,
+//! model) lane: replay a Poisson trace through the continuous-batching
+//! simulator at a sweep of arrival rates (same request population,
+//! scaled arrivals), print the throughput–latency Pareto, then bisect
+//! for the max sustainable QPS whose p99 TTFT stays within the SLO.
+//! Iterations price through `Coordinator::simulate_serving`, so the
+//! cached service path (per-node LRU + batched GEMM lanes) carries the
+//! whole replay.
+
+use std::time::Instant;
+
+use pm2lat::coordinator::{build_service, Coordinator, PredictorKind, ServingRequest};
+use pm2lat::models::zoo;
+use pm2lat::ops::DType;
+use pm2lat::runtime::Runtime;
+use pm2lat::serving::{
+    self, KvPagerConfig, SchedulerConfig, ServingSimConfig,
+};
+use pm2lat::util::pool;
+
+fn main() {
+    let rt = Runtime::open_default().expect("run `make artifacts` first");
+    let fast_mode = std::env::var("PM2LAT_BENCH_FAST").is_ok();
+    let devices = ["a100", "l4"];
+    let coord = build_service(
+        &rt,
+        pool::default_threads(),
+        1 << 17,
+        &devices,
+        &[DType::F32, DType::Bf16],
+    )
+    .unwrap();
+
+    let (n_requests, steps) = if fast_mode { (24, 3) } else { (96, 6) };
+    let models = [zoo::gpt2_large(), zoo::qwen3_0_6b()];
+
+    println!("\n=== serving-capacity: max QPS under a p99 TTFT SLO ===");
+    for cfg in &models {
+        for device in devices {
+            let gpu = coord.gpu(device).expect("registered");
+            let sim = ServingSimConfig {
+                scheduler: SchedulerConfig {
+                    max_batch: 16,
+                    chunk_tokens: 512,
+                    ..Default::default()
+                },
+                pager: KvPagerConfig::for_model(cfg, gpu.spec.mem_bytes(), 16),
+                streams: 1,
+            };
+            let unit = serving::poisson_trace(n_requests, 1.0, 256, 24, 42);
+            let mut price = |g: &pm2lat::graph::ModelGraph| -> Option<f64> {
+                // One ServingRequest per sweep point would re-run the
+                // whole trace; instead reuse the coordinator's graph path
+                // directly so every sweep point shares the LRU.
+                coord
+                    .submit_graphs(&[pm2lat::coordinator::GraphRequest {
+                        device: device.to_string(),
+                        graph: g.clone(),
+                        kind: PredictorKind::Pm2LatBatched,
+                        streams: 1,
+                    }])
+                    .ok()?
+                    .pop()?
+            };
+            // Solo request sets the load scale and the SLO (4× solo TTFT).
+            let solo = match serving::simulate(cfg, &unit[..1], &sim, &mut price) {
+                Ok(r) => r,
+                Err(_) => {
+                    println!("\n-- {} on {device}: unsupported, skipped --", cfg.name);
+                    continue;
+                }
+            };
+            let solo_ttft = solo.completed[0].ttft_s();
+            let slo = solo_ttft * 4.0;
+            let lo = 0.25 / solo.completed[0].e2e_s();
+            let t0 = Instant::now();
+            let (max_qps, points) =
+                serving::max_qps_under_slo(cfg, &unit, &sim, &mut price, slo, lo, steps)
+                    .expect("sweep must complete");
+            let wall = t0.elapsed().as_secs_f64();
+            println!(
+                "\n-- {} on {device}: SLO p99 TTFT ≤ {:.1} ms ({} requests/point) --",
+                cfg.name,
+                slo * 1e3,
+                n_requests
+            );
+            for p in &points {
+                println!(
+                    "   qps {:>8.2}: ttft p99 {:>8.1} ms | tpot p50 {:>6.0} µs | \
+                     {:>6.2} req/s | util {:>3.0}% | kv peak {:>3.0}% | {} preempt",
+                    p.qps,
+                    p.ttft_p99_s * 1e3,
+                    p.tpot_p50_s * 1e6,
+                    p.throughput_rps,
+                    p.utilization * 100.0,
+                    p.peak_kv_occupancy * 100.0,
+                    p.preemptions,
+                );
+            }
+            println!(
+                "   max sustainable QPS: {max_qps:.2} ({} sim points in {wall:.1}s wall)",
+                points.len()
+            );
+            assert!(max_qps > 0.0, "light load must satisfy a 4× solo SLO");
+        }
+    }
+    // simulate_serving end-to-end smoke on the service API itself.
+    let cfg = zoo::gpt2_large();
+    let sim = ServingSimConfig {
+        scheduler: SchedulerConfig::default(),
+        pager: KvPagerConfig::for_model(&cfg, 40e9, 16),
+        streams: 1,
+    };
+    let req = ServingRequest {
+        device: "a100".into(),
+        config: cfg.clone(),
+        trace: serving::poisson_trace(16, 20.0, 128, 8, 7),
+        sim,
+        kind: PredictorKind::Pm2LatBatched,
+    };
+    let a = run_serving(&coord, &req);
+    let b = run_serving(&coord, &req);
+    assert_eq!(a, b, "serving replays must be deterministic");
+    println!("\nsimulate_serving determinism: ok ({a:?})");
+    println!("\n{}", coord.metrics.summary());
+}
+
+fn run_serving(coord: &Coordinator<'_>, req: &ServingRequest) -> (usize, u64) {
+    let report = coord.simulate_serving(req).expect("gpt2 f32 supported");
+    assert_eq!(report.kv_leaked_blocks, 0);
+    (report.iterations, report.makespan_s.to_bits())
+}

@@ -40,7 +40,11 @@
 //! expands a (prompt, generate) request into prefill + per-step decode
 //! graphs and answers the full latency curve
 //! ([`crate::pm2lat::predictor::GenerationPrediction`]: prefill, per-step
-//! decode, time-per-output-token). The NAS preprocessing application
+//! decode, time-per-output-token). On top of those,
+//! [`Coordinator::simulate_serving`] replays a whole request trace
+//! through the continuous-batching serving simulator
+//! ([`crate::serving`]), pricing every mixed prefill+decode iteration
+//! as one cached graph submission. The NAS preprocessing application
 //! (§IV-D2) and the model runner consume the service through these rather
 //! than driving raw `Pm2Lat`. `pm2lat serve-bench` and
 //! `benches/serve_throughput.rs` measure requests/sec against the serial
@@ -58,6 +62,6 @@ pub use metrics::{Metrics, RESERVOIR_CAP};
 pub use service::{
     ab_phases, build_f32_service, build_service, mixed_workload, mixed_workload_dtyped,
     quick_neusight, timed_submit, to_batched, to_kind, AbReport, Coordinator, Engine,
-    GenerationRequest, GraphRequest, PredictorKind, Request, TraceRequest,
+    GenerationRequest, GraphRequest, PredictorKind, Request, ServingRequest, TraceRequest,
     DEFAULT_CACHE_CAPACITY,
 };

@@ -97,6 +97,21 @@ pub struct GenerationRequest {
     pub streams: usize,
 }
 
+/// A serving-simulation request: replay `trace` against `config`'s
+/// continuous-batching schedule on `device`, pricing every iteration
+/// graph through the cached service path (`kind` selects the scalar or
+/// batched-PJRT lane). Iterations share ops heavily — decode projections
+/// repeat identically across steps — so the LRU and the within-batch
+/// dedup amortize most of a long replay.
+#[derive(Clone, Debug)]
+pub struct ServingRequest {
+    pub device: String,
+    pub config: crate::models::TransformerConfig,
+    pub trace: Vec<crate::serving::RequestSpec>,
+    pub sim: crate::serving::ServingSimConfig,
+    pub kind: PredictorKind,
+}
+
 /// A request after device interning: (device id, kind, op).
 type Resolved = (usize, PredictorKind, Op);
 
@@ -545,6 +560,34 @@ impl<'rt> Coordinator<'rt> {
         Ok(out)
     }
 
+    /// Serving-simulation API: replay a request trace through the
+    /// discrete-event continuous-batching simulator
+    /// ([`crate::serving::simulate`]), pricing every mixed
+    /// prefill+decode iteration through this service's cached graph path
+    /// — one [`Coordinator::submit_graphs`] batch per iteration, so GEMM
+    /// lanes batch across the iteration's nodes and the LRU absorbs the
+    /// ops that repeat from iteration to iteration (all of them except
+    /// the growing attention windows). Deterministic; `Err` on unknown
+    /// devices, unsupported models, or impossible traces.
+    pub fn simulate_serving(
+        &self,
+        req: &ServingRequest,
+    ) -> Result<crate::serving::ServingReport> {
+        self.resolve_device(&req.device)?; // reject unknown devices early
+        let mut price = |g: &ModelGraph| -> Option<f64> {
+            self.submit_graphs(&[GraphRequest {
+                device: req.device.clone(),
+                graph: g.clone(),
+                kind: req.kind,
+                streams: req.sim.streams,
+            }])
+            .ok()?
+            .pop()?
+        };
+        crate::serving::simulate(&req.config, &req.trace, &req.sim, &mut price)
+            .map_err(|e| anyhow!("serving simulation: {e}"))
+    }
+
     /// Shared dispatch: scatter per-request answers, return the PJRT
     /// launch count for metrics.
     fn submit_resolved(&self, reqs: &[Resolved]) -> Result<(Vec<Option<f64>>, usize)> {
@@ -615,14 +658,14 @@ impl<'rt> Coordinator<'rt> {
         for &i in idxs {
             let op = &reqs[i].2;
             let gemm = match op {
-                // Gemv-degenerate (decode-step) GEMMs spill to the scalar
-                // path: the PJRT artifact evaluates the tensor-core wave
-                // model, and decode shapes must route to the measured
-                // memory-bound profile instead.
+                // Skinny (decode-regime) GEMMs spill to the scalar path:
+                // the PJRT artifact evaluates the tensor-core wave model,
+                // and `min(m,n) ≤ 32` shapes must route to the measured
+                // memory-bound profiles (gemv ≤ 8, skinny 9..=32) instead.
                 Op::Gemm(g)
                     if g.dtype == DType::F32
                         && bp.is_some()
-                        && !crate::gpusim::gemm::is_gemv_degenerate(g) =>
+                        && !crate::gpusim::gemm::is_skinny(g) =>
                 {
                     *g
                 }
@@ -1363,6 +1406,49 @@ mod tests {
             streams: 1,
         };
         assert_eq!(c.submit_generations(std::slice::from_ref(&none)).unwrap(), vec![None]);
+    }
+
+    #[test]
+    fn simulate_serving_matches_the_direct_simulator_bit_for_bit() {
+        use crate::serving::{
+            poisson_trace, simulate, KvPagerConfig, SchedulerConfig, ServingSimConfig,
+        };
+        let rt = Runtime::open_default().expect("make artifacts");
+        let c = coordinator(&rt);
+        let cfg = crate::models::zoo::gpt2_large();
+        let sim = ServingSimConfig {
+            scheduler: SchedulerConfig { max_batch: 4, chunk_tokens: 128, ..Default::default() },
+            pager: KvPagerConfig::for_model(&cfg, 40e9, 16),
+            streams: 1,
+        };
+        let trace = poisson_trace(10, 40.0, 64, 6, 3);
+        let req = ServingRequest {
+            device: "a100".into(),
+            config: cfg.clone(),
+            trace: trace.clone(),
+            sim,
+            kind: PredictorKind::Pm2Lat,
+        };
+        let via_service = c.simulate_serving(&req).unwrap();
+        // The scalar service path memoizes the same deterministic
+        // predictions the direct path computes — identical replay.
+        let direct = {
+            let gpu = c.gpu("a100").unwrap();
+            let pl = c.pm2lat("a100").unwrap();
+            let mut price =
+                |g: &crate::graph::ModelGraph| pl.predict_graph(gpu, g, 1);
+            simulate(&cfg, &trace, &sim, &mut price).unwrap()
+        };
+        assert_eq!(via_service.completed, direct.completed, "bit-identical replay");
+        assert_eq!(via_service.iterations, direct.iterations);
+        assert_eq!(via_service.makespan_s, direct.makespan_s);
+        assert_eq!(via_service.gpu_busy_s, direct.gpu_busy_s);
+        assert_eq!(via_service.kv_leaked_blocks, 0);
+        // Iterations repeat most ops — the cache must be earning hits.
+        assert!(c.metrics.cache_hit_rate() > 0.5, "{}", c.metrics.summary());
+        // Unknown devices are rejected before simulation starts.
+        let bad = ServingRequest { device: "h100".into(), ..req };
+        assert!(c.simulate_serving(&bad).is_err());
     }
 
     #[test]

@@ -263,7 +263,7 @@ pub fn table6(lab: &mut Lab) -> Result<String> {
                         let heads = rng.int_range(8, 32) as usize;
                         let seq = rng.log_uniform_int(128, 4096) as usize;
                         CustomOp::FlashAttn {
-                            batch, heads, q_len: seq, kv_len: seq,
+                            batch, heads, kv_heads: heads, q_len: seq, kv_len: seq,
                             head_dim: 64, dtype, causal: false,
                         }
                     }
@@ -272,7 +272,7 @@ pub fn table6(lab: &mut Lab) -> Result<String> {
                         let heads = rng.int_range(8, 32) as usize;
                         let seq = rng.log_uniform_int(128, 4096) as usize;
                         CustomOp::CutlassAttn {
-                            batch, heads, q_len: seq, kv_len: seq,
+                            batch, heads, kv_heads: heads, q_len: seq, kv_len: seq,
                             head_dim: 64, dtype, causal: false,
                         }
                     }

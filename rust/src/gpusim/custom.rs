@@ -123,12 +123,20 @@ pub fn supported(dev: &DeviceSpec, op: &CustomOp) -> bool {
 /// layout instead — one thin tile whose compute scales with the actual
 /// query rows while the memory stream is the whole KV cache — so decode
 /// kernels land in the memory-bound regime, not the tensor-core one.
+///
+/// Grouped-query attention (`kv_heads < heads`): the KV cache holds only
+/// `batch·kv_heads` lanes, and the query-head groups sharing a lane
+/// stream it once (the group reads coalesce in L2/SMEM, as in the real
+/// kernels) — so the per-block K/V bytes scale by `kv_heads / heads`
+/// while compute is untouched. MHA (`kv_heads == heads`) is bit-identical
+/// to the pre-GQA model.
 #[allow(clippy::too_many_arguments)]
 fn attn_latency(
     dev: &DeviceSpec,
     family: &str,
     batch: usize,
     heads: usize,
+    kv_heads: usize,
     q_len: usize,
     kv_len: usize,
     head_dim: usize,
@@ -163,8 +171,10 @@ fn attn_latency(
         * (freq_ghz / dev.max_freq_ghz);
     let per_sm = peak / dev.sm_count as f64;
     let t_compute = block_flops * bpsm as f64 / (per_sm * eff);
-    // Per-block memory: stream K,V (kv×d each) + the Q/O rows.
-    let block_bytes = (2.0 * kv_len as f64 * head_dim as f64
+    // Per-block memory: stream K,V (kv×d each, shared across a query-head
+    // group under GQA) + the Q/O rows.
+    let kv_share = kv_heads.min(heads).max(1) as f64 / heads.max(1) as f64;
+    let block_bytes = (2.0 * kv_len as f64 * head_dim as f64 * kv_share
         + 2.0 * q_rows * head_dim as f64)
         * dsize;
     let wave_bytes = block_bytes * capacity as f64;
@@ -200,11 +210,11 @@ pub fn custom_latency(dev: &DeviceSpec, op: &CustomOp, freq_ghz: f64) -> Option<
             let t_alu = elems as f64 * 4.0 / (dev.int_gops * 1e9 * freq_scale);
             Some(dev.launch_us * 1e-6 + (bytes / bw).max(t_alu))
         }
-        CustomOp::FlashAttn { batch, heads, q_len, kv_len, head_dim, dtype, causal } => {
-            Some(attn_latency(dev, "flash", batch, heads, q_len, kv_len, head_dim, dtype, causal, freq_ghz))
+        CustomOp::FlashAttn { batch, heads, kv_heads, q_len, kv_len, head_dim, dtype, causal } => {
+            Some(attn_latency(dev, "flash", batch, heads, kv_heads, q_len, kv_len, head_dim, dtype, causal, freq_ghz))
         }
-        CustomOp::CutlassAttn { batch, heads, q_len, kv_len, head_dim, dtype, causal } => {
-            Some(attn_latency(dev, "cutlass", batch, heads, q_len, kv_len, head_dim, dtype, causal, freq_ghz))
+        CustomOp::CutlassAttn { batch, heads, kv_heads, q_len, kv_len, head_dim, dtype, causal } => {
+            Some(attn_latency(dev, "cutlass", batch, heads, kv_heads, q_len, kv_len, head_dim, dtype, causal, freq_ghz))
         }
     }
 }
@@ -237,11 +247,11 @@ mod tests {
         let b5070 = device_by_name("rtx5070").unwrap();
         let a100 = device_by_name("a100").unwrap();
         let fa = CustomOp::FlashAttn {
-            batch: 1, heads: 8, q_len: 512, kv_len: 512, head_dim: 64,
+            batch: 1, heads: 8, kv_heads: 8, q_len: 512, kv_len: 512, head_dim: 64,
             dtype: DType::F32, causal: false,
         };
         let ca = CustomOp::CutlassAttn {
-            batch: 1, heads: 8, q_len: 512, kv_len: 512, head_dim: 64,
+            batch: 1, heads: 8, kv_heads: 8, q_len: 512, kv_len: 512, head_dim: 64,
             dtype: DType::F32, causal: false,
         };
         assert!(!supported(&t4, &fa), "FA2 unsupported on Turing");
@@ -266,7 +276,7 @@ mod tests {
     fn attention_latency_scales_superlinearly_in_seq() {
         let d = device_by_name("a100").unwrap();
         let mk = |seq| CustomOp::FlashAttn {
-            batch: 4, heads: 16, q_len: seq, kv_len: seq, head_dim: 64,
+            batch: 4, heads: 16, kv_heads: 16, q_len: seq, kv_len: seq, head_dim: 64,
             dtype: DType::Bf16, causal: false,
         };
         let t1 = custom_latency(&d, &mk(512), d.max_freq_ghz).unwrap();
@@ -279,7 +289,7 @@ mod tests {
     fn causal_cheaper_than_full() {
         let d = device_by_name("l4").unwrap();
         let mk = |causal| CustomOp::FlashAttn {
-            batch: 2, heads: 8, q_len: 2048, kv_len: 2048, head_dim: 64,
+            batch: 2, heads: 8, kv_heads: 8, q_len: 2048, kv_len: 2048, head_dim: 64,
             dtype: DType::Bf16, causal,
         };
         let tc = custom_latency(&d, &mk(true), d.max_freq_ghz).unwrap();
@@ -292,7 +302,7 @@ mod tests {
         // The decode regime: one query streaming a growing KV cache.
         let d = device_by_name("a100").unwrap();
         let dec = |kv| CustomOp::FlashAttn {
-            batch: 8, heads: 16, q_len: 1, kv_len: kv, head_dim: 64,
+            batch: 8, heads: 16, kv_heads: 16, q_len: 1, kv_len: kv, head_dim: 64,
             dtype: DType::Bf16, causal: true,
         };
         let mut prev = 0.0;
@@ -304,7 +314,7 @@ mod tests {
         // A decode step at kv = 2048 does ~1/2048 of the prefill pairs —
         // it must be orders of magnitude cheaper than the square kernel.
         let prefill = CustomOp::FlashAttn {
-            batch: 8, heads: 16, q_len: 2048, kv_len: 2048, head_dim: 64,
+            batch: 8, heads: 16, kv_heads: 16, q_len: 2048, kv_len: 2048, head_dim: 64,
             dtype: DType::Bf16, causal: true,
         };
         let tp = custom_latency(&d, &prefill, d.max_freq_ghz).unwrap();
@@ -319,14 +329,14 @@ mod tests {
         // the compute-bound prefill kernel.
         let d = device_by_name("a100").unwrap();
         let dec = CustomOp::FlashAttn {
-            batch: 8, heads: 16, q_len: 1, kv_len: 4096, head_dim: 64,
+            batch: 8, heads: 16, kv_heads: 16, q_len: 1, kv_len: 4096, head_dim: 64,
             dtype: DType::F32, causal: true,
         };
         let t_full = custom_latency(&d, &dec, d.max_freq_ghz).unwrap();
         let t_half = custom_latency(&d, &dec, d.max_freq_ghz / 2.0).unwrap();
         assert!(t_half < t_full * 1.15, "decode step must be memory-bound");
         let pre = CustomOp::FlashAttn {
-            batch: 8, heads: 16, q_len: 4096, kv_len: 4096, head_dim: 64,
+            batch: 8, heads: 16, kv_heads: 16, q_len: 4096, kv_len: 4096, head_dim: 64,
             dtype: DType::F32, causal: false,
         };
         let p_full = custom_latency(&d, &pre, d.max_freq_ghz).unwrap();
@@ -335,14 +345,54 @@ mod tests {
     }
 
     #[test]
+    fn gqa_decode_streams_the_grouped_cache() {
+        // ISSUE GQA satellite: with the same query lanes, a grouped KV
+        // cache streams fewer bytes, so the memory-bound decode step gets
+        // cheaper — approaching the group factor for long caches.
+        let d = device_by_name("a100").unwrap();
+        let mk = |kv_heads| CustomOp::FlashAttn {
+            batch: 8, heads: 16, kv_heads, q_len: 1, kv_len: 8192, head_dim: 64,
+            dtype: DType::Bf16, causal: true,
+        };
+        let t_mha = custom_latency(&d, &mk(16), d.max_freq_ghz).unwrap();
+        let t_gqa = custom_latency(&d, &mk(4), d.max_freq_ghz).unwrap();
+        assert!(t_gqa < t_mha, "grouped cache must be cheaper: {t_gqa} vs {t_mha}");
+        assert!(
+            t_mha / t_gqa > 2.0,
+            "long-cache decode is stream-dominated: ratio {}",
+            t_mha / t_gqa
+        );
+        // Still monotone in kv_len under grouping.
+        let mut prev = 0.0;
+        for kv in [512usize, 2048, 8192] {
+            let op = CustomOp::FlashAttn {
+                batch: 8, heads: 16, kv_heads: 4, q_len: 1, kv_len: kv, head_dim: 64,
+                dtype: DType::Bf16, causal: true,
+            };
+            let t = custom_latency(&d, &op, d.max_freq_ghz).unwrap();
+            assert!(t > prev);
+            prev = t;
+        }
+        // Compute-bound prefill barely moves: grouping only touches the
+        // K/V stream, which prefill amortizes over q_len rows.
+        let pre = |kv_heads| CustomOp::FlashAttn {
+            batch: 2, heads: 16, kv_heads, q_len: 2048, kv_len: 2048, head_dim: 64,
+            dtype: DType::Bf16, causal: false,
+        };
+        let p_mha = custom_latency(&d, &pre(16), d.max_freq_ghz).unwrap();
+        let p_gqa = custom_latency(&d, &pre(4), d.max_freq_ghz).unwrap();
+        assert!(p_gqa <= p_mha && p_gqa > p_mha * 0.7, "{p_gqa} vs {p_mha}");
+    }
+
+    #[test]
     fn flash_vs_cutlass_differ() {
         let d = device_by_name("a100").unwrap();
         let fa = CustomOp::FlashAttn {
-            batch: 2, heads: 8, q_len: 1024, kv_len: 1024, head_dim: 64,
+            batch: 2, heads: 8, kv_heads: 8, q_len: 1024, kv_len: 1024, head_dim: 64,
             dtype: DType::Bf16, causal: false,
         };
         let ca = CustomOp::CutlassAttn {
-            batch: 2, heads: 8, q_len: 1024, kv_len: 1024, head_dim: 64,
+            batch: 2, heads: 8, kv_heads: 8, q_len: 1024, kv_len: 1024, head_dim: 64,
             dtype: DType::Bf16, causal: false,
         };
         let tf = custom_latency(&d, &fa, d.max_freq_ghz).unwrap();
@@ -364,7 +414,7 @@ mod tests {
     fn gated_op_returns_none() {
         let t4 = device_by_name("t4").unwrap();
         let fa = CustomOp::FlashAttn {
-            batch: 1, heads: 1, q_len: 128, kv_len: 128, head_dim: 64,
+            batch: 1, heads: 1, kv_heads: 1, q_len: 128, kv_len: 128, head_dim: 64,
             dtype: DType::F32, causal: false,
         };
         assert!(custom_latency(&t4, &fa, t4.max_freq_ghz).is_none());

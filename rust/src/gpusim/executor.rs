@@ -141,12 +141,14 @@ impl Gpu {
     ) -> Result<f64, ExecError> {
         match op {
             Op::Gemm(g) => {
-                // Library dispatch: gemv-degenerate shapes (decode-step
-                // projections) take the memory-bound streaming path. An
-                // explicitly pinned config still runs the pinned tile
-                // kernel — PM2Lat's controlled collection depends on it.
-                if cfg.is_none() && gemm::is_gemv_degenerate(g) {
-                    return gemm::gemv_latency(&self.spec, g, freq_ghz)
+                // Library dispatch: skinny shapes (min(m,n) ≤ 32 — decode
+                // projections and small continuous-batching iterations)
+                // take the memory-bound streaming family, gemv-degenerate
+                // ones its `min(m,n) ≤ 8` sub-route. An explicitly pinned
+                // config still runs the pinned tile kernel — PM2Lat's
+                // controlled collection depends on it.
+                if cfg.is_none() && gemm::is_skinny(g) {
+                    return gemm::skinny_latency(&self.spec, g, freq_ghz)
                         .ok_or(ExecError::UnsupportedDtype);
                 }
                 let cfg = match cfg {
@@ -175,10 +177,13 @@ impl Gpu {
     pub fn counters(&self, op: &Op, cfg: Option<GemmConfig>) -> Result<Counters, ExecError> {
         match op {
             Op::Gemm(g) => {
-                if cfg.is_none() && gemm::is_gemv_degenerate(g) {
+                if cfg.is_none() && gemm::is_skinny(g) {
                     if !self.spec.supports(g.dtype) {
                         return Err(ExecError::UnsupportedDtype);
                     }
+                    // The residency split depends only on the working set,
+                    // so the whole streaming family shares one counter
+                    // model.
                     return Ok(gemm::gemv_counters(&self.spec, g));
                 }
                 let cfg = match cfg {

@@ -21,11 +21,28 @@ use super::utility;
 /// streaming the `k × n` weight matrix — not by tensor-core throughput.
 pub const GEMV_DEGENERATE_MAX: usize = 8;
 
+/// Largest `min(m, n)` the library routes to the *skinny-GEMM* family —
+/// streaming kernels with a few query rows per CTA, still bounded by the
+/// weight stream rather than tensor-core throughput. Continuous-batching
+/// decode lives here: an iteration over 9–32 concurrent sequences makes
+/// every projection an `r × n × k` GEMM with `r` in exactly this band,
+/// which a tiled 64/128-row kernel would waste almost entirely.
+pub const SKINNY_GEMM_MAX: usize = 32;
+
 /// Is this GEMM gemv-degenerate (skinny enough that the library routes it
 /// to the memory-bound path)? Shared by the simulator's dispatch and the
 /// predictor's routing so the two can never disagree.
 pub fn is_gemv_degenerate(op: &GemmOp) -> bool {
     op.m.min(op.n) <= GEMV_DEGENERATE_MAX
+}
+
+/// Is this GEMM in the skinny band (gemv-degenerate included)? The
+/// library dispatches everything here away from the tiled tensor-core
+/// kernels; PM2Lat routes the same shapes to its measured streaming
+/// profiles. One shared predicate so simulator and predictor can never
+/// disagree about the regime split.
+pub fn is_skinny(op: &GemmOp) -> bool {
+    op.m.min(op.n) <= SKINNY_GEMM_MAX
 }
 
 /// Noise-free gemv-family latency: stream the operands once at the
@@ -39,6 +56,36 @@ pub fn gemv_latency(dev: &DeviceSpec, op: &GemmOp, freq_ghz: f64) -> Option<f64>
     let bytes = op.io_bytes();
     // Skinny access patterns fall slightly short of the streaming optimum.
     let t_mem = bytes / (utility::effective_bw(dev, bytes) * 0.92);
+    let freq_scale = freq_ghz / dev.max_freq_ghz;
+    let t_compute = op.flops() / (dev.fp32_tflops * 1e12 * 0.5 * freq_scale);
+    Some(dev.launch_us * 1e-6 + t_mem.max(t_compute) + 0.2 * t_mem.min(t_compute))
+}
+
+/// Noise-free skinny-GEMM latency for `8 < min(m, n) ≤ 32`: still a
+/// streaming model (the weight slab is read once; a handful of output
+/// rows cannot amortize a tensor-core tile), but the extra row
+/// parallelism lifts the achieved bandwidth toward the streaming optimum
+/// and engages the MMA pipes enough to raise the compute floor. Delegates
+/// to [`gemv_latency`] inside the gemv-degenerate band so the two routes
+/// form one continuous family with no cliff at the boundary.
+pub fn skinny_latency(dev: &DeviceSpec, op: &GemmOp, freq_ghz: f64) -> Option<f64> {
+    if is_gemv_degenerate(op) {
+        return gemv_latency(dev, op, freq_ghz);
+    }
+    if !dev.supports(op.dtype) {
+        return None;
+    }
+    let bytes = op.io_bytes();
+    let r = op.m.min(op.n) as f64;
+    // Bandwidth efficiency ramps 0.92 → 0.98 across the 9..=32 band: the
+    // extra rows add memory parallelism. The compute floor is the gemv
+    // family's CUDA-core MAC model — by r ≈ 32 the arithmetic intensity
+    // approaches machine balance and the floor starts to bind, which is
+    // exactly why libraries cut over to tiled kernels past this band.
+    let eff = 0.92
+        + 0.06 * ((r - GEMV_DEGENERATE_MAX as f64)
+            / (SKINNY_GEMM_MAX - GEMV_DEGENERATE_MAX) as f64);
+    let t_mem = bytes / (utility::effective_bw(dev, bytes) * eff);
     let freq_scale = freq_ghz / dev.max_freq_ghz;
     let t_compute = op.flops() / (dev.fp32_tflops * 1e12 * 0.5 * freq_scale);
     Some(dev.launch_us * 1e-6 + t_mem.max(t_compute) + 0.2 * t_mem.min(t_compute))
@@ -423,6 +470,69 @@ mod tests {
         // Unsupported dtypes still gate.
         let t4 = crate::gpusim::device::device_by_name("t4").unwrap();
         assert!(gemv_latency(&t4, &GemmOp::linear(1, 64, 64, DType::Bf16), 1.0).is_none());
+    }
+
+    #[test]
+    fn skinny_band_classification_and_continuity() {
+        // ISSUE skinny-GEMM satellite: 9..=32 joins the streaming family.
+        assert!(is_skinny(&GemmOp::linear(9, 5120, 1280, DType::F32)));
+        assert!(is_skinny(&GemmOp::linear(32, 5120, 1280, DType::F32)));
+        assert!(!is_skinny(&GemmOp::linear(33, 5120, 1280, DType::F32)));
+        assert!(is_skinny(&GemmOp::linear(1, 64, 64, DType::F32)));
+        // Inside the gemv band the two routes are the same function.
+        let (d, _) = a100_fp32();
+        let op8 = GemmOp::linear(8, 4096, 4096, DType::F32);
+        assert_eq!(
+            skinny_latency(&d, &op8, d.max_freq_ghz),
+            gemv_latency(&d, &op8, d.max_freq_ghz)
+        );
+        // No cliff at the 8 → 9 boundary: +1 row cannot change cost much.
+        let t8 = skinny_latency(&d, &op8, d.max_freq_ghz).unwrap();
+        let t9 = skinny_latency(&d, &GemmOp::linear(9, 4096, 4096, DType::F32), d.max_freq_ghz)
+            .unwrap();
+        let ratio = t9 / t8;
+        assert!(ratio > 0.85 && ratio < 1.25, "boundary cliff: {ratio}");
+        // Monotone in rows and depth within the band.
+        let mut prev = 0.0;
+        for r in [9usize, 16, 24, 32] {
+            let t = skinny_latency(&d, &GemmOp::linear(r, 4096, 4096, DType::F32), d.max_freq_ghz)
+                .unwrap();
+            assert!(t > prev, "r={r}");
+            prev = t;
+        }
+        let mut prev = 0.0;
+        for k in [256usize, 1024, 4096, 16384] {
+            let t = skinny_latency(&d, &GemmOp::linear(16, 4096, k, DType::F32), d.max_freq_ghz)
+                .unwrap();
+            assert!(t > prev, "k={k}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn skinny_route_is_bandwidth_led_and_beats_the_tiled_model() {
+        let (d, ks) = a100_fp32();
+        let op = GemmOp::linear(16, 8192, 4096, DType::F32);
+        let t_full = skinny_latency(&d, &op, d.max_freq_ghz).unwrap();
+        // The band is transitional: arithmetic intensity is r/2 FLOP/byte,
+        // which approaches machine balance near r = 32 — so unlike pure
+        // gemv it is not fully clock-insensitive, but it must stay well
+        // below the 2× slowdown of a compute-bound tiled kernel.
+        let t_half = skinny_latency(&d, &op, d.max_freq_ghz / 2.0).unwrap();
+        assert!(t_half < t_full * 1.7, "skinny band over-rotates on clock");
+        // A 64/128-row tiled kernel wastes ≥ 4× of every block on a
+        // 16-row operand — the streaming route must win.
+        let best_tiled = ks
+            .iter()
+            .filter_map(|k| gemm_latency(&d, k, &op, 1, d.max_freq_ghz))
+            .fold(f64::MAX, f64::min);
+        assert!(
+            t_full < best_tiled,
+            "skinny {t_full} should beat tiled {best_tiled}"
+        );
+        // Unsupported dtypes still gate.
+        let t4 = crate::gpusim::device::device_by_name("t4").unwrap();
+        assert!(skinny_latency(&t4, &GemmOp::linear(16, 64, 64, DType::Bf16), 1.0).is_none());
     }
 
     #[test]

@@ -20,5 +20,7 @@ pub mod utility;
 
 pub use device::{all_devices, device_by_name, Arch, Cooling, DeviceSpec};
 pub use executor::{ExecError, FreqMode, Gpu, Sample};
-pub use gemm::{is_gemv_degenerate, GemmConfig, WaveInfo, GEMV_DEGENERATE_MAX};
+pub use gemm::{
+    is_gemv_degenerate, is_skinny, GemmConfig, WaveInfo, GEMV_DEGENERATE_MAX, SKINNY_GEMM_MAX,
+};
 pub use kernel::GemmKernel;

@@ -29,12 +29,18 @@ impl std::fmt::Display for NodeId {
 /// mask annotation causal-mask propagation reads and writes: the op's
 /// *shape* cannot express masking (an attention-scores BMM looks the same
 /// masked or not), so the builder records it on the node and rewrite
-/// passes carry it to the fused kernels that can exploit it.
+/// passes carry it to the fused kernels that can exploit it. `kv_groups`
+/// is the grouped-query annotation with the same rationale: the unfused
+/// scores BMM is MHA-expanded (frameworks repeat-interleave the grouped
+/// KV before the BMM), so only the builder knows that `kv_groups` query
+/// heads share each KV lane — fusion reads it to emit kernels that
+/// stream the *grouped* cache. 1 (the default) is plain MHA.
 #[derive(Clone, Debug)]
 pub struct Node {
     pub op: Op,
     pub inputs: Vec<NodeId>,
     pub causal: bool,
+    pub kv_groups: usize,
 }
 
 /// Logical output-tensor shape of an op (batch × rows × cols).
@@ -107,7 +113,7 @@ impl ModelGraph {
                 id.0
             );
         }
-        self.nodes.push(Node { op, inputs: inputs.to_vec(), causal: false });
+        self.nodes.push(Node { op, inputs: inputs.to_vec(), causal: false, kv_groups: 1 });
         id
     }
 
@@ -129,6 +135,19 @@ impl ModelGraph {
 
     pub fn is_causal(&self, id: NodeId) -> bool {
         self.nodes[id.0].causal
+    }
+
+    /// Annotate a node with its grouped-query structure: `groups` query
+    /// heads share each KV lane (GQA). Builders set this on the attention
+    /// scores BMM; fusion emits grouped fused kernels from it. Values
+    /// ≤ 1 reset the node to plain MHA.
+    pub fn mark_kv_groups(&mut self, id: NodeId, groups: usize) {
+        self.nodes[id.0].kv_groups = groups.max(1);
+    }
+
+    /// Grouped-query annotation (1 = MHA, the default).
+    pub fn kv_groups(&self, id: NodeId) -> usize {
+        self.nodes[id.0].kv_groups
     }
 
     pub fn len(&self) -> usize {
@@ -323,6 +342,7 @@ mod tests {
         let fa = Op::Custom(CustomOp::FlashAttn {
             batch: 2,
             heads: 8,
+            kv_heads: 8,
             q_len: 64,
             kv_len: 64,
             head_dim: 16,
@@ -334,6 +354,7 @@ mod tests {
         let dec = Op::Custom(CustomOp::FlashAttn {
             batch: 2,
             heads: 8,
+            kv_heads: 8,
             q_len: 1,
             kv_len: 777,
             head_dim: 16,

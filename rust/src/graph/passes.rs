@@ -35,9 +35,10 @@ use super::ir::{ModelGraph, Node, NodeId};
 /// Rebuild `g` node by node: `emit` returns `None` to drop a node, or
 /// `Some((op, inputs))` to re-add it — inputs named by *old* ids, which
 /// must resolve to surviving nodes. Marked outputs are remapped (and
-/// silently dropped if their node was); per-node causal annotations
-/// survive on every surviving node. Shared by every structural pass so
-/// the remap/outputs invariants live in exactly one place.
+/// silently dropped if their node was); per-node causal and kv-group
+/// annotations survive on every surviving node. Shared by every
+/// structural pass so the remap/outputs invariants live in exactly one
+/// place.
 fn rebuild_graph(
     g: &mut ModelGraph,
     mut emit: impl FnMut(usize, &Node) -> Option<(Op, Vec<NodeId>)>,
@@ -48,6 +49,7 @@ fn rebuild_graph(
     for i in 0..n {
         let node = g.node(NodeId(i));
         let causal = node.causal;
+        let kv_groups = node.kv_groups;
         let Some((op, srcs)) = emit(i, node) else { continue };
         let ins: Vec<NodeId> = srcs
             .iter()
@@ -56,6 +58,9 @@ fn rebuild_graph(
         let id = out.add_node(op, &ins);
         if causal {
             out.mark_causal(id);
+        }
+        if kv_groups > 1 {
+            out.mark_kv_groups(id, kv_groups);
         }
         remap[i] = Some(id);
     }
@@ -279,10 +284,26 @@ impl Pass for AttentionFusion {
             let causal = [m.scores, m.softmax, m.ctx]
                 .iter()
                 .any(|&i| g.is_causal(NodeId(i)));
+            // Grouped-query structure: the builder annotates the scores
+            // BMM with how many query heads share each KV lane. The fused
+            // kernel's cost model depends only on lane *products*, so the
+            // grouping is encoded as `heads = groups, kv_heads = 1` over
+            // `lanes / groups` batch entries — `batch·heads` query lanes
+            // stay exactly `lanes`, while the KV cache shrinks to
+            // `lanes / groups` distinct lanes. Annotations that do not
+            // divide the lane count are ignored (defensive: a hand-built
+            // graph could mislabel).
+            let groups = [m.scores, m.softmax, m.ctx]
+                .iter()
+                .map(|&i| g.kv_groups(NodeId(i)))
+                .max()
+                .unwrap_or(1);
+            let groups = if groups > 1 && m.lanes % groups == 0 { groups } else { 1 };
             let candidates = [
                 CustomOp::FlashAttn {
-                    batch: m.lanes,
-                    heads: 1,
+                    batch: m.lanes / groups,
+                    heads: groups,
+                    kv_heads: 1,
                     q_len: m.q_len,
                     kv_len: m.kv_len,
                     head_dim: m.head_dim,
@@ -290,8 +311,9 @@ impl Pass for AttentionFusion {
                     causal,
                 },
                 CustomOp::CutlassAttn {
-                    batch: m.lanes,
-                    heads: 1,
+                    batch: m.lanes / groups,
+                    heads: groups,
+                    kv_heads: 1,
                     q_len: m.q_len,
                     kv_len: m.kv_len,
                     head_dim: m.head_dim,
@@ -509,6 +531,59 @@ mod tests {
             fused,
             CustomOp::FlashAttn { q_len: 1, kv_len: 384, causal: true, .. }
         ));
+    }
+
+    #[test]
+    fn gqa_annotation_fuses_to_grouped_kernels() {
+        // ISSUE GQA satellite: the builder's kv_groups annotation reaches
+        // the fused kernel as a grouped (kv_heads < heads) shape whose KV
+        // traffic is the grouped cache, not the MHA-expanded one.
+        let cfg = zoo::qwen3_4b(); // 32 heads, 8 kv_heads → groups = 4
+        let groups = cfg.heads / cfg.kv_heads;
+        let mut g = cfg.decode_graph(1, 512);
+        CausalMaskPropagation.run(&mut g, &PassCtx::structural());
+        let rewrites = AttentionFusion::default().run(&mut g, &PassCtx::structural());
+        assert_eq!(rewrites, cfg.layers);
+        g.validate().unwrap();
+        let mut grouped_io = 0.0;
+        let mut seen = 0usize;
+        for n in g.nodes() {
+            if let Op::Custom(
+                c @ (CustomOp::FlashAttn { batch, heads, kv_heads, .. }
+                | CustomOp::CutlassAttn { batch, heads, kv_heads, .. }),
+            ) = n.op
+            {
+                seen += 1;
+                assert_eq!(batch * heads, cfg.heads, "query lanes preserved");
+                assert_eq!(heads, groups, "group factor encoded in heads");
+                assert_eq!(kv_heads, 1, "one KV lane per group");
+                assert_eq!(batch * kv_heads, cfg.kv_heads, "grouped cache lanes");
+                grouped_io += c.io_bytes();
+                // The MHA-expanded equivalent streams more bytes.
+                let mha = CustomOp::FlashAttn {
+                    batch: batch * heads,
+                    heads: 1,
+                    kv_heads: 1,
+                    q_len: 1,
+                    kv_len: 512,
+                    head_dim: cfg.head_dim(),
+                    dtype: cfg.dtype,
+                    causal: true,
+                };
+                assert!(c.io_bytes() < mha.io_bytes());
+            }
+        }
+        assert_eq!(seen, cfg.layers);
+        assert!(grouped_io > 0.0);
+        // MHA models carry no annotation and keep the historical shape.
+        let mha_cfg = zoo::gpt2_large();
+        let mut mg = mha_cfg.graph(1, 64);
+        AttentionFusion::default().run(&mut mg, &PassCtx::structural());
+        for n in mg.nodes() {
+            if let Op::Custom(CustomOp::FlashAttn { batch, heads, kv_heads, .. }) = n.op {
+                assert_eq!((batch, heads, kv_heads), (mha_cfg.heads, 1, 1));
+            }
+        }
     }
 
     #[test]

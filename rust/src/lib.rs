@@ -12,8 +12,10 @@
 //!   causal-mask propagation, fusion passes and dependency-aware
 //!   scheduling ([`graph`]), the transformer model zoo with prefill *and*
 //!   autoregressive-decode graphs ([`models`]), the prediction service
-//!   ([`coordinator`], including whole-generation serving), and the two
-//!   applications from §IV-D ([`apps`]).
+//!   ([`coordinator`], including whole-generation serving), the
+//!   continuous-batching serving simulator — paged KV cache, mixed
+//!   prefill+decode iterations, cluster-level SLO curves ([`serving`]) —
+//!   and the two applications from §IV-D ([`apps`]).
 //!
 //! See `README.md` for the quickstart and CLI tour, and
 //! `docs/ARCHITECTURE.md` for the end-to-end dataflow (graph IR → passes
@@ -36,6 +38,7 @@ pub mod ops;
 pub mod pm2lat;
 pub mod profiler;
 pub mod runtime;
+pub mod serving;
 pub mod util;
 
 pub fn version() -> &'static str {

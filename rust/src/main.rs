@@ -11,13 +11,23 @@
 //! pm2lat nas --n 1000                       # §IV-D2 speed study
 //! pm2lat partition                          # §IV-D1 case study
 //! pm2lat serve-bench --n 50000 --threads 8 [--decode] [--slo-p99-us 500]
+//! pm2lat serve-sim --device a100 --model gpt2-large --n 64 --qps 8 \
+//!                [--arrival poisson|bursty] [--trace file.json] \
+//!                [--policy continuous|static] [--admit fcfs|sjf] \
+//!                [--max-batch 16] [--chunk 512] [--block-tokens 16] \
+//!                [--sweep] [--slo-ttft-ms 500] [--service] [--smoke]
 //! ```
 
 use anyhow::{anyhow, Result};
 
 use pm2lat::coordinator::{
     ab_phases, build_service, mixed_workload, mixed_workload_dtyped, quick_neusight,
-    timed_submit, to_batched, to_kind, AbReport, GenerationRequest, PredictorKind,
+    timed_submit, to_batched, to_kind, AbReport, GenerationRequest, GraphRequest,
+    PredictorKind,
+};
+use pm2lat::serving::{
+    self, Admission, BatchingMode, CapacityPoint, KvPagerConfig, SchedulerConfig,
+    ServingSimConfig,
 };
 use pm2lat::experiments::{self, Scale};
 use pm2lat::gpusim::Gpu;
@@ -71,10 +81,11 @@ fn run(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("serve-bench") => serve_bench(args),
-        Some(cmd) => Err(anyhow!("unknown command `{cmd}` (try: report, layer, predict, generate, experiments, nas, partition, serve-bench)")),
+        Some("serve-sim") => serve_sim(args),
+        Some(cmd) => Err(anyhow!("unknown command `{cmd}` (try: report, layer, predict, generate, experiments, nas, partition, serve-bench, serve-sim)")),
         None => {
             println!("pm2lat {} — kernel-aware DNN latency prediction", pm2lat::version());
-            println!("commands: report | layer | predict | generate | experiments | nas | partition | serve-bench");
+            println!("commands: report | layer | predict | generate | experiments | nas | partition | serve-bench | serve-sim");
             Ok(())
         }
     }
@@ -280,6 +291,250 @@ fn serve_bench(args: &Args) -> Result<()> {
         println!("SLO ok: p99 batch service time {serving_p99_us:.1}µs ≤ {slo}µs");
     }
     Ok(())
+}
+
+/// Trace-driven continuous-batching serving simulation: replay a request
+/// trace (synthetic Poisson/bursty or a recorded JSON file) against an
+/// inference-server schedule — paged KV cache, chunked prefill, mixed
+/// prefill+decode iterations — pricing every iteration through PM2Lat.
+/// Emits TTFT/TPOT/E2E p50/p99, throughput, GPU utilization and KV
+/// occupancy; `--sweep` prints the throughput–latency Pareto and
+/// `--slo-ttft-ms N` searches the max sustainable QPS under a p99 TTFT
+/// SLO. `--smoke` is the fast CI path (tiny trace, quick profile).
+fn serve_sim(args: &Args) -> Result<()> {
+    let smoke = args.flag("smoke");
+    let device = args.opt_or("device", "a100").to_string();
+    let model = args.opt_or("model", "gpt2-large").to_string();
+    let cfg = zoo::by_name(&model).ok_or_else(|| anyhow!("unknown model"))?;
+    if cfg.enc_layers > 0 {
+        return Err(anyhow!("serve-sim is decoder-only (enc–dec serving is not modeled)"));
+    }
+    let n = if smoke { 16 } else { args.opt_usize("n", 64) };
+    let mean_prompt = args.opt_usize("prompt", if smoke { 64 } else { 256 });
+    let mean_gen = args.opt_usize("gen", if smoke { 8 } else { 32 });
+    let seed = args.opt_usize("seed", 42) as u64;
+    let policy = BatchingMode::parse(args.opt_or("policy", "continuous"))
+        .ok_or_else(|| anyhow!("bad --policy (continuous|static)"))?;
+    let admission = Admission::parse(args.opt_or("admit", "fcfs"))
+        .ok_or_else(|| anyhow!("bad --admit (fcfs|sjf)"))?;
+    let block_tokens = args.opt_usize("block-tokens", serving::DEFAULT_BLOCK_TOKENS).max(1);
+    let streams = args.opt_usize("streams", 1).max(1);
+
+    // The request population: recorded JSON, or a synthetic unit-rate
+    // trace. Parsed *before* the predictor build so input mistakes
+    // (missing file, malformed JSON) fail instantly, not after an
+    // experiment-grade collection pass.
+    let unit = match args.opt("trace") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("trace {path}: {e}"))?;
+            serving::parse_trace(&text)?
+        }
+        None => match args.opt_or("arrival", "poisson") {
+            "poisson" => serving::poisson_trace(n, 1.0, mean_prompt, mean_gen, seed),
+            "bursty" => serving::bursty_trace(
+                n,
+                1.0,
+                mean_prompt,
+                mean_gen,
+                args.opt_usize("burst", 8),
+                seed,
+            ),
+            other => return Err(anyhow!("bad --arrival `{other}` (poisson|bursty)")),
+        },
+    };
+    if unit.is_empty() {
+        return Err(anyhow!("empty request trace"));
+    }
+    let recorded = args.opt("trace").is_some();
+    if recorded && args.opt_f64("qps", 0.0) > 0.0 {
+        return Err(anyhow!(
+            "--qps conflicts with --trace: recorded arrivals replay verbatim \
+             (use --sweep to study the recording at scaled rates)"
+        ));
+    }
+
+    let service = args.flag("service");
+    let mut gpu = Gpu::by_name(&device).ok_or_else(|| anyhow!("unknown device"))?;
+    let profile = if smoke { ProfileSpec::quick() } else { ProfileSpec::experiment() };
+    // The direct-path predictor; with --service the coordinator builds
+    // its own fitted state, so skip the (expensive) collection here.
+    let pl = if service {
+        None
+    } else {
+        Some(Pm2Lat::build_dtypes(&mut gpu, &profile, &[cfg.dtype], false))
+    };
+    gpu.reset();
+
+    // Pager: device HBM minus the resident model, or an explicit budget.
+    let kv_gb = args.opt_f64("kv-gb", 0.0);
+    let pager = if kv_gb > 0.0 {
+        KvPagerConfig {
+            block_tokens,
+            capacity_blocks: ((kv_gb * 1e9 / cfg.kv_cache_bytes(1, block_tokens)) as usize)
+                .max(1),
+        }
+    } else {
+        KvPagerConfig::for_model(&cfg, gpu.spec.mem_bytes(), block_tokens)
+    };
+    let sim = ServingSimConfig {
+        scheduler: SchedulerConfig {
+            mode: policy,
+            admission,
+            max_batch: args.opt_usize("max-batch", 16),
+            chunk_tokens: args.opt_usize("chunk", 512),
+        },
+        pager,
+        streams,
+    };
+
+    // Pricing backend: direct PM2Lat, or the cached service path.
+    let runtime = if service { Some(Runtime::open_default()?) } else { None };
+    let coordinator = match &runtime {
+        Some(rt) => Some(build_service(
+            rt,
+            pm2lat::util::pool::default_threads(),
+            1 << 17,
+            &[device.as_str()],
+            &[cfg.dtype],
+        )?),
+        None => None,
+    };
+    let mut price = |g: &pm2lat::graph::ModelGraph| -> Option<f64> {
+        match &coordinator {
+            Some(c) => c
+                .submit_graphs(&[GraphRequest {
+                    device: device.clone(),
+                    graph: g.clone(),
+                    kind: PredictorKind::Pm2LatBatched,
+                    streams,
+                }])
+                .ok()?
+                .pop()?,
+            None => pl
+                .as_ref()
+                .expect("direct path built when --service is absent")
+                .predict_graph(&gpu, g, streams),
+        }
+    };
+
+    // Calibrate load off the solo request, then scale the population to
+    // the target QPS (auto-derived from the solo E2E when no --qps is
+    // given, so every model/device lands under load).
+    let solo = serving::simulate(&cfg, &unit[..1], &sim, &mut price)
+        .map_err(|e| anyhow!("serve-sim: {e}"))?;
+    let solo_e2e = solo.completed[0].e2e_s();
+    let solo_ttft = solo.completed[0].ttft_s();
+    // The rate the run actually executes at: the recording's own rate,
+    // an explicit --qps, or an auto load of ~2 concurrent solo requests.
+    let qps = if recorded {
+        unit.len() as f64 / unit.last().expect("non-empty trace").arrival_s.max(1e-9)
+    } else {
+        let q = args.opt_f64("qps", 0.0);
+        if q > 0.0 { q } else { 2.0 / solo_e2e }
+    };
+    let trace = if recorded {
+        unit.clone() // recorded arrivals replay verbatim
+    } else {
+        serving::scale_arrivals(&unit, qps)
+    };
+
+    println!(
+        "serve-sim: {model} on {device} | {} requests at ~{qps:.2} req/s | \
+         policy {} / {} | batch ≤ {}, chunk {} | {} KV blocks × {} tokens{}",
+        trace.len(),
+        sim.scheduler.mode.name(),
+        sim.scheduler.admission.name(),
+        sim.scheduler.max_batch,
+        sim.scheduler.chunk_tokens,
+        sim.pager.capacity_blocks,
+        sim.pager.block_tokens,
+        if coordinator.is_some() { " | service path" } else { "" },
+    );
+    println!("  solo request       : TTFT {:.2} ms, E2E {:.2} ms", solo_ttft * 1e3, solo_e2e * 1e3);
+    let report = serving::simulate(&cfg, &trace, &sim, &mut price)
+        .map_err(|e| anyhow!("serve-sim: {e}"))?;
+    println!("  {}", report.summary());
+    if report.kv_leaked_blocks != 0 {
+        return Err(anyhow!("KV pager leaked {} blocks", report.kv_leaked_blocks));
+    }
+
+    // Throughput–latency Pareto sweep over the same request population.
+    // For recorded traces the swept "rate" is a multiplier on the
+    // recorded arrival times (1.0 = verbatim replay).
+    let base_rate = if recorded { 1.0 } else { qps };
+    if args.flag("sweep") || smoke {
+        let rates: Vec<f64> =
+            [0.25, 0.5, 1.0, 2.0, 4.0].iter().map(|f| f * base_rate).collect();
+        let points = serving::qps_sweep(&cfg, &unit, &sim, &mut price, &rates)
+            .map_err(|e| anyhow!("sweep: {e}"))?;
+        println!("  -- throughput–latency sweep --");
+        print_capacity_header();
+        for p in &points {
+            print_capacity_point(p);
+        }
+    }
+
+    // Max sustainable QPS under a p99 TTFT SLO (explicit bound, or 4×
+    // the solo TTFT in smoke mode so the fast path still exercises the
+    // search end-to-end).
+    let slo_ms = args.opt_f64("slo-ttft-ms", 0.0);
+    let slo_s = if slo_ms > 0.0 {
+        slo_ms / 1e3
+    } else if smoke {
+        solo_ttft * 4.0
+    } else {
+        0.0
+    };
+    if slo_s > 0.0 {
+        let steps = if smoke { 3 } else { 6 };
+        let (max_qps, points) = serving::max_qps_under_slo(
+            &cfg,
+            &unit,
+            &sim,
+            &mut price,
+            slo_s,
+            (base_rate / 8.0).max(1e-3),
+            steps,
+        )
+        .map_err(|e| anyhow!("slo search: {e}"))?;
+        println!(
+            "  -- max sustainable QPS under p99 TTFT ≤ {:.1} ms --",
+            slo_s * 1e3
+        );
+        print_capacity_header();
+        for p in &points {
+            print_capacity_point(p);
+        }
+        if max_qps > 0.0 {
+            println!("  max QPS under SLO  : {max_qps:.2} req/s");
+        } else {
+            println!("  SLO unattainable even at {:.3} req/s", base_rate / 8.0);
+        }
+    }
+    Ok(())
+}
+
+fn print_capacity_header() {
+    println!(
+        "  {:>9} | {:>10} {:>10} | {:>9} | {:>9} | {:>7} {:>5} {:>6}",
+        "qps", "ttft p50", "ttft p99", "tpot p50", "e2e p99", "req/s", "util", "kv/pre"
+    );
+}
+
+fn print_capacity_point(p: &CapacityPoint) {
+    println!(
+        "  {:>9.2} | {:>8.1}ms {:>8.1}ms | {:>7.0}µs | {:>7.1}ms | {:>7.2} {:>4.0}% {:>3.0}%/{}",
+        p.qps,
+        p.ttft_p50_s * 1e3,
+        p.ttft_p99_s * 1e3,
+        p.tpot_p50_s * 1e6,
+        p.e2e_p99_s * 1e3,
+        p.throughput_rps,
+        p.utilization * 100.0,
+        p.peak_kv_occupancy * 100.0,
+        p.preemptions,
+    )
 }
 
 fn print_ab(title: &str, n: usize, threads: usize, r: &AbReport) {

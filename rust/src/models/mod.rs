@@ -10,4 +10,4 @@ pub mod runner;
 pub mod transformer;
 pub mod zoo;
 
-pub use transformer::{GenerationSpec, TransformerConfig};
+pub use transformer::{GenerationSpec, SeqSlot, TransformerConfig};

@@ -53,6 +53,30 @@ impl GenerationSpec {
     }
 }
 
+/// One sequence's contribution to a mixed continuous-batching iteration:
+/// it processes `q_len` new tokens against a KV window of `kv_len`
+/// entries (`kv_len` counts the new tokens — their K/V rows are appended
+/// by this iteration's QKV projection, the same convention as
+/// [`GenerationSpec::kv_len_at`]). A whole-prompt prefill is
+/// `{q: prompt, kv: prompt}`, a chunked-prefill continuation is
+/// `{q: chunk, kv: done + chunk}`, and a decode step is
+/// `{q: 1, kv: ctx + 1}`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeqSlot {
+    pub q_len: usize,
+    pub kv_len: usize,
+}
+
+impl SeqSlot {
+    pub fn prefill(done: usize, chunk: usize) -> SeqSlot {
+        SeqSlot { q_len: chunk, kv_len: done + chunk }
+    }
+
+    pub fn decode(ctx: usize) -> SeqSlot {
+        SeqSlot { q_len: 1, kv_len: ctx + 1 }
+    }
+}
+
 /// Architecture description (decoder-only or encoder–decoder).
 #[derive(Clone, Debug)]
 pub struct TransformerConfig {
@@ -164,6 +188,12 @@ impl TransformerConfig {
         );
         if causal {
             g.mark_causal(scores);
+        }
+        if self.kv_heads < self.heads {
+            // GQA: the BMM itself is MHA-expanded (repeat-interleaved KV),
+            // but fusion can stream the grouped cache — record how many
+            // query heads share each KV lane.
+            g.mark_kv_groups(scores, self.heads / self.kv_heads);
         }
         let probs = g.add_node(
             Op::Util(UtilOp::new(UtilKind::Softmax, batch * self.heads * q_len, kv_len, dt)),
@@ -344,6 +374,120 @@ impl TransformerConfig {
         );
         let proj = g.add_node(Op::Gemm(GemmOp::linear(batch, h, h, dt)), &[ctx]);
         g.add_node(Op::Util(UtilOp::new(UtilKind::Add, batch, h, dt)), &[proj, dec])
+    }
+
+    /// One continuous-batching iteration as a model graph: a *ragged*
+    /// batch where every sequence contributes its own `(q_len, kv_len)`
+    /// window — prefill chunks (`q > 1`) and decode steps (`q == 1`)
+    /// mixed freely, the iteration unit of a vLLM-style serving engine.
+    ///
+    /// Row-wise ops (norms, projections, FFN, LM head) flatten across the
+    /// batch (`rows = Σ q_len`, exactly how a serving engine packs the
+    /// ragged batch into one GEMM); attention stays per-sequence — each
+    /// slot gets its own causal scores→softmax→context subgraph over its
+    /// own KV window, because cache lengths differ per sequence.
+    ///
+    /// Two exact degenerations anchor the serving simulator to the
+    /// existing prediction stack (the batch-size-1 equivalence of the
+    /// ISSUE):
+    ///
+    /// * one slot `{q: p, kv: p}` lowers node-for-node to
+    ///   [`TransformerConfig::graph`]`(1, p)` — a whole-prompt prefill;
+    /// * one slot `{q: 1, kv: t}` lowers node-for-node to
+    ///   [`TransformerConfig::decode_graph`]`(1, t)` — one decode step.
+    ///
+    /// Decoder-only models only (serving simulation targets LLM decoders;
+    /// enc–dec serving would need per-slot cross-KV bookkeeping).
+    pub fn mixed_batch_graph(&self, slots: &[SeqSlot]) -> ModelGraph {
+        assert!(!slots.is_empty(), "an iteration needs at least one sequence");
+        assert_eq!(
+            self.enc_layers, 0,
+            "mixed-batch serving graphs are decoder-only"
+        );
+        for s in slots {
+            assert!(s.q_len >= 1, "empty query window");
+            assert!(s.kv_len >= s.q_len, "kv window must cover the new tokens");
+        }
+        let mut g = ModelGraph::new();
+        let mut cur: Option<NodeId> = None;
+        for _ in 0..self.layers {
+            cur = Some(self.mixed_block_graph(slots, &mut g, cur));
+        }
+        let rows: usize = slots.iter().map(|s| s.q_len).sum();
+        self.head_graph(1, rows, &mut g, cur);
+        g
+    }
+
+    /// One decoder block over a ragged slot batch. With a single slot
+    /// this emits exactly the node sequence of
+    /// [`TransformerConfig::block_graph`]`(1, q, kv, causal)` — the
+    /// anchor for the serving simulator's bit-for-bit equivalence.
+    fn mixed_block_graph(
+        &self,
+        slots: &[SeqSlot],
+        g: &mut ModelGraph,
+        input: Option<NodeId>,
+    ) -> NodeId {
+        let dt = self.dtype;
+        let h = self.hidden;
+        let hd = self.head_dim();
+        let rows: usize = slots.iter().map(|s| s.q_len).sum();
+        let kv_dim = self.kv_heads * hd;
+        let residual: Vec<NodeId> = input.into_iter().collect();
+        let ln1 = g.add_node(Op::Util(UtilOp::new(UtilKind::LayerNorm, rows, h, dt)), &residual);
+        // One packed QKV projection over every sequence's new tokens.
+        let qkv = g.add_node(Op::Gemm(GemmOp::linear(rows, h + 2 * kv_dim, h, dt)), &[ln1]);
+        // Per-sequence attention: each slot reads its own KV window.
+        let mut ctxs: Vec<NodeId> = Vec::with_capacity(slots.len());
+        for s in slots {
+            let scores = g.add_node(
+                Op::Gemm(GemmOp::bmm(self.heads, s.q_len, s.kv_len, hd, dt)),
+                &[qkv],
+            );
+            g.mark_causal(scores);
+            if self.kv_heads < self.heads {
+                g.mark_kv_groups(scores, self.heads / self.kv_heads);
+            }
+            let probs = g.add_node(
+                Op::Util(UtilOp::new(UtilKind::Softmax, self.heads * s.q_len, s.kv_len, dt)),
+                &[scores],
+            );
+            ctxs.push(g.add_node(
+                Op::Gemm(GemmOp::bmm(self.heads, s.q_len, hd, s.kv_len, dt)),
+                &[probs, qkv],
+            ));
+        }
+        let proj = g.add_node(Op::Gemm(GemmOp::linear(rows, h, h, dt)), &ctxs);
+        let mut add1_in = vec![proj];
+        add1_in.extend(input);
+        let add1 = g.add_node(Op::Util(UtilOp::new(UtilKind::Add, rows, h, dt)), &add1_in);
+        let ln2 = g.add_node(Op::Util(UtilOp::new(UtilKind::LayerNorm, rows, h, dt)), &[add1]);
+        let ffn_out = if self.gated_ffn {
+            let upgate = g.add_node(
+                Op::Gemm(GemmOp::linear(rows, 2 * self.ffn_hidden, h, dt)),
+                &[ln2],
+            );
+            let act = g.add_node(
+                Op::Util(UtilOp::new(UtilKind::Gelu, rows, self.ffn_hidden, dt)),
+                &[upgate],
+            );
+            g.add_node(
+                Op::Util(UtilOp::new(UtilKind::Mul, rows, self.ffn_hidden, dt)),
+                &[act, upgate],
+            )
+        } else {
+            let up = g.add_node(
+                Op::Gemm(GemmOp::linear(rows, self.ffn_hidden, h, dt)),
+                &[ln2],
+            );
+            g.add_node(
+                Op::Util(UtilOp::new(UtilKind::Gelu, rows, self.ffn_hidden, dt)),
+                &[up],
+            )
+        };
+        let down =
+            g.add_node(Op::Gemm(GemmOp::linear(rows, h, self.ffn_hidden, dt)), &[ffn_out]);
+        g.add_node(Op::Util(UtilOp::new(UtilKind::Add, rows, h, dt)), &[down, add1])
     }
 
     /// Expand a generation request: the prefill graph over the prompt
@@ -681,6 +825,105 @@ mod tests {
         let b = steps[1].lower();
         let shared = a.iter().filter(|op| b.contains(op)).count();
         assert!(shared * 10 >= a.len() * 7, "{shared} of {} ops shared", a.len());
+    }
+
+    #[test]
+    fn property_single_slot_mixed_batch_graph_is_bit_equivalent() {
+        // ISSUE acceptance anchor: the serving simulator's iteration
+        // graphs degenerate exactly to the existing prefill / decode
+        // graphs at batch size 1 — node for node, so streams=1 latency
+        // aggregation is bit-for-bit identical.
+        for cfg in zoo::all_models().into_iter().filter(|c| c.enc_layers == 0) {
+            for p in [17usize, 128] {
+                let mixed = cfg.mixed_batch_graph(&[SeqSlot::prefill(0, p)]);
+                mixed.validate().unwrap();
+                assert_eq!(mixed.lower(), cfg.graph(1, p).lower(), "{} prefill", cfg.name);
+                assert_eq!(mixed.len(), cfg.graph(1, p).len());
+            }
+            for kv in [1usize, 97, 2048] {
+                let mixed = cfg.mixed_batch_graph(&[SeqSlot::decode(kv - 1)]);
+                mixed.validate().unwrap();
+                assert_eq!(
+                    mixed.lower(),
+                    cfg.decode_trace(1, kv),
+                    "{} decode kv={kv}",
+                    cfg.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_batch_graph_packs_rows_and_keeps_attention_ragged() {
+        let cfg = zoo::qwen3_0_6b();
+        let slots = [
+            SeqSlot::prefill(0, 256),  // admission-iteration prefill
+            SeqSlot::prefill(128, 64), // chunked-prefill continuation
+            SeqSlot::decode(512),      // two decode sequences at
+            SeqSlot::decode(1023),     // different cache depths
+        ];
+        let g = cfg.mixed_batch_graph(&slots);
+        g.validate().unwrap();
+        let rows: usize = slots.iter().map(|s| s.q_len).sum();
+        let trace = g.lower();
+        // Row ops flatten across the ragged batch: the packed QKV
+        // projection covers Σ q rows, once per layer.
+        let qkv_width = cfg.hidden + 2 * cfg.kv_heads * cfg.head_dim();
+        let packed = trace
+            .iter()
+            .filter(|op| matches!(op, Op::Gemm(gm) if gm.m == rows && gm.n == qkv_width))
+            .count();
+        assert_eq!(packed, cfg.layers);
+        // Attention stays per sequence: one softmax per slot per layer,
+        // each over its own kv window.
+        let softmaxes = trace
+            .iter()
+            .filter(|op| matches!(op, Op::Util(u) if u.kind == UtilKind::Softmax))
+            .count();
+        assert_eq!(softmaxes, slots.len() * cfg.layers);
+        for s in &slots {
+            assert!(trace.iter().any(|op| matches!(
+                op,
+                Op::Util(u) if u.kind == UtilKind::Softmax
+                    && u.rows == cfg.heads * s.q_len && u.cols == s.kv_len
+            )));
+        }
+        // Every scores BMM is causal-marked, and GQA models carry the
+        // grouping annotation fusion needs.
+        let groups = cfg.heads / cfg.kv_heads;
+        let annotated = (0..g.len())
+            .filter(|&i| {
+                let id = crate::graph::NodeId(i);
+                g.is_causal(id) && g.kv_groups(id) == groups
+            })
+            .count();
+        assert_eq!(annotated, slots.len() * cfg.layers);
+        // The LM head covers the whole packed row block.
+        assert!(trace.iter().any(|op| matches!(
+            op,
+            Op::Gemm(gm) if gm.m == rows && gm.n == cfg.vocab
+        )));
+    }
+
+    #[test]
+    #[should_panic(expected = "decoder-only")]
+    fn mixed_batch_graph_rejects_enc_dec_models() {
+        zoo::flan_t5_base().mixed_batch_graph(&[SeqSlot::decode(16)]);
+    }
+
+    #[test]
+    fn builder_annotates_gqa_groups_on_scores() {
+        // ISSUE GQA satellite: prefill and decode builders both annotate
+        // the scores BMM with the query-head grouping; MHA models don't.
+        let gqa = zoo::qwen3_4b(); // 32 / 8 → groups of 4
+        let g = gqa.decode_graph(1, 64);
+        let marked = (0..g.len())
+            .filter(|&i| g.kv_groups(crate::graph::NodeId(i)) == 4)
+            .count();
+        assert_eq!(marked, gqa.layers);
+        let mha = zoo::gpt2_large();
+        let g2 = mha.graph(1, 64);
+        assert!((0..g2.len()).all(|i| g2.kv_groups(crate::graph::NodeId(i)) == 1));
     }
 
     #[test]

@@ -227,6 +227,13 @@ pub fn attended_pairs(q_len: usize, kv_len: usize, causal: bool) -> f64 {
 /// length: prefill is `q_len == kv_len == seq`, an autoregressive decode
 /// step is `q_len == 1, kv_len == t` (the kernel streams a KV cache of
 /// `t` entries per lane and appends the new token's K/V rows).
+///
+/// `kv_heads` is the grouped-query structure: the kernel runs
+/// `batch·heads` query lanes but the KV cache holds only
+/// `batch·kv_heads` distinct lanes — query-head groups share one K/V
+/// stream, so GQA cache *traffic* (not just footprint) shrinks by
+/// `heads / kv_heads`. MHA is `kv_heads == heads`; compute is unchanged
+/// either way (every query head still evaluates its pairs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum CustomOp {
     /// Triton matmul: autotuned from Triton's own config space.
@@ -234,9 +241,9 @@ pub enum CustomOp {
     /// Triton fused elementwise vector kernel.
     TritonVec { elems: usize, dtype: DType },
     /// FlashAttention-2 fused attention.
-    FlashAttn { batch: usize, heads: usize, q_len: usize, kv_len: usize, head_dim: usize, dtype: DType, causal: bool },
+    FlashAttn { batch: usize, heads: usize, kv_heads: usize, q_len: usize, kv_len: usize, head_dim: usize, dtype: DType, causal: bool },
     /// CUTLASS (xFormers) fused attention.
-    CutlassAttn { batch: usize, heads: usize, q_len: usize, kv_len: usize, head_dim: usize, dtype: DType, causal: bool },
+    CutlassAttn { batch: usize, heads: usize, kv_heads: usize, q_len: usize, kv_len: usize, head_dim: usize, dtype: DType, causal: bool },
 }
 
 impl CustomOp {
@@ -263,25 +270,32 @@ impl CustomOp {
     }
 
     /// Minimal operand + output traffic in bytes. For attention this is
-    /// the KV-cache traffic model: per (batch, head) lane the kernel reads
-    /// the query block (`q·d`) and streams the whole K and V cache
-    /// (`2·kv·d`), then writes the output block (`q·d`) and appends the
-    /// new tokens' K/V rows to the cache (`2·q·d`). Prefill (`q == kv`)
-    /// degenerates to reading Q/K/V once and writing O plus the full
-    /// cache; a decode step (`q == 1`) is dominated by the `2·kv·d` cache
-    /// stream — the memory-bound regime of autoregressive generation.
+    /// the KV-cache traffic model: every *query* lane (`batch·heads`)
+    /// reads its query block (`q·d`) and writes its output block
+    /// (`q·d`); every *KV* lane (`batch·kv_heads`) streams the whole K
+    /// and V cache (`2·kv·d`) and appends the new tokens' K/V rows
+    /// (`2·q·d`). Under MHA (`kv_heads == heads`) this is the historical
+    /// per-lane `(4q + 2kv)·d`; under GQA the dominant cache stream
+    /// shrinks by the group factor, which is exactly what makes grouped
+    /// decode cheaper on hardware. Prefill (`q == kv`) degenerates to
+    /// reading Q/K/V once and writing O plus the full cache; a decode
+    /// step (`q == 1`) is dominated by the `2·kv·d` stream — the
+    /// memory-bound regime of autoregressive generation.
     pub fn io_bytes(&self) -> f64 {
         match *self {
             CustomOp::TritonMM { m, n, k, dtype } => {
                 ((m * k + k * n + m * n) * dtype.bytes()) as f64
             }
             CustomOp::TritonVec { elems, dtype } => (elems * dtype.bytes() * 2) as f64,
-            CustomOp::FlashAttn { batch, heads, q_len, kv_len, head_dim, dtype, .. }
-            | CustomOp::CutlassAttn { batch, heads, q_len, kv_len, head_dim, dtype, .. } => {
-                let lanes = batch as f64 * heads as f64;
+            CustomOp::FlashAttn { batch, heads, kv_heads, q_len, kv_len, head_dim, dtype, .. }
+            | CustomOp::CutlassAttn { batch, heads, kv_heads, q_len, kv_len, head_dim, dtype, .. } => {
+                let q_lanes = batch as f64 * heads as f64;
+                let kv_lanes = batch as f64 * kv_heads.min(heads).max(1) as f64;
                 let d = head_dim as f64;
-                let per_lane = (4.0 * q_len as f64 + 2.0 * kv_len as f64) * d;
-                lanes * per_lane * dtype.bytes() as f64
+                let q_side = q_lanes * 2.0 * q_len as f64 * d;
+                let kv_side =
+                    kv_lanes * (2.0 * q_len as f64 + 2.0 * kv_len as f64) * d;
+                (q_side + kv_side) * dtype.bytes() as f64
             }
         }
     }
@@ -369,7 +383,7 @@ mod tests {
     #[test]
     fn causal_prefill_attention_evaluates_the_lower_triangle() {
         let mk = |causal| CustomOp::FlashAttn {
-            batch: 2, heads: 8, q_len: 512, kv_len: 512, head_dim: 64,
+            batch: 2, heads: 8, kv_heads: 8, q_len: 512, kv_len: 512, head_dim: 64,
             dtype: DType::Bf16, causal,
         };
         // Exact triangular accounting: q·(q+1)/2 of q² pairs survive the
@@ -402,11 +416,11 @@ mod tests {
                 let mut prev = (0.0f64, 0.0f64);
                 for kv in [1usize, 2, 64, 129, 1024, 8191] {
                     let fa = CustomOp::FlashAttn {
-                        batch: 4, heads: 8, q_len: 1, kv_len: kv, head_dim: 64,
+                        batch: 4, heads: 8, kv_heads: 8, q_len: 1, kv_len: kv, head_dim: 64,
                         dtype, causal,
                     };
                     let ca = CustomOp::CutlassAttn {
-                        batch: 4, heads: 8, q_len: 1, kv_len: kv, head_dim: 64,
+                        batch: 4, heads: 8, kv_heads: 8, q_len: 1, kv_len: kv, head_dim: 64,
                         dtype, causal,
                     };
                     assert_eq!(fa.flops(), ca.flops(), "families share the math");
@@ -423,7 +437,7 @@ mod tests {
         // One decode step: read Q (1·d) + stream the cache (2·kv·d),
         // write O (1·d) + append K/V (2·d) — per lane, times dtype width.
         let op = CustomOp::FlashAttn {
-            batch: 2, heads: 4, q_len: 1, kv_len: 100, head_dim: 64,
+            batch: 2, heads: 4, kv_heads: 4, q_len: 1, kv_len: 100, head_dim: 64,
             dtype: DType::Bf16, causal: true,
         };
         let per_lane = (4.0 * 1.0 + 2.0 * 100.0) * 64.0 * 2.0;
@@ -434,6 +448,35 @@ mod tests {
         assert_eq!(Op::Gemm(g).io_bytes(), g.io_bytes());
         let u = UtilOp::new(UtilKind::Add, 32, 32, DType::F32);
         assert_eq!(Op::Util(u).io_bytes(), u.elems() * 4.0 * u.passes());
+    }
+
+    #[test]
+    fn gqa_attention_streams_the_grouped_cache_not_the_expanded_one() {
+        // ISSUE GQA satellite: kv_heads drives the KV *traffic*, not just
+        // the footprint. Same query lanes, grouped cache → the dominant
+        // 2·kv·d stream shrinks by the group factor, compute is unchanged.
+        let mk = |kv_heads| CustomOp::FlashAttn {
+            batch: 2, heads: 16, kv_heads, q_len: 1, kv_len: 4096, head_dim: 64,
+            dtype: DType::Bf16, causal: true,
+        };
+        let mha = mk(16);
+        let gqa = mk(4);
+        assert_eq!(mha.flops(), gqa.flops(), "grouping never changes the math");
+        assert!(gqa.io_bytes() < mha.io_bytes());
+        // Exact accounting: q-lanes·2q·d + kv-lanes·(2q + 2kv)·d, ×dtype.
+        let d = 64.0 * 2.0;
+        let expect = |kvh: f64| (32.0 * 2.0 + 2.0 * kvh * (2.0 + 2.0 * 4096.0)) * d;
+        assert_eq!(mha.io_bytes(), expect(16.0));
+        assert_eq!(gqa.io_bytes(), expect(4.0));
+        // The decode stream dominates, so a 4× group shrinks traffic ~4×.
+        let ratio = mha.io_bytes() / gqa.io_bytes();
+        assert!(ratio > 3.5 && ratio < 4.1, "ratio={ratio}");
+        // CUTLASS shares the traffic model.
+        let ca = CustomOp::CutlassAttn {
+            batch: 2, heads: 16, kv_heads: 4, q_len: 1, kv_len: 4096, head_dim: 64,
+            dtype: DType::Bf16, causal: true,
+        };
+        assert_eq!(ca.io_bytes(), gqa.io_bytes());
     }
 
     #[test]

@@ -80,10 +80,20 @@ impl AttnProfile {
     /// shapes (`q ≥ block_q`) take the wave-quantized path; decode shapes
     /// take the measured block-proportional staircase, with the thin
     /// tile's compute share as a secondary floor.
+    ///
+    /// `kv_heads < heads` (GQA) scales the *decode* staircase by the
+    /// grouped-traffic ratio: the collection shapes are MHA, and the
+    /// decode regime is KV-stream-bound, so the measured work shrinks by
+    /// exactly the share of cache bytes that grouping removes (computed
+    /// from the op's own traffic model — no extra collection needed).
+    /// Prefill stays on the measured wave path: it is compute-bound and
+    /// grouping never changes the math.
+    #[allow(clippy::too_many_arguments)]
     pub fn predict(
         &self,
         batch: usize,
         heads: usize,
+        kv_heads: usize,
         q_len: usize,
         kv_len: usize,
         head_dim: usize,
@@ -111,11 +121,19 @@ impl AttnProfile {
         }
         // Decode regime: launch-free staircase interpolated in kv, scaled
         // by the query's block count (decode runs sub-wave, so cost is
-        // proportional to resident blocks, not quantized waves).
+        // proportional to resident blocks, not quantized waves). GQA
+        // scales the measured (MHA-collected) work by the grouped share
+        // of the per-lane traffic: (2·kv·ρ + 4·q) / (2·kv + 4·q) with
+        // ρ = kv_heads / heads — 1 for MHA, → ρ as the cache stream
+        // dominates.
+        let rho = kv_heads.min(heads).max(1) as f64 / heads.max(1) as f64;
+        let q = q_len as f64;
+        let kv = kv_len as f64;
+        let mem_ratio = (2.0 * kv * rho + 4.0 * q) / (2.0 * kv + 4.0 * q);
         let (e1, e3) = (self.decode_dur_s[idx], self.decode_dur_s[idx + 1]);
         let work1 = (e1 - self.launch_s).max(e1 * 0.05);
         let work3 = (e3 - self.launch_s).max(e3 * 0.05);
-        let work = work1 + frac * (work3 - work1);
+        let work = (work1 + frac * (work3 - work1)) * mem_ratio;
         let base_blocks = self.blocks(self.base_batch, self.base_heads, 1) as f64;
         let floor = self.launch_s
             + work * extra * hd * self.blocks(batch, heads, q_len) as f64
@@ -359,12 +377,12 @@ fn collect_attn(gpu: &mut Gpu, dtype: DType, spec: &ProfileSpec, flash: bool) ->
     let mk = |batch: usize, heads: usize, q_len: usize, kv_len: usize| {
         if flash {
             CustomOp::FlashAttn {
-                batch, heads, q_len, kv_len,
+                batch, heads, kv_heads: heads, q_len, kv_len,
                 head_dim: base_head_dim, dtype, causal: false,
             }
         } else {
             CustomOp::CutlassAttn {
-                batch, heads, q_len, kv_len,
+                batch, heads, kv_heads: heads, q_len, kv_len,
                 head_dim: base_head_dim, dtype, causal: false,
             }
         }
@@ -408,14 +426,14 @@ impl CustomModel {
             CustomOp::TritonVec { elems, .. } => {
                 Some(self.triton_vec.as_ref()?.predict(elems))
             }
-            CustomOp::FlashAttn { batch, heads, q_len, kv_len, head_dim, causal, .. } => {
+            CustomOp::FlashAttn { batch, heads, kv_heads, q_len, kv_len, head_dim, causal, .. } => {
                 Some(self.flash_attn.as_ref()?.predict(
-                    batch, heads, q_len, kv_len, head_dim, causal,
+                    batch, heads, kv_heads, q_len, kv_len, head_dim, causal,
                 ))
             }
-            CustomOp::CutlassAttn { batch, heads, q_len, kv_len, head_dim, causal, .. } => {
+            CustomOp::CutlassAttn { batch, heads, kv_heads, q_len, kv_len, head_dim, causal, .. } => {
                 Some(self.cutlass_attn.as_ref()?.predict(
-                    batch, heads, q_len, kv_len, head_dim, causal,
+                    batch, heads, kv_heads, q_len, kv_len, head_dim, causal,
                 ))
             }
         }
@@ -486,7 +504,7 @@ mod tests {
         let mut errs = Vec::new();
         for (b, h, s) in [(2, 16, 512), (8, 8, 1024), (4, 32, 2048), (1, 8, 4096)] {
             let op = CustomOp::FlashAttn {
-                batch: b, heads: h, q_len: s, kv_len: s, head_dim: 64,
+                batch: b, heads: h, kv_heads: h, q_len: s, kv_len: s, head_dim: 64,
                 dtype: DType::Bf16, causal: false,
             };
             let pred = m.predict(&gpu, &op).unwrap();
@@ -513,7 +531,7 @@ mod tests {
             (4, 16, 8192),
         ] {
             let op = CustomOp::FlashAttn {
-                batch: b, heads: h, q_len: 1, kv_len: kv, head_dim: 64,
+                batch: b, heads: h, kv_heads: h, q_len: 1, kv_len: kv, head_dim: 64,
                 dtype: DType::Bf16, causal: true,
             };
             let pred = m.predict(&gpu, &op).unwrap();
@@ -529,13 +547,50 @@ mod tests {
         for kv in [128usize, 300, 512, 1024, 2048, 4096, 8192, 16000] {
             let p = m
                 .predict(&gpu, &CustomOp::FlashAttn {
-                    batch: 4, heads: 16, q_len: 1, kv_len: kv, head_dim: 64,
+                    batch: 4, heads: 16, kv_heads: 16, q_len: 1, kv_len: kv, head_dim: 64,
                     dtype: DType::Bf16, causal: true,
                 })
                 .unwrap();
             assert!(p > prev, "kv={kv}: {p} <= {prev}");
             prev = p;
         }
+    }
+
+    #[test]
+    fn gqa_decode_prediction_tracks_the_grouped_truth() {
+        // ISSUE GQA satellite: grouped-cache decode kernels are priced by
+        // the MHA-collected staircase scaled by the grouped-traffic
+        // ratio — predictions must stay close to the simulator's grouped
+        // ground truth, and an MHA op must predict bit-identically to the
+        // pre-GQA model (ρ = 1).
+        let (mut gpu, m) = model("a100", DType::Bf16);
+        let mut errs = Vec::new();
+        for (b, h, kvh, kv) in [
+            (4usize, 16usize, 4usize, 1024usize),
+            (8, 16, 2, 4096),
+            (2, 32, 8, 2048),
+            (1, 8, 1, 8192),
+        ] {
+            let op = CustomOp::FlashAttn {
+                batch: b, heads: h, kv_heads: kvh, q_len: 1, kv_len: kv,
+                head_dim: 64, dtype: DType::Bf16, causal: true,
+            };
+            let pred = m.predict(&gpu, &op).unwrap();
+            let truth = profiler::measure(&mut gpu, &Op::Custom(op), &ProfileSpec::quick())
+                .unwrap()
+                .mean_s;
+            errs.push(rel_err_pct(pred, truth));
+        }
+        assert!(mean(&errs) < 35.0, "GQA decode errs {errs:?}");
+        // Grouping shrinks the prediction monotonically at fixed lanes.
+        let p_of = |kvh| {
+            m.predict(&gpu, &CustomOp::FlashAttn {
+                batch: 4, heads: 16, kv_heads: kvh, q_len: 1, kv_len: 4096,
+                head_dim: 64, dtype: DType::Bf16, causal: true,
+            })
+            .unwrap()
+        };
+        assert!(p_of(4) < p_of(8) && p_of(8) < p_of(16));
     }
 
     #[test]

@@ -142,9 +142,44 @@ impl GemvProfile {
     }
 }
 
+/// Measured skinny-GEMM profile for `8 < min(m, n) ≤ 32` — the
+/// continuous-batching decode regime, where an iteration over 9–32
+/// sequences makes every projection an `r × n × k` GEMM that the library
+/// serves with streaming kernels, not 64/128-row tensor-core tiles.
+/// One [`GemvProfile`]-style bandwidth staircase is collected per rows
+/// level of [`SKINNY_ROWS_GRID`] (the achieved bandwidth ramps with row
+/// parallelism), and predictions interpolate between the bracketing
+/// levels' predictions linearly in `r`.
+#[derive(Clone, Debug)]
+pub struct SkinnyProfile {
+    /// Collected rows levels, ascending (the `min(m, n)` of the shapes).
+    pub rows: Vec<usize>,
+    /// One streaming profile per rows level.
+    pub levels: Vec<GemvProfile>,
+}
+
+impl SkinnyProfile {
+    /// Predicted latency of a skinny (but not gemv-degenerate) GEMM.
+    pub fn predict(&self, op: &GemmOp) -> f64 {
+        let r = op.m.min(op.n) as f64;
+        let first = self.rows[0] as f64;
+        let last = *self.rows.last().unwrap() as f64;
+        let rc = r.clamp(first, last);
+        let mut i = 0;
+        while i + 2 < self.rows.len() && (self.rows[i + 1] as f64) < rc {
+            i += 1;
+        }
+        let (r1, r2) = (self.rows[i] as f64, self.rows[i + 1] as f64);
+        let t = ((rc - r1) / (r2 - r1)).clamp(0.0, 1.0);
+        let p1 = self.levels[i].predict(op);
+        let p2 = self.levels[i + 1].predict(op);
+        p1 + t * (p2 - p1)
+    }
+}
+
 /// Full per-(device, dtype) GEMM model: one profile per kernel in the
-/// registry, the gemv (decode-regime) streaming profile, plus the clock
-/// calibration.
+/// registry, the gemv and skinny (decode-regime) streaming profiles,
+/// plus the clock calibration.
 #[derive(Clone, Debug)]
 pub struct GemmTable {
     pub device: String,
@@ -152,6 +187,9 @@ pub struct GemmTable {
     pub profiles: Vec<KernelProfile>,
     /// Memory-bound route for gemv-degenerate (decode-step) GEMMs.
     pub gemv: GemvProfile,
+    /// Streaming route for the skinny band (`8 < min(m,n) ≤ 32`) — the
+    /// continuous-batching decode regime.
+    pub skinny: SkinnyProfile,
     /// Locked collection clock (GHz).
     pub locked_ghz: f64,
     /// locked_dur / boost_dur from the calibration burn (≥1).
@@ -265,18 +303,28 @@ pub fn collect(gpu: &mut Gpu, dtype: DType, spec: &ProfileSpec) -> Option<GemmTa
     }
     // Gemv (decode-regime) streaming profile: measure achieved bandwidth
     // at log-spaced working sets through the *library* dispatch (no
-    // pinned config — the library routes skinny shapes to its gemv
+    // pinned config — the library routes skinny shapes to its streaming
     // kernels, exactly what a decode-step projection hits in production).
+    // Pure memory-bound, so the locked clock transfers without
+    // correction.
     let gemv = collect_gemv(gpu, dtype, spec)?;
     // Boost calibration burn (hot, like an evaluation run).
     let boost_speedup =
         profiler::calibrate_boost_ratio(gpu, dtype, locked_ghz).unwrap_or(1.0);
     gpu.set_freq(FreqMode::Boost);
+    // Skinny band (9 ..= 32 rows): arithmetic intensity approaches
+    // machine balance near the top of the band, so it is *partially*
+    // clock-sensitive — collect at the evaluation (boost) clock like the
+    // custom kernels (short launches, little sustained heat; idle first
+    // so the calibration burn's heat cannot derate the staircase).
+    gpu.idle(5.0);
+    let skinny = collect_skinny(gpu, dtype, spec)?;
     Some(GemmTable {
         device: gpu.spec.name.to_string(),
         dtype,
         profiles,
         gemv,
+        skinny,
         locked_ghz,
         boost_speedup,
         dram_bw: gpu.spec.dram_bw(),
@@ -289,24 +337,33 @@ pub fn collect(gpu: &mut Gpu, dtype: DType, spec: &ProfileSpec) -> Option<GemmTa
 const GEMV_K_GRID: [usize; 5] = [64, 256, 1024, 4096, 16384];
 const GEMV_N: usize = 4096;
 
-fn collect_gemv(gpu: &mut Gpu, dtype: DType, spec: &ProfileSpec) -> Option<GemvProfile> {
+/// One streaming-bandwidth staircase at a fixed row count `rows`: launch
+/// overhead from two L2-resident shapes with a 2× byte ratio
+/// (d ≈ launch + bytes/bw on a shared bandwidth plateau, so
+/// launch ≈ 2·d1 − d2 — the same well-conditioned trick as the kernel
+/// tables' one-block shapes), then achieved bandwidth at each working
+/// set of the [`GEMV_K_GRID`]. Shared by the gemv (`rows = 1`) and
+/// skinny (`rows = 9..=32`) collections so the two profiles can never
+/// diverge in methodology.
+fn collect_stream_profile(
+    gpu: &mut Gpu,
+    rows: usize,
+    dtype: DType,
+    spec: &ProfileSpec,
+) -> Option<GemvProfile> {
     let meas = |gpu: &mut Gpu, m: usize, n: usize, k: usize| {
         profiler::measure(gpu, &Op::Gemm(GemmOp::linear(m, n, k, dtype)), spec)
             .map(|r| r.mean_s)
             .ok()
     };
-    // Launch overhead from two L2-resident shapes with a 2× byte ratio:
-    // d ≈ launch + bytes/bw on a shared bandwidth plateau, so
-    // launch ≈ 2·d1 − d2 (the same well-conditioned trick as the kernel
-    // tables' one-block shapes).
-    let d1 = meas(gpu, 1, 512, 64)?;
-    let d2 = meas(gpu, 1, 512, 128)?;
+    let d1 = meas(gpu, rows, 512, 64)?;
+    let d2 = meas(gpu, rows, 512, 128)?;
     let launch = (2.0 * d1 - d2).clamp(0.15 * d1, d1);
     let mut ws_bytes = Vec::with_capacity(GEMV_K_GRID.len());
     let mut bw = Vec::with_capacity(GEMV_K_GRID.len());
     for &k in &GEMV_K_GRID {
-        let op = GemmOp::linear(1, GEMV_N, k, dtype);
-        let dur = meas(gpu, 1, GEMV_N, k)?;
+        let op = GemmOp::linear(rows, GEMV_N, k, dtype);
+        let dur = meas(gpu, rows, GEMV_N, k)?;
         let bytes = op.io_bytes();
         ws_bytes.push(bytes);
         bw.push(bytes / (dur - launch).max(dur * 0.05));
@@ -314,20 +371,46 @@ fn collect_gemv(gpu: &mut Gpu, dtype: DType, spec: &ProfileSpec) -> Option<GemvP
     Some(GemvProfile { launch_s: launch, ws_bytes, bw })
 }
 
+fn collect_gemv(gpu: &mut Gpu, dtype: DType, spec: &ProfileSpec) -> Option<GemvProfile> {
+    collect_stream_profile(gpu, 1, dtype, spec)
+}
+
+/// Rows levels of the skinny-GEMM collection (the `min(m, n)` band the
+/// library serves with streaming kernels above the gemv cut).
+pub const SKINNY_ROWS_GRID: [usize; 4] = [9, 16, 24, 32];
+
+fn collect_skinny(gpu: &mut Gpu, dtype: DType, spec: &ProfileSpec) -> Option<SkinnyProfile> {
+    let mut rows = Vec::with_capacity(SKINNY_ROWS_GRID.len());
+    let mut levels = Vec::with_capacity(SKINNY_ROWS_GRID.len());
+    for &r in &SKINNY_ROWS_GRID {
+        rows.push(r);
+        levels.push(collect_stream_profile(gpu, r, dtype, spec)?);
+    }
+    Some(SkinnyProfile { rows, levels })
+}
+
 impl GemmTable {
     /// Predict the boost-clock latency of a GEMM. `gpu` is only consulted
     /// for the *public* interfaces a real deployment has: the cuBLASLt
     /// heuristic (runs on the target device) and the occupancy calculator.
-    /// Gemv-degenerate shapes (decode-step projections, `min(m,n) ≤ 8`)
-    /// route to the measured memory-bound profile instead of the
-    /// tensor-core kernel tables — the regime split the library's own
-    /// dispatch makes.
+    /// Skinny shapes route to the measured memory-bound profiles instead
+    /// of the tensor-core kernel tables — gemv-degenerate ones
+    /// (`min(m,n) ≤ 8`, single-digit decode batches) to the gemv profile,
+    /// the `9 ..= 32` band (continuous-batching decode) to the
+    /// rows-interpolated skinny profile. The same regime split the
+    /// library's own dispatch makes.
     pub fn predict(&self, gpu: &Gpu, op: &GemmOp) -> Option<f64> {
         if gemm::is_gemv_degenerate(op) {
             if !gpu.spec.supports(op.dtype) {
                 return None;
             }
             return Some(self.gemv.predict(op));
+        }
+        if gemm::is_skinny(op) {
+            if !gpu.spec.supports(op.dtype) {
+                return None;
+            }
+            return Some(self.skinny.predict(op));
         }
         let cfg = heuristic::algo_get_heuristic_cached(gpu, op)?;
         self.predict_with_config(gpu, op, cfg)
@@ -587,6 +670,51 @@ mod tests {
         }
         let mean = crate::util::stats::mean(&errs);
         assert!(mean < 25.0, "gemv mean rel err {mean}% errs={errs:?}");
+    }
+
+    #[test]
+    fn skinny_band_routes_to_the_measured_profile_and_tracks_truth() {
+        // ISSUE skinny-GEMM satellite: decode batches of 9–32 no longer
+        // price through the tensor-core tables — they take the measured
+        // rows-interpolated streaming profile, and must track the
+        // simulator's boost-clock ground truth.
+        let (mut gpu, table) = quick_table("a100", DType::F32);
+        gpu.reset();
+        gpu.set_freq(FreqMode::Boost);
+        let mut errs = Vec::new();
+        let mut rng = crate::util::prng::Rng::new(777);
+        for _ in 0..20 {
+            let m = rng.int_range(9, 32) as usize; // continuous-batching band
+            let n = rng.log_uniform_int(1024, 8192) as usize;
+            let k = rng.log_uniform_int(512, 8192) as usize;
+            let op = GemmOp::linear(m, n, k, DType::F32);
+            assert!(crate::gpusim::gemm::is_skinny(&op));
+            assert!(!crate::gpusim::gemm::is_gemv_degenerate(&op));
+            let pred = table.predict(&gpu, &op).unwrap();
+            assert_eq!(pred, table.skinny.predict(&op), "must take the skinny route");
+            let truth = profiler::measure(&mut gpu, &Op::Gemm(op), &ProfileSpec::quick())
+                .unwrap()
+                .mean_s;
+            errs.push(rel_err_pct(pred, truth));
+        }
+        let mean = crate::util::stats::mean(&errs);
+        assert!(mean < 25.0, "skinny mean rel err {mean}% errs={errs:?}");
+        // Prediction is continuous across the gemv boundary: an m=8 and
+        // an m=9 shape of the same (n, k) must predict within a small
+        // factor of each other.
+        let t8 = table.predict(&gpu, &GemmOp::linear(8, 4096, 4096, DType::F32)).unwrap();
+        let t9 = table.predict(&gpu, &GemmOp::linear(9, 4096, 4096, DType::F32)).unwrap();
+        assert!(
+            (t9 / t8 - 1.0).abs() < 0.35,
+            "gemv→skinny boundary cliff: {t8} vs {t9}"
+        );
+        // And it interpolates monotonically in rows at fixed (n, k).
+        let mut prev = 0.0;
+        for m in [9usize, 16, 24, 32] {
+            let t = table.predict(&gpu, &GemmOp::linear(m, 4096, 4096, DType::F32)).unwrap();
+            assert!(t > prev, "m={m}: {t} <= {prev}");
+            prev = t;
+        }
     }
 
     #[test]

@@ -18,5 +18,7 @@ pub mod gemm_model;
 pub mod predictor;
 pub mod utility_model;
 
-pub use gemm_model::{GemmTable, GemvProfile, KernelProfile, K_GRID};
+pub use gemm_model::{
+    GemmTable, GemvProfile, KernelProfile, SkinnyProfile, K_GRID, SKINNY_ROWS_GRID,
+};
 pub use predictor::{GenerationPrediction, Pm2Lat};

@@ -1,0 +1,289 @@
+//! Paged KV-cache allocator — vLLM-style block bookkeeping for the
+//! serving simulator.
+//!
+//! GPU memory for the KV cache is carved into fixed-size blocks of
+//! `block_tokens` tokens each; a request holds a list of blocks that
+//! grows as its context grows and is returned wholesale on completion
+//! (or preemption). Capacity is derived from the device's HBM minus the
+//! model's resident footprint through
+//! [`crate::models::TransformerConfig::kv_cache_bytes`], so block-count
+//! accounting and byte accounting can never disagree.
+//!
+//! Invariants (enforced with debug assertions and checked by the
+//! property tests):
+//!
+//! * `free + in_use == capacity` after every operation;
+//! * a request's block count is exactly `ceil(tokens / block_tokens)`;
+//! * block ids are never double-allocated and all return to the free
+//!   list when their owner releases.
+
+use std::collections::HashMap;
+
+/// Default tokens per KV block (vLLM's default page size).
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
+
+/// Static shape of a pager: the block size knob and the block budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvPagerConfig {
+    pub block_tokens: usize,
+    pub capacity_blocks: usize,
+}
+
+impl KvPagerConfig {
+    /// Size a pager from a device HBM budget: whatever remains after the
+    /// model's weights, an activation/workspace reserve and the CUDA
+    /// context becomes KV blocks. Clamps to at least one block so a
+    /// degenerate budget still constructs (and then preempts constantly —
+    /// visible, not silent).
+    pub fn for_model(
+        cfg: &crate::models::TransformerConfig,
+        hbm_bytes: f64,
+        block_tokens: usize,
+    ) -> KvPagerConfig {
+        let block_tokens = block_tokens.max(1);
+        let bytes_per_block = cfg.kv_cache_bytes(1, block_tokens);
+        // Weights + CUDA context + a workspace reserve proportional to a
+        // healthy batch of activations.
+        let reserved = cfg.weight_bytes() + 0.7e9 + 0.05 * hbm_bytes;
+        let budget = (hbm_bytes - reserved).max(0.0);
+        KvPagerConfig {
+            block_tokens,
+            capacity_blocks: ((budget / bytes_per_block) as usize).max(1),
+        }
+    }
+
+    /// Blocks needed to hold `tokens` context entries.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Token capacity if a single request could take every block.
+    pub fn capacity_tokens(&self) -> usize {
+        self.capacity_blocks * self.block_tokens
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum PagerError {
+    #[error("out of KV blocks: need {need} more, have {free} free")]
+    OutOfBlocks { need: usize, free: usize },
+    #[error("request {0} holds no allocation")]
+    UnknownRequest(usize),
+}
+
+/// Per-request allocation: the materialized context length and the
+/// actual block ids backing it.
+#[derive(Clone, Debug, Default)]
+struct Alloc {
+    tokens: usize,
+    blocks: Vec<usize>,
+}
+
+/// The allocator. Block ids are dense `0..capacity`; the free list is
+/// LIFO so recently released blocks are reused first (cache-friendly on
+/// real hardware, deterministic here).
+#[derive(Clone, Debug)]
+pub struct KvPager {
+    config: KvPagerConfig,
+    free_list: Vec<usize>,
+    allocs: HashMap<usize, Alloc>,
+    peak_in_use: usize,
+}
+
+impl KvPager {
+    pub fn new(config: KvPagerConfig) -> KvPager {
+        let config = KvPagerConfig {
+            block_tokens: config.block_tokens.max(1),
+            capacity_blocks: config.capacity_blocks.max(1),
+        };
+        KvPager {
+            free_list: (0..config.capacity_blocks).rev().collect(),
+            allocs: HashMap::new(),
+            peak_in_use: 0,
+            config,
+        }
+    }
+
+    pub fn config(&self) -> KvPagerConfig {
+        self.config
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.config.capacity_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free_list.len()
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.config.capacity_blocks - self.free_list.len()
+    }
+
+    /// High-water mark of `blocks_in_use` over the pager's lifetime.
+    pub fn peak_blocks(&self) -> usize {
+        self.peak_in_use
+    }
+
+    /// Fraction of blocks currently allocated.
+    pub fn occupancy(&self) -> f64 {
+        self.blocks_in_use() as f64 / self.config.capacity_blocks as f64
+    }
+
+    /// Materialized context tokens of a request (0 when unknown).
+    pub fn tokens_of(&self, id: usize) -> usize {
+        self.allocs.get(&id).map(|a| a.tokens).unwrap_or(0)
+    }
+
+    /// Live requests holding at least one block.
+    pub fn live_requests(&self) -> usize {
+        self.allocs.len()
+    }
+
+    /// Would growing request `id` to `tokens` context entries fit?
+    pub fn can_grow(&self, id: usize, tokens: usize) -> bool {
+        let have = self.allocs.get(&id).map(|a| a.blocks.len()).unwrap_or(0);
+        let need = self.config.blocks_for(tokens).saturating_sub(have);
+        need <= self.free_list.len()
+    }
+
+    /// Grow (or create) request `id`'s allocation to cover `tokens`
+    /// context entries, appending blocks as needed. Shrinking never
+    /// happens here — contexts only grow until [`KvPager::release`].
+    /// Returns the number of newly allocated blocks; on failure the
+    /// allocation is untouched (all-or-nothing).
+    pub fn grow(&mut self, id: usize, tokens: usize) -> Result<usize, PagerError> {
+        let entry = self.allocs.entry(id).or_default();
+        let want = self.config.blocks_for(tokens);
+        let need = want.saturating_sub(entry.blocks.len());
+        if need > self.free_list.len() {
+            let free = self.free_list.len();
+            if entry.blocks.is_empty() {
+                self.allocs.remove(&id);
+            }
+            return Err(PagerError::OutOfBlocks { need, free });
+        }
+        for _ in 0..need {
+            entry.blocks.push(self.free_list.pop().expect("checked above"));
+        }
+        entry.tokens = entry.tokens.max(tokens);
+        self.peak_in_use = self.peak_in_use.max(self.blocks_in_use());
+        debug_assert!(self.audit());
+        Ok(need)
+    }
+
+    /// Return every block request `id` holds (completion, or preemption
+    /// with recompute). Returns the freed block count.
+    pub fn release(&mut self, id: usize) -> Result<usize, PagerError> {
+        let alloc = self.allocs.remove(&id).ok_or(PagerError::UnknownRequest(id))?;
+        let n = alloc.blocks.len();
+        self.free_list.extend(alloc.blocks);
+        debug_assert!(self.audit());
+        Ok(n)
+    }
+
+    /// Conservation check: free + allocated == capacity, no block id
+    /// appears twice, every allocation's block count matches its tokens.
+    pub fn audit(&self) -> bool {
+        let allocated: usize = self.allocs.values().map(|a| a.blocks.len()).sum();
+        if allocated + self.free_list.len() != self.config.capacity_blocks {
+            return false;
+        }
+        let mut seen = vec![false; self.config.capacity_blocks];
+        for &b in self.free_list.iter().chain(self.allocs.values().flat_map(|a| &a.blocks)) {
+            if b >= seen.len() || seen[b] {
+                return false;
+            }
+            seen[b] = true;
+        }
+        self.allocs
+            .values()
+            .all(|a| a.blocks.len() == self.config.blocks_for(a.tokens))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pager(block_tokens: usize, capacity_blocks: usize) -> KvPager {
+        KvPager::new(KvPagerConfig { block_tokens, capacity_blocks })
+    }
+
+    #[test]
+    fn grow_allocates_ceil_blocks_and_conserves() {
+        let mut p = pager(16, 10);
+        assert_eq!(p.grow(1, 1).unwrap(), 1); // 1 token → 1 block
+        assert_eq!(p.grow(1, 16).unwrap(), 0); // still 1 block
+        assert_eq!(p.grow(1, 17).unwrap(), 1); // crosses a boundary
+        assert_eq!(p.blocks_in_use(), 2);
+        assert_eq!(p.tokens_of(1), 17);
+        assert_eq!(p.grow(2, 64).unwrap(), 4);
+        assert_eq!(p.blocks_in_use(), 6);
+        assert!(p.audit());
+        assert_eq!(p.release(1).unwrap(), 2);
+        assert_eq!(p.release(2).unwrap(), 4);
+        assert_eq!(p.blocks_in_use(), 0);
+        assert_eq!(p.free_blocks(), 10);
+        assert!(p.audit());
+        assert_eq!(p.peak_blocks(), 6, "high-water mark survives release");
+    }
+
+    #[test]
+    fn exhaustion_is_all_or_nothing() {
+        let mut p = pager(16, 4);
+        p.grow(1, 48).unwrap(); // 3 blocks
+        assert!(p.can_grow(1, 64));
+        assert!(!p.can_grow(2, 32));
+        let err = p.grow(2, 32).unwrap_err();
+        assert_eq!(err, PagerError::OutOfBlocks { need: 2, free: 1 });
+        // The failed grow left no partial allocation behind.
+        assert_eq!(p.live_requests(), 1);
+        assert_eq!(p.blocks_in_use(), 3);
+        assert!(p.audit());
+        // A grow that fails on an *existing* allocation keeps it intact.
+        let err = p.grow(1, 48 + 32).unwrap_err();
+        assert_eq!(err, PagerError::OutOfBlocks { need: 2, free: 1 });
+        assert_eq!(p.tokens_of(1), 48);
+        // Release unblocks the waiter.
+        p.release(1).unwrap();
+        assert_eq!(p.grow(2, 32).unwrap(), 2);
+        assert!(p.release(99).is_err());
+    }
+
+    #[test]
+    fn blocks_are_reused_and_never_double_allocated() {
+        let mut p = pager(8, 6);
+        p.grow(1, 24).unwrap();
+        p.grow(2, 24).unwrap();
+        assert_eq!(p.free_blocks(), 0);
+        p.release(1).unwrap();
+        p.grow(3, 17).unwrap(); // reuses freed ids
+        assert!(p.audit(), "no duplicate block ids after reuse");
+        assert_eq!(p.occupancy(), 5.0 / 6.0);
+    }
+
+    #[test]
+    fn config_sizes_from_device_memory() {
+        let cfg = crate::models::zoo::gpt2_large();
+        let a100 = crate::gpusim::device_by_name("a100").unwrap();
+        let pc = KvPagerConfig::for_model(&cfg, a100.mem_bytes(), 16);
+        assert_eq!(pc.block_tokens, 16);
+        // Byte accounting matches kv_cache_bytes exactly: capacity in
+        // bytes stays within the post-reserve budget and fills most of it.
+        let budget = a100.mem_bytes() - cfg.weight_bytes() - 0.7e9 - 0.05 * a100.mem_bytes();
+        let used = cfg.kv_cache_bytes(1, pc.capacity_tokens());
+        assert!(used <= budget);
+        assert!(used > budget - cfg.kv_cache_bytes(1, 16), "off by < 1 block");
+        // A model far bigger than HBM still constructs (1 block floor).
+        let tiny = KvPagerConfig::for_model(&cfg, 1.0, 16);
+        assert_eq!(tiny.capacity_blocks, 1);
+        // GQA models pack more tokens per block budget than MHA ones.
+        let gqa = crate::models::zoo::qwen3_4b();
+        let mut mha = gqa.clone();
+        mha.kv_heads = mha.heads;
+        let pg = KvPagerConfig::for_model(&gqa, a100.mem_bytes(), 16);
+        let pm = KvPagerConfig::for_model(&mha, a100.mem_bytes(), 16);
+        assert!(pg.capacity_blocks > 2 * pm.capacity_blocks);
+    }
+}

@@ -1,0 +1,49 @@
+//! # serving — the continuous-batching serving simulator
+//!
+//! PM2Lat's per-kernel and per-step predictions price a single request
+//! in isolation; production latency is dominated by *how requests share
+//! the GPU* — batching policy, KV-cache memory pressure, and queueing.
+//! This layer closes that gap without a single new measurement: every
+//! serving iteration is just another [`crate::graph::ModelGraph`]
+//! (a ragged mixed prefill+decode batch from
+//! [`crate::models::TransformerConfig::mixed_batch_graph`]) that the
+//! existing prediction stack can price, so a trace-driven discrete-event
+//! replay of an inference server falls out of the engine we already
+//! have.
+//!
+//! The pieces, bottom-up:
+//!
+//! * [`trace`] — request traces: synthetic Poisson / bursty generators,
+//!   JSON replay of recorded arrivals, and rate rescaling over a fixed
+//!   request population (the tool behind QPS sweeps).
+//! * [`kv_pager`] — the paged KV-cache allocator: fixed-size token
+//!   blocks, per-request block lists, capacity derived from device HBM
+//!   through `kv_cache_bytes`, conservation-audited.
+//! * [`policy`] — pluggable scheduling: static vs. vLLM-style continuous
+//!   batching with chunked prefill, FCFS vs. shortest-prompt admission.
+//! * [`simulator`] — the event loop: admission → chunk planning → pager
+//!   growth (recompute-preemption under pressure) → one priced mixed
+//!   iteration → virtual-time advance; per-request TTFT/TPOT/E2E,
+//!   GPU-seconds, KV-occupancy timelines, throughput–latency sweeps and
+//!   max-QPS-under-SLO search.
+//!
+//! Consumed by `Coordinator::simulate_serving` (the cached service
+//! path), the `pm2lat serve-sim` CLI, and `benches/serving_capacity.rs`.
+//! Anchored to the rest of the stack by the batch-size-1 equivalence
+//! property: continuous batching at concurrency 1 reproduces
+//! `Pm2Lat::predict_generation`'s latency curve bit-for-bit.
+
+pub mod kv_pager;
+pub mod policy;
+pub mod simulator;
+pub mod trace;
+
+pub use kv_pager::{KvPager, KvPagerConfig, PagerError, DEFAULT_BLOCK_TOKENS};
+pub use policy::{Admission, BatchingMode, SchedulerConfig};
+pub use simulator::{
+    max_qps_under_slo, qps_sweep, simulate, CapacityPoint, RequestMetrics, ServingReport,
+    ServingSimConfig, SimError,
+};
+pub use trace::{
+    bursty_trace, parse_trace, poisson_trace, scale_arrivals, to_json, RequestSpec,
+};

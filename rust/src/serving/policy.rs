@@ -1,0 +1,244 @@
+//! Scheduling policies for the serving simulator: how waiting requests
+//! are admitted and how an iteration's token budget is split.
+//!
+//! Two batching modes ship:
+//!
+//! * **Static batching** — the classic serving regime: admit a batch,
+//!   run it to completion (whole-prompt prefill, then decode until every
+//!   member finishes), admit the next. Simple, and the baseline every
+//!   continuous-batching paper compares against.
+//! * **Continuous batching** — the vLLM-style regime: admission happens
+//!   every iteration, prefills are *chunked* to a per-iteration token
+//!   budget so long prompts cannot stall running decodes, and decode
+//!   slots ride along in the same mixed iteration.
+//!
+//! Admission order is its own axis: FCFS (arrival order) or
+//! shortest-prompt-first (an SJF approximation that trades fairness for
+//! mean TTFT). Policies are pure functions over small view structs, so
+//! they unit-test without an event loop.
+
+/// Admission order over the waiting queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Arrival order.
+    Fcfs,
+    /// Shortest remaining prompt first (ties by arrival). Approximates
+    /// shortest-job-first on the prefill cost, which dominates TTFT.
+    ShortestPrompt,
+}
+
+impl Admission {
+    pub fn parse(s: &str) -> Option<Admission> {
+        match s.to_ascii_lowercase().as_str() {
+            "fcfs" => Some(Admission::Fcfs),
+            "sjf" | "shortest" | "shortest-prompt" => Some(Admission::ShortestPrompt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Admission::Fcfs => "fcfs",
+            Admission::ShortestPrompt => "shortest-prompt",
+        }
+    }
+}
+
+/// Batching mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchingMode {
+    Static,
+    Continuous,
+}
+
+impl BatchingMode {
+    pub fn parse(s: &str) -> Option<BatchingMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" => Some(BatchingMode::Static),
+            "continuous" | "vllm" => Some(BatchingMode::Continuous),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchingMode::Static => "static",
+            BatchingMode::Continuous => "continuous",
+        }
+    }
+}
+
+/// A scheduler: mode + admission order + the two capacity knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    pub mode: BatchingMode,
+    pub admission: Admission,
+    /// Max sequences running concurrently (batch width).
+    pub max_batch: usize,
+    /// Per-iteration prefill token budget (chunked prefill; continuous
+    /// mode only — static batching always prefills whole prompts).
+    pub chunk_tokens: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> SchedulerConfig {
+        SchedulerConfig {
+            mode: BatchingMode::Continuous,
+            admission: Admission::Fcfs,
+            max_batch: 32,
+            chunk_tokens: 512,
+        }
+    }
+}
+
+/// What the admission policy sees of one waiting request.
+#[derive(Clone, Copy, Debug)]
+pub struct WaitingView {
+    /// Position in the waiting queue (arrival order).
+    pub queue_idx: usize,
+    pub arrival_s: f64,
+    /// Prompt tokens still to prefill (the SJF cost proxy).
+    pub remaining_prompt: usize,
+}
+
+/// What the chunk planner sees of one running request.
+#[derive(Clone, Copy, Debug)]
+pub struct RunningView {
+    /// Prompt tokens still to prefill; 0 means the request is decoding.
+    pub remaining_prefill: usize,
+}
+
+/// The planned query window of one running request for the next
+/// iteration. `q == 0` means the request sits this iteration out (its
+/// prefill got no budget).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlannedQ {
+    pub q: usize,
+}
+
+impl SchedulerConfig {
+    /// Order the waiting queue for admission: queue indices, most
+    /// admittable first. FCFS returns arrival order; shortest-prompt
+    /// sorts by remaining prefill (stable — ties keep arrival order).
+    pub fn admission_order(&self, waiting: &[WaitingView]) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..waiting.len()).collect();
+        if self.admission == Admission::ShortestPrompt {
+            idx.sort_by_key(|&i| (waiting[i].remaining_prompt, waiting[i].queue_idx));
+        }
+        idx
+    }
+
+    /// Split the iteration's prefill budget across the running set, in
+    /// running (admission) order. Decode requests always get `q = 1`;
+    /// prefilling requests consume the chunk budget front to back, so
+    /// the oldest prefill always progresses (≥ 1 token whenever any
+    /// budget exists — the no-starvation guarantee). Static batching
+    /// has no chunk budget: whole prompts prefill in one iteration.
+    pub fn plan_q(&self, running: &[RunningView]) -> Vec<PlannedQ> {
+        let mut budget = match self.mode {
+            BatchingMode::Static => usize::MAX,
+            BatchingMode::Continuous => self.chunk_tokens.max(1),
+        };
+        running
+            .iter()
+            .map(|r| {
+                if r.remaining_prefill == 0 {
+                    PlannedQ { q: 1 }
+                } else {
+                    let q = r.remaining_prefill.min(budget);
+                    budget -= q;
+                    PlannedQ { q }
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn waiting(specs: &[(f64, usize)]) -> Vec<WaitingView> {
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, &(arrival_s, remaining_prompt))| WaitingView {
+                queue_idx: i,
+                arrival_s,
+                remaining_prompt,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fcfs_keeps_arrival_order_sjf_sorts_by_prompt() {
+        let w = waiting(&[(0.0, 900), (0.1, 10), (0.2, 100), (0.3, 10)]);
+        let fcfs = SchedulerConfig::default();
+        assert_eq!(fcfs.admission_order(&w), vec![0, 1, 2, 3]);
+        let sjf = SchedulerConfig { admission: Admission::ShortestPrompt, ..fcfs };
+        // Shortest prompts first; equal prompts keep arrival order.
+        assert_eq!(sjf.admission_order(&w), vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn chunk_budget_flows_front_to_back_over_prefills_only() {
+        let cfg = SchedulerConfig { chunk_tokens: 256, ..SchedulerConfig::default() };
+        let running = [
+            RunningView { remaining_prefill: 0 },   // decoding
+            RunningView { remaining_prefill: 100 }, // fits fully
+            RunningView { remaining_prefill: 0 },   // decoding
+            RunningView { remaining_prefill: 400 }, // gets the remainder
+            RunningView { remaining_prefill: 50 },  // starved this round
+        ];
+        let plan = cfg.plan_q(&running);
+        assert_eq!(
+            plan.iter().map(|p| p.q).collect::<Vec<_>>(),
+            vec![1, 100, 1, 156, 0]
+        );
+        // Decode slots never consume prefill budget.
+        assert_eq!(plan[0].q + plan[2].q, 2);
+    }
+
+    #[test]
+    fn static_mode_prefills_whole_prompts() {
+        let cfg = SchedulerConfig {
+            mode: BatchingMode::Static,
+            chunk_tokens: 8, // ignored in static mode
+            ..SchedulerConfig::default()
+        };
+        let plan = cfg.plan_q(&[
+            RunningView { remaining_prefill: 5000 },
+            RunningView { remaining_prefill: 1 },
+        ]);
+        assert_eq!(plan[0].q, 5000);
+        assert_eq!(plan[1].q, 1);
+    }
+
+    #[test]
+    fn oldest_prefill_always_progresses() {
+        // The no-starvation guarantee: with any positive budget the first
+        // prefilling request gets at least one token.
+        let cfg = SchedulerConfig { chunk_tokens: 1, ..SchedulerConfig::default() };
+        let plan = cfg.plan_q(&[
+            RunningView { remaining_prefill: 0 },
+            RunningView { remaining_prefill: 1_000_000 },
+            RunningView { remaining_prefill: 7 },
+        ]);
+        assert_eq!(plan[1].q, 1);
+        assert_eq!(plan[2].q, 0);
+    }
+
+    #[test]
+    fn parse_names_round_trip() {
+        for a in [Admission::Fcfs, Admission::ShortestPrompt] {
+            assert_eq!(Admission::parse(a.name()), Some(a));
+        }
+        for m in [BatchingMode::Static, BatchingMode::Continuous] {
+            assert_eq!(BatchingMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(Admission::parse("sjf"), Some(Admission::ShortestPrompt));
+        assert_eq!(BatchingMode::parse("vllm"), Some(BatchingMode::Continuous));
+        assert!(Admission::parse("lifo").is_none());
+        assert!(BatchingMode::parse("x").is_none());
+    }
+}

@@ -1,0 +1,960 @@
+//! The discrete-event continuous-batching simulator: replay a request
+//! trace through an inference-server schedule, pricing every iteration
+//! through the PM2Lat prediction stack.
+//!
+//! The event loop is iteration-granular, like a real serving engine's:
+//! each turn admits waiting requests (policy-ordered, KV-gated), plans
+//! every running sequence's query window ([`SchedulerConfig::plan_q`]),
+//! grows the paged KV cache — preempting the youngest sequence with
+//! recompute when blocks run out, exactly vLLM's fallback — then lowers
+//! the ragged batch to one
+//! [`crate::models::TransformerConfig::mixed_batch_graph`] and asks the
+//! pricing callback what the iteration costs. Virtual time advances by
+//! that latency; arrivals that landed meanwhile join the next admission
+//! round.
+//!
+//! The pricing callback is the only coupling to the prediction stack:
+//! `Pm2Lat::predict_graph` gives the direct path,
+//! [`crate::coordinator::Coordinator::simulate_serving`] routes it
+//! through the cached service. Everything else — queueing, paging,
+//! chunking, preemption — is deterministic integer bookkeeping, audited
+//! by conservation checks every iteration (debug builds).
+
+use crate::graph::ModelGraph;
+use crate::models::{SeqSlot, TransformerConfig};
+use crate::util::stats;
+
+use super::kv_pager::{KvPager, KvPagerConfig};
+use super::policy::{BatchingMode, RunningView, SchedulerConfig, WaitingView};
+use super::trace::{scale_arrivals, RequestSpec};
+
+/// Simulator shape: scheduler policy, pager geometry, and the stream
+/// count handed to the per-iteration graph schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct ServingSimConfig {
+    pub scheduler: SchedulerConfig,
+    pub pager: KvPagerConfig,
+    pub streams: usize,
+}
+
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum SimError {
+    #[error("empty request trace")]
+    EmptyTrace,
+    #[error("model unsupported by the pricing backend (prediction returned None)")]
+    Unsupported,
+    #[error(
+        "request {id} needs {need} KV blocks but the pager holds {capacity} — \
+         it can never be scheduled"
+    )]
+    RequestTooLarge { id: usize, need: usize, capacity: usize },
+    #[error("request id {0} appears more than once in the trace")]
+    DuplicateRequestId(usize),
+    #[error("request {0} has an empty prompt")]
+    EmptyPrompt(usize),
+    #[error("encoder–decoder models are not servable (mixed-batch graphs are decoder-only)")]
+    EncDecUnsupported,
+    #[error("KV blocks exhausted with a single running request — pager accounting bug")]
+    KvExhausted,
+}
+
+/// Timing record of one completed request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RequestMetrics {
+    pub id: usize,
+    pub arrival_s: f64,
+    /// Absolute time the first output token shipped (prefill end).
+    pub first_token_s: f64,
+    pub finish_s: f64,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub preemptions: usize,
+}
+
+impl RequestMetrics {
+    /// Time to first token: queueing + (possibly chunked) prefill.
+    pub fn ttft_s(&self) -> f64 {
+        self.first_token_s - self.arrival_s
+    }
+
+    /// End-to-end latency.
+    pub fn e2e_s(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+
+    /// Time per output token over the decode phase (0 when nothing was
+    /// decoded).
+    pub fn tpot_s(&self) -> f64 {
+        if self.gen_len == 0 {
+            0.0
+        } else {
+            (self.finish_s - self.first_token_s) / self.gen_len as f64
+        }
+    }
+}
+
+/// Everything a serving run produced: per-request records plus the
+/// cluster-level aggregates the ISSUE asks for (percentiles, GPU
+/// seconds, KV occupancy timeline).
+#[derive(Clone, Debug)]
+pub struct ServingReport {
+    pub completed: Vec<RequestMetrics>,
+    pub iterations: usize,
+    /// Virtual time when the last request finished.
+    pub makespan_s: f64,
+    /// Σ iteration latencies — the GPU-seconds actually consumed.
+    pub gpu_busy_s: f64,
+    pub preemptions: usize,
+    pub kv_capacity_blocks: usize,
+    pub peak_kv_blocks: usize,
+    /// Blocks still allocated at the end — must be 0 (leak detector).
+    pub kv_leaked_blocks: usize,
+    /// (time, occupancy fraction) samples, decimated to a bounded count.
+    pub kv_timeline: Vec<(f64, f64)>,
+    /// Largest concurrent batch observed.
+    pub max_concurrency: usize,
+}
+
+impl ServingReport {
+    fn metric_percentile(&self, p: f64, f: impl Fn(&RequestMetrics) -> f64) -> f64 {
+        let v: Vec<f64> = self.completed.iter().map(f).collect();
+        stats::percentile(&v, p)
+    }
+
+    pub fn ttft_percentile_s(&self, p: f64) -> f64 {
+        self.metric_percentile(p, RequestMetrics::ttft_s)
+    }
+
+    pub fn tpot_percentile_s(&self, p: f64) -> f64 {
+        self.metric_percentile(p, RequestMetrics::tpot_s)
+    }
+
+    pub fn e2e_percentile_s(&self, p: f64) -> f64 {
+        self.metric_percentile(p, RequestMetrics::e2e_s)
+    }
+
+    /// Completed requests per second of virtual time.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.completed.len() as f64 / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Output tokens per second (first token + decode steps).
+    pub fn output_tokens_per_s(&self) -> f64 {
+        let toks: usize = self.completed.iter().map(|r| 1 + r.gen_len).sum();
+        if self.makespan_s > 0.0 {
+            toks as f64 / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of the makespan the GPU spent executing iterations.
+    pub fn utilization(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.gpu_busy_s / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn peak_kv_occupancy(&self) -> f64 {
+        self.peak_kv_blocks as f64 / self.kv_capacity_blocks.max(1) as f64
+    }
+
+    /// One-paragraph operator summary (the `serve-sim` output body).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests in {:.2}s ({:.2} req/s, {:.0} tok/s, util {:.0}%) | \
+             TTFT p50 {:.1}ms p99 {:.1}ms | TPOT p50 {:.0}µs p99 {:.0}µs | \
+             E2E p50 {:.1}ms p99 {:.1}ms | {} iters, batch ≤ {}, \
+             KV peak {:.0}% of {} blocks, {} preemptions",
+            self.completed.len(),
+            self.makespan_s,
+            self.throughput_rps(),
+            self.output_tokens_per_s(),
+            self.utilization() * 100.0,
+            self.ttft_percentile_s(50.0) * 1e3,
+            self.ttft_percentile_s(99.0) * 1e3,
+            self.tpot_percentile_s(50.0) * 1e6,
+            self.tpot_percentile_s(99.0) * 1e6,
+            self.e2e_percentile_s(50.0) * 1e3,
+            self.e2e_percentile_s(99.0) * 1e3,
+            self.iterations,
+            self.max_concurrency,
+            self.peak_kv_occupancy() * 100.0,
+            self.kv_capacity_blocks,
+            self.preemptions,
+        )
+    }
+}
+
+/// Live state of one request inside the simulator.
+#[derive(Clone, Debug)]
+struct ReqState {
+    spec: RequestSpec,
+    /// KV tokens materialized in the pager.
+    ctx_ready: usize,
+    /// Decode steps completed.
+    decoded: usize,
+    first_token_s: Option<f64>,
+    preemptions: usize,
+}
+
+impl ReqState {
+    fn new(spec: RequestSpec) -> ReqState {
+        ReqState { spec, ctx_ready: 0, decoded: 0, first_token_s: None, preemptions: 0 }
+    }
+
+    /// Context the KV cache must hold before the next decode step:
+    /// the prompt plus every token decoded so far (recompute after a
+    /// preemption re-prefills both).
+    fn ctx_target(&self) -> usize {
+        self.spec.prompt_len + self.decoded
+    }
+
+    fn remaining_prefill(&self) -> usize {
+        self.ctx_target() - self.ctx_ready
+    }
+
+    fn done(&self) -> bool {
+        self.decoded == self.spec.gen_len && self.remaining_prefill() == 0
+    }
+
+    fn work_tokens(&self) -> usize {
+        self.spec.prompt_len + self.spec.gen_len
+    }
+}
+
+/// Replay `trace` against `cfg`'s serving schedule, pricing every
+/// iteration with `price` (typically `Pm2Lat::predict_graph` or the
+/// coordinator's cached graph path). Deterministic for deterministic
+/// pricing. Decoder-only models only (the `mixed_batch_graph` contract).
+pub fn simulate<F>(
+    cfg: &TransformerConfig,
+    trace: &[RequestSpec],
+    sim: &ServingSimConfig,
+    price: &mut F,
+) -> Result<ServingReport, SimError>
+where
+    F: FnMut(&ModelGraph) -> Option<f64>,
+{
+    if trace.is_empty() {
+        return Err(SimError::EmptyTrace);
+    }
+    if cfg.enc_layers > 0 {
+        return Err(SimError::EncDecUnsupported);
+    }
+    let sched = SchedulerConfig {
+        max_batch: sim.scheduler.max_batch.max(1),
+        chunk_tokens: sim.scheduler.chunk_tokens.max(1),
+        ..sim.scheduler
+    };
+    let mut pager = KvPager::new(sim.pager);
+    let capacity = pager.capacity_blocks();
+    // No request may ever need more blocks than exist, and ids must be
+    // unique — the pager keys allocations by id, so a collision would
+    // merge two requests' block lists.
+    let mut seen_ids = std::collections::HashSet::with_capacity(trace.len());
+    for r in trace {
+        if !seen_ids.insert(r.id) {
+            return Err(SimError::DuplicateRequestId(r.id));
+        }
+        if r.prompt_len == 0 {
+            // A promptless request would masquerade as a decode slot and
+            // never produce a first token (GenerationSpec's contract).
+            return Err(SimError::EmptyPrompt(r.id));
+        }
+        let need = pager.config().blocks_for(r.total_len());
+        if need > capacity {
+            return Err(SimError::RequestTooLarge { id: r.id, need, capacity });
+        }
+    }
+    let total_work: usize = trace.iter().map(|r| r.prompt_len + r.gen_len).sum();
+
+    let mut arrivals: std::collections::VecDeque<RequestSpec> = {
+        let mut v = trace.to_vec();
+        v.sort_by(|a, b| {
+            a.arrival_s.partial_cmp(&b.arrival_s).unwrap().then(a.id.cmp(&b.id))
+        });
+        v.into_iter().collect()
+    };
+    let mut waiting: std::collections::VecDeque<ReqState> = Default::default();
+    let mut running: Vec<ReqState> = Vec::new();
+    let mut completed: Vec<RequestMetrics> = Vec::new();
+
+    let mut now = 0.0f64;
+    let mut gpu_busy = 0.0f64;
+    let mut iterations = 0usize;
+    let mut preemptions = 0usize;
+    let mut max_concurrency = 0usize;
+    let mut kv_timeline: Vec<(f64, f64)> = Vec::new();
+    let mut timeline_stride = 1usize;
+
+    while completed.len() < trace.len() {
+        // Drain arrivals whose time has come.
+        while arrivals.front().map(|r| r.arrival_s <= now).unwrap_or(false) {
+            waiting.push_back(ReqState::new(arrivals.pop_front().unwrap()));
+        }
+        // Idle: jump to the next arrival.
+        if running.is_empty() && waiting.is_empty() {
+            let next = arrivals.front().expect("work remains").arrival_s;
+            now = now.max(next);
+            continue;
+        }
+
+        // --- admission ---
+        let admit_allowed = match sched.mode {
+            BatchingMode::Continuous => running.len() < sched.max_batch,
+            // Static batching admits only between batches.
+            BatchingMode::Static => running.is_empty(),
+        };
+        if admit_allowed && !waiting.is_empty() {
+            let views: Vec<WaitingView> = waiting
+                .iter()
+                .enumerate()
+                .map(|(queue_idx, r)| WaitingView {
+                    queue_idx,
+                    arrival_s: r.spec.arrival_s,
+                    remaining_prompt: r.remaining_prefill(),
+                })
+                .collect();
+            let order = sched.admission_order(&views);
+            let mut picked: Vec<usize> = Vec::new();
+            // Static mode reserves full-lifetime blocks so a batch never
+            // preempts; continuous admits against the first chunk and
+            // relies on preemption under pressure.
+            let mut reserve = pager.blocks_in_use();
+            for &qi in &order {
+                if running.len() + picked.len() >= sched.max_batch {
+                    break;
+                }
+                let r = &waiting[qi];
+                let need = match sched.mode {
+                    BatchingMode::Static => {
+                        pager.config().blocks_for(r.spec.total_len())
+                    }
+                    BatchingMode::Continuous => pager
+                        .config()
+                        .blocks_for(r.remaining_prefill().min(sched.chunk_tokens)),
+                };
+                if reserve + need > capacity {
+                    if sched.mode == BatchingMode::Continuous {
+                        break; // FCFS head-of-line: wait for blocks
+                    }
+                    continue; // static: try a smaller member
+                }
+                reserve += need;
+                picked.push(qi);
+            }
+            // Remove in descending queue order (so indices stay valid),
+            // then append in *admission* order — plan_q hands the chunk
+            // budget front to back, so the policy's priority (e.g.
+            // shortest-prompt) must survive into the running order.
+            let mut removed: Vec<(usize, ReqState)> = {
+                let mut desc = picked.clone();
+                desc.sort_unstable_by(|a, b| b.cmp(a));
+                desc.into_iter()
+                    .map(|qi| (qi, waiting.remove(qi).expect("picked from the queue")))
+                    .collect()
+            };
+            for &qi in &picked {
+                let pos = removed
+                    .iter()
+                    .position(|(q, _)| *q == qi)
+                    .expect("every picked index was removed");
+                running.push(removed.swap_remove(pos).1);
+            }
+        }
+        max_concurrency = max_concurrency.max(running.len());
+        if running.is_empty() {
+            // Continuous admission hit the KV gate with nothing running:
+            // impossible (an empty pager admits any legal request).
+            debug_assert!(false, "admission stall with free pager");
+            return Err(SimError::KvExhausted);
+        }
+
+        // --- plan query windows + grow the pager (preempt on pressure) ---
+        let plan = loop {
+            let views: Vec<RunningView> = running
+                .iter()
+                .map(|r| RunningView { remaining_prefill: r.remaining_prefill() })
+                .collect();
+            let plan = sched.plan_q(&views);
+            let mut need = 0usize;
+            for (r, p) in running.iter().zip(&plan) {
+                if p.q == 0 {
+                    continue;
+                }
+                let new_ctx = if r.remaining_prefill() > 0 {
+                    r.ctx_ready + p.q
+                } else {
+                    r.ctx_ready + 1 // decode appends this step's token
+                };
+                let held = pager.config().blocks_for(pager.tokens_of(r.spec.id));
+                need += pager.config().blocks_for(new_ctx).saturating_sub(held);
+            }
+            if need <= pager.free_blocks() {
+                break plan;
+            }
+            // vLLM recompute-preemption: evict the youngest running
+            // sequence, drop its KV, and requeue it at the head of the
+            // waiting queue to re-prefill (prompt + already-emitted
+            // tokens) when blocks free up.
+            if running.len() <= 1 {
+                return Err(SimError::KvExhausted);
+            }
+            let mut victim = running.pop().expect("len > 1");
+            if pager.tokens_of(victim.spec.id) > 0 {
+                pager.release(victim.spec.id).expect("victim held blocks");
+            }
+            victim.ctx_ready = 0;
+            victim.preemptions += 1;
+            preemptions += 1;
+            waiting.push_front(victim);
+        };
+
+        // --- commit growth + build the ragged iteration ---
+        let mut slots: Vec<SeqSlot> = Vec::new();
+        let mut active: Vec<usize> = Vec::new(); // running idx per slot
+        for (i, (r, p)) in running.iter().zip(&plan).enumerate() {
+            if p.q == 0 {
+                continue;
+            }
+            let slot = if r.remaining_prefill() > 0 {
+                SeqSlot::prefill(r.ctx_ready, p.q)
+            } else {
+                SeqSlot::decode(r.ctx_ready)
+            };
+            pager
+                .grow(r.spec.id, slot.kv_len)
+                .expect("iteration demand was checked against free blocks");
+            slots.push(slot);
+            active.push(i);
+        }
+        debug_assert!(!slots.is_empty(), "a planned iteration cannot be empty");
+
+        // --- price the iteration and advance virtual time ---
+        let graph = cfg.mixed_batch_graph(&slots);
+        let dt = price(&graph).ok_or(SimError::Unsupported)?;
+        now += dt;
+        gpu_busy += dt;
+        iterations += 1;
+        if iterations % timeline_stride == 0 {
+            kv_timeline.push((now, pager.occupancy()));
+            if kv_timeline.len() >= 1024 {
+                let mut keep = 0usize;
+                kv_timeline.retain(|_| {
+                    keep += 1;
+                    keep % 2 == 0
+                });
+                timeline_stride *= 2;
+            }
+        }
+
+        // --- apply effects: token progress, TTFT, completions ---
+        for (&i, slot) in active.iter().zip(&slots) {
+            let r = &mut running[i];
+            // State is pre-iteration here: zero remaining prefill means
+            // the slot was a decode step.
+            if r.remaining_prefill() == 0 {
+                // Decode step: the appended token is now part of context.
+                r.decoded += 1;
+                r.ctx_ready += 1;
+            } else {
+                r.ctx_ready += slot.q_len;
+                if r.remaining_prefill() == 0 && r.decoded == 0 && r.first_token_s.is_none()
+                {
+                    // Prefill complete: the LM head samples token one.
+                    r.first_token_s = Some(now);
+                }
+            }
+        }
+        for i in (0..running.len()).rev() {
+            if !running[i].done() {
+                continue;
+            }
+            let r = running.remove(i);
+            pager.release(r.spec.id).expect("completed request held blocks");
+            completed.push(RequestMetrics {
+                id: r.spec.id,
+                arrival_s: r.spec.arrival_s,
+                first_token_s: r.first_token_s.expect("done implies first token"),
+                finish_s: now,
+                prompt_len: r.spec.prompt_len,
+                gen_len: r.spec.gen_len,
+                preemptions: r.preemptions,
+            });
+        }
+
+        // --- conservation audit (ISSUE invariant a): every event keeps
+        // tokens admitted == tokens completed + tokens in flight ---
+        #[cfg(debug_assertions)]
+        {
+            let inflight: usize = running
+                .iter()
+                .chain(waiting.iter())
+                .map(ReqState::work_tokens)
+                .sum();
+            let done: usize = completed
+                .iter()
+                .map(|m| m.prompt_len + m.gen_len)
+                .sum();
+            let future: usize =
+                arrivals.iter().map(|r| r.prompt_len + r.gen_len).sum();
+            assert_eq!(done + inflight + future, total_work, "token conservation");
+            assert_eq!(
+                completed.len() + running.len() + waiting.len() + arrivals.len(),
+                trace.len(),
+                "request conservation"
+            );
+            assert!(pager.audit(), "pager block conservation");
+        }
+    }
+
+    completed.sort_by_key(|m| m.id);
+    Ok(ServingReport {
+        iterations,
+        makespan_s: now,
+        gpu_busy_s: gpu_busy,
+        preemptions,
+        kv_capacity_blocks: capacity,
+        peak_kv_blocks: pager.peak_blocks(),
+        kv_leaked_blocks: pager.blocks_in_use(),
+        kv_timeline,
+        max_concurrency,
+        completed,
+    })
+}
+
+/// One point of a throughput–latency sweep: the aggregates that matter
+/// for capacity planning, without retaining the whole report.
+#[derive(Clone, Copy, Debug)]
+pub struct CapacityPoint {
+    pub qps: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub tpot_p50_s: f64,
+    pub e2e_p99_s: f64,
+    pub throughput_rps: f64,
+    pub utilization: f64,
+    pub peak_kv_occupancy: f64,
+    pub preemptions: usize,
+}
+
+impl CapacityPoint {
+    fn from_report(qps: f64, r: &ServingReport) -> CapacityPoint {
+        CapacityPoint {
+            qps,
+            ttft_p50_s: r.ttft_percentile_s(50.0),
+            ttft_p99_s: r.ttft_percentile_s(99.0),
+            tpot_p50_s: r.tpot_percentile_s(50.0),
+            e2e_p99_s: r.e2e_percentile_s(99.0),
+            throughput_rps: r.throughput_rps(),
+            utilization: r.utilization(),
+            peak_kv_occupancy: r.peak_kv_occupancy(),
+            preemptions: r.preemptions,
+        }
+    }
+}
+
+/// Sweep arrival rates over one *unit-rate* base trace (arrivals are
+/// rescaled per point, request shapes held fixed — load is the only
+/// variable). Returns one [`CapacityPoint`] per rate, in input order.
+pub fn qps_sweep<F>(
+    cfg: &TransformerConfig,
+    unit_trace: &[RequestSpec],
+    sim: &ServingSimConfig,
+    price: &mut F,
+    rates: &[f64],
+) -> Result<Vec<CapacityPoint>, SimError>
+where
+    F: FnMut(&ModelGraph) -> Option<f64>,
+{
+    let mut out = Vec::with_capacity(rates.len());
+    for &qps in rates {
+        let trace = scale_arrivals(unit_trace, qps);
+        let report = simulate(cfg, &trace, sim, price)?;
+        out.push(CapacityPoint::from_report(qps, &report));
+    }
+    Ok(out)
+}
+
+/// Find the maximum sustainable arrival rate whose p99 TTFT stays within
+/// `slo_ttft_p99_s`, by doubling from `lo_qps` until the SLO breaks and
+/// then log-bisecting for `steps` rounds (p99 TTFT is monotone in load —
+/// the ISSUE's property (d) — so bisection is sound). Returns the best
+/// passing rate (0.0 if even `lo_qps` violates) and every evaluated
+/// point, in evaluation order, for the Pareto print-out.
+pub fn max_qps_under_slo<F>(
+    cfg: &TransformerConfig,
+    unit_trace: &[RequestSpec],
+    sim: &ServingSimConfig,
+    price: &mut F,
+    slo_ttft_p99_s: f64,
+    lo_qps: f64,
+    steps: usize,
+) -> Result<(f64, Vec<CapacityPoint>), SimError>
+where
+    F: FnMut(&ModelGraph) -> Option<f64>,
+{
+    assert!(lo_qps > 0.0 && slo_ttft_p99_s > 0.0);
+    let mut eval = |qps: f64, out: &mut Vec<CapacityPoint>| -> Result<bool, SimError> {
+        let trace = scale_arrivals(unit_trace, qps);
+        let report = simulate(cfg, &trace, sim, price)?;
+        let point = CapacityPoint::from_report(qps, &report);
+        out.push(point);
+        Ok(point.ttft_p99_s <= slo_ttft_p99_s)
+    };
+    let mut points = Vec::new();
+    if !eval(lo_qps, &mut points)? {
+        return Ok((0.0, points));
+    }
+    // Double until the SLO breaks (bounded — no workload survives 2^20×).
+    let mut lo = lo_qps;
+    let mut hi = lo_qps;
+    let mut broke = false;
+    for _ in 0..20 {
+        hi *= 2.0;
+        if !eval(hi, &mut points)? {
+            broke = true;
+            break;
+        }
+        lo = hi;
+    }
+    if !broke {
+        return Ok((lo, points));
+    }
+    for _ in 0..steps {
+        let mid = (lo * hi).sqrt();
+        if eval(mid, &mut points)? {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Ok((lo, points))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::Gpu;
+    use crate::models::zoo;
+    use crate::ops::DType;
+    use crate::pm2lat::Pm2Lat;
+    use crate::profiler::ProfileSpec;
+    use crate::serving::kv_pager::KvPagerConfig;
+    use crate::serving::policy::{Admission, BatchingMode};
+    use crate::serving::trace::poisson_trace;
+
+    fn quick_pl(dev: &str, dtype: DType) -> (Gpu, Pm2Lat) {
+        let mut gpu = Gpu::by_name(dev).unwrap();
+        let pl = Pm2Lat::build_dtypes(&mut gpu, &ProfileSpec::quick(), &[dtype], false);
+        gpu.reset();
+        (gpu, pl)
+    }
+
+    fn ample_sim(cfg: &crate::models::TransformerConfig) -> ServingSimConfig {
+        ServingSimConfig {
+            scheduler: SchedulerConfig::default(),
+            pager: KvPagerConfig::for_model(cfg, 80e9, 16),
+            streams: 1,
+        }
+    }
+
+    #[test]
+    fn property_batch_size_1_continuous_batching_reproduces_predict_generation() {
+        // ISSUE acceptance: at concurrency 1 with an un-chunked prompt,
+        // the simulator's iteration latencies ARE predict_generation's
+        // latency curve, bit for bit.
+        let (gpu, pl) = quick_pl("a100", DType::F32);
+        let cfg = zoo::gpt2_large();
+        let (prompt, gen) = (96usize, 5usize);
+        let spec = crate::models::GenerationSpec::new(prompt, gen);
+        let direct = pl.predict_generation(&gpu, &cfg, 1, &spec, 1).unwrap();
+
+        let trace = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: prompt, gen_len: gen }];
+        let mut sim = ample_sim(&cfg);
+        sim.scheduler.chunk_tokens = prompt; // whole prompt in one iteration
+        let mut curve: Vec<f64> = Vec::new();
+        let mut price = |g: &ModelGraph| {
+            let v = pl.predict_graph(&gpu, g, 1);
+            if let Some(v) = v {
+                curve.push(v);
+            }
+            v
+        };
+        let report = simulate(&cfg, &trace, &sim, &mut price).unwrap();
+        assert_eq!(curve.len(), 1 + gen, "one prefill + gen decode iterations");
+        assert_eq!(curve[0], direct.prefill_s, "prefill bit-for-bit");
+        assert_eq!(&curve[1..], &direct.step_s[..], "decode curve bit-for-bit");
+        let m = &report.completed[0];
+        assert_eq!(m.ttft_s(), direct.prefill_s, "TTFT is the prefill latency");
+        let rel = (m.e2e_s() - direct.total_s()).abs() / direct.total_s();
+        assert!(rel < 1e-12, "E2E matches the generation total ({rel})");
+        assert_eq!(report.iterations, 1 + gen);
+        assert_eq!(report.preemptions, 0);
+        assert_eq!(report.kv_leaked_blocks, 0);
+    }
+
+    #[test]
+    fn property_kv_pager_never_exceeds_capacity_and_frees_everything() {
+        // ISSUE invariant (b): a starved pager preempts instead of
+        // overflowing, and every block returns by the end. (The per-event
+        // conservation checks of invariant (a) run as debug asserts on
+        // this same loop.)
+        let (gpu, pl) = quick_pl("a100", DType::F32);
+        let cfg = zoo::gpt2_large();
+        let trace = poisson_trace(24, 50.0, 96, 12, 11);
+        let blocks_for_biggest = trace
+            .iter()
+            .map(|r| r.total_len().div_ceil(16))
+            .max()
+            .unwrap();
+        // Room for ~2.5 of the largest requests: constant KV pressure.
+        let sim = ServingSimConfig {
+            scheduler: SchedulerConfig { max_batch: 8, ..SchedulerConfig::default() },
+            pager: KvPagerConfig {
+                block_tokens: 16,
+                capacity_blocks: blocks_for_biggest * 5 / 2,
+            },
+            streams: 1,
+        };
+        let mut price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
+        let report = simulate(&cfg, &trace, &sim, &mut price).unwrap();
+        assert_eq!(report.completed.len(), trace.len(), "all requests finish");
+        assert!(report.preemptions > 0, "pressure must force preemptions");
+        assert!(report.peak_kv_blocks <= report.kv_capacity_blocks);
+        assert_eq!(report.kv_leaked_blocks, 0, "no leaked blocks");
+        assert!(report.completed.iter().all(|m| m.e2e_s() > 0.0));
+        // A request the pager can never hold is rejected up front.
+        let giant = vec![RequestSpec {
+            id: 0,
+            arrival_s: 0.0,
+            prompt_len: 16 * sim.pager.capacity_blocks + 1,
+            gen_len: 1,
+        }];
+        assert!(matches!(
+            simulate(&cfg, &giant, &sim, &mut price),
+            Err(SimError::RequestTooLarge { .. })
+        ));
+    }
+
+    #[test]
+    fn property_p99_ttft_is_monotone_in_arrival_rate() {
+        // ISSUE invariant (d): same request population, scaled arrival
+        // intensity — p99 TTFT can only degrade as load rises.
+        let (gpu, pl) = quick_pl("a100", DType::F32);
+        let cfg = zoo::gpt2_large();
+        let unit = poisson_trace(60, 1.0, 64, 6, 5);
+        let sim = ServingSimConfig {
+            scheduler: SchedulerConfig { max_batch: 8, chunk_tokens: 128, ..Default::default() },
+            pager: KvPagerConfig::for_model(&cfg, 80e9, 16),
+            streams: 1,
+        };
+        let mut price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
+        // Anchor rates to the solo end-to-end time so the sweep spans
+        // light load → saturation on every device profile.
+        let solo = simulate(&cfg, &unit[..1], &sim, &mut price).unwrap();
+        let e2e = solo.completed[0].e2e_s();
+        let rates: Vec<f64> = [0.2, 1.0, 5.0, 25.0].iter().map(|k| k / e2e).collect();
+        let points = qps_sweep(&cfg, &unit, &sim, &mut price, &rates).unwrap();
+        for w in points.windows(2) {
+            assert!(
+                w[1].ttft_p99_s >= w[0].ttft_p99_s * (1.0 - 1e-9),
+                "p99 TTFT fell as load rose: {} → {} (qps {} → {})",
+                w[0].ttft_p99_s,
+                w[1].ttft_p99_s,
+                w[0].qps,
+                w[1].qps
+            );
+        }
+        // And the extremes are far apart: saturation queues for real.
+        assert!(points.last().unwrap().ttft_p99_s > points[0].ttft_p99_s * 3.0);
+    }
+
+    #[test]
+    fn continuous_batching_beats_static_on_ttft_under_load() {
+        let (gpu, pl) = quick_pl("a100", DType::F32);
+        let cfg = zoo::gpt2_large();
+        // A burst of 12 mixed-size requests at t=0: static batching makes
+        // later batches wait for full drains; continuous backfills.
+        let trace: Vec<RequestSpec> = (0..12)
+            .map(|id| RequestSpec {
+                id,
+                arrival_s: 0.0,
+                prompt_len: 64 + 32 * (id % 3),
+                gen_len: 8 + 4 * (id % 4),
+            })
+            .collect();
+        let pager = KvPagerConfig::for_model(&cfg, 80e9, 16);
+        let run = |mode: BatchingMode| {
+            let sim = ServingSimConfig {
+                scheduler: SchedulerConfig {
+                    mode,
+                    max_batch: 4,
+                    chunk_tokens: 256,
+                    admission: Admission::Fcfs,
+                },
+                pager,
+                streams: 1,
+            };
+            let mut price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
+            simulate(&cfg, &trace, &sim, &mut price).unwrap()
+        };
+        let stat = run(BatchingMode::Static);
+        let cont = run(BatchingMode::Continuous);
+        assert_eq!(stat.completed.len(), 12);
+        assert_eq!(cont.completed.len(), 12);
+        let mean = |r: &ServingReport| {
+            r.completed.iter().map(RequestMetrics::ttft_s).sum::<f64>() / 12.0
+        };
+        assert!(
+            mean(&cont) < mean(&stat),
+            "continuous {} vs static {}",
+            mean(&cont),
+            mean(&stat)
+        );
+        // Static never preempts (admission reserves full lifetimes).
+        assert_eq!(stat.preemptions, 0);
+        // Both keep the GPU accountable: busy time within the makespan.
+        for r in [&stat, &cont] {
+            assert!(r.gpu_busy_s <= r.makespan_s * (1.0 + 1e-12));
+            assert!(r.utilization() > 0.0 && r.utilization() <= 1.0);
+            assert!(!r.kv_timeline.is_empty());
+            assert!(r.kv_timeline.iter().all(|&(_, occ)| (0.0..=1.0).contains(&occ)));
+        }
+    }
+
+    #[test]
+    fn shortest_prompt_admission_improves_mean_ttft_on_mixed_queues() {
+        let (gpu, pl) = quick_pl("a100", DType::F32);
+        let cfg = zoo::gpt2_large();
+        // One giant prompt ahead of many small ones, all queued at once,
+        // concurrency 1: FCFS makes everyone eat the giant's prefill.
+        let mut trace = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 1024, gen_len: 2 }];
+        trace.extend((1..7).map(|id| RequestSpec {
+            id,
+            arrival_s: 0.0,
+            prompt_len: 32,
+            gen_len: 2,
+        }));
+        let pager = KvPagerConfig::for_model(&cfg, 80e9, 16);
+        let run = |admission: Admission| {
+            let sim = ServingSimConfig {
+                scheduler: SchedulerConfig {
+                    admission,
+                    max_batch: 1,
+                    ..SchedulerConfig::default()
+                },
+                pager,
+                streams: 1,
+            };
+            let mut price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
+            simulate(&cfg, &trace, &sim, &mut price).unwrap()
+        };
+        let fcfs = run(Admission::Fcfs);
+        let sjf = run(Admission::ShortestPrompt);
+        let mean_ttft = |r: &ServingReport| {
+            r.completed.iter().map(RequestMetrics::ttft_s).sum::<f64>()
+                / r.completed.len() as f64
+        };
+        assert!(mean_ttft(&sjf) < mean_ttft(&fcfs));
+        // SJF priority must survive *within* one admission cohort too:
+        // with both requests admitted in the same iteration, the chunk
+        // budget flows to the short prompt first, so it finishes prefill
+        // well before the giant does.
+        let cohort = ServingSimConfig {
+            scheduler: SchedulerConfig {
+                admission: Admission::ShortestPrompt,
+                max_batch: 2,
+                chunk_tokens: 64,
+                ..SchedulerConfig::default()
+            },
+            pager,
+            streams: 1,
+        };
+        let pair = vec![
+            RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 1024, gen_len: 2 },
+            RequestSpec { id: 1, arrival_s: 0.0, prompt_len: 32, gen_len: 2 },
+        ];
+        let mut price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
+        let r = simulate(&cfg, &pair, &cohort, &mut price).unwrap();
+        let ttft = |id: usize| {
+            r.completed.iter().find(|m| m.id == id).unwrap().ttft_s()
+        };
+        assert!(
+            ttft(1) < ttft(0) / 2.0,
+            "short prompt must not starve behind the cohort's giant: {} vs {}",
+            ttft(1),
+            ttft(0)
+        );
+        // Work conservation: both serve the same tokens, so GPU seconds
+        // agree closely regardless of order.
+        let rel = (fcfs.gpu_busy_s - sjf.gpu_busy_s).abs() / fcfs.gpu_busy_s;
+        assert!(rel < 0.05, "ordering must not create or destroy work ({rel})");
+    }
+
+    #[test]
+    fn unsupported_model_and_empty_trace_error() {
+        let (gpu, pl) = quick_pl("t4", DType::F32); // no BF16 tables on T4
+        let cfg = zoo::qwen3_0_6b(); // BF16 model
+        let sim = ample_sim(&cfg);
+        let trace = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 16, gen_len: 2 }];
+        let mut price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
+        assert_eq!(simulate(&cfg, &trace, &sim, &mut price), Err(SimError::Unsupported));
+        assert_eq!(simulate(&cfg, &[], &sim, &mut price), Err(SimError::EmptyTrace));
+        // Colliding ids would merge pager allocations — rejected up front.
+        let dup = vec![
+            RequestSpec { id: 3, arrival_s: 0.0, prompt_len: 16, gen_len: 2 },
+            RequestSpec { id: 3, arrival_s: 0.1, prompt_len: 16, gen_len: 2 },
+        ];
+        assert_eq!(
+            simulate(&cfg, &dup, &sim, &mut price),
+            Err(SimError::DuplicateRequestId(3))
+        );
+        // Promptless requests can never emit a first token — rejected.
+        let bare = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 0, gen_len: 1 }];
+        assert_eq!(simulate(&cfg, &bare, &sim, &mut price), Err(SimError::EmptyPrompt(0)));
+        // Enc–dec models error instead of panicking in the graph builder.
+        let t5 = crate::models::zoo::flan_t5_base();
+        let one = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 16, gen_len: 1 }];
+        assert_eq!(
+            simulate(&t5, &one, &sim, &mut price),
+            Err(SimError::EncDecUnsupported)
+        );
+    }
+
+    #[test]
+    fn max_qps_search_finds_the_slo_knee() {
+        let (gpu, pl) = quick_pl("a100", DType::F32);
+        let cfg = zoo::gpt2_large();
+        let unit = poisson_trace(40, 1.0, 64, 4, 13);
+        let sim = ServingSimConfig {
+            scheduler: SchedulerConfig { max_batch: 8, chunk_tokens: 128, ..Default::default() },
+            pager: KvPagerConfig::for_model(&cfg, 80e9, 16),
+            streams: 1,
+        };
+        let mut price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
+        // SLO: 4× the solo TTFT — loose enough to pass lightly-loaded,
+        // tight enough that saturation violates it.
+        let solo = simulate(&cfg, &unit[..1], &sim, &mut price).unwrap();
+        let slo = solo.completed[0].ttft_s() * 4.0;
+        let lo = 0.05 / solo.completed[0].e2e_s();
+        let (max_qps, points) =
+            max_qps_under_slo(&cfg, &unit, &sim, &mut price, slo, lo, 6).unwrap();
+        assert!(max_qps > 0.0, "light load must satisfy the SLO");
+        assert!(points.len() >= 3);
+        // The found rate passes; some evaluated higher rate fails.
+        let at = |q: f64| points.iter().find(|p| p.qps == q).unwrap();
+        assert!(at(max_qps).ttft_p99_s <= slo);
+        assert!(
+            points.iter().any(|p| p.qps > max_qps && p.ttft_p99_s > slo),
+            "the search must have witnessed a violation above the knee"
+        );
+    }
+}

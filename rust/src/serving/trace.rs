@@ -1,0 +1,230 @@
+//! Request traces for the serving simulator: the workload description a
+//! production inference server sees — who arrives when, with how long a
+//! prompt, wanting how many tokens.
+//!
+//! Traces come from three places:
+//!
+//! * [`poisson_trace`] — memoryless arrivals at a target rate, the
+//!   standard open-loop serving benchmark;
+//! * [`bursty_trace`] — arrivals clumped into bursts (a chat app's
+//!   fan-out, a retry storm), the tail-latency stressor;
+//! * [`parse_trace`] — a JSON file of recorded arrivals, so real
+//!   production traces replay through the simulator unchanged.
+//!
+//! [`scale_arrivals`] rescales one trace's arrival times to a different
+//! rate *without changing the request shapes* — the tool behind QPS
+//! sweeps and the monotone-load property test: comparing load points on
+//! the same request population isolates queueing from sampling noise.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+/// One serving request: arrive at `arrival_s`, prefill `prompt_len`
+/// tokens, then emit one token at prefill end plus `gen_len` decode
+/// steps (the [`crate::models::GenerationSpec`] convention).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RequestSpec {
+    pub id: usize,
+    pub arrival_s: f64,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+}
+
+impl RequestSpec {
+    /// Total context length once fully decoded.
+    pub fn total_len(&self) -> usize {
+        self.prompt_len + self.gen_len
+    }
+}
+
+/// Draw a (prompt, gen) shape around the requested means: log-uniform
+/// over [mean/4, mean·4], the heavy-tailed mix real serving logs show.
+fn sample_lens(rng: &mut Rng, mean_prompt: usize, mean_gen: usize) -> (usize, usize) {
+    let draw = |rng: &mut Rng, mean: usize| {
+        let mean = mean.max(1) as u64;
+        rng.log_uniform_int((mean / 4).max(1), mean * 4) as usize
+    };
+    (draw(rng, mean_prompt), draw(rng, mean_gen))
+}
+
+/// Poisson arrivals at `qps` requests/second: exponential inter-arrival
+/// gaps, log-uniform prompt/gen lengths around the means. Deterministic
+/// for a fixed seed.
+pub fn poisson_trace(
+    n: usize,
+    qps: f64,
+    mean_prompt: usize,
+    mean_gen: usize,
+    seed: u64,
+) -> Vec<RequestSpec> {
+    assert!(qps > 0.0, "arrival rate must be positive");
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|id| {
+            // Exponential gap; 1 - u keeps ln's argument in (0, 1].
+            t += -(1.0 - rng.uniform()).ln() / qps;
+            let (prompt_len, gen_len) = sample_lens(&mut rng, mean_prompt, mean_gen);
+            RequestSpec { id, arrival_s: t, prompt_len, gen_len }
+        })
+        .collect()
+}
+
+/// Bursty arrivals: bursts of `burst` simultaneous requests, with the
+/// bursts themselves Poisson so the *average* rate is still `qps`. The
+/// tail-latency stressor — p99 TTFT degrades long before mean load does.
+pub fn bursty_trace(
+    n: usize,
+    qps: f64,
+    mean_prompt: usize,
+    mean_gen: usize,
+    burst: usize,
+    seed: u64,
+) -> Vec<RequestSpec> {
+    assert!(qps > 0.0, "arrival rate must be positive");
+    let burst = burst.max(1);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        t += -(1.0 - rng.uniform()).ln() * burst as f64 / qps;
+        for _ in 0..burst.min(n - out.len()) {
+            let (prompt_len, gen_len) = sample_lens(&mut rng, mean_prompt, mean_gen);
+            out.push(RequestSpec { id: out.len(), arrival_s: t, prompt_len, gen_len });
+        }
+    }
+    out
+}
+
+/// Rescale a trace's arrival times to `factor`× the original rate
+/// (arrival times divide by `factor`), keeping every request's shape.
+/// A unit-rate base trace plus this is how QPS sweeps hold the workload
+/// population fixed across load points.
+pub fn scale_arrivals(trace: &[RequestSpec], factor: f64) -> Vec<RequestSpec> {
+    assert!(factor > 0.0, "rate factor must be positive");
+    trace
+        .iter()
+        .map(|r| RequestSpec { arrival_s: r.arrival_s / factor, ..*r })
+        .collect()
+}
+
+/// Parse a JSON trace: an array of objects with `arrival_s`,
+/// `prompt_len` and `gen_len` (ids are assigned by position; arrivals
+/// must be non-negative, prompts non-empty). The format [`to_json`]
+/// writes round-trips through here.
+pub fn parse_trace(text: &str) -> Result<Vec<RequestSpec>> {
+    let v = Json::parse(text).map_err(|e| anyhow!("trace: {e}"))?;
+    let arr = v.as_arr().ok_or_else(|| anyhow!("trace: expected a JSON array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (id, item) in arr.iter().enumerate() {
+        let field = |name: &str| {
+            item.get(name)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("trace[{id}]: missing numeric `{name}`"))
+        };
+        let arrival_s = field("arrival_s")?;
+        let prompt_len = field("prompt_len")? as usize;
+        let gen_len = field("gen_len")? as usize;
+        if arrival_s < 0.0 {
+            return Err(anyhow!("trace[{id}]: negative arrival time"));
+        }
+        if prompt_len == 0 {
+            return Err(anyhow!("trace[{id}]: empty prompt"));
+        }
+        out.push(RequestSpec { id, arrival_s, prompt_len, gen_len });
+    }
+    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    // Re-id in arrival order so downstream bookkeeping is positional.
+    for (i, r) in out.iter_mut().enumerate() {
+        r.id = i;
+    }
+    Ok(out)
+}
+
+/// Serialize a trace in the [`parse_trace`] format.
+pub fn to_json(trace: &[RequestSpec]) -> Json {
+    Json::Arr(
+        trace
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("arrival_s", Json::Num(r.arrival_s)),
+                    ("prompt_len", Json::from(r.prompt_len)),
+                    ("gen_len", Json::from(r.gen_len)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_deterministic_with_target_rate() {
+        let a = poisson_trace(400, 8.0, 256, 32, 7);
+        let b = poisson_trace(400, 8.0, 256, 32, 7);
+        assert_eq!(a, b, "same seed, same trace");
+        assert_eq!(a.len(), 400);
+        // Mean inter-arrival ≈ 1/qps over a long trace.
+        let span = a.last().unwrap().arrival_s;
+        let rate = a.len() as f64 / span;
+        assert!((rate - 8.0).abs() / 8.0 < 0.2, "rate {rate}");
+        // Arrivals sorted, ids positional, shapes near the means.
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        assert!(a.iter().enumerate().all(|(i, r)| r.id == i));
+        assert!(a.iter().all(|r| r.prompt_len >= 64 && r.prompt_len <= 1024));
+        assert!(a.iter().all(|r| r.gen_len >= 8 && r.gen_len <= 128));
+    }
+
+    #[test]
+    fn bursty_clumps_arrivals_at_the_same_rate() {
+        let b = bursty_trace(320, 16.0, 128, 16, 8, 3);
+        assert_eq!(b.len(), 320);
+        // Whole bursts share one arrival instant.
+        let simultaneous = b.windows(2).filter(|w| w[0].arrival_s == w[1].arrival_s).count();
+        assert!(simultaneous >= 320 / 8 * 6, "{simultaneous} co-arrivals");
+        // Average rate stays near qps.
+        let rate = b.len() as f64 / b.last().unwrap().arrival_s;
+        assert!((rate - 16.0).abs() / 16.0 < 0.35, "rate {rate}");
+    }
+
+    #[test]
+    fn scale_arrivals_rescales_times_only() {
+        let base = poisson_trace(50, 1.0, 128, 16, 1);
+        let fast = scale_arrivals(&base, 4.0);
+        for (a, b) in base.iter().zip(&fast) {
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.gen_len, b.gen_len);
+            assert!((b.arrival_s - a.arrival_s / 4.0).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn json_round_trip_and_errors() {
+        let base = poisson_trace(20, 2.0, 64, 8, 9);
+        let text = to_json(&base).to_string();
+        let back = parse_trace(&text).unwrap();
+        assert_eq!(base.len(), back.len());
+        for (a, b) in base.iter().zip(&back) {
+            assert_eq!((a.prompt_len, a.gen_len), (b.prompt_len, b.gen_len));
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-12);
+        }
+        // Out-of-order input is sorted and re-ided.
+        let jumbled = r#"[
+            {"arrival_s": 5.0, "prompt_len": 10, "gen_len": 2},
+            {"arrival_s": 1.0, "prompt_len": 20, "gen_len": 3}
+        ]"#;
+        let t = parse_trace(jumbled).unwrap();
+        assert_eq!(t[0].prompt_len, 20);
+        assert_eq!(t[0].id, 0);
+        // Malformed traces are rejected with a reason.
+        assert!(parse_trace("{}").is_err());
+        assert!(parse_trace(r#"[{"arrival_s": 1.0}]"#).is_err());
+        assert!(parse_trace(r#"[{"arrival_s": -1.0, "prompt_len": 4, "gen_len": 1}]"#).is_err());
+        assert!(parse_trace(r#"[{"arrival_s": 0.0, "prompt_len": 0, "gen_len": 1}]"#).is_err());
+    }
+}

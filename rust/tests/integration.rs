@@ -427,6 +427,53 @@ fn service_generation_api_end_to_end() {
 }
 
 #[test]
+fn serving_simulator_end_to_end_with_gqa_and_skinny_batches() {
+    // The PR 4 stack composed: a GQA model served under continuous
+    // batching, where mixed iterations put decode projections in the
+    // 9–32-row skinny band and the ragged graphs carry grouped-KV
+    // annotations — all priced through the fitted predictor.
+    use pm2lat::serving::{
+        poisson_trace, simulate, KvPagerConfig, SchedulerConfig, ServingSimConfig,
+    };
+    let (gpu, pl) = quick_pl("a100", &[DType::Bf16]);
+    let cfg = zoo::qwen3_0_6b(); // GQA: 16 heads / 8 kv_heads
+    let sim = ServingSimConfig {
+        scheduler: SchedulerConfig { max_batch: 16, chunk_tokens: 256, ..Default::default() },
+        pager: KvPagerConfig::for_model(&cfg, gpu.spec.mem_bytes(), 16),
+        streams: 1,
+    };
+    let unit = poisson_trace(32, 1.0, 128, 12, 21);
+    let mut skinny_iterations = 0usize;
+    let mut price = |g: &pm2lat::graph::ModelGraph| {
+        let decode_rows = g.nodes().iter().any(|n| {
+            matches!(n.op, Op::Gemm(gm)
+                if gm.api == pm2lat::ops::GemmApi::Linear
+                    && gm.m > pm2lat::gpusim::GEMV_DEGENERATE_MAX
+                    && pm2lat::gpusim::is_skinny(&gm))
+        });
+        if decode_rows {
+            skinny_iterations += 1;
+        }
+        pl.predict_graph(&gpu, g, 1)
+    };
+    // Load it enough that decode batches of 9+ sequences form.
+    let solo = simulate(&cfg, &unit[..1], &sim, &mut price).unwrap();
+    let qps = 20.0 / solo.completed[0].e2e_s();
+    let trace = pm2lat::serving::scale_arrivals(&unit, qps);
+    let report = simulate(&cfg, &trace, &sim, &mut price).unwrap();
+    assert_eq!(report.completed.len(), 32, "every request completes");
+    assert_eq!(report.kv_leaked_blocks, 0);
+    assert!(report.max_concurrency >= 9, "load must build real batches");
+    assert!(
+        skinny_iterations > 0,
+        "decode batches of 9–32 must route through the skinny band"
+    );
+    assert!(report.utilization() > 0.5, "saturated run keeps the GPU busy");
+    // TTFT under load is worse than solo TTFT, never better.
+    assert!(report.ttft_percentile_s(99.0) >= solo.completed[0].ttft_s());
+}
+
+#[test]
 fn batched_pjrt_path_agrees_with_scalar_at_scale() {
     let rt = Runtime::open_default().expect("make artifacts");
     let (gpu, pl) = quick_pl("a100", &[DType::F32]);
