@@ -11,17 +11,19 @@
 #                      release build, full test suite, serve-sim smoke.
 #   make serve-sim-smoke — fast serving-simulator end-to-end check
 #                      (tiny trace, quick profile; graceful no-cargo skip).
+#   make serve-sim-tp-smoke — same smoke on a tensor-parallel placement
+#                      (--tp 2: rank-graph rewrite + priced collectives).
 #   make bench-serving — the serving-capacity sweep on the fast setting.
 
 PYTHON ?= python3
 
-.PHONY: artifacts ci lint doc fmt clippy build test bench-fast bench-serving serve-sim-smoke
+.PHONY: artifacts ci lint doc fmt clippy build test bench-fast bench-serving serve-sim-smoke serve-sim-tp-smoke
 
 # aot.py uses package-relative imports — must run as a module from python/.
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
 
-ci: lint doc test serve-sim-smoke
+ci: lint doc test serve-sim-smoke serve-sim-tp-smoke
 
 # Graceful no-toolchain path: some dev containers ship without cargo, and
 # lint is the one stage that may safely no-op there (skipping style checks
@@ -72,4 +74,14 @@ serve-sim-smoke:
 		cargo run --release --quiet -- serve-sim --smoke; \
 	else \
 		echo "serve-sim-smoke: cargo not found — skipping (toolchain-less container)"; \
+	fi
+
+# The same smoke over a 2-way tensor-parallel placement: every iteration
+# graph is rewritten by TensorParallelPass and the SLO curves come out
+# cluster-level, so this exercises the placement path end to end.
+serve-sim-tp-smoke:
+	@if command -v cargo >/dev/null 2>&1; then \
+		cargo run --release --quiet -- serve-sim --tp 2 --smoke; \
+	else \
+		echo "serve-sim-tp-smoke: cargo not found — skipping (toolchain-less container)"; \
 	fi

@@ -1,0 +1,91 @@
+//! Bench: tensor-parallel latency scaling — the placement question the
+//! collective cost model exists to answer. For each model, sweep the TP
+//! degree over {1, 2, 4, 8} on an A100 ring and predict one rank's
+//! prefill and decode-step latency ([`TransformerConfig::graph_tp`] /
+//! [`decode_graph_tp`]): sharded GEMMs shrink with the degree while the
+//! inserted AllReduces grow with the ring, so the curve must bend —
+//! speedup strictly below ideal (the acceptance criterion), and decode
+//! steps (tiny GEMMs, fixed collective launches) bend hardest. Degrees
+//! that don't divide a model's head count shard the FFN only, which the
+//! table shows as a flatter attention column.
+
+use pm2lat::gpusim::Gpu;
+use pm2lat::models::zoo;
+use pm2lat::ops::Op;
+use pm2lat::pm2lat::Pm2Lat;
+use pm2lat::profiler::ProfileSpec;
+
+fn main() {
+    let fast_mode = std::env::var("PM2LAT_BENCH_FAST").is_ok();
+    let (seq, kv) = if fast_mode { (256usize, 256usize) } else { (512, 1024) };
+    let degrees = [1usize, 2, 4, 8];
+
+    println!("\n=== tp-scaling: one rank's latency vs tensor-parallel degree (a100) ===");
+    for cfg in [zoo::gpt2_large(), zoo::qwen3_0_6b()] {
+        let mut gpu = Gpu::by_name("a100").unwrap();
+        let profile = if fast_mode { ProfileSpec::quick() } else { ProfileSpec::experiment() };
+        let pl = Pm2Lat::build_dtypes(&mut gpu, &profile, &[cfg.dtype], false);
+        gpu.reset();
+
+        println!(
+            "\n-- {} (heads {}, prefill seq {seq}, decode kv {kv}) --",
+            cfg.name, cfg.heads
+        );
+        println!(
+            "   {:>4} | {:>12} {:>8} | {:>12} {:>8} | {:>6}",
+            "tp", "prefill", "speedup", "decode", "speedup", "comms"
+        );
+        let mut base: Option<(f64, f64)> = None;
+        for &tp in &degrees {
+            let pg = cfg.graph_tp(1, seq, tp);
+            let dg = cfg.decode_graph_tp(1, kv, tp);
+            let comms =
+                pg.lower().iter().filter(|op| matches!(op, Op::Comm(_))).count();
+            let (p, d) = match (pl.predict_graph(&gpu, &pg, 1), pl.predict_graph(&gpu, &dg, 1))
+            {
+                (Some(p), Some(d)) => (p, d),
+                _ => {
+                    println!("   {tp:>4} | unsupported on this device, skipped");
+                    continue;
+                }
+            };
+            let (p1, d1) = *base.get_or_insert((p, d));
+            println!(
+                "   {tp:>4} | {:>10.2}ms {:>7.2}x | {:>10.1}µs {:>7.2}x | {comms:>6}",
+                p * 1e3,
+                p1 / p,
+                d * 1e6,
+                d1 / d,
+            );
+            if tp == 1 {
+                assert_eq!(comms, 0, "tp=1 must be the plain single-device graph");
+                continue;
+            }
+            assert!(comms > 0, "rank graphs must carry priced collectives");
+            // The acceptance criterion: scaling is sub-linear — the
+            // collectives and the unsharded rows forbid ideal speedup.
+            assert!(
+                p > p1 / tp as f64,
+                "{}: tp={tp} prefill {p} beat ideal {}",
+                cfg.name,
+                p1 / tp as f64
+            );
+            assert!(
+                d > d1 / tp as f64,
+                "{}: tp={tp} decode {d} beat ideal {}",
+                cfg.name,
+                d1 / tp as f64
+            );
+            // Prefill is compute-dominated at these sizes: sharding must
+            // actually pay despite the ring (decode may not — the fixed
+            // collective launches can swamp gemv-degenerate steps, which
+            // is exactly the effect worth benching).
+            assert!(
+                p < p1,
+                "{}: tp={tp} prefill {p} slower than single-device {p1}",
+                cfg.name
+            );
+        }
+    }
+    println!("\ntp-scaling: sub-linear on every lane — ok");
+}

@@ -10,6 +10,13 @@
 //! arena-allocated intrusive doubly-linked recency list. Eviction is O(1);
 //! freed arena slots are reused, so shard memory is bounded by its
 //! capacity regardless of churn.
+//!
+//! Shards are partitioned by device: the upper two shard-index bits come
+//! from the device id, the lower two from the key hash. Each device class
+//! owns a quarter of the capacity, so one hot device floods only its own
+//! partition and cross-device workloads never contend on a lock. The key
+//! also carries the tensor-parallel degree — a sharded GEMM rank and its
+//! unsharded twin are different computations with different latencies.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -20,8 +27,9 @@ use crate::ops::Op;
 
 use super::service::PredictorKind;
 
-/// Cache key: (interned device id, computation path, op).
-pub type CacheKey = (u32, PredictorKind, Op);
+/// Cache key: (interned device id, tensor-parallel degree, computation
+/// path, op). `tp = 1` is the single-device placement.
+pub type CacheKey = (u32, u16, PredictorKind, Op);
 
 const N_SHARDS: usize = 16;
 const NIL: usize = usize::MAX;
@@ -153,25 +161,28 @@ impl PredictionCache {
         self.per_shard * N_SHARDS
     }
 
+    /// Device-partitioned shard index: bits [3:2] from the device id,
+    /// bits [1:0] from the key hash. Each device class gets a private
+    /// 4-shard partition (a quarter of capacity).
     fn shard_of(&self, key: &CacheKey) -> usize {
         let mut h = DefaultHasher::new();
         key.hash(&mut h);
-        (h.finish() as usize) % N_SHARDS
+        (((key.0 as usize) & 3) << 2) | ((h.finish() as usize) & 3)
     }
 
-    pub fn get(&self, device: u32, path: PredictorKind, op: &Op) -> Option<f64> {
+    pub fn get(&self, device: u32, tp: u16, path: PredictorKind, op: &Op) -> Option<f64> {
         if !self.enabled() {
             return None;
         }
-        let key = (device, path, *op);
+        let key = (device, tp, path, *op);
         self.shards[self.shard_of(&key)].lock().unwrap().get(&key)
     }
 
-    pub fn insert(&self, device: u32, path: PredictorKind, op: &Op, value: f64) {
+    pub fn insert(&self, device: u32, tp: u16, path: PredictorKind, op: &Op, value: f64) {
         if !self.enabled() {
             return;
         }
-        let key = (device, path, *op);
+        let key = (device, tp, path, *op);
         self.shards[self.shard_of(&key)]
             .lock()
             .unwrap()
@@ -209,33 +220,67 @@ mod tests {
     fn roundtrip_exact_values() {
         let c = PredictionCache::new(1024);
         let v = 0.1f64 + 0.2f64; // deliberately non-representable sum
-        c.insert(0, P, &op(0), v);
-        assert_eq!(c.get(0, P, &op(0)), Some(v), "hits must be bit-identical");
-        assert_eq!(c.get(0, P, &op(1)), None);
-        assert_eq!(c.get(1, P, &op(0)), None, "device id is part of the key");
+        c.insert(0, 1, P, &op(0), v);
+        assert_eq!(c.get(0, 1, P, &op(0)), Some(v), "hits must be bit-identical");
+        assert_eq!(c.get(0, 1, P, &op(1)), None);
+        assert_eq!(c.get(1, 1, P, &op(0)), None, "device id is part of the key");
         assert_eq!(c.len(), 1);
     }
 
     #[test]
     fn distinct_paths_do_not_collide() {
         let c = PredictionCache::new(1024);
-        c.insert(0, PredictorKind::Pm2Lat, &op(0), 1.0);
-        c.insert(0, PredictorKind::Pm2LatBatched, &op(0), 2.0);
-        assert_eq!(c.get(0, PredictorKind::Pm2Lat, &op(0)), Some(1.0));
-        assert_eq!(c.get(0, PredictorKind::Pm2LatBatched, &op(0)), Some(2.0));
+        c.insert(0, 1, PredictorKind::Pm2Lat, &op(0), 1.0);
+        c.insert(0, 1, PredictorKind::Pm2LatBatched, &op(0), 2.0);
+        assert_eq!(c.get(0, 1, PredictorKind::Pm2Lat, &op(0)), Some(1.0));
+        assert_eq!(c.get(0, 1, PredictorKind::Pm2LatBatched, &op(0)), Some(2.0));
+    }
+
+    #[test]
+    fn placement_degree_is_part_of_the_key() {
+        // A tp=2 rank prediction must never be served to a tp=1 request
+        // (and vice versa) — the graphs differ, so the latencies do.
+        let c = PredictionCache::new(1024);
+        c.insert(0, 1, P, &op(0), 1.0);
+        c.insert(0, 2, P, &op(0), 0.6);
+        assert_eq!(c.get(0, 1, P, &op(0)), Some(1.0));
+        assert_eq!(c.get(0, 2, P, &op(0)), Some(0.6));
+        assert_eq!(c.get(0, 4, P, &op(0)), None);
+    }
+
+    #[test]
+    fn shards_are_partitioned_by_device() {
+        let c = PredictionCache::new(4096);
+        for i in 0..64 {
+            c.insert(2, 1, P, &op(i), i as f64);
+        }
+        // Device 2 may only populate shard partition [8, 12).
+        for (si, s) in c.shards.iter().enumerate() {
+            let n = s.lock().unwrap().map.len();
+            if (8..12).contains(&si) {
+                continue;
+            }
+            assert_eq!(n, 0, "shard {si} leaked outside device 2's partition");
+        }
+        assert_eq!(c.len(), 64);
+        // A different device class lands in a disjoint partition, so the
+        // two never contend on a shard lock.
+        c.insert(5, 1, P, &op(0), 9.0);
+        let p5: usize = (4..8).map(|si| c.shards[si].lock().unwrap().map.len()).sum();
+        assert_eq!(p5, 1);
     }
 
     #[test]
     fn lru_evicts_oldest_first() {
         let mut s = Shard::new();
-        s.insert((0, P, op(0)), 0.0, 2);
-        s.insert((0, P, op(1)), 1.0, 2);
+        s.insert((0, 1, P, op(0)), 0.0, 2);
+        s.insert((0, 1, P, op(1)), 1.0, 2);
         // Touch op0 so op1 becomes least-recently used.
-        assert_eq!(s.get(&(0, P, op(0))), Some(0.0));
-        s.insert((0, P, op(2)), 2.0, 2);
-        assert_eq!(s.get(&(0, P, op(0))), Some(0.0));
-        assert_eq!(s.get(&(0, P, op(1))), None, "LRU entry evicted");
-        assert_eq!(s.get(&(0, P, op(2))), Some(2.0));
+        assert_eq!(s.get(&(0, 1, P, op(0))), Some(0.0));
+        s.insert((0, 1, P, op(2)), 2.0, 2);
+        assert_eq!(s.get(&(0, 1, P, op(0))), Some(0.0));
+        assert_eq!(s.get(&(0, 1, P, op(1))), None, "LRU entry evicted");
+        assert_eq!(s.get(&(0, 1, P, op(2))), Some(2.0));
         assert_eq!(s.map.len(), 2);
     }
 
@@ -243,7 +288,7 @@ mod tests {
     fn arena_slots_are_reused() {
         let mut s = Shard::new();
         for i in 0..100 {
-            s.insert((0, P, op(i)), i as f64, 2);
+            s.insert((0, 1, P, op(i)), i as f64, 2);
         }
         assert_eq!(s.map.len(), 2);
         assert!(s.nodes.len() <= 3, "churn must not grow the arena");
@@ -253,7 +298,7 @@ mod tests {
     fn capacity_bound_holds_globally() {
         let c = PredictionCache::new(32);
         for i in 0..500 {
-            c.insert(0, P, &op(i), i as f64);
+            c.insert(0, 1, P, &op(i), i as f64);
         }
         assert!(c.len() <= c.capacity(), "{} > {}", c.len(), c.capacity());
         assert!(c.capacity() >= 32);
@@ -262,9 +307,9 @@ mod tests {
     #[test]
     fn update_existing_key_replaces_value() {
         let c = PredictionCache::new(64);
-        c.insert(0, P, &op(0), 1.0);
-        c.insert(0, P, &op(0), 5.0);
-        assert_eq!(c.get(0, P, &op(0)), Some(5.0));
+        c.insert(0, 1, P, &op(0), 1.0);
+        c.insert(0, 1, P, &op(0), 5.0);
+        assert_eq!(c.get(0, 1, P, &op(0)), Some(5.0));
         assert_eq!(c.len(), 1);
     }
 
@@ -272,8 +317,8 @@ mod tests {
     fn disabled_cache_is_noop() {
         let c = PredictionCache::new(0);
         assert!(!c.enabled());
-        c.insert(0, P, &op(0), 1.0);
-        assert_eq!(c.get(0, P, &op(0)), None);
+        c.insert(0, 1, P, &op(0), 1.0);
+        assert_eq!(c.get(0, 1, P, &op(0)), None);
         assert!(c.is_empty());
         assert_eq!(c.capacity(), 0);
     }
@@ -282,11 +327,11 @@ mod tests {
     fn clear_empties_every_shard() {
         let c = PredictionCache::new(256);
         for i in 0..100 {
-            c.insert(0, P, &op(i), i as f64);
+            c.insert(0, 1, P, &op(i), i as f64);
         }
         assert!(!c.is_empty());
         c.clear();
         assert!(c.is_empty());
-        assert_eq!(c.get(0, P, &op(3)), None);
+        assert_eq!(c.get(0, 1, P, &op(3)), None);
     }
 }

@@ -40,8 +40,14 @@
 //! expands a (prompt, generate) request into prefill + per-step decode
 //! graphs and answers the full latency curve
 //! ([`crate::pm2lat::predictor::GenerationPrediction`]: prefill, per-step
-//! decode, time-per-output-token). On top of those,
-//! [`Coordinator::simulate_serving`] replays a whole request trace
+//! decode, time-per-output-token). Placements are first-class:
+//! [`Coordinator::submit_placed_graphs`] routes one rank graph (sharded
+//! by [`crate::graph::TensorParallelPass`], collectives included) to
+//! every device of a [`crate::ops::Placement`] and answers the slowest
+//! rank's makespan; the tensor-parallel degree is a cache-key dimension,
+//! and cache shards are partitioned per device class, so placements
+//! never alias and hot devices evict only their own quarter. On top of
+//! those, [`Coordinator::simulate_serving`] replays a whole request trace
 //! through the continuous-batching serving simulator
 //! ([`crate::serving`]), pricing every mixed prefill+decode iteration
 //! as one cached graph submission. The NAS preprocessing application
@@ -62,6 +68,6 @@ pub use metrics::{Metrics, RESERVOIR_CAP};
 pub use service::{
     ab_phases, build_f32_service, build_service, mixed_workload, mixed_workload_dtyped,
     quick_neusight, timed_submit, to_batched, to_kind, AbReport, Coordinator, Engine,
-    GenerationRequest, GraphRequest, PredictorKind, Request, ServingRequest, TraceRequest,
-    DEFAULT_CACHE_CAPACITY,
+    GenerationRequest, GraphRequest, PlacedGraphRequest, PredictorKind, Request,
+    ServingRequest, TraceRequest, DEFAULT_CACHE_CAPACITY,
 };

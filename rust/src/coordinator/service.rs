@@ -79,6 +79,23 @@ pub struct GraphRequest {
     pub streams: usize,
 }
 
+/// A placement-routed graph prediction request: `graph` is one rank's
+/// graph (already rewritten by
+/// [`crate::graph::TensorParallelPass`] when the placement is sharded —
+/// per-rank shards plus the collectives that rejoin them). Every device
+/// in the placement prices its rank; ranks run concurrently, so the
+/// response is the *slowest* rank's makespan. The collectives inside the
+/// rank graph already charge the cross-rank rendezvous at full
+/// participant count. With `Placement::single` this is exactly
+/// [`GraphRequest`] — same resolved lanes, same cache keys, bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct PlacedGraphRequest {
+    pub placement: crate::ops::Placement,
+    pub graph: ModelGraph,
+    pub kind: PredictorKind,
+    pub streams: usize,
+}
+
 /// A whole-generation prediction request: prefill over `prompt_len`
 /// tokens, then `gen_len` autoregressive decode steps. The service
 /// expands the request into the prefill graph plus per-step decode
@@ -112,8 +129,10 @@ pub struct ServingRequest {
     pub kind: PredictorKind,
 }
 
-/// A request after device interning: (device id, kind, op).
-type Resolved = (usize, PredictorKind, Op);
+/// A request after device interning: (device id, tensor-parallel degree,
+/// kind, op). The degree rides into the cache key so per-placement
+/// predictions never alias; single-device paths pass `1`.
+type Resolved = (usize, u16, PredictorKind, Op);
 
 /// One registered device: the simulated GPU standing in for the
 /// target-device daemon, plus its fitted PM2Lat state.
@@ -211,9 +230,9 @@ impl Engine {
     /// predictions; unsupported ops stay uncached (cheap to re-derive).
     /// With the cache disabled no lookup happens and no hit/miss is
     /// counted — a no-cache service reports a clean zero, not all-miss.
-    fn predict_cached(&self, dev: usize, op: &Op) -> Option<f64> {
+    fn predict_cached(&self, dev: usize, tp: u16, op: &Op) -> Option<f64> {
         if self.cache.enabled() {
-            if let Some(v) = self.cache.get(dev as u32, PredictorKind::Pm2Lat, op) {
+            if let Some(v) = self.cache.get(dev as u32, tp, PredictorKind::Pm2Lat, op) {
                 self.metrics.record_cache(true);
                 return Some(v);
             }
@@ -222,7 +241,7 @@ impl Engine {
         let entry = &self.devices[dev];
         let v = entry.pm2lat.predict(&entry.gpu, op);
         if let Some(val) = v {
-            self.cache.insert(dev as u32, PredictorKind::Pm2Lat, op, val);
+            self.cache.insert(dev as u32, tp, PredictorKind::Pm2Lat, op, val);
         }
         v
     }
@@ -241,16 +260,16 @@ impl Engine {
     /// when the cache is enabled *and* the unique lane produced a value
     /// (it is then cached — a non-deduped lookup would have hit);
     /// duplicates of unsupported ops never inflate the hit rate.
-    fn run_scalar(&self, work: &[(usize, Op)]) -> Vec<Option<f64>> {
-        let mut index: HashMap<(usize, Op), usize> = HashMap::with_capacity(work.len());
-        let mut uniq: Vec<(usize, Op)> = Vec::with_capacity(work.len());
+    fn run_scalar(&self, work: &[(usize, u16, Op)]) -> Vec<Option<f64>> {
+        let mut index: HashMap<(usize, u16, Op), usize> = HashMap::with_capacity(work.len());
+        let mut uniq: Vec<(usize, u16, Op)> = Vec::with_capacity(work.len());
         let mut mult: Vec<u64> = Vec::with_capacity(work.len());
         let mut slot: Vec<usize> = Vec::with_capacity(work.len());
-        for &(dev, op) in work {
+        for &(dev, tp, op) in work {
             let next = uniq.len();
-            let e = *index.entry((dev, op)).or_insert(next);
+            let e = *index.entry((dev, tp, op)).or_insert(next);
             if e == next {
-                uniq.push((dev, op));
+                uniq.push((dev, tp, op));
                 mult.push(0);
             }
             mult[e] += 1;
@@ -260,9 +279,10 @@ impl Engine {
         if dups > 0 {
             self.metrics.record_scalar_dedup(dups);
         }
-        let res = pool::parallel_map_chunked(&uniq, self.threads, SCALAR_CHUNK, |(dev, op)| {
-            self.predict_cached(*dev, op)
-        });
+        let res =
+            pool::parallel_map_chunked(&uniq, self.threads, SCALAR_CHUNK, |(dev, tp, op)| {
+                self.predict_cached(*dev, *tp, op)
+            });
         if dups > 0 && self.cache.enabled() {
             // Count dedup-served lanes as cache hits only when the unique
             // lane actually produced (and therefore cached) a value —
@@ -301,14 +321,14 @@ impl Engine {
             );
         }
         let mut out = vec![None; requests.len()];
-        let mut work: Vec<(usize, Op)> = Vec::with_capacity(requests.len());
+        let mut work: Vec<(usize, u16, Op)> = Vec::with_capacity(requests.len());
         let mut slots: Vec<usize> = Vec::with_capacity(requests.len());
         let mut unsupported = 0usize;
         for (i, (r, &dev)) in requests.iter().zip(&resolved).enumerate() {
             match r.kind {
                 PredictorKind::NeuSight => unsupported += 1,
                 _ => {
-                    work.push((dev, r.op));
+                    work.push((dev, 1, r.op));
                     slots.push(i);
                 }
             }
@@ -431,7 +451,7 @@ impl<'rt> Coordinator<'rt> {
         let t0 = Instant::now();
         let mut resolved: Vec<Resolved> = Vec::with_capacity(requests.len());
         for r in requests {
-            resolved.push((self.resolve_device(&r.device)?, r.kind, r.op));
+            resolved.push((self.resolve_device(&r.device)?, 1, r.kind, r.op));
         }
         self.dispatch_recorded(t0, &resolved)
     }
@@ -447,7 +467,7 @@ impl<'rt> Coordinator<'rt> {
         for t in traces {
             let dev = self.resolve_device(&t.device)?;
             let start = resolved.len();
-            resolved.extend(t.trace.iter().map(|op| (dev, t.kind, *op)));
+            resolved.extend(t.trace.iter().map(|op| (dev, 1, t.kind, *op)));
             spans.push((start, resolved.len()));
         }
         let per_op = self.dispatch_recorded(t0, &resolved)?;
@@ -482,7 +502,7 @@ impl<'rt> Coordinator<'rt> {
         for gr in graphs {
             let dev = self.resolve_device(&gr.device)?;
             let start = resolved.len();
-            resolved.extend(gr.graph.nodes().iter().map(|n| (dev, gr.kind, n.op)));
+            resolved.extend(gr.graph.nodes().iter().map(|n| (dev, 1, gr.kind, n.op)));
             spans.push((start, resolved.len()));
         }
         let per_op = self.dispatch_recorded(t0, &resolved)?;
@@ -495,6 +515,67 @@ impl<'rt> Coordinator<'rt> {
                     dur.push((*v)?);
                 }
                 Some(crate::graph::schedule::schedule(&gr.graph, gr.streams, &dur).makespan_s)
+            })
+            .collect())
+    }
+
+    /// Placement-level API: one response per placed graph — the slowest
+    /// rank's `streams`-bounded makespan, or `None` when any node is
+    /// unsupported on any rank's device. Symmetric placements (the common
+    /// case: one device model × tp) collapse to a single priced rank —
+    /// duplicate device names dedup before resolution, and identical
+    /// lanes for the remaining ranks would dedup inside the batch anyway.
+    /// The tensor-parallel degree rides into every cache key, so
+    /// per-placement entries partition cleanly and a `tp = 1` placement
+    /// is bit-identical to [`Coordinator::submit_graphs`].
+    pub fn submit_placed_graphs(
+        &self,
+        reqs: &[PlacedGraphRequest],
+    ) -> Result<Vec<Option<f64>>> {
+        let t0 = Instant::now();
+        let mut resolved: Vec<Resolved> = Vec::new();
+        // Per request: one (device id, span) per *distinct* rank device.
+        let mut shapes: Vec<Vec<(usize, usize)>> = Vec::with_capacity(reqs.len());
+        for pr in reqs {
+            if !pr.placement.is_valid() {
+                return Err(anyhow!(
+                    "invalid placement: {} devices for tp={}",
+                    pr.placement.devices.len(),
+                    pr.placement.tp
+                ));
+            }
+            let tp = pr.placement.tp.min(u16::MAX as usize) as u16;
+            let mut seen: Vec<usize> = Vec::new();
+            let mut spans = Vec::new();
+            for name in &pr.placement.devices {
+                let dev = self.resolve_device(name)?;
+                if seen.contains(&dev) {
+                    continue;
+                }
+                seen.push(dev);
+                let start = resolved.len();
+                resolved.extend(pr.graph.nodes().iter().map(|n| (dev, tp, pr.kind, n.op)));
+                spans.push((start, resolved.len()));
+            }
+            shapes.push(spans);
+        }
+        let per_op = self.dispatch_recorded(t0, &resolved)?;
+        Ok(reqs
+            .iter()
+            .zip(shapes)
+            .map(|(pr, spans)| {
+                let mut worst = 0.0f64;
+                for (a, b) in spans {
+                    let mut dur = Vec::with_capacity(b - a);
+                    for v in &per_op[a..b] {
+                        dur.push((*v)?);
+                    }
+                    let rank =
+                        crate::graph::schedule::schedule(&pr.graph, pr.streams, &dur)
+                            .makespan_s;
+                    worst = worst.max(rank);
+                }
+                Some(worst)
             })
             .collect())
     }
@@ -525,7 +606,7 @@ impl<'rt> Coordinator<'rt> {
             let mut spans = Vec::with_capacity(graphs.len());
             for g in &graphs {
                 let start = resolved.len();
-                resolved.extend(g.nodes().iter().map(|n| (dev, r.kind, n.op)));
+                resolved.extend(g.nodes().iter().map(|n| (dev, 1, r.kind, n.op)));
                 spans.push((start, resolved.len()));
             }
             shapes.push((graphs, spans, r.streams));
@@ -593,13 +674,13 @@ impl<'rt> Coordinator<'rt> {
     fn submit_resolved(&self, reqs: &[Resolved]) -> Result<(Vec<Option<f64>>, usize)> {
         let mut out = vec![None; reqs.len()];
         let mut pjrt_calls = 0usize;
-        let mut scalar: Vec<(usize, Op)> = Vec::new();
+        let mut scalar: Vec<(usize, u16, Op)> = Vec::new();
         let mut scalar_slots: Vec<usize> = Vec::new();
         let mut groups: HashMap<(usize, PredictorKind), Vec<usize>> = HashMap::new();
-        for (i, &(dev, kind, op)) in reqs.iter().enumerate() {
+        for (i, &(dev, tp, kind, op)) in reqs.iter().enumerate() {
             match kind {
                 PredictorKind::Pm2Lat => {
-                    scalar.push((dev, op));
+                    scalar.push((dev, tp, op));
                     scalar_slots.push(i);
                 }
                 _ => groups.entry((dev, kind)).or_default().push(i),
@@ -643,20 +724,22 @@ impl<'rt> Coordinator<'rt> {
         idxs: &[usize],
         reqs: &[Resolved],
         out: &mut [Option<f64>],
-        scalar: &mut Vec<(usize, Op)>,
+        scalar: &mut Vec<(usize, u16, Op)>,
         scalar_slots: &mut Vec<usize>,
     ) -> Result<usize> {
         use std::collections::hash_map::Entry;
         let entry = &self.engine.devices[dev];
         let bp = self.batchers[dev].as_ref();
-        // One entry per *unique* missed op; each fans out to every
+        // One entry per *unique* missed (tp, op); each fans out to every
         // requesting slot.
         let mut miss_ops: Vec<GemmOp> = Vec::new();
+        let mut miss_tps: Vec<u16> = Vec::new();
         let mut miss_slots: Vec<Vec<usize>> = Vec::new();
-        let mut miss_index: HashMap<GemmOp, usize> = HashMap::new();
+        let mut miss_index: HashMap<(u16, GemmOp), usize> = HashMap::new();
         let cache_on = self.engine.cache.enabled();
         for &i in idxs {
-            let op = &reqs[i].2;
+            let tp = reqs[i].1;
+            let op = &reqs[i].3;
             let gemm = match op {
                 // Skinny (decode-regime) GEMMs spill to the scalar path:
                 // the PJRT artifact evaluates the tensor-core wave model,
@@ -670,14 +753,14 @@ impl<'rt> Coordinator<'rt> {
                     *g
                 }
                 _ => {
-                    scalar.push((dev, *op));
+                    scalar.push((dev, tp, *op));
                     scalar_slots.push(i);
                     continue;
                 }
             };
             if cache_on {
                 if let Some(v) =
-                    self.engine.cache.get(dev as u32, PredictorKind::Pm2LatBatched, op)
+                    self.engine.cache.get(dev as u32, tp, PredictorKind::Pm2LatBatched, op)
                 {
                     self.engine.metrics.record_cache(true);
                     out[i] = Some(v);
@@ -685,7 +768,7 @@ impl<'rt> Coordinator<'rt> {
                 }
                 self.engine.metrics.record_cache(false);
             }
-            match miss_index.entry(gemm) {
+            match miss_index.entry((tp, gemm)) {
                 Entry::Occupied(e) => {
                     miss_slots[*e.get()].push(i);
                     self.engine.metrics.record_dedup(1);
@@ -694,6 +777,7 @@ impl<'rt> Coordinator<'rt> {
                     e.insert(miss_ops.len());
                     miss_slots.push(vec![i]);
                     miss_ops.push(gemm);
+                    miss_tps.push(tp);
                 }
             }
         }
@@ -706,10 +790,13 @@ impl<'rt> Coordinator<'rt> {
             .gemm_table(DType::F32)
             .expect("batcher implies an F32 table");
         let res = bp.predict_all(&entry.gpu, table, &miss_ops)?;
-        for ((slots, g), v) in miss_slots.iter().zip(&miss_ops).zip(res) {
+        for (((slots, g), &tp), v) in
+            miss_slots.iter().zip(&miss_ops).zip(&miss_tps).zip(res)
+        {
             if let Some(val) = v {
                 self.engine.cache.insert(
                     dev as u32,
+                    tp,
                     PredictorKind::Pm2LatBatched,
                     &Op::Gemm(*g),
                     val,
@@ -734,7 +821,7 @@ impl<'rt> Coordinator<'rt> {
         let entry = &self.engine.devices[dev];
         let mut by_dtype: HashMap<DType, Vec<usize>> = HashMap::new();
         for &i in idxs {
-            by_dtype.entry(reqs[i].2.dtype()).or_default().push(i);
+            by_dtype.entry(reqs[i].3.dtype()).or_default().push(i);
         }
         let mut pjrt_calls = 0usize;
         for (dt, sub) in by_dtype {
@@ -742,7 +829,7 @@ impl<'rt> Coordinator<'rt> {
                 self.engine.metrics.record_unsupported(sub.len());
                 continue;
             };
-            let ops: Vec<Op> = sub.iter().map(|&i| reqs[i].2).collect();
+            let ops: Vec<Op> = sub.iter().map(|&i| reqs[i].3).collect();
             let res = ns.predict_batch(&entry.gpu.spec, &ops)?;
             pjrt_calls += ops.len().div_ceil(1024);
             for (j, v) in res.into_iter().enumerate() {
@@ -1221,6 +1308,94 @@ mod tests {
             streams: 1,
         };
         assert_eq!(c.submit_graphs(std::slice::from_ref(&none)).unwrap(), vec![None]);
+    }
+
+    #[test]
+    fn placed_single_is_bit_identical_to_submit_graphs() {
+        let rt = Runtime::open_default().expect("make artifacts");
+        let c = coordinator(&rt);
+        let cfg = crate::models::zoo::gpt2_large();
+        let g = cfg.graph(1, 64);
+        let plain = c
+            .submit_graphs(&[GraphRequest {
+                device: "a100".into(),
+                graph: g.clone(),
+                kind: PredictorKind::Pm2Lat,
+                streams: 2,
+            }])
+            .unwrap();
+        let placed = c
+            .submit_placed_graphs(&[PlacedGraphRequest {
+                placement: crate::ops::Placement::single("a100"),
+                graph: g,
+                kind: PredictorKind::Pm2Lat,
+                streams: 2,
+            }])
+            .unwrap();
+        assert_eq!(placed, plain, "single placement is the plain graph path");
+    }
+
+    #[test]
+    fn placed_tp2_prices_collectives_and_beats_tp1_per_rank() {
+        use crate::graph::{Pass, PassCtx, TensorParallelPass};
+        let rt = Runtime::open_default().expect("make artifacts");
+        let c = coordinator(&rt);
+        let cfg = crate::models::zoo::gpt2_large();
+        let g1 = cfg.graph(1, 256);
+        let mut g2 = g1.clone();
+        let sharded = TensorParallelPass { tp: 2 }.run(&mut g2, &PassCtx::structural());
+        assert!(sharded > 0, "gpt2 must shard");
+        assert!(
+            g2.nodes().iter().any(|n| matches!(n.op, Op::Comm(_))),
+            "sharding inserts collectives"
+        );
+        let out = c
+            .submit_placed_graphs(&[
+                PlacedGraphRequest {
+                    placement: crate::ops::Placement::single("a100"),
+                    graph: g1,
+                    kind: PredictorKind::Pm2Lat,
+                    streams: 1,
+                },
+                PlacedGraphRequest {
+                    placement: crate::ops::Placement::replicated("a100", 2),
+                    graph: g2.clone(),
+                    kind: PredictorKind::Pm2Lat,
+                    streams: 1,
+                },
+            ])
+            .unwrap();
+        let (tp1, tp2) = (out[0].unwrap(), out[1].unwrap());
+        // The rank graph's collectives were priced (comm profile present),
+        // and the whole placed path agrees with the direct predictor.
+        let direct = {
+            let gpu = c.gpu("a100").unwrap();
+            let pl = c.pm2lat("a100").unwrap();
+            pl.predict_graph(gpu, &g2, 1).unwrap()
+        };
+        assert_eq!(tp2, direct, "placed rank == direct rank prediction");
+        // Sharding helps but sub-linearly: collectives + unsharded rows
+        // keep the rank above half the single-device latency.
+        assert!(tp2 < tp1, "tp=2 rank {tp2} vs tp=1 {tp1}");
+        assert!(tp2 > tp1 / 2.0, "scaling must be sub-linear");
+        // Unknown rank devices reject the batch; malformed placements too.
+        let bad = PlacedGraphRequest {
+            placement: crate::ops::Placement::replicated("h100", 2),
+            graph: g2.clone(),
+            kind: PredictorKind::Pm2Lat,
+            streams: 1,
+        };
+        assert!(c.submit_placed_graphs(std::slice::from_ref(&bad)).is_err());
+        let malformed = PlacedGraphRequest {
+            placement: crate::ops::Placement {
+                devices: vec!["a100".into()],
+                tp: 2,
+            },
+            graph: g2,
+            kind: PredictorKind::Pm2Lat,
+            streams: 1,
+        };
+        assert!(c.submit_placed_graphs(std::slice::from_ref(&malformed)).is_err());
     }
 
     #[test]

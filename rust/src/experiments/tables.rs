@@ -127,6 +127,7 @@ pub fn table2(lab: &mut Lab) -> Result<Table2Output> {
                         Op::Gemm(g) => g.flops(),
                         Op::Util(u) => u.elems(),
                         Op::Custom(c) => c.flops(),
+                        Op::Comm(c) => c.bytes(),
                     };
                     records.push(SampleRecord {
                         device: device.clone(),

@@ -1,0 +1,89 @@
+//! Ring-collective latency model — the simulator-side ground truth that
+//! `pm2lat`'s measured `CommProfile` staircase approximates, mirroring
+//! the GemmTable/AttnProfile split for compute kernels.
+//!
+//! The α–β cost of a ring collective over `p` symmetric ranks:
+//!
+//! ```text
+//! t = α + steps · (hop + chunk / β_eff)
+//!   α      = comm_launch_us          (launch + rendezvous of all ranks)
+//!   steps  = 2(p−1)  AllReduce       (reduce-scatter + all-gather)
+//!            (p−1)   AllGather
+//!   chunk  = bytes / p               (per-hop payload)
+//!   β_eff  = link_gbs · bus_derate   (achievable link bandwidth)
+//!   hop    = per-step synchronization cost (a fixed fraction of α:
+//!            every step is a neighbour exchange with its own latency)
+//! ```
+//!
+//! Collectives run on the copy/NCCL engines, not the SM clock, so —
+//! unlike every compute op in `executor.rs` — their latency does not
+//! scale with the simulated core frequency.
+
+use crate::ops::CommOp;
+
+use super::device::DeviceSpec;
+
+/// Per-hop latency as a fraction of the launch overhead: each ring step
+/// is a neighbour send/recv with its own (much smaller) fixed cost.
+const HOP_LAUNCH_FRACTION: f64 = 0.1;
+
+/// Latency in seconds of one collective on `spec`'s peer link. A single
+/// participant degenerates to launch overhead only (a local no-op kernel).
+pub fn comm_latency(spec: &DeviceSpec, c: &CommOp) -> f64 {
+    let alpha = spec.comm_launch_us * 1e-6;
+    let steps = c.kind.ring_steps(c.participants) as f64;
+    if steps == 0.0 {
+        return alpha;
+    }
+    let chunk = c.bytes() / c.participants.max(1) as f64;
+    let hop = alpha * HOP_LAUNCH_FRACTION;
+    alpha + steps * (hop + chunk / spec.link_bw())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device_by_name;
+    use crate::ops::{CommKind, DType};
+
+    fn a100() -> DeviceSpec {
+        device_by_name("a100").unwrap()
+    }
+
+    #[test]
+    fn single_participant_is_launch_only() {
+        let spec = a100();
+        let c = CommOp::all_reduce(1 << 20, DType::Bf16, 1);
+        assert_eq!(comm_latency(&spec, &c), spec.comm_launch_us * 1e-6);
+    }
+
+    #[test]
+    fn latency_monotone_in_bytes_and_participants() {
+        let spec = a100();
+        let mk = |elems, p| CommOp::all_reduce(elems, DType::Bf16, p);
+        assert!(comm_latency(&spec, &mk(1 << 22, 4)) > comm_latency(&spec, &mk(1 << 20, 4)));
+        // More ranks ⇒ more ring steps; the fixed hop cost keeps the
+        // total growing even though the per-hop chunk shrinks.
+        assert!(comm_latency(&spec, &mk(1 << 20, 8)) > comm_latency(&spec, &mk(1 << 20, 2)));
+    }
+
+    #[test]
+    fn all_reduce_moves_twice_the_all_gather_volume() {
+        let spec = a100();
+        let ar = CommOp::all_reduce(1 << 24, DType::F32, 4);
+        let ag = CommOp::all_gather(1 << 24, DType::F32, 4);
+        let alpha = spec.comm_launch_us * 1e-6;
+        let wire = |t: f64, steps: f64| t - alpha - steps * alpha * 0.1;
+        // Stripped of fixed costs, the ratio is exactly the step ratio.
+        let r = wire(comm_latency(&spec, &ar), 6.0) / wire(comm_latency(&spec, &ag), 3.0);
+        assert!((r - 2.0).abs() < 1e-9, "r={r}");
+    }
+
+    #[test]
+    fn nvlink_beats_pcie_on_the_same_collective() {
+        let c = CommOp::all_reduce(1 << 24, DType::F32, 4);
+        let a = comm_latency(&a100(), &c);
+        let t4 = comm_latency(&device_by_name("t4").unwrap(), &c);
+        assert!(a < t4, "a100={a} t4={t4}");
+    }
+}

@@ -55,6 +55,16 @@ pub struct DeviceSpec {
     pub max_threads_per_sm: usize,
     /// Integer/ALU throughput in Gops/s at max frequency.
     pub int_gops: f64,
+    /// Peer link bandwidth in GB/s per direction (NVLink on A100, PCIe
+    /// on the rest) — the β of the collective α–β cost.
+    pub link_gbs: f64,
+    // ---- derived comm internals (stable per device) ----
+    /// Achievable fraction of `link_gbs` under ring traffic (bus
+    /// contention, protocol overhead) — ≈0.55–0.80.
+    pub bus_derate: f64,
+    /// Collective launch + rendezvous overhead in microseconds (µs);
+    /// collectives synchronize every rank so this dwarfs `launch_us`.
+    pub comm_launch_us: f64,
 }
 
 impl DeviceSpec {
@@ -96,7 +106,14 @@ impl DeviceSpec {
         self.l1_bw_ratio = 2.5 + 1.5 * u(16);
         self.launch_us = 2.5 + 4.0 * u(32);
         self.int_gops = self.cuda_cores as f64 * self.max_freq_ghz * 0.9;
+        self.bus_derate = 0.55 + 0.25 * u(48);
+        self.comm_launch_us = 5.0 + 10.0 * u(24);
         self
+    }
+    /// Effective per-direction link bandwidth in bytes/s under ring
+    /// traffic.
+    pub fn link_bw(&self) -> f64 {
+        self.link_gbs * 1e9 * self.bus_derate
     }
 }
 
@@ -122,6 +139,9 @@ pub fn all_devices() -> Vec<DeviceSpec> {
             smem_kib: 100.0,
             max_threads_per_sm: 1536,
             int_gops: 0.0,
+            link_gbs: 16.0,
+            bus_derate: 0.0,
+            comm_launch_us: 0.0,
         }
         .derive(),
         DeviceSpec {
@@ -143,6 +163,9 @@ pub fn all_devices() -> Vec<DeviceSpec> {
             smem_kib: 64.0,
             max_threads_per_sm: 1024,
             int_gops: 0.0,
+            link_gbs: 16.0,
+            bus_derate: 0.0,
+            comm_launch_us: 0.0,
         }
         .derive(),
         DeviceSpec {
@@ -164,6 +187,9 @@ pub fn all_devices() -> Vec<DeviceSpec> {
             smem_kib: 100.0,
             max_threads_per_sm: 1536,
             int_gops: 0.0,
+            link_gbs: 32.0,
+            bus_derate: 0.0,
+            comm_launch_us: 0.0,
         }
         .derive(),
         DeviceSpec {
@@ -185,6 +211,9 @@ pub fn all_devices() -> Vec<DeviceSpec> {
             smem_kib: 164.0,
             max_threads_per_sm: 2048,
             int_gops: 0.0,
+            link_gbs: 300.0,
+            bus_derate: 0.0,
+            comm_launch_us: 0.0,
         }
         .derive(),
         DeviceSpec {
@@ -206,6 +235,9 @@ pub fn all_devices() -> Vec<DeviceSpec> {
             smem_kib: 100.0,
             max_threads_per_sm: 1536,
             int_gops: 0.0,
+            link_gbs: 64.0,
+            bus_derate: 0.0,
+            comm_launch_us: 0.0,
         }
         .derive(),
     ]
@@ -276,5 +308,20 @@ mod tests {
     fn lookup_case_insensitive() {
         assert!(device_by_name("A100").is_some());
         assert!(device_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn comm_internals_derived_and_plausible() {
+        for d in all_devices() {
+            assert!(d.link_gbs > 0.0, "{}", d.name);
+            assert!(d.bus_derate >= 0.55 && d.bus_derate <= 0.80, "{}", d.name);
+            assert!(d.comm_launch_us >= 5.0 && d.comm_launch_us <= 15.0);
+            assert!(d.link_bw() < d.link_gbs * 1e9);
+        }
+        // NVLink on the A100 dominates every PCIe-class link.
+        let a100 = device_by_name("a100").unwrap();
+        for d in all_devices() {
+            assert!(a100.link_gbs >= d.link_gbs);
+        }
     }
 }

@@ -10,6 +10,7 @@ use std::collections::HashSet;
 use crate::ops::{Counters, CustomOp, GemmOp, Op, UtilOp};
 use crate::util::prng::{hash64, Rng};
 
+use super::comm;
 use super::custom;
 use super::device::{device_by_name, DeviceSpec};
 use super::gemm::{self, GemmConfig};
@@ -170,6 +171,9 @@ impl Gpu {
             }
             Op::Custom(c) => custom::custom_latency(&self.spec, c, freq_ghz)
                 .ok_or(ExecError::UnsupportedKernel),
+            // Collectives run on the copy/NCCL engines: link-bound, not
+            // core-clock-bound, so `freq_ghz` does not enter.
+            Op::Comm(c) => Ok(comm::comm_latency(&self.spec, c)),
         }
     }
 
@@ -198,6 +202,12 @@ impl Gpu {
             }
             Op::Util(u) => Ok(utility::util_counters(&self.spec, u)),
             Op::Custom(c) => Ok(custom::custom_counters(&self.spec, c)),
+            // Link traffic stages through HBM on both ends; no math.
+            Op::Comm(c) => Ok(Counters {
+                dram_bytes: c.io_bytes(),
+                mem_insts: c.io_bytes() / 16.0,
+                ..Counters::default()
+            }),
         }
     }
 
@@ -232,6 +242,8 @@ impl Gpu {
         let util = match op {
             Op::Gemm(g) => gemm::utilization(&self.spec, g, base),
             Op::Util(_) => 0.12,
+            // Copy engines barely heat the die.
+            Op::Comm(_) => 0.05,
             Op::Custom(c) => {
                 let peak = self
                     .spec

@@ -9,6 +9,7 @@
 //! offers: execute an op, get a duration + NCU-style counters. See
 //! DESIGN.md §1 for the substitution argument, §3 for the model.
 
+pub mod comm;
 pub mod custom;
 pub mod device;
 pub mod executor;

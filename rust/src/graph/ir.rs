@@ -73,6 +73,16 @@ pub fn output_shape(op: &Op) -> TensorShape {
                 TensorShape { batch: batch * heads, rows: q_len, cols: head_dim }
             }
         },
+        // AllReduce keeps the per-rank tensor size; AllGather concatenates
+        // one shard from every participant.
+        Op::Comm(c) => match c.kind {
+            crate::ops::CommKind::AllReduce => {
+                TensorShape { batch: 1, rows: 1, cols: c.elems }
+            }
+            crate::ops::CommKind::AllGather => {
+                TensorShape { batch: 1, rows: c.participants.max(1), cols: c.elems }
+            }
+        },
     }
 }
 
@@ -86,6 +96,12 @@ pub enum GraphError {
     ShapeMismatch { node: usize, kind: &'static str, input: usize },
     #[error("marked output {0} is not a node")]
     BadOutput(usize),
+    #[error("node {node}: collective has no producer to synchronize")]
+    DanglingComm { node: usize },
+    #[error(
+        "node {node}: row-sharded partial sum ({parts} parts) is never all-reduced"
+    )]
+    UnreducedShard { node: usize, parts: usize },
 }
 
 /// A DNN model as a dependency graph of simulator ops.
@@ -194,25 +210,63 @@ impl ModelGraph {
 
     /// Structural validation: every edge points backward (acyclicity), no
     /// utility node produces more elements than any of its inputs supplies
-    /// (reductions and gated activations may consume *more*), and marked
-    /// outputs exist.
+    /// (reductions and gated activations may consume *more*), marked
+    /// outputs exist, and sharded subgraphs are consistent — collectives
+    /// synchronize a real producer, and every row-sharded GEMM (a partial
+    /// sum) is completed by an AllReduce over the same participant count.
     pub fn validate(&self) -> Result<(), GraphError> {
+        let mut has_shards = false;
         for (i, n) in self.nodes.iter().enumerate() {
             for inp in &n.inputs {
                 if inp.0 >= i {
                     return Err(GraphError::ForwardEdge { node: i, input: inp.0 });
                 }
             }
-            if let Op::Util(u) = n.op {
-                let need = output_shape(&n.op).elems();
-                for inp in &n.inputs {
-                    let have = output_shape(&self.nodes[inp.0].op).elems();
-                    if have < need {
-                        return Err(GraphError::ShapeMismatch {
-                            node: i,
-                            kind: u.kind.name(),
-                            input: inp.0,
-                        });
+            match n.op {
+                Op::Util(u) => {
+                    let need = output_shape(&n.op).elems();
+                    for inp in &n.inputs {
+                        let have = output_shape(&self.nodes[inp.0].op).elems();
+                        if have < need {
+                            return Err(GraphError::ShapeMismatch {
+                                node: i,
+                                kind: u.kind.name(),
+                                input: inp.0,
+                            });
+                        }
+                    }
+                }
+                Op::Comm(_) => {
+                    if n.inputs.is_empty() {
+                        return Err(GraphError::DanglingComm { node: i });
+                    }
+                }
+                Op::Gemm(g) => {
+                    has_shards |= g.shard.is_some();
+                }
+                _ => {}
+            }
+        }
+        if has_shards {
+            let cons = self.consumers();
+            for (i, n) in self.nodes.iter().enumerate() {
+                if let Op::Gemm(g) = n.op {
+                    if let Some(s) = g.shard {
+                        if s.dim == crate::ops::ShardDim::Row && s.parts > 1 {
+                            let reduced = cons[i].iter().any(|&c| {
+                                matches!(
+                                    self.nodes[c.0].op,
+                                    Op::Comm(cm) if cm.kind == crate::ops::CommKind::AllReduce
+                                        && cm.participants == s.parts
+                                )
+                            });
+                            if !reduced {
+                                return Err(GraphError::UnreducedShard {
+                                    node: i,
+                                    parts: s.parts,
+                                });
+                            }
+                        }
                     }
                 }
             }
@@ -362,6 +416,44 @@ mod tests {
             causal: true,
         });
         assert_eq!(output_shape(&dec).elems(), 2 * 8 * 16);
+    }
+
+    #[test]
+    fn validate_checks_shard_consistency() {
+        use crate::ops::{CommOp, ShardDim};
+        // Row-sharded GEMM without its AllReduce: a partial sum escapes.
+        let mut g = ModelGraph::new();
+        let part = g.add_node(
+            Op::Gemm(GemmOp::linear(8, 8, 64, DType::F32).sharded(ShardDim::Row, 4)),
+            &[],
+        );
+        assert!(matches!(
+            g.validate(),
+            Err(GraphError::UnreducedShard { node: 0, parts: 4 })
+        ));
+        // Completing it with a matching AllReduce makes the graph valid.
+        g.add_node(Op::Comm(CommOp::all_reduce(64, DType::F32, 4)), &[part]);
+        g.validate().unwrap();
+        // Column shards produce full partial tensors — no reduce needed.
+        let mut c = ModelGraph::new();
+        c.add_node(
+            Op::Gemm(GemmOp::linear(8, 64, 8, DType::F32).sharded(ShardDim::Col, 4)),
+            &[],
+        );
+        c.validate().unwrap();
+        // A collective with nothing to synchronize is malformed.
+        let mut d = ModelGraph::new();
+        d.add_node(Op::Comm(CommOp::all_reduce(64, DType::F32, 2)), &[]);
+        assert!(matches!(d.validate(), Err(GraphError::DanglingComm { node: 0 })));
+    }
+
+    #[test]
+    fn comm_output_shapes() {
+        use crate::ops::CommOp;
+        let ar = Op::Comm(CommOp::all_reduce(128, DType::F32, 4));
+        let ag = Op::Comm(CommOp::all_gather(128, DType::F32, 4));
+        assert_eq!(output_shape(&ar).elems(), 128);
+        assert_eq!(output_shape(&ag).elems(), 512);
     }
 
     #[test]

@@ -28,7 +28,7 @@ use std::collections::{HashMap, HashSet};
 
 use crate::gpusim::custom;
 use crate::gpusim::DeviceSpec;
-use crate::ops::{CustomOp, DType, GemmApi, Op, UtilKind};
+use crate::ops::{CommOp, CustomOp, DType, GemmApi, GemmOp, Op, ShardDim, UtilKind, UtilOp};
 
 use super::ir::{ModelGraph, Node, NodeId};
 
@@ -440,6 +440,224 @@ impl Pass for DeadNodeElimination {
     }
 }
 
+/// Walk backwards from `down` through elementwise utility nodes only,
+/// collecting the utils crossed; succeeds when the walk roots at exactly
+/// one GEMM (the FFN up-projection pattern: `up → activation [→ gate
+/// multiply] → down`). Reductions (LayerNorm etc.) abort the walk — they
+/// separate FFN internals from residual plumbing.
+fn ffn_chain(g: &ModelGraph, down: usize) -> Option<(usize, Vec<usize>)> {
+    let mut utils = Vec::new();
+    let mut gemms: Vec<usize> = Vec::new();
+    let mut seen: HashSet<usize> = HashSet::new();
+    let mut stack: Vec<usize> =
+        g.node(NodeId(down)).inputs.iter().map(|x| x.index()).collect();
+    while let Some(i) = stack.pop() {
+        if !seen.insert(i) {
+            continue;
+        }
+        match g.node(NodeId(i)).op {
+            Op::Util(u) => {
+                if u.kind.is_reduction() {
+                    return None;
+                }
+                utils.push(i);
+                stack.extend(g.node(NodeId(i)).inputs.iter().map(|x| x.index()));
+            }
+            Op::Gemm(_) => {
+                if !gemms.contains(&i) {
+                    gemms.push(i);
+                }
+            }
+            _ => return None,
+        }
+    }
+    if gemms.len() == 1 && !utils.is_empty() {
+        Some((gemms[0], utils))
+    } else {
+        None
+    }
+}
+
+/// Megatron-style tensor parallelism: split every attention and FFN GEMM
+/// across `tp` ranks and insert the collectives that stitch the shards
+/// back together. The rewritten graph describes **one rank's** work —
+/// ranks are symmetric, so cluster latency is this rank's makespan with
+/// the collectives priced at the full participant count.
+///
+/// Per attention pattern: the Q/K/V projections feeding the scores BMM
+/// split column-wise (each rank computes `heads/tp` heads), both
+/// attention BMMs and the softmax shrink to their head slice, and the
+/// output projection splits row-wise — its partial sum is completed by
+/// an inserted AllReduce. Per FFN: the up-projection splits column-wise,
+/// the intermediate activation shrinks, and the down-projection splits
+/// row-wise + AllReduce. Patterns whose dimensions don't divide by `tp`
+/// are left untouched (and counted by nobody); `tp <= 1` is the
+/// single-device identity — the graph is not rebuilt at all, preserving
+/// the bit-for-bit `Placement::single()` guarantee.
+///
+/// Returns the number of GEMMs sharded.
+#[derive(Clone, Copy, Debug)]
+pub struct TensorParallelPass {
+    pub tp: usize,
+}
+
+impl Pass for TensorParallelPass {
+    fn name(&self) -> &'static str {
+        "tensor-parallel"
+    }
+
+    fn run(&self, g: &mut ModelGraph, _ctx: &PassCtx<'_>) -> usize {
+        let tp = self.tp;
+        if tp <= 1 {
+            return 0;
+        }
+        let cons = g.consumers();
+        let mut replace: HashMap<usize, Op> = HashMap::new();
+        let mut reduce_after: HashMap<usize, CommOp> = HashMap::new();
+        let mut sharded = 0usize;
+
+        // Attention: column-parallel Q/K/V, head-split BMMs + softmax,
+        // row-parallel output projection + AllReduce.
+        for m in match_attention(g, &cons) {
+            let Op::Gemm(s1) = g.node(NodeId(m.scores)).op else { continue };
+            let Op::Gemm(s2) = g.node(NodeId(m.ctx)).op else { continue };
+            let Op::Util(sm) = g.node(NodeId(m.softmax)).op else { continue };
+            if m.lanes % tp != 0 {
+                continue;
+            }
+            let qkvs: Vec<(usize, GemmOp)> = g
+                .node(NodeId(m.scores))
+                .inputs
+                .iter()
+                .filter_map(|x| match g.node(*x).op {
+                    Op::Gemm(q) if q.api == GemmApi::Linear && q.shard.is_none() => {
+                        Some((x.index(), q))
+                    }
+                    _ => None,
+                })
+                .collect();
+            let proj = cons[m.ctx].iter().find_map(|c| match g.node(*c).op {
+                Op::Gemm(p) if p.api == GemmApi::Linear && p.shard.is_none() => {
+                    Some((c.index(), p))
+                }
+                _ => None,
+            });
+            let Some((pi, p)) = proj else { continue };
+            // Ragged serving batches share one QKV projection (and one
+            // output projection) across per-sequence attention chains:
+            // a producer already sharded by an earlier match is fine as
+            // long as this match wants the identical shard.
+            let consistent = |i: &usize, want: GemmOp| match replace.get(i) {
+                None => true,
+                Some(Op::Gemm(r)) => *r == want,
+                _ => false,
+            };
+            if qkvs.is_empty()
+                || qkvs.iter().any(|(_, q)| q.n % tp != 0)
+                || p.k % tp != 0
+                || replace.contains_key(&m.scores)
+                || !consistent(&pi, p.sharded(ShardDim::Row, tp))
+                || qkvs
+                    .iter()
+                    .any(|(qi, q)| !consistent(qi, q.sharded(ShardDim::Col, tp)))
+            {
+                continue;
+            }
+            for (qi, q) in qkvs {
+                if replace.insert(qi, Op::Gemm(q.sharded(ShardDim::Col, tp))).is_none() {
+                    sharded += 1;
+                }
+            }
+            replace.insert(m.scores, Op::Gemm(GemmOp { batch: s1.batch / tp, ..s1 }));
+            replace.insert(m.ctx, Op::Gemm(GemmOp { batch: s2.batch / tp, ..s2 }));
+            sharded += 2;
+            replace.insert(m.softmax, Op::Util(UtilOp { rows: sm.rows / tp, ..sm }));
+            if replace.insert(pi, Op::Gemm(p.sharded(ShardDim::Row, tp))).is_none() {
+                sharded += 1;
+            }
+            reduce_after
+                .insert(pi, CommOp::all_reduce(p.batch * p.m * p.n, p.dtype, tp));
+        }
+
+        // FFN: column-parallel up, shrunk activation chain, row-parallel
+        // down + AllReduce. `up.n == down.k` is the plain FFN; `2·down.k`
+        // is the gated (up‖gate) projection.
+        for di in 0..g.len() {
+            if replace.contains_key(&di) {
+                continue;
+            }
+            let Op::Gemm(d) = g.node(NodeId(di)).op else { continue };
+            if d.api != GemmApi::Linear || d.shard.is_some() {
+                continue;
+            }
+            let Some((ui, utils)) = ffn_chain(g, di) else { continue };
+            if replace.contains_key(&ui) {
+                continue;
+            }
+            let Op::Gemm(u) = g.node(NodeId(ui)).op else { continue };
+            if u.api != GemmApi::Linear
+                || u.shard.is_some()
+                || !(u.n == d.k || u.n == 2 * d.k)
+                || u.n % tp != 0
+                || d.k % tp != 0
+            {
+                continue;
+            }
+            let chain_ok = utils.iter().all(|&x| match g.node(NodeId(x)).op {
+                Op::Util(w) => w.cols % tp == 0 && !replace.contains_key(&x),
+                _ => false,
+            });
+            if !chain_ok {
+                continue;
+            }
+            replace.insert(ui, Op::Gemm(u.sharded(ShardDim::Col, tp)));
+            replace.insert(di, Op::Gemm(d.sharded(ShardDim::Row, tp)));
+            sharded += 2;
+            for &x in &utils {
+                if let Op::Util(w) = g.node(NodeId(x)).op {
+                    replace.insert(x, Op::Util(UtilOp { cols: w.cols / tp, ..w }));
+                }
+            }
+            reduce_after
+                .insert(di, CommOp::all_reduce(d.batch * d.m * d.n, d.dtype, tp));
+        }
+
+        if sharded == 0 {
+            return 0;
+        }
+
+        // Rebuild with collective insertion (rebuild_graph can only drop
+        // or replace nodes, never add): each node re-emits under its
+        // replacement op; a node carrying a pending AllReduce is followed
+        // by the collective, and the remap points consumers at the
+        // *reduced* tensor.
+        let mut out = ModelGraph::new();
+        let mut remap: Vec<NodeId> = Vec::with_capacity(g.len());
+        for i in 0..g.len() {
+            let node = g.node(NodeId(i));
+            let op = replace.get(&i).copied().unwrap_or(node.op);
+            let ins: Vec<NodeId> = node.inputs.iter().map(|x| remap[x.index()]).collect();
+            let id = out.add_node(op, &ins);
+            if node.causal {
+                out.mark_causal(id);
+            }
+            if node.kv_groups > 1 {
+                out.mark_kv_groups(id, node.kv_groups);
+            }
+            if let Some(c) = reduce_after.get(&i) {
+                remap.push(out.add_node(Op::Comm(*c), &[id]));
+            } else {
+                remap.push(id);
+            }
+        }
+        for &o in g.outputs() {
+            out.mark_output(remap[o.index()]);
+        }
+        *g = out;
+        sharded
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -720,6 +938,124 @@ mod tests {
         let before = g.len();
         assert_eq!(DeadNodeElimination.run(&mut g, &PassCtx::structural()), 0);
         assert_eq!(g.len(), before);
+    }
+
+    #[test]
+    fn tp1_is_the_identity() {
+        let cfg = zoo::gpt2_large();
+        let g0 = cfg.graph(1, 64);
+        let mut g = g0.clone();
+        assert_eq!(TensorParallelPass { tp: 1 }.run(&mut g, &PassCtx::structural()), 0);
+        assert_eq!(g.len(), g0.len());
+        assert_eq!(g.lower(), g0.lower(), "tp = 1 must not rebuild the graph");
+    }
+
+    #[test]
+    fn tp2_shards_every_block_and_inserts_collectives() {
+        for cfg in [zoo::gpt2_large(), zoo::qwen3_0_6b()] {
+            let g0 = cfg.graph(1, 128);
+            let mut g = g0.clone();
+            let tp = 2usize;
+            let n = TensorParallelPass { tp }.run(&mut g, &PassCtx::structural());
+            // Per block: qkv + scores + ctx + proj + FFN up + FFN down.
+            assert_eq!(n, 6 * cfg.layers, "{}", cfg.name);
+            g.validate().unwrap();
+            // Two AllReduces per block: after proj and after FFN down.
+            let comms: Vec<CommOp> = g
+                .nodes()
+                .iter()
+                .filter_map(|nd| match nd.op {
+                    Op::Comm(c) => Some(c),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(comms.len(), 2 * cfg.layers, "{}", cfg.name);
+            assert!(comms
+                .iter()
+                .all(|c| c.kind == crate::ops::CommKind::AllReduce && c.participants == tp));
+            // Collective payload matches the shard math: each AllReduce
+            // carries a full rows×hidden activation.
+            assert!(comms.iter().all(|c| c.elems == 128 * cfg.hidden), "{}", cfg.name);
+            // FLOP conservation: the rank graph plus its (tp−1) peers do
+            // exactly the original GEMM work.
+            let gemm_flops = |gr: &ModelGraph| -> f64 {
+                gr.nodes()
+                    .iter()
+                    .filter_map(|nd| match nd.op {
+                        Op::Gemm(gm) => Some(gm.flops()),
+                        _ => None,
+                    })
+                    .sum()
+            };
+            let orig = gemm_flops(&g0);
+            let rank = gemm_flops(&g);
+            let unsharded: f64 = g0
+                .nodes()
+                .iter()
+                .zip(g.nodes().iter().filter(|nd| !matches!(nd.op, Op::Comm(_))))
+                .filter(|(a, b)| a.op == b.op)
+                .filter_map(|(a, _)| match a.op {
+                    Op::Gemm(gm) => Some(gm.flops()),
+                    _ => None,
+                })
+                .sum();
+            assert_eq!(
+                (rank - unsharded) * tp as f64 + unsharded,
+                orig,
+                "{}: shard FLOPs must sum to the unsharded total",
+                cfg.name
+            );
+        }
+    }
+
+    #[test]
+    fn tp2_shards_ragged_mixed_batches_with_shared_projections() {
+        // Serving iterations share one QKV / output projection across
+        // per-sequence attention chains; every chain must still shard —
+        // a half-sharded iteration would price one slot's BMMs at full
+        // head count against a column-sharded QKV.
+        use crate::models::SeqSlot;
+        let cfg = zoo::gpt2_large();
+        let slots = [SeqSlot::prefill(0, 64), SeqSlot::decode(32)];
+        let mut g = cfg.mixed_batch_graph(&slots);
+        let n = TensorParallelPass { tp: 2 }.run(&mut g, &PassCtx::structural());
+        // Per block: qkv + proj + FFN up/down, plus (scores, ctx) per slot.
+        assert_eq!(n, (4 + 2 * slots.len()) * cfg.layers);
+        g.validate().unwrap();
+        for nd in g.nodes() {
+            if let Op::Gemm(gm) = nd.op {
+                if gm.api == GemmApi::Bmm {
+                    assert_eq!(gm.batch, cfg.heads / 2, "every slot runs the head slice");
+                }
+            }
+        }
+        let comms = g.nodes().iter().filter(|nd| matches!(nd.op, Op::Comm(_))).count();
+        assert_eq!(comms, 2 * cfg.layers, "one AllReduce per proj and FFN down");
+    }
+
+    #[test]
+    fn tp_composes_with_fusion_and_respects_divisibility() {
+        // TP then fusion: the head-split attention still fuses, over
+        // lanes/tp blocks.
+        let cfg = zoo::gpt2_large();
+        let mut g = cfg.graph(1, 64);
+        TensorParallelPass { tp: 2 }.run(&mut g, &PassCtx::structural());
+        let rewrites = AttentionFusion::default().run(&mut g, &PassCtx::structural());
+        assert_eq!(rewrites, cfg.layers);
+        g.validate().unwrap();
+        for n in g.nodes() {
+            if let Op::Custom(CustomOp::FlashAttn { batch, heads, .. }) = n.op {
+                assert_eq!(batch * heads, cfg.heads / 2, "half the heads per rank");
+            }
+        }
+        // A degree that does not divide the head count declines cleanly.
+        let g0 = cfg.graph(1, 64);
+        let mut g2 = g0.clone();
+        let n = TensorParallelPass { tp: 7 }.run(&mut g2, &PassCtx::structural());
+        // Attention (20 heads % 7 ≠ 0) is skipped; whether FFN shards
+        // depends on divisibility, so just require a valid result.
+        let _ = n;
+        g2.validate().unwrap();
     }
 
     #[test]

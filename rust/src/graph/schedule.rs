@@ -49,6 +49,25 @@ pub fn schedule(g: &ModelGraph, streams: usize, dur_s: &[f64]) -> Schedule {
         for inp in &g.node(id).inputs {
             ready = ready.max(finish[inp.index()]);
         }
+        // Collectives are cross-device sync points: every rank (and so
+        // every local stream) rendezvouses, so the collective starts after
+        // ALL stream frontiers and advances them together. On one stream
+        // this degenerates to the ordinary sequential placement, keeping
+        // the bit-for-bit `streams = 1` guarantee.
+        if matches!(g.node(id).op, Op::Comm(_)) {
+            let mut start = ready;
+            for &t in &free {
+                start = start.max(t);
+            }
+            let end = start + dur_s[i];
+            finish[i] = end;
+            for t in free.iter_mut() {
+                *t = end;
+            }
+            makespan = makespan.max(end);
+            ops.push(ScheduledOp { id, stream: 0, start_s: start, finish_s: end });
+            continue;
+        }
         // On one stream `ready <= free[0]` always holds (producers ran
         // earlier on the same stream), so `start` accumulates exactly the
         // sequential sum `total += dur` of the legacy trace path.
@@ -204,6 +223,28 @@ mod tests {
             _ => None,
         };
         assert_eq!(predict_graph_latency(&g2, 1, only_gemm), None);
+    }
+
+    #[test]
+    fn collective_is_a_barrier_across_streams() {
+        use crate::ops::CommOp;
+        // a(1) ∥ b(4) on two streams, then an AllReduce fed only by a:
+        // the collective still waits for *every* frontier (b included)
+        // and both streams resume after it.
+        let mut g = ModelGraph::new();
+        let a = g.add_node(gemm(), &[]);
+        g.add_node(gemm(), &[]);
+        let ar = g.add_node(
+            Op::Comm(CommOp::all_reduce(64 * 64, DType::F32, 2)),
+            &[a],
+        );
+        g.add_node(gemm(), &[ar]);
+        let d = vec![1.0, 4.0, 0.5, 1.0];
+        let s = schedule(&g, 2, &d);
+        assert_eq!(s.ops[2].start_s, 4.0, "barrier waits for the slow stream");
+        assert_eq!(s.makespan_s, 5.5);
+        // On one stream the collective is just another sequential op.
+        assert_eq!(schedule(&g, 1, &d).makespan_s, 6.5);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! ```text
 //! pm2lat report devices                     # Table I
 //! pm2lat predict --device a100 --model gpt2-large --batch 8 \
-//!                [--streams 4] [--fuse]   # graph schedule + attention fusion
+//!                [--streams 4] [--fuse] [--tp 2]  # graph schedule + fusion + TP sharding
 //! pm2lat generate --device a100 --model qwen3-0.6b --prompt 512 --gen 64 \
 //!                [--streams 4] [--fuse]   # autoregressive decode loop
 //! pm2lat layer --device l4 --dtype bf16 --m 1024 --n 1024 --k 4096
@@ -13,9 +13,10 @@
 //! pm2lat serve-bench --n 50000 --threads 8 [--decode] [--slo-p99-us 500]
 //! pm2lat serve-sim --device a100 --model gpt2-large --n 64 --qps 8 \
 //!                [--arrival poisson|bursty] [--trace file.json] \
-//!                [--policy continuous|static] [--admit fcfs|sjf] \
+//!                [--policy continuous|static] \
+//!                [--admit fcfs|sjf|priority|fair-share] [--classes 4] \
 //!                [--max-batch 16] [--chunk 512] [--block-tokens 16] \
-//!                [--sweep] [--slo-ttft-ms 500] [--service] [--smoke]
+//!                [--tp 2] [--sweep] [--slo-ttft-ms 500] [--service] [--smoke]
 //! ```
 
 use anyhow::{anyhow, Result};
@@ -316,9 +317,13 @@ fn serve_sim(args: &Args) -> Result<()> {
     let policy = BatchingMode::parse(args.opt_or("policy", "continuous"))
         .ok_or_else(|| anyhow!("bad --policy (continuous|static)"))?;
     let admission = Admission::parse(args.opt_or("admit", "fcfs"))
-        .ok_or_else(|| anyhow!("bad --admit (fcfs|sjf)"))?;
+        .ok_or_else(|| anyhow!("bad --admit (fcfs|sjf|priority|fair-share)"))?;
     let block_tokens = args.opt_usize("block-tokens", serving::DEFAULT_BLOCK_TOKENS).max(1);
     let streams = args.opt_usize("streams", 1).max(1);
+    let tp = args.opt_usize("tp", 1).max(1);
+    if tp > 64 {
+        return Err(anyhow!("--tp {tp} is past any modeled ring (max 64)"));
+    }
 
     // The request population: recorded JSON, or a synthetic unit-rate
     // trace. Parsed *before* the predictor build so input mistakes
@@ -346,6 +351,15 @@ fn serve_sim(args: &Args) -> Result<()> {
     if unit.is_empty() {
         return Err(anyhow!("empty request trace"));
     }
+    // Priority classes for the priority / fair-share admission policies:
+    // stamp id % K onto the population (recorded traces already carry
+    // their own `priority` field; --classes restamps deliberately).
+    let classes = args.opt_usize("classes", 1).clamp(1, 256);
+    let unit = if classes > 1 {
+        serving::with_priority_classes(&unit, classes as u8)
+    } else {
+        unit
+    };
     let recorded = args.opt("trace").is_some();
     if recorded && args.opt_f64("qps", 0.0) > 0.0 {
         return Err(anyhow!(
@@ -400,7 +414,7 @@ fn serve_sim(args: &Args) -> Result<()> {
         )?),
         None => None,
     };
-    let mut price = |g: &pm2lat::graph::ModelGraph| -> Option<f64> {
+    let mut base_price = |g: &pm2lat::graph::ModelGraph| -> Option<f64> {
         match &coordinator {
             Some(c) => c
                 .submit_graphs(&[GraphRequest {
@@ -415,6 +429,21 @@ fn serve_sim(args: &Args) -> Result<()> {
                 .as_ref()
                 .expect("direct path built when --service is absent")
                 .predict_graph(&gpu, g, streams),
+        }
+    };
+    // Tensor parallelism: every iteration graph is rewritten to one
+    // rank's sharded work (collectives included) before pricing, so all
+    // downstream numbers — solo, report, sweeps, SLO search — are
+    // cluster-level. tp = 1 is the unwrapped closure, bit for bit.
+    let tp_pass = pm2lat::graph::TensorParallelPass { tp };
+    let tp_ctx = PassCtx::structural();
+    let mut price = |g: &pm2lat::graph::ModelGraph| -> Option<f64> {
+        if tp <= 1 {
+            base_price(g)
+        } else {
+            let mut rank = g.clone();
+            tp_pass.run(&mut rank, &tp_ctx);
+            base_price(&rank)
         }
     };
 
@@ -440,8 +469,9 @@ fn serve_sim(args: &Args) -> Result<()> {
     };
 
     println!(
-        "serve-sim: {model} on {device} | {} requests at ~{qps:.2} req/s | \
+        "serve-sim: {model} on {device}{} | {} requests at ~{qps:.2} req/s | \
          policy {} / {} | batch ≤ {}, chunk {} | {} KV blocks × {} tokens{}",
+        if tp > 1 { format!(" × {tp} (tensor-parallel)") } else { String::new() },
         trace.len(),
         sim.scheduler.mode.name(),
         sim.scheduler.admission.name(),
@@ -586,12 +616,19 @@ fn predict_model(args: &Args) -> Result<()> {
     let seq = args.opt_usize("seq", 512);
     let streams = args.opt_usize("streams", 1).max(1);
     let fuse = args.flag("fuse");
+    let tp = args.opt_usize("tp", 1).max(1);
     let cfg = zoo::by_name(&model).ok_or_else(|| anyhow!("unknown model"))?;
     let mut gpu = Gpu::by_name(&device).ok_or_else(|| anyhow!("unknown device"))?;
     // Fusion needs the custom-kernel profile to price fused attention.
     let pl = Pm2Lat::build_dtypes(&mut gpu, &ProfileSpec::experiment(), &[cfg.dtype], fuse);
     gpu.reset();
-    let mut g = cfg.graph(batch, seq);
+    // TP shards first (head-sliced attention still fuses afterwards); the
+    // prediction is then one rank's makespan, collectives included.
+    let mut g = cfg.graph_tp(batch, seq, tp);
+    if tp > 1 {
+        let comms = g.lower().iter().filter(|op| matches!(op, Op::Comm(_))).count();
+        println!("tensor-parallel: {tp} ranks, {comms} collectives in the rank graph");
+    }
     if fuse {
         let cost = |op: &Op| pl.predict(&gpu, op);
         let ctx = PassCtx::with_cost(&gpu.spec, &cost);
@@ -602,7 +639,8 @@ fn predict_model(args: &Args) -> Result<()> {
         .predict_graph(&gpu, &g, streams)
         .ok_or_else(|| anyhow!("model unsupported on this device"))?;
     println!(
-        "{model} BS={batch} seq={seq} on {device} (streams={streams}): predicted {:.1} ms",
+        "{model} BS={batch} seq={seq} on {device}{} (streams={streams}): predicted {:.1} ms",
+        if tp > 1 { format!(" × {tp}") } else { String::new() },
         pred * 1e3
     );
     match gpu.check_memory(cfg.memory_bytes(batch, seq)) {

@@ -322,16 +322,36 @@ impl TransformerConfig {
     /// KV-cache streams, so the whole step prices through the
     /// memory-bound routes. For enc–dec models the per-layer
     /// cross-attention reads its cached encoder KV, approximated at
-    /// `kv_len` entries (the cached cross KV never grows; callers that
-    /// know the true prompt length overestimate late steps slightly).
+    /// `kv_len` entries — callers that know the true prompt length should
+    /// use [`TransformerConfig::decode_graph_with_cross`], which this
+    /// method delegates to.
     pub fn decode_graph(&self, batch: usize, kv_len: usize) -> ModelGraph {
+        self.decode_graph_with_cross(batch, kv_len, kv_len)
+    }
+
+    /// [`TransformerConfig::decode_graph`] with the cached cross-KV
+    /// length spelled out: enc–dec cross-attention reads exactly
+    /// `cross_len` encoder entries per layer — the prompt length, fixed
+    /// at prefill — instead of the growing `kv_len` (which overestimated
+    /// every late step). `cross_len` is ignored by decoder-only models,
+    /// and `cross_len == kv_len` reproduces the legacy approximation.
+    pub fn decode_graph_with_cross(
+        &self,
+        batch: usize,
+        kv_len: usize,
+        cross_len: usize,
+    ) -> ModelGraph {
         assert!(kv_len >= 1, "decode step needs a non-empty KV cache");
+        assert!(
+            self.enc_layers == 0 || cross_len >= 1,
+            "enc–dec decode needs a non-empty cross KV cache"
+        );
         let mut g = ModelGraph::new();
         let mut cur: Option<NodeId> = None;
         for _ in 0..self.layers {
             let block = self.block_graph(batch, 1, kv_len, true, &mut g, cur);
             cur = Some(if self.enc_layers > 0 {
-                self.cross_attn_decode_graph(batch, kv_len, &mut g, block)
+                self.cross_attn_decode_graph(batch, cross_len, &mut g, block)
             } else {
                 block
             });
@@ -343,6 +363,29 @@ impl TransformerConfig {
     /// Lowered view of [`TransformerConfig::decode_graph`].
     pub fn decode_trace(&self, batch: usize, kv_len: usize) -> Vec<Op> {
         self.decode_graph(batch, kv_len).lower()
+    }
+
+    /// One tensor-parallel rank's prefill graph: [`TransformerConfig::graph`]
+    /// rewritten by [`crate::graph::TensorParallelPass`] — sharded GEMMs
+    /// plus the AllReduces that stitch the ranks together. `tp <= 1`
+    /// skips the pass entirely, so the single-device placement is the
+    /// plain builder output bit for bit.
+    pub fn graph_tp(&self, batch: usize, seq: usize, tp: usize) -> ModelGraph {
+        Self::apply_tp(self.graph(batch, seq), tp)
+    }
+
+    /// One tensor-parallel rank's decode-step graph (see
+    /// [`TransformerConfig::graph_tp`]).
+    pub fn decode_graph_tp(&self, batch: usize, kv_len: usize, tp: usize) -> ModelGraph {
+        Self::apply_tp(self.decode_graph(batch, kv_len), tp)
+    }
+
+    fn apply_tp(mut g: ModelGraph, tp: usize) -> ModelGraph {
+        if tp > 1 {
+            use crate::graph::{Pass, PassCtx, TensorParallelPass};
+            TensorParallelPass { tp }.run(&mut g, &PassCtx::structural());
+        }
+        g
     }
 
     /// Decode-step cross-attention (enc–dec models): the new token's
@@ -492,7 +535,8 @@ impl TransformerConfig {
 
     /// Expand a generation request: the prefill graph over the prompt
     /// plus one decode graph per generated token (step `t` reads a cache
-    /// of `prompt_len + t + 1` entries). Consecutive steps differ only in
+    /// of `prompt_len + t + 1` entries; enc–dec cross-attention reads the
+    /// fixed `prompt_len` cross KV). Consecutive steps differ only in
     /// their attention ops, so per-op caches absorb the projections.
     pub fn generation_graphs(
         &self,
@@ -501,7 +545,9 @@ impl TransformerConfig {
     ) -> (ModelGraph, Vec<ModelGraph>) {
         let prefill = self.graph(batch, spec.prompt_len);
         let steps = (0..spec.gen_len)
-            .map(|t| self.decode_graph(batch, spec.kv_len_at(t)))
+            .map(|t| {
+                self.decode_graph_with_cross(batch, spec.kv_len_at(t), spec.prompt_len)
+            })
             .collect();
         (prefill, steps)
     }
@@ -825,6 +871,71 @@ mod tests {
         let b = steps[1].lower();
         let shared = a.iter().filter(|op| b.contains(op)).count();
         assert!(shared * 10 >= a.len() * 7, "{shared} of {} ops shared", a.len());
+    }
+
+    #[test]
+    fn cross_length_aware_decode_reads_the_cached_prompt() {
+        let t5 = zoo::flan_t5_base();
+        // The legacy entry point is the cross_len == kv_len delegation.
+        assert_eq!(
+            t5.decode_graph(1, 64).lower(),
+            t5.decode_graph_with_cross(1, 64, 64).lower()
+        );
+        // With the true cross length, every layer's two cross-attention
+        // BMMs read exactly the prompt's 100 cached entries while
+        // self-attention still streams the full 200-token cache (100 and
+        // 200 both exceed the head dim, so `n.max(k)` is the KV length).
+        let g = t5.decode_graph_with_cross(1, 200, 100);
+        g.validate().unwrap();
+        let bmm_kvs: Vec<usize> = g
+            .lower()
+            .iter()
+            .filter_map(|op| match op {
+                Op::Gemm(gm) if gm.batch > 1 => Some(gm.n.max(gm.k)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(bmm_kvs.iter().filter(|&&kv| kv == 100).count(), 2 * t5.layers);
+        assert_eq!(bmm_kvs.iter().filter(|&&kv| kv == 200).count(), 2 * t5.layers);
+        // Decoder-only models ignore the cross length entirely.
+        let cfg = zoo::gpt2_large();
+        assert_eq!(
+            cfg.decode_graph(1, 64).lower(),
+            cfg.decode_graph_with_cross(1, 64, 7).lower()
+        );
+        // Generation expansion pins cross KV at the prompt length, so a
+        // late step is strictly cheaper than the old approximation.
+        let (_, steps) = t5.generation_graphs(1, &GenerationSpec::new(48, 3));
+        for (t, s) in steps.iter().enumerate() {
+            assert_eq!(s.lower(), t5.decode_graph_with_cross(1, 49 + t, 48).lower());
+        }
+        let flops = |g: &ModelGraph| -> f64 {
+            g.lower()
+                .iter()
+                .filter_map(|op| match op {
+                    Op::Gemm(gm) => Some(gm.flops()),
+                    _ => None,
+                })
+                .sum()
+        };
+        assert!(flops(&steps[2]) < flops(&t5.decode_graph(1, 51)));
+    }
+
+    #[test]
+    fn tp_builders_shard_ranks_and_degrade_to_identity() {
+        let cfg = zoo::gpt2_large();
+        // tp = 1 is the plain builder, bit for bit.
+        assert_eq!(cfg.graph_tp(1, 64, 1).lower(), cfg.graph(1, 64).lower());
+        assert_eq!(cfg.decode_graph_tp(1, 64, 1).lower(), cfg.decode_trace(1, 64));
+        // tp = 2 rank graphs carry sharded GEMMs and collectives.
+        for g in [cfg.graph_tp(1, 64, 2), cfg.decode_graph_tp(1, 64, 2)] {
+            g.validate().unwrap();
+            assert!(g.lower().iter().any(|op| matches!(op, Op::Comm(_))));
+            assert!(g
+                .lower()
+                .iter()
+                .any(|op| matches!(op, Op::Gemm(gm) if gm.shard.is_some())));
+        }
     }
 
     #[test]

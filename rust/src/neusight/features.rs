@@ -98,6 +98,9 @@ pub fn scale_seconds(dev: &DeviceSpec, op: &Op) -> f64 {
                 dev.peak_tflops(op.dtype()).unwrap_or(dev.fp32_tflops) * 1e12;
             c.flops() / peak
         }
+        // Collectives move bytes over the interconnect, not DRAM, but the
+        // DRAM scale is the closest "100% utilization" proxy NeuSight has.
+        Op::Comm(c) => c.io_bytes() / dev.dram_bw(),
     }
 }
 
@@ -105,9 +108,9 @@ pub fn features_for(dev: &DeviceSpec, op: &Op, tile: TileGuess) -> [f32; FEATURE
     match op {
         Op::Gemm(g) => gemm_features(dev, g, tile),
         Op::Util(u) => util_features(dev, u),
-        Op::Custom(_) => {
-            // NeuSight does not model custom kernels (a paper limitation);
-            // fall back to a GEMM-shaped encoding of the FLOP count.
+        Op::Custom(_) | Op::Comm(_) => {
+            // NeuSight models neither custom kernels nor collectives (a
+            // paper limitation); fall back to a neutral encoding.
             let mut f = [0f32; FEATURE_DIM];
             f[15] = 0.5;
             f

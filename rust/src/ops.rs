@@ -76,8 +76,30 @@ impl GemmApi {
     }
 }
 
-/// A dense GEMM: C[b] = A[b] (m×k) · B[b] (k×n) for b in 0..batch.
+/// Which GEMM dimension a tensor-parallel split shards. Megatron-style
+/// column parallelism splits the output dimension `n` (QKV / FFN-up);
+/// row parallelism splits the contraction dimension `k` (attention
+/// output projection / FFN-down) and leaves a partial sum that an
+/// AllReduce completes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShardDim {
+    Col,
+    Row,
+}
+
+/// Shard annotation on a GEMM: this op is one rank's `1/parts` slice of
+/// a tensor-parallel split along `dim`. The annotated dimensions are
+/// already divided — the op describes exactly the kernel one rank runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Shard {
+    pub dim: ShardDim,
+    pub parts: usize,
+}
+
+/// A dense GEMM: C[b] = A[b] (m×k) · B[b] (k×n) for b in 0..batch.
+/// `shard` records a tensor-parallel split (None for the ordinary
+/// single-device op; the constructors never set it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct GemmOp {
     pub api: GemmApi,
     pub batch: usize,
@@ -85,17 +107,56 @@ pub struct GemmOp {
     pub n: usize,
     pub k: usize,
     pub dtype: DType,
+    pub shard: Option<Shard>,
+}
+
+// Manual Hash: fields in declaration order (exactly what the derive
+// produced before `shard` existed), with `shard` folded in only when
+// present. Unsharded GEMMs therefore keep their pre-placement
+// `stable_hash` identities — the simulator noise streams and cache keys
+// they seed are bit-for-bit unchanged, which is what makes
+// `Placement::single()` reproduce historical predictions exactly.
+impl std::hash::Hash for GemmOp {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.api.hash(state);
+        self.batch.hash(state);
+        self.m.hash(state);
+        self.n.hash(state);
+        self.k.hash(state);
+        self.dtype.hash(state);
+        if let Some(s) = self.shard {
+            s.hash(state);
+        }
+    }
 }
 
 impl GemmOp {
     pub fn mm(m: usize, n: usize, k: usize, dtype: DType) -> GemmOp {
-        GemmOp { api: GemmApi::MatMul, batch: 1, m, n, k, dtype }
+        GemmOp { api: GemmApi::MatMul, batch: 1, m, n, k, dtype, shard: None }
     }
     pub fn linear(m: usize, n: usize, k: usize, dtype: DType) -> GemmOp {
-        GemmOp { api: GemmApi::Linear, batch: 1, m, n, k, dtype }
+        GemmOp { api: GemmApi::Linear, batch: 1, m, n, k, dtype, shard: None }
     }
     pub fn bmm(batch: usize, m: usize, n: usize, k: usize, dtype: DType) -> GemmOp {
-        GemmOp { api: GemmApi::Bmm, batch, m, n, k, dtype }
+        GemmOp { api: GemmApi::Bmm, batch, m, n, k, dtype, shard: None }
+    }
+    /// This op as one rank's slice of a `parts`-way split along `dim`.
+    /// The sharded dimension is divided here; callers pass the *full*
+    /// (unsharded) op.
+    pub fn sharded(mut self, dim: ShardDim, parts: usize) -> GemmOp {
+        assert!(parts >= 1, "a shard needs at least one part");
+        match dim {
+            ShardDim::Col => {
+                assert_eq!(self.n % parts, 0, "column split must divide n");
+                self.n /= parts;
+            }
+            ShardDim::Row => {
+                assert_eq!(self.k % parts, 0, "row split must divide k");
+                self.k /= parts;
+            }
+        }
+        self.shard = Some(Shard { dim, parts });
+        self
     }
     /// 2·b·m·n·k multiply-accumulate FLOPs.
     pub fn flops(&self) -> f64 {
@@ -301,12 +362,109 @@ impl CustomOp {
     }
 }
 
+/// Collective kinds used by tensor parallelism. Ring algorithms on the
+/// intra-node link: AllReduce completes row-parallel partial sums,
+/// AllGather reassembles column-parallel output slices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CommKind {
+    AllReduce,
+    AllGather,
+}
+
+impl CommKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommKind::AllReduce => "AllReduce",
+            CommKind::AllGather => "AllGather",
+        }
+    }
+    /// Ring steps for `p` participants: all-reduce is reduce-scatter +
+    /// all-gather (2(p−1) hops of `bytes/p`); all-gather is p−1 hops.
+    pub fn ring_steps(&self, participants: usize) -> usize {
+        let p = participants.max(1);
+        match self {
+            CommKind::AllReduce => 2 * (p - 1),
+            CommKind::AllGather => p - 1,
+        }
+    }
+}
+
+/// A collective over `elems` elements of `dtype` across `participants`
+/// ranks. `elems` is the size of the tensor each rank holds: the full
+/// partial-sum tensor for AllReduce, one shard for AllGather.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CommOp {
+    pub kind: CommKind,
+    pub elems: usize,
+    pub dtype: DType,
+    pub participants: usize,
+}
+
+impl CommOp {
+    pub fn all_reduce(elems: usize, dtype: DType, participants: usize) -> CommOp {
+        CommOp { kind: CommKind::AllReduce, elems, dtype, participants }
+    }
+    pub fn all_gather(elems: usize, dtype: DType, participants: usize) -> CommOp {
+        CommOp { kind: CommKind::AllGather, elems, dtype, participants }
+    }
+    /// Payload bytes held per rank.
+    pub fn bytes(&self) -> f64 {
+        (self.elems * self.dtype.bytes()) as f64
+    }
+    /// Per-rank link traffic of the ring algorithm: each of the
+    /// `ring_steps` hops sends and receives one `bytes/p` chunk, so a
+    /// single participant degenerates to zero — a local no-op.
+    pub fn io_bytes(&self) -> f64 {
+        let p = self.participants.max(1) as f64;
+        2.0 * self.kind.ring_steps(self.participants) as f64 * (self.bytes() / p)
+    }
+}
+
+/// Where a graph runs: the device set and the tensor-parallel degree.
+/// `single()` is the implicit placement every pre-placement call site
+/// assumed; the stack guarantees it reproduces those predictions
+/// bit-for-bit.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Placement {
+    /// One entry per rank; today's placements are symmetric (the same
+    /// device model replicated `tp` times).
+    pub devices: Vec<String>,
+    /// Tensor-parallel degree (== devices.len()).
+    pub tp: usize,
+}
+
+impl Placement {
+    /// The classic single-device placement.
+    pub fn single(device: &str) -> Placement {
+        Placement { devices: vec![device.to_string()], tp: 1 }
+    }
+    /// `tp` ranks of the same device model.
+    pub fn replicated(device: &str, tp: usize) -> Placement {
+        let tp = tp.max(1);
+        Placement { devices: vec![device.to_string(); tp], tp }
+    }
+    pub fn degree(&self) -> usize {
+        self.tp
+    }
+    pub fn is_single(&self) -> bool {
+        self.tp <= 1
+    }
+    /// Internal consistency: at least one rank, degree matches devices.
+    pub fn is_valid(&self) -> bool {
+        self.tp >= 1 && self.devices.len() == self.tp
+    }
+}
+
 /// Any simulated operation.
+// `Comm` is deliberately the LAST variant: derived `Hash` folds the
+// variant index in first, so appending keeps every existing op's
+// `stable_hash` (and the noise streams seeded from it) unchanged.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Op {
     Gemm(GemmOp),
     Util(UtilOp),
     Custom(CustomOp),
+    Comm(CommOp),
 }
 
 impl Op {
@@ -318,6 +476,7 @@ impl Op {
             Op::Gemm(g) => g.io_bytes(),
             Op::Util(u) => u.elems() * u.dtype.bytes() as f64 * u.passes(),
             Op::Custom(c) => c.io_bytes(),
+            Op::Comm(c) => c.io_bytes(),
         }
     }
 
@@ -331,6 +490,7 @@ impl Op {
                 | CustomOp::FlashAttn { dtype, .. }
                 | CustomOp::CutlassAttn { dtype, .. } => dtype,
             },
+            Op::Comm(c) => c.dtype,
         }
     }
     /// Stable 64-bit identity for noise seeding and caches. Hashes the
@@ -512,5 +672,76 @@ mod tests {
         assert!(!UtilKind::Relu.is_reduction());
         assert!(UtilKind::Softmax.is_reduction());
         assert_eq!(UtilKind::all().len(), 8);
+    }
+
+    #[test]
+    fn unsharded_gemm_hash_ignores_the_shard_slot() {
+        // The Placement::single() bit-for-bit guarantee starts here: an
+        // op with `shard: None` must hash exactly as it did before the
+        // field existed (fields in declaration order, nothing appended).
+        use crate::util::prng::StableHasher;
+        let g = GemmOp::linear(256, 512, 1024, DType::Bf16);
+        let mut h = StableHasher::new();
+        use std::hash::{Hash, Hasher};
+        g.api.hash(&mut h);
+        g.batch.hash(&mut h);
+        g.m.hash(&mut h);
+        g.n.hash(&mut h);
+        g.k.hash(&mut h);
+        g.dtype.hash(&mut h);
+        assert_eq!(StableHasher::hash_of(&g), h.finish());
+        // Sharding changes both the dims and the identity.
+        let col = g.sharded(ShardDim::Col, 4);
+        assert_eq!(col.n, 512 / 4);
+        assert_eq!(col.k, 1024);
+        let row = g.sharded(ShardDim::Row, 4);
+        assert_eq!(row.k, 1024 / 4);
+        assert_eq!(row.n, 512);
+        assert_ne!(StableHasher::hash_of(&col), StableHasher::hash_of(&g));
+        assert_ne!(StableHasher::hash_of(&col), StableHasher::hash_of(&row));
+    }
+
+    #[test]
+    fn shard_flops_sum_to_the_unsharded_gemm() {
+        let g = GemmOp::linear(128, 4096, 1024, DType::Bf16);
+        for parts in [2usize, 4, 8] {
+            let col: f64 =
+                (0..parts).map(|_| g.sharded(ShardDim::Col, parts).flops()).sum();
+            let row: f64 =
+                (0..parts).map(|_| g.sharded(ShardDim::Row, parts).flops()).sum();
+            assert_eq!(col, g.flops());
+            assert_eq!(row, g.flops());
+        }
+    }
+
+    #[test]
+    fn comm_ring_traffic_matches_shard_math() {
+        let elems = 128 * 4096;
+        let ar = CommOp::all_reduce(elems, DType::Bf16, 4);
+        let ag = CommOp::all_gather(elems, DType::Bf16, 4);
+        assert_eq!(ar.bytes(), (elems * 2) as f64);
+        // Ring all-reduce: 2(p−1) hops × send+recv of bytes/p per rank.
+        assert_eq!(ar.io_bytes(), 2.0 * 6.0 * ar.bytes() / 4.0);
+        // All-gather does half the hops of all-reduce at equal p.
+        assert_eq!(ag.io_bytes(), ar.io_bytes() / 2.0);
+        // A single participant is a local no-op.
+        assert_eq!(CommOp::all_reduce(elems, DType::F32, 1).io_bytes(), 0.0);
+        // Comm is a first-class Op with the shared accessors.
+        let op = Op::Comm(ar);
+        assert_eq!(op.io_bytes(), ar.io_bytes());
+        assert_eq!(op.dtype(), DType::Bf16);
+        assert_ne!(op.stable_hash(), Op::Comm(ag).stable_hash());
+    }
+
+    #[test]
+    fn placement_constructors() {
+        let single = Placement::single("a100");
+        assert!(single.is_single() && single.is_valid());
+        assert_eq!(single.degree(), 1);
+        let tp4 = Placement::replicated("a100", 4);
+        assert!(!tp4.is_single() && tp4.is_valid());
+        assert_eq!(tp4.devices.len(), 4);
+        // Degenerate degree clamps to a valid single placement.
+        assert!(Placement::replicated("t4", 0).is_single());
     }
 }

@@ -1,0 +1,195 @@
+//! PM2Lat on collectives: a measured staircase over (participant count ×
+//! payload size), mirroring the GemmTable/AttnProfile split — `gpusim`'s
+//! `comm.rs` is the hidden ground truth, this profile is what the
+//! predictor learns from timing collectives like any other op.
+//!
+//! Collection is cheap (two kinds × 3 ring sizes × 6 payloads) because
+//! collectives are launch + wire time with no kernel-selection surface:
+//! there is no autotuner to differentiate, so one staircase per dtype
+//! suffices. Prediction interpolates the payload axis piecewise-linearly
+//! (linear extrapolation beyond the grid, like `VecProfile`) and rescales
+//! the launch-free work across ring sizes by the per-rank wire volume
+//! `steps(p)·(bytes/p)` of the ring algorithm.
+
+use crate::gpusim::Gpu;
+use crate::ops::{CommKind, CommOp, DType, Op};
+use crate::profiler::{self, ProfileSpec};
+
+/// Ring-size collection grid.
+pub const PARTS_GRID: [usize; 3] = [2, 4, 8];
+/// Payload collection grid in elements (log2-spaced).
+pub const COMM_ELEMS_GRID: [usize; 6] =
+    [1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22];
+
+/// Measured collective staircase for one (device, dtype).
+#[derive(Clone, Debug)]
+pub struct CommProfile {
+    pub device: String,
+    pub dtype: DType,
+    /// Durations at [PARTS_GRID row][COMM_ELEMS_GRID column].
+    pub all_reduce: [[f64; 6]; 3],
+    pub all_gather: [[f64; 6]; 3],
+    /// Launch + rendezvous overhead, measured from a single-participant
+    /// collective (a local no-op: pure launch).
+    pub launch_s: f64,
+}
+
+impl CommProfile {
+    /// Per-rank ring wire volume factor: `steps(p) / p` (× bytes gives
+    /// the bytes each rank moves). The unit that transfers measured work
+    /// between ring sizes.
+    fn volume(kind: CommKind, p: usize) -> f64 {
+        kind.ring_steps(p) as f64 / p.max(1) as f64
+    }
+
+    /// Predict one collective. Single-participant collectives are
+    /// launch-only, matching the simulator's degenerate case exactly.
+    pub fn predict(&self, c: &CommOp) -> f64 {
+        if c.participants <= 1 {
+            return self.launch_s;
+        }
+        let grid = match c.kind {
+            CommKind::AllReduce => &self.all_reduce,
+            CommKind::AllGather => &self.all_gather,
+        };
+        // Nearest collected ring size at or below the request (the first
+        // row for p < 2); work rescales by wire volume below.
+        let pi = PARTS_GRID
+            .iter()
+            .rposition(|&p| p <= c.participants)
+            .unwrap_or(0);
+        let row = &grid[pi];
+        // Piecewise-linear in payload between grid points, linear beyond.
+        let e = (c.elems as f64)
+            .clamp(COMM_ELEMS_GRID[0] as f64, *COMM_ELEMS_GRID.last().unwrap() as f64);
+        let mut idx = 0;
+        while idx + 2 < COMM_ELEMS_GRID.len() && (COMM_ELEMS_GRID[idx + 1] as f64) < e {
+            idx += 1;
+        }
+        let e1 = COMM_ELEMS_GRID[idx] as f64;
+        let e3 = COMM_ELEMS_GRID[idx + 1] as f64;
+        let d1 = row[idx];
+        let d3 = row[idx + 1];
+        let dur = d1 + (e - e1) / (e3 - e1) * (d3 - d1);
+        let extra = (c.elems as f64 / e).max(1.0);
+        // The smallest-payload measurement is effectively wire-free, so
+        // it isolates the per-step fixed cost; everything above it is
+        // payload-proportional wire time. The two components rescale
+        // differently across ring sizes: fixed cost by the step count,
+        // wire time by the per-rank volume `steps(p)·(bytes/p)`.
+        let p0 = PARTS_GRID[pi];
+        let fixed = (row[0] - self.launch_s).max(0.0);
+        let wire = (dur - row[0]).max(0.0) * extra;
+        let step_ratio =
+            c.kind.ring_steps(c.participants) as f64 / c.kind.ring_steps(p0) as f64;
+        self.launch_s
+            + fixed * step_ratio
+            + wire * Self::volume(c.kind, c.participants) / Self::volume(c.kind, p0)
+    }
+}
+
+/// Time the collective staircase on `gpu`. Collectives run on the copy
+/// engines at any core clock, so no locked-clock discipline is needed —
+/// the grid collects directly under the profiler's noise averaging.
+pub fn collect(gpu: &mut Gpu, dtype: DType, spec: &ProfileSpec) -> Option<CommProfile> {
+    if !gpu.spec.supports(dtype) {
+        return None;
+    }
+    let launch_s = profiler::measure(
+        gpu,
+        &Op::Comm(CommOp::all_reduce(COMM_ELEMS_GRID[0], dtype, 1)),
+        spec,
+    )
+    .ok()?
+    .mean_s;
+    let mut all_reduce = [[0.0; 6]; 3];
+    let mut all_gather = [[0.0; 6]; 3];
+    for (pi, &parts) in PARTS_GRID.iter().enumerate() {
+        for (ei, &elems) in COMM_ELEMS_GRID.iter().enumerate() {
+            all_reduce[pi][ei] = profiler::measure(
+                gpu,
+                &Op::Comm(CommOp::all_reduce(elems, dtype, parts)),
+                spec,
+            )
+            .ok()?
+            .mean_s;
+            all_gather[pi][ei] = profiler::measure(
+                gpu,
+                &Op::Comm(CommOp::all_gather(elems, dtype, parts)),
+                spec,
+            )
+            .ok()?
+            .mean_s;
+        }
+    }
+    Some(CommProfile {
+        device: gpu.spec.name.to_string(),
+        dtype,
+        all_reduce,
+        all_gather,
+        launch_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile(device: &str, dtype: DType) -> (Gpu, CommProfile) {
+        let mut gpu = Gpu::by_name(device).unwrap();
+        let p = collect(&mut gpu, dtype, &ProfileSpec::quick()).unwrap();
+        gpu.reset();
+        (gpu, p)
+    }
+
+    #[test]
+    fn grid_points_predict_close_to_ground_truth() {
+        let (gpu, p) = profile("a100", DType::Bf16);
+        for &parts in &PARTS_GRID {
+            for &elems in &COMM_ELEMS_GRID {
+                let c = CommOp::all_reduce(elems, DType::Bf16, parts);
+                let truth = crate::gpusim::comm::comm_latency(&gpu.spec, &c);
+                let pred = p.predict(&c);
+                let err = (pred - truth).abs() / truth;
+                assert!(err < 0.10, "p={parts} elems={elems}: err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn off_grid_ring_sizes_rescale_by_wire_volume() {
+        let (gpu, p) = profile("a100", DType::Bf16);
+        // tp = 3 and tp = 16 are both off the collected grid.
+        for parts in [3usize, 16] {
+            let c = CommOp::all_reduce(1 << 19, DType::Bf16, parts);
+            let truth = crate::gpusim::comm::comm_latency(&gpu.spec, &c);
+            let pred = p.predict(&c);
+            let err = (pred - truth).abs() / truth;
+            assert!(err < 0.25, "p={parts}: pred={pred} truth={truth} err={err}");
+        }
+    }
+
+    #[test]
+    fn single_participant_is_launch_only() {
+        let (_, p) = profile("l4", DType::F32);
+        let c = CommOp::all_gather(1 << 20, DType::F32, 1);
+        assert_eq!(p.predict(&c), p.launch_s);
+    }
+
+    #[test]
+    fn predictions_monotone_in_payload() {
+        let (_, p) = profile("t4", DType::F32);
+        let mut prev = 0.0;
+        for elems in [1 << 12, 1 << 15, 1 << 18, 1 << 21, 1 << 24] {
+            let t = p.predict(&CommOp::all_reduce(elems, DType::F32, 4));
+            assert!(t > prev, "elems={elems}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn unsupported_dtype_collects_nothing() {
+        let mut gpu = Gpu::by_name("t4").unwrap();
+        assert!(collect(&mut gpu, DType::Bf16, &ProfileSpec::quick()).is_none());
+    }
+}

@@ -7,17 +7,21 @@
 //!   memory-bound layers (§III-C utility path);
 //! * [`custom_model`] — the same strategy adapted to Triton / Flash /
 //!   CUTLASS attention kernels (§IV-C);
+//! * [`comm_model`] — measured collective staircase (AllReduce/AllGather
+//!   over ring size × payload) for tensor-parallel placements;
 //! * [`predictor`] — the unified per-device facade + whole-model
 //!   sequential aggregation;
 //! * [`batch`] — the PJRT/Pallas-accelerated batched prediction path used
 //!   for NAS preprocessing (§IV-D2).
 
 pub mod batch;
+pub mod comm_model;
 pub mod custom_model;
 pub mod gemm_model;
 pub mod predictor;
 pub mod utility_model;
 
+pub use comm_model::{CommProfile, COMM_ELEMS_GRID, PARTS_GRID};
 pub use gemm_model::{
     GemmTable, GemvProfile, KernelProfile, SkinnyProfile, K_GRID, SKINNY_ROWS_GRID,
 };

@@ -8,6 +8,7 @@ use crate::models::transformer::{GenerationSpec, TransformerConfig};
 use crate::ops::{DType, Op};
 use crate::profiler::ProfileSpec;
 
+use super::comm_model::{self, CommProfile};
 use super::custom_model::{self, CustomModel};
 use super::gemm_model::{self, GemmTable};
 use super::utility_model::{self, UtilityModel};
@@ -55,6 +56,7 @@ pub struct Pm2Lat {
     gemm: [Option<GemmTable>; 2],
     util: [Option<UtilityModel>; 2],
     custom: [Option<CustomModel>; 2],
+    comm: [Option<CommProfile>; 2],
 }
 
 fn slot(dtype: DType) -> usize {
@@ -85,6 +87,7 @@ impl Pm2Lat {
             gemm: [None, None],
             util: [None, None],
             custom: [None, None],
+            comm: [None, None],
         };
         for &dt in dtypes {
             if !gpu.spec.supports(dt) {
@@ -95,6 +98,7 @@ impl Pm2Lat {
             if with_custom {
                 out.custom[slot(dt)] = Some(custom_model::collect(gpu, dt, spec));
             }
+            out.comm[slot(dt)] = comm_model::collect(gpu, dt, spec);
             gpu.reset();
         }
         out
@@ -108,6 +112,9 @@ impl Pm2Lat {
     }
     pub fn custom_model(&self, dtype: DType) -> Option<&CustomModel> {
         self.custom[slot(dtype)].as_ref()
+    }
+    pub fn comm_profile(&self, dtype: DType) -> Option<&CommProfile> {
+        self.comm[slot(dtype)].as_ref()
     }
 
     /// Predict the latency of one op on the profiled device. `gpu` is
@@ -123,6 +130,9 @@ impl Pm2Lat {
             Op::Custom(c) => {
                 self.custom[slot(op.dtype())].as_ref()?.predict(gpu, c)
             }
+            // Collectives are priced from the measured staircase — the
+            // same learn-from-timings discipline as every other op family.
+            Op::Comm(c) => Some(self.comm[slot(c.dtype)].as_ref()?.predict(c)),
         }
     }
 
@@ -306,6 +316,32 @@ mod tests {
     fn n_tables_counts_fits() {
         let (_, pl) = build("a100", &[DType::F32]);
         assert_eq!(pl.n_tables(), 2); // gemm + util, no custom
+    }
+
+    #[test]
+    fn collectives_are_priced_like_any_other_op() {
+        use crate::ops::CommOp;
+        let (gpu, pl) = build("a100", &[DType::F32]);
+        let c = CommOp::all_reduce(1 << 18, DType::F32, 2);
+        let t = pl.predict(&gpu, &Op::Comm(c)).unwrap();
+        assert!(t > 0.0);
+        // A trace with a collective in the middle sums all three terms.
+        let trace = vec![
+            Op::Gemm(GemmOp::mm(256, 256, 256, DType::F32)),
+            Op::Comm(c),
+            Op::Gemm(GemmOp::mm(256, 256, 256, DType::F32)),
+        ];
+        let total = pl.predict_trace(&gpu, &trace).unwrap();
+        let gemms = pl
+            .predict_trace(&gpu, &[trace[0].clone(), trace[2].clone()])
+            .unwrap();
+        let err = (total - (gemms + t)).abs();
+        assert!(err < 1e-12 * total, "sequential sum includes the collective");
+        // Unsupported dtype on the device → no comm profile → None.
+        let (gpu_t, pl_t) = build("t4", &[DType::F32]);
+        assert!(pl_t
+            .predict(&gpu_t, &Op::Comm(CommOp::all_reduce(1 << 14, DType::Bf16, 4)))
+            .is_none());
     }
 
     #[test]

@@ -20,12 +20,16 @@
 //!   blocks, per-request block lists, capacity derived from device HBM
 //!   through `kv_cache_bytes`, conservation-audited.
 //! * [`policy`] — pluggable scheduling: static vs. vLLM-style continuous
-//!   batching with chunked prefill, FCFS vs. shortest-prompt admission.
+//!   batching with chunked prefill; FCFS, shortest-prompt, priority, and
+//!   fair-share admission.
 //! * [`simulator`] — the event loop: admission → chunk planning → pager
 //!   growth (recompute-preemption under pressure) → one priced mixed
 //!   iteration → virtual-time advance; per-request TTFT/TPOT/E2E,
 //!   GPU-seconds, KV-occupancy timelines, throughput–latency sweeps and
-//!   max-QPS-under-SLO search.
+//!   max-QPS-under-SLO search. [`simulator::simulate_placed`] replays
+//!   the same trace on a tensor-parallel placement by rewriting each
+//!   iteration graph with [`crate::graph::TensorParallelPass`], so SLO
+//!   curves come out cluster-level.
 //!
 //! Consumed by `Coordinator::simulate_serving` (the cached service
 //! path), the `pm2lat serve-sim` CLI, and `benches/serving_capacity.rs`.
@@ -41,9 +45,10 @@ pub mod trace;
 pub use kv_pager::{KvPager, KvPagerConfig, PagerError, DEFAULT_BLOCK_TOKENS};
 pub use policy::{Admission, BatchingMode, SchedulerConfig};
 pub use simulator::{
-    max_qps_under_slo, qps_sweep, simulate, CapacityPoint, RequestMetrics, ServingReport,
-    ServingSimConfig, SimError,
+    max_qps_under_slo, qps_sweep, qps_sweep_placed, simulate, simulate_placed, CapacityPoint,
+    RequestMetrics, ServingReport, ServingSimConfig, SimError,
 };
 pub use trace::{
-    bursty_trace, parse_trace, poisson_trace, scale_arrivals, to_json, RequestSpec,
+    bursty_trace, parse_trace, poisson_trace, scale_arrivals, to_json, with_priority_classes,
+    RequestSpec,
 };

@@ -12,10 +12,13 @@
 //!   budget so long prompts cannot stall running decodes, and decode
 //!   slots ride along in the same mixed iteration.
 //!
-//! Admission order is its own axis: FCFS (arrival order) or
+//! Admission order is its own axis: FCFS (arrival order),
 //! shortest-prompt-first (an SJF approximation that trades fairness for
-//! mean TTFT). Policies are pure functions over small view structs, so
-//! they unit-test without an event loop.
+//! mean TTFT), strict priority (higher request classes preempt the queue
+//! order), or fair-share (deterministic round-robin across classes, so
+//! one chatty tenant cannot starve the rest). Policies are pure
+//! functions over small view structs, so they unit-test without an
+//! event loop.
 
 /// Admission order over the waiting queue.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,6 +28,15 @@ pub enum Admission {
     /// Shortest remaining prompt first (ties by arrival). Approximates
     /// shortest-job-first on the prefill cost, which dominates TTFT.
     ShortestPrompt,
+    /// Highest request priority first (ties by arrival). Strict: a
+    /// waiting high class always beats every lower class.
+    Priority,
+    /// Round-robin across priority *classes* (class = the priority
+    /// field as a tenant id): take the first waiter of each class in
+    /// turn, cycling until the queue is ordered. Arrival order within a
+    /// class; deterministic (classes cycle in ascending class id from
+    /// the lowest present). An all-one-class queue degrades to FCFS.
+    FairShare,
 }
 
 impl Admission {
@@ -32,6 +44,8 @@ impl Admission {
         match s.to_ascii_lowercase().as_str() {
             "fcfs" => Some(Admission::Fcfs),
             "sjf" | "shortest" | "shortest-prompt" => Some(Admission::ShortestPrompt),
+            "priority" => Some(Admission::Priority),
+            "fair" | "fair-share" => Some(Admission::FairShare),
             _ => None,
         }
     }
@@ -40,6 +54,8 @@ impl Admission {
         match self {
             Admission::Fcfs => "fcfs",
             Admission::ShortestPrompt => "shortest-prompt",
+            Admission::Priority => "priority",
+            Admission::FairShare => "fair-share",
         }
     }
 }
@@ -99,6 +115,8 @@ pub struct WaitingView {
     pub arrival_s: f64,
     /// Prompt tokens still to prefill (the SJF cost proxy).
     pub remaining_prompt: usize,
+    /// Scheduling class ([`crate::serving::RequestSpec::priority`]).
+    pub priority: u8,
 }
 
 /// What the chunk planner sees of one running request.
@@ -119,11 +137,43 @@ pub struct PlannedQ {
 impl SchedulerConfig {
     /// Order the waiting queue for admission: queue indices, most
     /// admittable first. FCFS returns arrival order; shortest-prompt
-    /// sorts by remaining prefill (stable — ties keep arrival order).
+    /// sorts by remaining prefill; priority sorts descending by class;
+    /// fair-share interleaves classes round-robin. All orders are stable
+    /// — ties keep arrival order — and every policy is a permutation of
+    /// the queue (admission can reorder but never drop).
     pub fn admission_order(&self, waiting: &[WaitingView]) -> Vec<usize> {
         let mut idx: Vec<usize> = (0..waiting.len()).collect();
-        if self.admission == Admission::ShortestPrompt {
-            idx.sort_by_key(|&i| (waiting[i].remaining_prompt, waiting[i].queue_idx));
+        match self.admission {
+            Admission::Fcfs => {}
+            Admission::ShortestPrompt => {
+                idx.sort_by_key(|&i| (waiting[i].remaining_prompt, waiting[i].queue_idx));
+            }
+            Admission::Priority => {
+                idx.sort_by_key(|&i| {
+                    (std::cmp::Reverse(waiting[i].priority), waiting[i].queue_idx)
+                });
+            }
+            Admission::FairShare => {
+                // One FIFO lane per class (ascending class id), then deal
+                // one request from each non-empty lane per round.
+                let mut lanes: Vec<(u8, Vec<usize>)> = Vec::new();
+                idx.sort_by_key(|&i| (waiting[i].priority, waiting[i].queue_idx));
+                for i in idx.drain(..) {
+                    match lanes.last_mut() {
+                        Some((c, lane)) if *c == waiting[i].priority => lane.push(i),
+                        _ => lanes.push((waiting[i].priority, vec![i])),
+                    }
+                }
+                let mut cursors = vec![0usize; lanes.len()];
+                while idx.len() < waiting.len() {
+                    for (l, (_, lane)) in lanes.iter().enumerate() {
+                        if cursors[l] < lane.len() {
+                            idx.push(lane[cursors[l]]);
+                            cursors[l] += 1;
+                        }
+                    }
+                }
+            }
         }
         idx
     }
@@ -166,6 +216,20 @@ mod tests {
                 queue_idx: i,
                 arrival_s,
                 remaining_prompt,
+                priority: 0,
+            })
+            .collect()
+    }
+
+    fn classed(specs: &[(usize, u8)]) -> Vec<WaitingView> {
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, &(remaining_prompt, priority))| WaitingView {
+                queue_idx: i,
+                arrival_s: i as f64,
+                remaining_prompt,
+                priority,
             })
             .collect()
     }
@@ -178,6 +242,48 @@ mod tests {
         let sjf = SchedulerConfig { admission: Admission::ShortestPrompt, ..fcfs };
         // Shortest prompts first; equal prompts keep arrival order.
         assert_eq!(sjf.admission_order(&w), vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn priority_admits_high_classes_first_with_stable_ties() {
+        let w = classed(&[(100, 0), (100, 2), (100, 1), (100, 2), (100, 0)]);
+        let cfg = SchedulerConfig {
+            admission: Admission::Priority,
+            ..SchedulerConfig::default()
+        };
+        assert_eq!(cfg.admission_order(&w), vec![1, 3, 2, 0, 4]);
+        // All-equal classes degrade to FCFS.
+        let flat = classed(&[(10, 3), (20, 3), (30, 3)]);
+        assert_eq!(cfg.admission_order(&flat), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn fair_share_interleaves_classes_round_robin() {
+        // Class 0 floods the queue; class 1 and 2 each have stragglers.
+        let w = classed(&[(1, 0), (1, 0), (1, 0), (1, 1), (1, 0), (1, 2), (1, 1)]);
+        let cfg = SchedulerConfig {
+            admission: Admission::FairShare,
+            ..SchedulerConfig::default()
+        };
+        let order = cfg.admission_order(&w);
+        // Round 1: first of class 0, 1, 2 → 0, 3, 5. Round 2: 1, 6.
+        // Round 3+: class 0's leftovers in arrival order.
+        assert_eq!(order, vec![0, 3, 5, 1, 6, 2, 4]);
+        // Every policy emits a permutation of the queue.
+        for adm in [
+            Admission::Fcfs,
+            Admission::ShortestPrompt,
+            Admission::Priority,
+            Admission::FairShare,
+        ] {
+            let cfg = SchedulerConfig { admission: adm, ..SchedulerConfig::default() };
+            let mut o = cfg.admission_order(&w);
+            o.sort_unstable();
+            assert_eq!(o, (0..w.len()).collect::<Vec<_>>(), "{}", adm.name());
+        }
+        // One class only → FCFS order (the degenerate single-tenant case).
+        let flat = classed(&[(9, 5), (8, 5), (7, 5)]);
+        assert_eq!(cfg.admission_order(&flat), vec![0, 1, 2]);
     }
 
     #[test]
@@ -230,13 +336,19 @@ mod tests {
 
     #[test]
     fn parse_names_round_trip() {
-        for a in [Admission::Fcfs, Admission::ShortestPrompt] {
+        for a in [
+            Admission::Fcfs,
+            Admission::ShortestPrompt,
+            Admission::Priority,
+            Admission::FairShare,
+        ] {
             assert_eq!(Admission::parse(a.name()), Some(a));
         }
         for m in [BatchingMode::Static, BatchingMode::Continuous] {
             assert_eq!(BatchingMode::parse(m.name()), Some(m));
         }
         assert_eq!(Admission::parse("sjf"), Some(Admission::ShortestPrompt));
+        assert_eq!(Admission::parse("fair"), Some(Admission::FairShare));
         assert_eq!(BatchingMode::parse("vllm"), Some(BatchingMode::Continuous));
         assert!(Admission::parse("lifo").is_none());
         assert!(BatchingMode::parse("x").is_none());

@@ -320,6 +320,7 @@ where
                     queue_idx,
                     arrival_s: r.spec.arrival_s,
                     remaining_prompt: r.remaining_prefill(),
+                    priority: r.spec.priority,
                 })
                 .collect();
             let order = sched.admission_order(&views);
@@ -530,6 +531,38 @@ where
     })
 }
 
+/// Replay `trace` on a tensor-parallel placement: every iteration graph
+/// is rewritten by [`crate::graph::TensorParallelPass`] — Megatron-style
+/// sharded GEMMs plus ring collectives — before pricing, so `price` sees
+/// exactly what one rank executes. Symmetric ranks run in lockstep (the
+/// collectives ARE the synchronization), so one rank's iteration latency
+/// is the cluster's: the report's latencies and SLO curves are
+/// cluster-level. `tp <= 1` delegates to [`simulate`] untouched, so the
+/// single-device placement reproduces today's traces bit for bit.
+pub fn simulate_placed<F>(
+    cfg: &TransformerConfig,
+    trace: &[RequestSpec],
+    sim: &ServingSimConfig,
+    tp: usize,
+    price: &mut F,
+) -> Result<ServingReport, SimError>
+where
+    F: FnMut(&ModelGraph) -> Option<f64>,
+{
+    if tp <= 1 {
+        return simulate(cfg, trace, sim, price);
+    }
+    use crate::graph::{Pass, PassCtx, TensorParallelPass};
+    let pass = TensorParallelPass { tp };
+    let ctx = PassCtx::structural();
+    let mut placed = |g: &ModelGraph| {
+        let mut rank = g.clone();
+        pass.run(&mut rank, &ctx);
+        price(&rank)
+    };
+    simulate(cfg, trace, sim, &mut placed)
+}
+
 /// One point of a throughput–latency sweep: the aggregates that matter
 /// for capacity planning, without retaining the whole report.
 #[derive(Clone, Copy, Debug)]
@@ -578,6 +611,28 @@ where
     for &qps in rates {
         let trace = scale_arrivals(unit_trace, qps);
         let report = simulate(cfg, &trace, sim, price)?;
+        out.push(CapacityPoint::from_report(qps, &report));
+    }
+    Ok(out)
+}
+
+/// [`qps_sweep`] over a tensor-parallel placement: each point replays
+/// through [`simulate_placed`], so the SLO curve is the cluster's.
+pub fn qps_sweep_placed<F>(
+    cfg: &TransformerConfig,
+    unit_trace: &[RequestSpec],
+    sim: &ServingSimConfig,
+    tp: usize,
+    price: &mut F,
+    rates: &[f64],
+) -> Result<Vec<CapacityPoint>, SimError>
+where
+    F: FnMut(&ModelGraph) -> Option<f64>,
+{
+    let mut out = Vec::with_capacity(rates.len());
+    for &qps in rates {
+        let trace = scale_arrivals(unit_trace, qps);
+        let report = simulate_placed(cfg, &trace, sim, tp, price)?;
         out.push(CapacityPoint::from_report(qps, &report));
     }
     Ok(out)
@@ -677,7 +732,7 @@ mod tests {
         let spec = crate::models::GenerationSpec::new(prompt, gen);
         let direct = pl.predict_generation(&gpu, &cfg, 1, &spec, 1).unwrap();
 
-        let trace = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: prompt, gen_len: gen }];
+        let trace = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: prompt, gen_len: gen, priority: 0 }];
         let mut sim = ample_sim(&cfg);
         sim.scheduler.chunk_tokens = prompt; // whole prompt in one iteration
         let mut curve: Vec<f64> = Vec::new();
@@ -699,6 +754,43 @@ mod tests {
         assert_eq!(report.iterations, 1 + gen);
         assert_eq!(report.preemptions, 0);
         assert_eq!(report.kv_leaked_blocks, 0);
+    }
+
+    #[test]
+    fn placed_tp1_is_bit_identical_and_tp2_prices_rank_collectives() {
+        let (gpu, pl) = quick_pl("a100", DType::F32);
+        let cfg = zoo::gpt2_large();
+        let trace = poisson_trace(8, 40.0, 96, 6, 7);
+        let sim = ample_sim(&cfg);
+        let mut price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
+        let base = simulate(&cfg, &trace, &sim, &mut price).unwrap();
+        // The single-device placement is the plain simulator, bit for bit.
+        let tp1 = simulate_placed(&cfg, &trace, &sim, 1, &mut price).unwrap();
+        assert_eq!(tp1.completed, base.completed);
+        assert_eq!(tp1.makespan_s, base.makespan_s);
+        assert_eq!(tp1.gpu_busy_s, base.gpu_busy_s);
+        // tp=2 reprices every iteration as one rank's sharded graph: the
+        // pricing callback must see collectives, everyone still finishes,
+        // and the collectives keep the scaling sub-linear.
+        let mut comm_nodes = 0usize;
+        let mut price2 = |g: &ModelGraph| {
+            comm_nodes += g
+                .nodes()
+                .iter()
+                .filter(|n| matches!(n.op, crate::ops::Op::Comm(_)))
+                .count();
+            pl.predict_graph(&gpu, g, 1)
+        };
+        let tp2 = simulate_placed(&cfg, &trace, &sim, 2, &mut price2).unwrap();
+        assert!(comm_nodes > 0, "rank iteration graphs must carry collectives");
+        assert_eq!(tp2.completed.len(), trace.len());
+        assert!(
+            tp2.gpu_busy_s > base.gpu_busy_s / 2.0,
+            "collectives forbid ideal 2× scaling: {} vs {}",
+            tp2.gpu_busy_s,
+            base.gpu_busy_s
+        );
+        assert_ne!(tp2.gpu_busy_s, base.gpu_busy_s, "sharding must change the price");
     }
 
     #[test]
@@ -737,6 +829,7 @@ mod tests {
             arrival_s: 0.0,
             prompt_len: 16 * sim.pager.capacity_blocks + 1,
             gen_len: 1,
+            priority: 0,
         }];
         assert!(matches!(
             simulate(&cfg, &giant, &sim, &mut price),
@@ -789,6 +882,7 @@ mod tests {
                 arrival_s: 0.0,
                 prompt_len: 64 + 32 * (id % 3),
                 gen_len: 8 + 4 * (id % 4),
+                priority: 0,
             })
             .collect();
         let pager = KvPagerConfig::for_model(&cfg, 80e9, 16);
@@ -836,12 +930,13 @@ mod tests {
         let cfg = zoo::gpt2_large();
         // One giant prompt ahead of many small ones, all queued at once,
         // concurrency 1: FCFS makes everyone eat the giant's prefill.
-        let mut trace = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 1024, gen_len: 2 }];
+        let mut trace = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 1024, gen_len: 2, priority: 0 }];
         trace.extend((1..7).map(|id| RequestSpec {
             id,
             arrival_s: 0.0,
             prompt_len: 32,
             gen_len: 2,
+            priority: 0,
         }));
         let pager = KvPagerConfig::for_model(&cfg, 80e9, 16);
         let run = |admission: Admission| {
@@ -879,8 +974,8 @@ mod tests {
             streams: 1,
         };
         let pair = vec![
-            RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 1024, gen_len: 2 },
-            RequestSpec { id: 1, arrival_s: 0.0, prompt_len: 32, gen_len: 2 },
+            RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 1024, gen_len: 2, priority: 0 },
+            RequestSpec { id: 1, arrival_s: 0.0, prompt_len: 32, gen_len: 2, priority: 0 },
         ];
         let mut price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
         let r = simulate(&cfg, &pair, &cohort, &mut price).unwrap();
@@ -904,25 +999,25 @@ mod tests {
         let (gpu, pl) = quick_pl("t4", DType::F32); // no BF16 tables on T4
         let cfg = zoo::qwen3_0_6b(); // BF16 model
         let sim = ample_sim(&cfg);
-        let trace = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 16, gen_len: 2 }];
+        let trace = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 16, gen_len: 2, priority: 0 }];
         let mut price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
         assert_eq!(simulate(&cfg, &trace, &sim, &mut price), Err(SimError::Unsupported));
         assert_eq!(simulate(&cfg, &[], &sim, &mut price), Err(SimError::EmptyTrace));
         // Colliding ids would merge pager allocations — rejected up front.
         let dup = vec![
-            RequestSpec { id: 3, arrival_s: 0.0, prompt_len: 16, gen_len: 2 },
-            RequestSpec { id: 3, arrival_s: 0.1, prompt_len: 16, gen_len: 2 },
+            RequestSpec { id: 3, arrival_s: 0.0, prompt_len: 16, gen_len: 2, priority: 0 },
+            RequestSpec { id: 3, arrival_s: 0.1, prompt_len: 16, gen_len: 2, priority: 0 },
         ];
         assert_eq!(
             simulate(&cfg, &dup, &sim, &mut price),
             Err(SimError::DuplicateRequestId(3))
         );
         // Promptless requests can never emit a first token — rejected.
-        let bare = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 0, gen_len: 1 }];
+        let bare = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 0, gen_len: 1, priority: 0 }];
         assert_eq!(simulate(&cfg, &bare, &sim, &mut price), Err(SimError::EmptyPrompt(0)));
         // Enc–dec models error instead of panicking in the graph builder.
         let t5 = crate::models::zoo::flan_t5_base();
-        let one = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 16, gen_len: 1 }];
+        let one = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 16, gen_len: 1, priority: 0 }];
         assert_eq!(
             simulate(&t5, &one, &sim, &mut price),
             Err(SimError::EncDecUnsupported)

@@ -30,6 +30,10 @@ pub struct RequestSpec {
     pub arrival_s: f64,
     pub prompt_len: usize,
     pub gen_len: usize,
+    /// Scheduling class: higher wins under the `priority` admission
+    /// policy; doubles as the tenant id for `fair-share`. 0 (the default
+    /// everywhere) keeps every policy equivalent to its classless form.
+    pub priority: u8,
 }
 
 impl RequestSpec {
@@ -37,6 +41,18 @@ impl RequestSpec {
     pub fn total_len(&self) -> usize {
         self.prompt_len + self.gen_len
     }
+}
+
+/// Stamp a trace with round-robin priority classes (`id % classes`) —
+/// the deterministic multi-tenant workload behind priority / fair-share
+/// admission tests and sweeps. `classes = 1` leaves the trace all-zero,
+/// i.e. untouched.
+pub fn with_priority_classes(trace: &[RequestSpec], classes: u8) -> Vec<RequestSpec> {
+    let classes = classes.max(1);
+    trace
+        .iter()
+        .map(|r| RequestSpec { priority: (r.id % classes as usize) as u8, ..*r })
+        .collect()
 }
 
 /// Draw a (prompt, gen) shape around the requested means: log-uniform
@@ -67,7 +83,7 @@ pub fn poisson_trace(
             // Exponential gap; 1 - u keeps ln's argument in (0, 1].
             t += -(1.0 - rng.uniform()).ln() / qps;
             let (prompt_len, gen_len) = sample_lens(&mut rng, mean_prompt, mean_gen);
-            RequestSpec { id, arrival_s: t, prompt_len, gen_len }
+            RequestSpec { id, arrival_s: t, prompt_len, gen_len, priority: 0 }
         })
         .collect()
 }
@@ -92,7 +108,13 @@ pub fn bursty_trace(
         t += -(1.0 - rng.uniform()).ln() * burst as f64 / qps;
         for _ in 0..burst.min(n - out.len()) {
             let (prompt_len, gen_len) = sample_lens(&mut rng, mean_prompt, mean_gen);
-            out.push(RequestSpec { id: out.len(), arrival_s: t, prompt_len, gen_len });
+            out.push(RequestSpec {
+                id: out.len(),
+                arrival_s: t,
+                prompt_len,
+                gen_len,
+                priority: 0,
+            });
         }
     }
     out
@@ -133,7 +155,20 @@ pub fn parse_trace(text: &str) -> Result<Vec<RequestSpec>> {
         if prompt_len == 0 {
             return Err(anyhow!("trace[{id}]: empty prompt"));
         }
-        out.push(RequestSpec { id, arrival_s, prompt_len, gen_len });
+        // `priority` is optional — recorded traces predate the field.
+        let priority = match item.get("priority") {
+            None => 0,
+            Some(p) => {
+                let p = p
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("trace[{id}]: non-numeric `priority`"))?;
+                if !(0.0..=255.0).contains(&p) {
+                    return Err(anyhow!("trace[{id}]: priority out of range"));
+                }
+                p as u8
+            }
+        };
+        out.push(RequestSpec { id, arrival_s, prompt_len, gen_len, priority });
     }
     out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
     // Re-id in arrival order so downstream bookkeeping is positional.
@@ -153,6 +188,7 @@ pub fn to_json(trace: &[RequestSpec]) -> Json {
                     ("arrival_s", Json::Num(r.arrival_s)),
                     ("prompt_len", Json::from(r.prompt_len)),
                     ("gen_len", Json::from(r.gen_len)),
+                    ("priority", Json::from(r.priority as usize)),
                 ])
             })
             .collect(),
@@ -193,6 +229,15 @@ mod tests {
     }
 
     #[test]
+    fn priority_classes_are_round_robin_and_degree_one_is_identity() {
+        let base = poisson_trace(30, 4.0, 64, 8, 2);
+        let classed = with_priority_classes(&base, 3);
+        assert!(classed.iter().all(|r| r.priority == (r.id % 3) as u8));
+        assert_eq!(with_priority_classes(&base, 1), base);
+        assert_eq!(with_priority_classes(&base, 0), base, "0 clamps to 1");
+    }
+
+    #[test]
     fn scale_arrivals_rescales_times_only() {
         let base = poisson_trace(50, 1.0, 128, 16, 1);
         let fast = scale_arrivals(&base, 4.0);
@@ -221,6 +266,16 @@ mod tests {
         let t = parse_trace(jumbled).unwrap();
         assert_eq!(t[0].prompt_len, 20);
         assert_eq!(t[0].id, 0);
+        // Priorities survive the round trip; absent ones default to 0.
+        let classed = with_priority_classes(&base, 3);
+        let back2 = parse_trace(&to_json(&classed).to_string()).unwrap();
+        assert!(back2.iter().zip(&classed).all(|(a, b)| a.priority == b.priority));
+        let legacy = r#"[{"arrival_s": 0.0, "prompt_len": 4, "gen_len": 1}]"#;
+        assert_eq!(parse_trace(legacy).unwrap()[0].priority, 0);
+        assert!(parse_trace(
+            r#"[{"arrival_s": 0.0, "prompt_len": 4, "gen_len": 1, "priority": 999}]"#
+        )
+        .is_err());
         // Malformed traces are rejected with a reason.
         assert!(parse_trace("{}").is_err());
         assert!(parse_trace(r#"[{"arrival_s": 1.0}]"#).is_err());

@@ -1,0 +1,211 @@
+//! Placement-equivalence property tests.
+//!
+//! The placement refactor's safety invariant is that `Placement::single()`
+//! — the implicit placement every pre-refactor call site assumed — stays
+//! bit-for-bit identical to the old path at every layer: graph build,
+//! scheduling/prediction, and the serving replay. Degrees above one must
+//! *conserve* work: each rank's sharded GEMMs carry exactly `1/tp` of the
+//! original FLOPs, every unmatched op is untouched, and the inserted
+//! collectives carry exactly the activation bytes the shard math says
+//! they must stitch back together.
+
+use pm2lat::gpusim::{comm, Gpu};
+use pm2lat::models::zoo;
+use pm2lat::ops::{CommKind, CommOp, DType, Op, Placement};
+use pm2lat::pm2lat::Pm2Lat;
+use pm2lat::profiler::ProfileSpec;
+use pm2lat::serving::{
+    poisson_trace, simulate, simulate_placed, KvPagerConfig, SchedulerConfig, ServingSimConfig,
+};
+
+fn quick_pl(device: &str, dtype: DType) -> (Gpu, Pm2Lat) {
+    let mut gpu = Gpu::by_name(device).expect("device in the zoo");
+    let pl = Pm2Lat::build_dtypes(&mut gpu, &ProfileSpec::quick(), &[dtype], false);
+    gpu.reset();
+    (gpu, pl)
+}
+
+#[test]
+fn placement_type_invariants() {
+    let single = Placement::single("a100");
+    assert!(single.is_single() && single.is_valid());
+    assert_eq!(single.degree(), 1);
+
+    let ring = Placement::replicated("a100", 4);
+    assert!(!ring.is_single() && ring.is_valid());
+    assert_eq!(ring.degree(), 4);
+    assert_eq!(ring.devices.len(), 4);
+    assert!(ring.devices.iter().all(|d| d == "a100"));
+
+    // replicated() clamps a zero degree up to the single placement.
+    assert!(Placement::replicated("l4", 0).is_single());
+
+    // A hand-built placement whose device list disagrees with its degree
+    // is detectably broken.
+    let broken = Placement { devices: vec!["a100".to_string()], tp: 2 };
+    assert!(!broken.is_valid());
+}
+
+#[test]
+fn property_single_placement_graphs_are_bit_identical() {
+    // Layer 1 (graph build): the tp=1 builders must emit byte-identical
+    // lowered traces for every model in the zoo — prefill and decode.
+    for cfg in zoo::all_models() {
+        assert_eq!(
+            cfg.graph_tp(1, 96, 1).lower(),
+            cfg.trace(1, 96),
+            "{}: tp=1 prefill graph drifted from the plain builder",
+            cfg.name
+        );
+        assert_eq!(
+            cfg.decode_graph_tp(2, 64, 1).lower(),
+            cfg.decode_trace(2, 64),
+            "{}: tp=1 decode graph drifted from the plain builder",
+            cfg.name
+        );
+    }
+}
+
+#[test]
+fn property_single_placement_predictions_are_bit_identical() {
+    // Layer 2 (schedule + prediction): pricing a tp=1 graph must return
+    // the exact same f64 as the pre-placement path, on the sequential
+    // schedule (streams=1) and the multi-stream critical path alike.
+    let (gpu, pl) = quick_pl("a100", DType::F32);
+    let cfg = zoo::gpt2_large();
+    for streams in [1usize, 4] {
+        let a = pl.predict_graph(&gpu, &cfg.graph(1, 128), streams).unwrap();
+        let b = pl.predict_graph(&gpu, &cfg.graph_tp(1, 128, 1), streams).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits(), "prefill, streams={streams}");
+
+        let a = pl.predict_graph(&gpu, &cfg.decode_graph(1, 256), streams).unwrap();
+        let b = pl.predict_graph(&gpu, &cfg.decode_graph_tp(1, 256, 1), streams).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits(), "decode, streams={streams}");
+    }
+}
+
+#[test]
+fn property_single_placement_serving_replay_is_bit_identical() {
+    // Layer 3 (serving): simulate_placed at tp=1 must be the plain
+    // simulator, request for request and bit for bit. A synthetic pricer
+    // keeps this deterministic and profile-free.
+    let cfg = zoo::gpt2_large();
+    let trace = poisson_trace(10, 50.0, 96, 6, 11);
+    let sim = ServingSimConfig {
+        scheduler: SchedulerConfig::default(),
+        pager: KvPagerConfig::for_model(&cfg, 80e9, 16),
+        streams: 1,
+    };
+    let mut price = |g: &pm2lat::graph::ModelGraph| {
+        Some(g.lower().iter().map(|op| op.io_bytes()).sum::<f64>() * 1e-12 + 5e-5)
+    };
+    let base = simulate(&cfg, &trace, &sim, &mut price).unwrap();
+    let placed = simulate_placed(&cfg, &trace, &sim, 1, &mut price).unwrap();
+
+    assert_eq!(base.iterations, placed.iterations);
+    assert_eq!(base.preemptions, placed.preemptions);
+    assert_eq!(base.makespan_s.to_bits(), placed.makespan_s.to_bits());
+    assert_eq!(base.gpu_busy_s.to_bits(), placed.gpu_busy_s.to_bits());
+    assert_eq!(base.completed, placed.completed, "per-request metrics drifted");
+}
+
+#[test]
+fn property_tp_conserves_flops_and_collective_bytes() {
+    // TP=2/4 conservation: pair every non-collective op of the rank
+    // graph with the unsharded original (the pass rewrites in place, so
+    // filtering the inserted collectives restores 1:1 order). Each pair
+    // is either untouched or shrunk by exactly `tp`; the collectives
+    // carry exactly one rows×hidden activation per matched pattern.
+    let cfg = zoo::gpt2_large();
+    let (batch, seq) = (1usize, 64usize);
+    let base = cfg.trace(batch, seq);
+    for tp in [2usize, 4] {
+        let g = cfg.graph_tp(batch, seq, tp);
+        g.validate().unwrap_or_else(|e| panic!("tp={tp} rank graph invalid: {e:?}"));
+        let lowered = g.lower();
+
+        let comms: Vec<CommOp> = lowered
+            .iter()
+            .filter_map(|op| match op {
+                Op::Comm(c) => Some(*c),
+                _ => None,
+            })
+            .collect();
+        let rank: Vec<Op> =
+            lowered.into_iter().filter(|op| !matches!(op, Op::Comm(_))).collect();
+        assert_eq!(rank.len(), base.len(), "tp={tp}: op pairing broke");
+
+        let mut shrunk = 0usize;
+        for (b, r) in base.iter().zip(&rank) {
+            if b == r {
+                continue;
+            }
+            shrunk += 1;
+            match (b, r) {
+                (Op::Gemm(b), Op::Gemm(r)) => assert_eq!(
+                    r.flops() * tp as f64,
+                    b.flops(),
+                    "tp={tp}: sharded GEMM does not carry 1/{tp} of the FLOPs"
+                ),
+                (Op::Util(b), Op::Util(r)) => assert_eq!(
+                    r.rows * r.cols * tp,
+                    b.rows * b.cols,
+                    "tp={tp}: shrunk util does not carry 1/{tp} of the elements"
+                ),
+                (b, r) => panic!("tp={tp}: op changed kind under sharding: {b:?} -> {r:?}"),
+            }
+        }
+        assert!(shrunk > 0, "tp={tp}: nothing sharded");
+
+        // Every layer contributes one AllReduce after the attention
+        // output projection and one after the FFN down projection, each
+        // stitching the full rows×hidden activation at tp participants.
+        assert_eq!(comms.len(), 2 * cfg.layers, "tp={tp}: collective count");
+        for c in &comms {
+            assert_eq!(c.kind, CommKind::AllReduce);
+            assert_eq!(c.participants, tp);
+            assert_eq!(c.elems, batch * seq * cfg.hidden, "tp={tp}: collective payload");
+            assert_eq!(c.dtype, cfg.dtype);
+            // Ring traffic: 2(p−1) hops, each sending+receiving bytes/p.
+            let expect = 4.0 * (tp as f64 - 1.0) / tp as f64 * c.bytes();
+            assert!((c.io_bytes() - expect).abs() < 1e-6, "tp={tp}: ring io_bytes");
+        }
+    }
+}
+
+#[test]
+fn tp2_collectives_are_priced_on_both_paths() {
+    // The same CommOp must come back finite and positive from the
+    // analytic gpusim ring model and from the measured pm2lat staircase,
+    // and a whole tp=2 rank graph must price end-to-end above half the
+    // single-device prediction (sub-linear scaling: the collectives and
+    // the unsharded rows forbid ideal speedup).
+    let (gpu, pl) = quick_pl("a100", DType::F32);
+    let c = CommOp::all_reduce(1 << 18, DType::F32, 2);
+
+    let sim_s = comm::comm_latency(&gpu.spec, &c);
+    assert!(sim_s.is_finite() && sim_s > 0.0, "gpusim ring model: {sim_s}");
+
+    let learned_s = pl
+        .predict(&gpu, &Op::Comm(c))
+        .expect("comm profile is part of every build");
+    assert!(learned_s.is_finite() && learned_s > 0.0, "pm2lat staircase: {learned_s}");
+
+    // Single-participant collectives degenerate to pure launch overhead
+    // on both paths — no wire time.
+    let solo = CommOp::all_reduce(1 << 18, DType::F32, 1);
+    assert_eq!(comm::comm_latency(&gpu.spec, &solo), gpu.spec.comm_launch_us * 1e-6);
+    let launch = pl.comm_profile(DType::F32).expect("profiled").launch_s;
+    assert_eq!(pl.predict(&gpu, &Op::Comm(solo)), Some(launch));
+
+    let cfg = zoo::gpt2_large();
+    let one = pl.predict_graph(&gpu, &cfg.graph(1, 256), 1).unwrap();
+    let rank = cfg.graph_tp(1, 256, 2);
+    assert!(
+        rank.lower().iter().any(|op| matches!(op, Op::Comm(_))),
+        "tp=2 rank graph must carry collectives"
+    );
+    let two = pl.predict_graph(&gpu, &rank, 1).unwrap();
+    assert!(two > one / 2.0, "tp=2 beat ideal scaling: {two} vs {one}/2");
+    assert!(two < one, "tp=2 prefill must still beat single-device: {two} vs {one}");
+}
