@@ -14,16 +14,19 @@
 #   make serve-sim-tp-smoke — same smoke on a tensor-parallel placement
 #                      (--tp 2: rank-graph rewrite + priced collectives).
 #   make bench-serving — the serving-capacity sweep on the fast setting.
+#   make bench-json  — the same sweep, writing the hot-path measurements
+#                      (iterations/s cold vs memoized, sweep wall-clock)
+#                      to BENCH_serving.json for CI trend lines.
 
 PYTHON ?= python3
 
-.PHONY: artifacts ci lint doc fmt clippy build test bench-fast bench-serving serve-sim-smoke serve-sim-tp-smoke
+.PHONY: artifacts ci lint doc fmt clippy build test bench-fast bench-serving bench-json serve-sim-smoke serve-sim-tp-smoke
 
 # aot.py uses package-relative imports — must run as a module from python/.
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
 
-ci: lint doc test serve-sim-smoke serve-sim-tp-smoke
+ci: lint doc test serve-sim-smoke serve-sim-tp-smoke bench-json
 
 # Graceful no-toolchain path: some dev containers ship without cargo, and
 # lint is the one stage that may safely no-op there (skipping style checks
@@ -63,6 +66,18 @@ bench-fast:
 
 bench-serving:
 	PM2LAT_BENCH_FAST=1 cargo bench --bench serving_capacity
+
+# Measured, not asserted: the serving bench's hot-path lane writes its
+# numbers (cold vs memoized iterations/s, serial vs parallel sweep
+# wall-clock, cache hit rate) to BENCH_serving.json. Bit-for-bit equality
+# between fast and cold paths is asserted inside the bench itself. Same
+# graceful no-cargo skip as lint/doc.
+bench-json:
+	@if command -v cargo >/dev/null 2>&1; then \
+		PM2LAT_BENCH_FAST=1 PM2LAT_BENCH_JSON=BENCH_serving.json cargo bench --bench serving_capacity; \
+	else \
+		echo "bench-json: cargo not found — skipping (toolchain-less container)"; \
+	fi
 
 # End-to-end serving-simulator smoke: drives `pm2lat serve-sim --smoke`
 # (tiny Poisson trace, quick profile, sweep + SLO search) as an execution

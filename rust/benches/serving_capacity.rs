@@ -7,6 +7,13 @@
 //! Iterations price through `Coordinator::simulate_serving`, so the
 //! cached service path (per-node LRU + batched GEMM lanes) carries the
 //! whole replay.
+//!
+//! The hot-path lane measures (never asserts from first principles) the
+//! iteration-level accelerations on a decode-heavy smoke: cold vs
+//! memoized iterations/s, serial vs parallel sweep wall-clock — with
+//! bit-for-bit equality checks between every fast path and its cold
+//! twin. `PM2LAT_BENCH_JSON=<path>` writes the numbers as JSON for CI
+//! trend lines (`make bench-json` → `BENCH_serving.json`).
 
 use std::time::Instant;
 
@@ -15,8 +22,9 @@ use pm2lat::models::zoo;
 use pm2lat::ops::DType;
 use pm2lat::runtime::Runtime;
 use pm2lat::serving::{
-    self, KvPagerConfig, SchedulerConfig, ServingSimConfig,
+    self, HotPath, IterCache, IterScope, KvPagerConfig, SchedulerConfig, ServingSimConfig,
 };
+use pm2lat::util::json::Json;
 use pm2lat::util::pool;
 
 fn main() {
@@ -118,12 +126,119 @@ fn main() {
         trace: serving::poisson_trace(16, 20.0, 128, 8, 7),
         sim,
         kind: PredictorKind::Pm2LatBatched,
+        iter_cache: false,
     };
     let a = run_serving(&coord, &req);
     let b = run_serving(&coord, &req);
     assert_eq!(a, b, "serving replays must be deterministic");
+    let c = run_serving(&coord, &ServingRequest { iter_cache: true, ..req });
+    assert_eq!(a, c, "iteration memo must not change the replay");
     println!("\nsimulate_serving determinism: ok ({a:?})");
-    println!("\n{}", coord.metrics.summary());
+
+    let hot = hot_path_lane(&coord, fast_mode);
+    println!("\n{}", coord.service_summary());
+
+    if let Ok(path) = std::env::var("PM2LAT_BENCH_JSON") {
+        std::fs::write(&path, format!("{hot}\n")).expect("write bench json");
+        println!("wrote {path}");
+    }
+}
+
+/// The iteration-hot-path lane: a decode-heavy replay (short prompts,
+/// long generations → the same decode slot signatures recur for most of
+/// the run) priced by the direct analytical path, measured four ways:
+/// cold, memoized, serial sweep, parallel+memoized sweep. Every fast
+/// number is bit-compared against its cold twin before it is reported.
+fn hot_path_lane(coord: &Coordinator<'_>, fast_mode: bool) -> Json {
+    let cfg = zoo::gpt2_large();
+    let device = "a100";
+    let gpu = coord.gpu(device).expect("registered");
+    let pl = coord.pm2lat(device).expect("registered");
+    let sim = ServingSimConfig {
+        scheduler: SchedulerConfig { max_batch: 8, chunk_tokens: 256, ..Default::default() },
+        pager: KvPagerConfig::for_model(&cfg, gpu.spec.mem_bytes(), 16),
+        streams: 1,
+    };
+    let (n, gen) = if fast_mode { (16, 48) } else { (32, 96) };
+    let unit = serving::poisson_trace(n, 1.0, 32, gen, 9);
+    let price = |g: &pm2lat::graph::ModelGraph| pl.predict_graph(gpu, g, 1);
+
+    // Load calibration: ~2 concurrent solo requests, like serve-sim.
+    let mut p = |g: &pm2lat::graph::ModelGraph| price(g);
+    let solo = serving::simulate(&cfg, &unit[..1], &sim, &mut p).expect("gpt2 f32 supported");
+    let qps = 2.0 / solo.completed[0].e2e_s();
+    let trace = serving::scale_arrivals(&unit, qps);
+
+    // Cold vs memoized replay (second memoized pass measures the steady
+    // state the cache exists for).
+    let t0 = Instant::now();
+    let cold = serving::simulate(&cfg, &trace, &sim, &mut p).expect("cold replay");
+    let cold_s = t0.elapsed().as_secs_f64();
+    let icache = IterCache::default_sized();
+    let pass_cache = pm2lat::graph::PassResultCache::default_sized();
+    let hp = HotPath::memoized(1, IterScope::new(&cfg, device, 1, 1), &icache, &pass_cache);
+    serving::simulate_hot(&cfg, &trace, &sim, &hp, &mut p).expect("warm-up replay");
+    let t0 = Instant::now();
+    let hot = serving::simulate_hot(&cfg, &trace, &sim, &hp, &mut p).expect("memoized replay");
+    let hot_s = t0.elapsed().as_secs_f64();
+    assert_eq!(cold.makespan_s.to_bits(), hot.makespan_s.to_bits(), "memo broke the replay");
+    assert_eq!(cold.gpu_busy_s.to_bits(), hot.gpu_busy_s.to_bits());
+    assert_eq!(cold.iterations, hot.iterations);
+    assert!(icache.hit_rate() > 0.0, "decode-heavy replay must hit the memo");
+
+    let cold_ips = cold.iterations as f64 / cold_s.max(1e-9);
+    let hot_ips = hot.iterations as f64 / hot_s.max(1e-9);
+    let speedup = cold_s / hot_s.max(1e-9);
+    println!("\n-- iteration hot path ({} on {device}, decode-heavy) --", cfg.name);
+    println!(
+        "   cold    : {:>8.0} iters/s ({} iterations in {:.3}s)",
+        cold_ips, cold.iterations, cold_s
+    );
+    println!(
+        "   memoized: {:>8.0} iters/s ({speedup:.1}x, {})",
+        hot_ips,
+        icache.stats()
+    );
+
+    // Serial vs parallel sweep over the same population — the parallel
+    // points share the (already warm) iteration cache.
+    let rates: Vec<f64> = [0.5, 1.0, 2.0, 4.0].iter().map(|f| f * qps).collect();
+    let t0 = Instant::now();
+    let serial = serving::qps_sweep(&cfg, &unit, &sim, &mut p, &rates).expect("serial sweep");
+    let serial_s = t0.elapsed().as_secs_f64();
+    let threads = pool::default_threads();
+    let t0 = Instant::now();
+    let parallel =
+        serving::qps_sweep_parallel(&cfg, &unit, &sim, &hp, &price, &rates, threads)
+            .expect("parallel sweep");
+    let par_s = t0.elapsed().as_secs_f64();
+    for (s, q) in serial.iter().zip(&parallel) {
+        assert_eq!(s.ttft_p99_s.to_bits(), q.ttft_p99_s.to_bits(), "sweep diverged");
+        assert_eq!(s.throughput_rps.to_bits(), q.throughput_rps.to_bits());
+    }
+    println!(
+        "   sweep   : serial {serial_s:.2}s vs parallel+memo {par_s:.2}s \
+         ({:.1}x, {} points, {threads} threads, bit-identical)",
+        serial_s / par_s.max(1e-9),
+        rates.len()
+    );
+
+    Json::obj(vec![
+        ("lane", "iteration-hot-path".into()),
+        ("model", cfg.name.into()),
+        ("device", device.into()),
+        ("requests", n.into()),
+        ("iterations", cold.iterations.into()),
+        ("cold_iters_per_s", cold_ips.into()),
+        ("memoized_iters_per_s", hot_ips.into()),
+        ("memoized_speedup", speedup.into()),
+        ("cache_hit_rate", icache.hit_rate().into()),
+        ("sweep_serial_s", serial_s.into()),
+        ("sweep_parallel_s", par_s.into()),
+        ("sweep_speedup", (serial_s / par_s.max(1e-9)).into()),
+        ("sweep_threads", threads.into()),
+        ("bit_identical", true.into()),
+    ])
 }
 
 fn run_serving(coord: &Coordinator<'_>, req: &ServingRequest) -> (usize, u64) {

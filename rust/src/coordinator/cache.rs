@@ -21,11 +21,68 @@
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use crate::ops::Op;
 
 use super::service::PredictorKind;
+
+/// Cache sizing policy: an entry bound, an optional per-entry TTL, and an
+/// optional approximate memory budget.
+///
+/// * **TTL** — entries older than `ttl` are expired lazily on lookup
+///   (an expired hit is a miss and frees the slot). Analytical
+///   predictions never go stale, so this is an *operational* knob: it
+///   bounds how long a long-lived service pins memory for traffic that
+///   stopped recurring, without paying a sweeper thread.
+/// * **Memory budget** — `mem_budget_bytes` converts to an entry bound
+///   via [`CacheConfig::approx_entry_bytes`] (arena node + map slot,
+///   padded ~1.5× for `HashMap` overhead) and the *tighter* of the two
+///   bounds wins. Approximate by design: entries are fixed-size, so the
+///   translation is off by at most the map's load-factor slack.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    /// Maximum entries across all shards (rounded up to shard
+    /// granularity); 0 disables the cache.
+    pub capacity: usize,
+    /// Per-entry time-to-live; `None` = entries live until evicted.
+    pub ttl: Option<Duration>,
+    /// Approximate total memory bound; `None` = entry bound only.
+    pub mem_budget_bytes: Option<usize>,
+}
+
+impl CacheConfig {
+    pub fn entries(capacity: usize) -> CacheConfig {
+        CacheConfig { capacity, ttl: None, mem_budget_bytes: None }
+    }
+
+    pub fn with_ttl(mut self, ttl: Duration) -> CacheConfig {
+        self.ttl = Some(ttl);
+        self
+    }
+
+    pub fn with_mem_budget_mb(mut self, mb: usize) -> CacheConfig {
+        self.mem_budget_bytes = Some(mb.saturating_mul(1 << 20));
+        self
+    }
+
+    /// Approximate resident bytes per cached entry: the arena node plus
+    /// the map slot, padded 1.5× for hash-table overhead.
+    pub fn approx_entry_bytes() -> usize {
+        (std::mem::size_of::<Node>() + std::mem::size_of::<(CacheKey, usize)>()) * 3 / 2
+    }
+
+    /// The entry bound after applying the memory budget (the tighter of
+    /// the two bounds).
+    pub fn effective_capacity(&self) -> usize {
+        match self.mem_budget_bytes {
+            Some(bytes) => self.capacity.min(bytes / Self::approx_entry_bytes()),
+            None => self.capacity,
+        }
+    }
+}
 
 /// Cache key: (interned device id, tensor-parallel degree, computation
 /// path, op). `tp = 1` is the single-device placement.
@@ -37,6 +94,9 @@ const NIL: usize = usize::MAX;
 struct Node {
     key: CacheKey,
     value: f64,
+    /// Insertion/refresh time; populated only when a TTL is configured,
+    /// so the TTL-free path never touches the clock.
+    stamp: Option<Instant>,
     prev: usize,
     next: usize,
 }
@@ -91,35 +151,59 @@ impl Shard {
         }
     }
 
-    fn get(&mut self, key: &CacheKey) -> Option<f64> {
-        let i = *self.map.get(key)?;
+    /// Look up `key`. The second slot of the return reports a lazy TTL
+    /// expiry: the entry existed but was older than `ttl`, so it was
+    /// removed and the lookup missed.
+    fn get(&mut self, key: &CacheKey, ttl: Option<Duration>) -> (Option<f64>, bool) {
+        let Some(&i) = self.map.get(key) else {
+            return (None, false);
+        };
+        if let (Some(ttl), Some(stamp)) = (ttl, self.nodes[i].stamp) {
+            if stamp.elapsed() >= ttl {
+                self.detach(i);
+                self.map.remove(key);
+                self.free.push(i);
+                return (None, true);
+            }
+        }
         if self.head != i {
             self.detach(i);
             self.attach_front(i);
         }
-        Some(self.nodes[i].value)
+        (Some(self.nodes[i].value), false)
     }
 
-    fn insert(&mut self, key: CacheKey, value: f64, capacity: usize) {
+    /// Insert `key → value`; returns `true` when a resident entry was
+    /// evicted to make room.
+    fn insert(
+        &mut self,
+        key: CacheKey,
+        value: f64,
+        capacity: usize,
+        stamp: Option<Instant>,
+    ) -> bool {
         if capacity == 0 {
-            return;
+            return false;
         }
         if let Some(&i) = self.map.get(&key) {
             self.nodes[i].value = value;
+            self.nodes[i].stamp = stamp;
             if self.head != i {
                 self.detach(i);
                 self.attach_front(i);
             }
-            return;
+            return false;
         }
+        let mut evicted_one = false;
         if self.map.len() >= capacity {
             let lru = self.tail;
             self.detach(lru);
             let evicted = self.nodes[lru].key;
             self.map.remove(&evicted);
             self.free.push(lru);
+            evicted_one = true;
         }
-        let node = Node { key, value, prev: NIL, next: NIL };
+        let node = Node { key, value, stamp, prev: NIL, next: NIL };
         let i = match self.free.pop() {
             Some(slot) => {
                 self.nodes[slot] = node;
@@ -132,6 +216,7 @@ impl Shard {
         };
         self.map.insert(key, i);
         self.attach_front(i);
+        evicted_one
     }
 }
 
@@ -140,15 +225,27 @@ impl Shard {
 pub struct PredictionCache {
     shards: Vec<Mutex<Shard>>,
     per_shard: usize,
+    ttl: Option<Duration>,
+    lru_evictions: AtomicU64,
+    ttl_evictions: AtomicU64,
 }
 
 impl PredictionCache {
     /// `capacity` bounds total entries across shards (rounded up to shard
     /// granularity); 0 disables the cache entirely.
     pub fn new(capacity: usize) -> PredictionCache {
+        PredictionCache::with_config(CacheConfig::entries(capacity))
+    }
+
+    /// Build from a full sizing policy (entry bound ∧ memory budget, plus
+    /// an optional TTL).
+    pub fn with_config(cfg: CacheConfig) -> PredictionCache {
         PredictionCache {
             shards: (0..N_SHARDS).map(|_| Mutex::new(Shard::new())).collect(),
-            per_shard: capacity.div_ceil(N_SHARDS),
+            per_shard: cfg.effective_capacity().div_ceil(N_SHARDS),
+            ttl: cfg.ttl,
+            lru_evictions: AtomicU64::new(0),
+            ttl_evictions: AtomicU64::new(0),
         }
     }
 
@@ -159,6 +256,21 @@ impl PredictionCache {
     /// Effective entry bound (0 when disabled).
     pub fn capacity(&self) -> usize {
         self.per_shard * N_SHARDS
+    }
+
+    /// Configured per-entry TTL, if any.
+    pub fn ttl(&self) -> Option<Duration> {
+        self.ttl
+    }
+
+    /// Entries displaced to make room for newer ones.
+    pub fn lru_evictions(&self) -> u64 {
+        self.lru_evictions.load(Ordering::Relaxed)
+    }
+
+    /// Entries lazily expired on lookup because they outlived the TTL.
+    pub fn ttl_evictions(&self) -> u64 {
+        self.ttl_evictions.load(Ordering::Relaxed)
     }
 
     /// Device-partitioned shard index: bits [3:2] from the device id,
@@ -175,7 +287,14 @@ impl PredictionCache {
             return None;
         }
         let key = (device, tp, path, *op);
-        self.shards[self.shard_of(&key)].lock().unwrap().get(&key)
+        let (hit, expired) = self.shards[self.shard_of(&key)]
+            .lock()
+            .unwrap()
+            .get(&key, self.ttl);
+        if expired {
+            self.ttl_evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
     }
 
     pub fn insert(&self, device: u32, tp: u16, path: PredictorKind, op: &Op, value: f64) {
@@ -183,10 +302,14 @@ impl PredictionCache {
             return;
         }
         let key = (device, tp, path, *op);
-        self.shards[self.shard_of(&key)]
+        let stamp = self.ttl.map(|_| Instant::now());
+        let evicted = self.shards[self.shard_of(&key)]
             .lock()
             .unwrap()
-            .insert(key, value, self.per_shard);
+            .insert(key, value, self.per_shard, stamp);
+        if evicted {
+            self.lru_evictions.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Current number of cached entries (sums shard sizes; O(shards)).
@@ -273,14 +396,14 @@ mod tests {
     #[test]
     fn lru_evicts_oldest_first() {
         let mut s = Shard::new();
-        s.insert((0, 1, P, op(0)), 0.0, 2);
-        s.insert((0, 1, P, op(1)), 1.0, 2);
+        assert!(!s.insert((0, 1, P, op(0)), 0.0, 2, None));
+        assert!(!s.insert((0, 1, P, op(1)), 1.0, 2, None));
         // Touch op0 so op1 becomes least-recently used.
-        assert_eq!(s.get(&(0, 1, P, op(0))), Some(0.0));
-        s.insert((0, 1, P, op(2)), 2.0, 2);
-        assert_eq!(s.get(&(0, 1, P, op(0))), Some(0.0));
-        assert_eq!(s.get(&(0, 1, P, op(1))), None, "LRU entry evicted");
-        assert_eq!(s.get(&(0, 1, P, op(2))), Some(2.0));
+        assert_eq!(s.get(&(0, 1, P, op(0)), None).0, Some(0.0));
+        assert!(s.insert((0, 1, P, op(2)), 2.0, 2, None), "eviction reported");
+        assert_eq!(s.get(&(0, 1, P, op(0)), None).0, Some(0.0));
+        assert_eq!(s.get(&(0, 1, P, op(1)), None).0, None, "LRU entry evicted");
+        assert_eq!(s.get(&(0, 1, P, op(2)), None).0, Some(2.0));
         assert_eq!(s.map.len(), 2);
     }
 
@@ -288,10 +411,69 @@ mod tests {
     fn arena_slots_are_reused() {
         let mut s = Shard::new();
         for i in 0..100 {
-            s.insert((0, 1, P, op(i)), i as f64, 2);
+            s.insert((0, 1, P, op(i)), i as f64, 2, None);
         }
         assert_eq!(s.map.len(), 2);
         assert!(s.nodes.len() <= 3, "churn must not grow the arena");
+    }
+
+    #[test]
+    fn ttl_expires_lazily_and_is_counted() {
+        // A zero TTL expires every entry at its first lookup; a long TTL
+        // keeps everything alive — both without any sweeper thread.
+        let c = PredictionCache::with_config(
+            CacheConfig::entries(1024).with_ttl(Duration::ZERO),
+        );
+        c.insert(0, 1, P, &op(0), 1.0);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(0, 1, P, &op(0)), None, "zero TTL expires on lookup");
+        assert_eq!(c.ttl_evictions(), 1);
+        assert_eq!(c.len(), 0, "expired entry freed its slot");
+        // Re-inserting after expiry works (slot reuse, fresh stamp).
+        c.insert(0, 1, P, &op(0), 2.0);
+        assert_eq!(c.len(), 1);
+
+        let keep = PredictionCache::with_config(
+            CacheConfig::entries(1024).with_ttl(Duration::from_secs(3600)),
+        );
+        keep.insert(0, 1, P, &op(0), 1.0);
+        assert_eq!(keep.get(0, 1, P, &op(0)), Some(1.0));
+        assert_eq!(keep.ttl_evictions(), 0);
+    }
+
+    #[test]
+    fn lru_evictions_are_counted_globally() {
+        let c = PredictionCache::new(32);
+        for i in 0..500 {
+            c.insert(0, 1, P, &op(i), i as f64);
+        }
+        // All 500 inserts land in device 0's 4-shard partition, so churn
+        // is guaranteed; at least 500 - capacity inserts displaced someone.
+        assert!(
+            c.lru_evictions() >= 500 - c.capacity() as u64,
+            "expected ≥ {} LRU evictions, saw {}",
+            500 - c.capacity(),
+            c.lru_evictions()
+        );
+        assert_eq!(c.ttl_evictions(), 0, "no TTL configured");
+    }
+
+    #[test]
+    fn mem_budget_tightens_the_entry_bound() {
+        let per = CacheConfig::approx_entry_bytes();
+        assert!(per > 0);
+        // Budget for ~64 entries must beat a 1M-entry bound...
+        let tight = CacheConfig::entries(1 << 20);
+        let tight = CacheConfig {
+            mem_budget_bytes: Some(64 * per),
+            ..tight
+        };
+        assert!(tight.effective_capacity() <= 64);
+        let c = PredictionCache::with_config(tight);
+        assert!(c.capacity() <= 64 + N_SHARDS, "budget bound ignored");
+        // ...and a huge budget must leave the entry bound in charge.
+        let loose = CacheConfig::entries(128).with_mem_budget_mb(4096);
+        assert_eq!(loose.effective_capacity(), 128);
     }
 
     #[test]

@@ -63,7 +63,7 @@ pub mod cache;
 pub mod metrics;
 pub mod service;
 
-pub use cache::PredictionCache;
+pub use cache::{CacheConfig, PredictionCache};
 pub use metrics::{Metrics, RESERVOIR_CAP};
 pub use service::{
     ab_phases, build_f32_service, build_service, mixed_workload, mixed_workload_dtyped,

@@ -127,6 +127,11 @@ pub struct ServingRequest {
     pub trace: Vec<crate::serving::RequestSpec>,
     pub sim: crate::serving::ServingSimConfig,
     pub kind: PredictorKind,
+    /// Memoize whole-iteration prices keyed by the canonical slot
+    /// signature ([`crate::serving::IterationKey`]): a repeated decode
+    /// signature skips graph construction and the per-node submission
+    /// entirely. Bit-identical to the cold path; costs one LRU per call.
+    pub iter_cache: bool,
 }
 
 /// A request after device interning: (device id, tensor-parallel degree,
@@ -174,6 +179,13 @@ impl Engine {
         self.cache = PredictionCache::new(capacity);
     }
 
+    /// Replace the cache with one built from a full sizing policy
+    /// (entry bound ∧ memory budget, optional TTL). Resets eviction
+    /// counters along with the entries.
+    pub fn set_cache_config(&mut self, cfg: super::cache::CacheConfig) {
+        self.cache = PredictionCache::with_config(cfg);
+    }
+
     pub fn with_threads(mut self, threads: usize) -> Engine {
         self.set_threads(threads);
         self
@@ -182,6 +194,27 @@ impl Engine {
     pub fn with_cache_capacity(mut self, capacity: usize) -> Engine {
         self.set_cache_capacity(capacity);
         self
+    }
+
+    pub fn with_cache_config(mut self, cfg: super::cache::CacheConfig) -> Engine {
+        self.set_cache_config(cfg);
+        self
+    }
+
+    /// One-line operational summary: the metrics counters plus cache
+    /// residency and eviction breakdown (LRU displacement vs lazy TTL
+    /// expiry). The eviction counters live on the cache rather than in
+    /// [`Metrics`] so they survive metric resets and stay exact under
+    /// concurrent submission.
+    pub fn service_summary(&self) -> String {
+        format!(
+            "{} | cache {}/{} entries, evictions: {} lru, {} ttl",
+            self.metrics.summary(),
+            self.cache.len(),
+            self.cache.capacity(),
+            self.cache.lru_evictions(),
+            self.cache.ttl_evictions(),
+        )
     }
 
     /// Register a device with its fitted PM2Lat state. Duplicate
@@ -390,6 +423,14 @@ impl<'rt> Coordinator<'rt> {
 
     pub fn engine(&self) -> &Engine {
         &self.engine
+    }
+
+    /// Mutable engine access for post-build configuration (cache policy,
+    /// thread count). Device registration must go through
+    /// [`Coordinator::register_device`] so the batcher table stays in
+    /// sync.
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
     }
 
     /// Register a device with its fitted PM2Lat state. Duplicate
@@ -648,8 +689,11 @@ impl<'rt> Coordinator<'rt> {
     /// — one [`Coordinator::submit_graphs`] batch per iteration, so GEMM
     /// lanes batch across the iteration's nodes and the LRU absorbs the
     /// ops that repeat from iteration to iteration (all of them except
-    /// the growing attention windows). Deterministic; `Err` on unknown
-    /// devices, unsupported models, or impossible traces.
+    /// the growing attention windows). With `req.iter_cache` the
+    /// iteration-level memo sits in front of all of that: a repeated slot
+    /// signature never even builds the graph. Deterministic either way;
+    /// `Err` on unknown devices, unsupported models, or impossible
+    /// traces.
     pub fn simulate_serving(
         &self,
         req: &ServingRequest,
@@ -665,7 +709,23 @@ impl<'rt> Coordinator<'rt> {
             .ok()?
             .pop()?
         };
-        crate::serving::simulate(&req.config, &req.trace, &req.sim, &mut price)
+        // The pricing path is a cache-key dimension (scalar vs batched
+        // PJRT agree only approximately), exactly as in PredictionCache.
+        let lane = match req.kind {
+            PredictorKind::Pm2Lat => 1,
+            PredictorKind::Pm2LatBatched => 2,
+            PredictorKind::NeuSight => 3,
+        };
+        let scope = crate::serving::IterScope::new(&req.config, &req.device, 1, req.sim.streams)
+            .with_lane(lane);
+        let icache = crate::serving::IterCache::default_sized();
+        let hp = crate::serving::simulator::HotPath {
+            tp: 1,
+            scope,
+            cache: req.iter_cache.then_some(&icache),
+            passes: None,
+        };
+        crate::serving::simulate_hot(&req.config, &req.trace, &req.sim, &hp, &mut price)
             .map_err(|e| anyhow!("serving simulation: {e}"))
     }
 
@@ -1603,8 +1663,16 @@ mod tests {
             trace: trace.clone(),
             sim,
             kind: PredictorKind::Pm2Lat,
+            iter_cache: false,
         };
         let via_service = c.simulate_serving(&req).unwrap();
+        // The iteration-level memo must change nothing but the speed.
+        let memoized = c
+            .simulate_serving(&ServingRequest { iter_cache: true, ..req.clone() })
+            .unwrap();
+        assert_eq!(memoized.makespan_s, via_service.makespan_s, "memo changed the replay");
+        assert_eq!(memoized.gpu_busy_s, via_service.gpu_busy_s);
+        assert_eq!(memoized.completed, via_service.completed);
         // The scalar service path memoizes the same deterministic
         // predictions the direct path computes — identical replay.
         let direct = {

@@ -296,6 +296,31 @@ impl ModelGraph {
         self.lowered_ids().into_iter().map(|id| self.nodes[id.0].op).collect()
     }
 
+    /// Structural identity hash: a stable 64-bit digest over every node
+    /// (op, input edges, causal and grouped-query annotations) and the
+    /// marked outputs, composing the same field-structured
+    /// [`crate::util::prng::StableHasher`] that backs `Op::stable_hash`.
+    /// Two graphs hash equal iff they are node-for-node identical (modulo
+    /// the 64-bit collision bound), which is exactly the granularity the
+    /// pass-result cache ([`crate::graph::PassResultCache`]) and the
+    /// serving iteration memo need: a rewrite pass is a deterministic
+    /// function of this structure, so equal hashes ⇒ equal rewrites.
+    /// Process-stable (no `DefaultHasher` randomization), so hashes can
+    /// be recorded and compared across runs.
+    pub fn stable_hash(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = crate::util::prng::StableHasher::new();
+        self.nodes.len().hash(&mut h);
+        for n in &self.nodes {
+            n.op.hash(&mut h);
+            n.inputs.hash(&mut h);
+            n.causal.hash(&mut h);
+            n.kv_groups.hash(&mut h);
+        }
+        self.outputs.hash(&mut h);
+        h.finish()
+    }
+
     /// Wrap a flat trace as a pure chain graph (each op depends on its
     /// predecessor) — the adapter for callers that only have a `Vec<Op>`.
     pub fn from_trace(trace: &[Op]) -> ModelGraph {
@@ -323,6 +348,33 @@ mod tests {
 
     fn util(kind: UtilKind, rows: usize, cols: usize) -> Op {
         Op::Util(UtilOp::new(kind, rows, cols, DType::F32))
+    }
+
+    #[test]
+    fn stable_hash_tracks_structure_exactly() {
+        let build = |mark: bool| {
+            let mut g = ModelGraph::new();
+            let a = g.add_node(gemm(64, 128, 32), &[]);
+            let b = g.add_node(util(UtilKind::Gelu, 64, 128), &[a]);
+            if mark {
+                g.mark_causal(b);
+            }
+            g.mark_output(b);
+            g
+        };
+        // Identical construction → identical hash, across instances.
+        assert_eq!(build(false).stable_hash(), build(false).stable_hash());
+        // Annotations are part of the structure (passes read them).
+        assert_ne!(build(false).stable_hash(), build(true).stable_hash());
+        // Ops, edges, and outputs all discriminate.
+        let mut g2 = build(false);
+        g2.add_node(gemm(64, 32, 128), &[NodeId(1)]);
+        assert_ne!(build(false).stable_hash(), g2.stable_hash());
+        let mut g3 = ModelGraph::new();
+        let a = g3.add_node(gemm(64, 128, 32), &[]);
+        let b = g3.add_node(util(UtilKind::Gelu, 64, 128), &[a, a]); // extra edge
+        g3.mark_output(b);
+        assert_ne!(build(false).stable_hash(), g3.stable_hash());
     }
 
     #[test]

@@ -36,6 +36,6 @@ pub mod schedule;
 pub use ir::{output_shape, GraphError, ModelGraph, Node, NodeId, TensorShape};
 pub use passes::{
     AttentionFusion, CausalMaskPropagation, DeadNodeElimination, Pass, PassCtx, PassManager,
-    TensorParallelPass,
+    PassResultCache, TensorParallelPass,
 };
 pub use schedule::{critical_path_s, predict_graph_latency, Schedule, ScheduledOp};

@@ -25,6 +25,8 @@
 //! lowering stays deterministic.
 
 use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::gpusim::custom;
 use crate::gpusim::DeviceSpec;
@@ -211,6 +213,101 @@ impl PassManager {
     /// Run every pass once, returning (pass name, rewrite count) pairs.
     pub fn run(&self, g: &mut ModelGraph, ctx: &PassCtx<'_>) -> Vec<(&'static str, usize)> {
         self.passes.iter().map(|p| (p.name(), p.run(g, ctx))).collect()
+    }
+}
+
+/// Memoized pass results, keyed on (pass-pipeline tag, input-graph
+/// structural hash). Rewrite passes are deterministic functions of graph
+/// structure, so running the same pipeline on a structurally identical
+/// graph is pure recomputation — the serving simulator hits exactly this
+/// when `simulate_placed` re-runs [`TensorParallelPass`] on every
+/// iteration of a decode-heavy trace whose batch signatures repeat.
+///
+/// Results are shared as `Arc<ModelGraph>` so a hit costs one refcount
+/// bump instead of a clone + rewrite. Keys are 64-bit
+/// [`ModelGraph::stable_hash`] digests rather than whole graphs: an
+/// accidental collision between two *distinct* live iteration graphs
+/// would require a 64-bit birthday within one replay's working set
+/// (thousands of graphs — odds ≈ 10⁻¹²), and the hot-path property
+/// tests cross-check key equality against structural equality on
+/// randomized corpora. `Sync` (mutex-protected map + atomic counters),
+/// so one instance serves all worker threads of a parallel sweep.
+///
+/// Bounded by wholesale clearing: when the map reaches `capacity` the
+/// next insert empties it. Pass results are pure acceleration, so a
+/// clear only costs recomputation; real working sets (distinct batch
+/// signatures) sit far below any sane bound.
+pub struct PassResultCache {
+    capacity: usize,
+    results: Mutex<HashMap<(u64, u64), Arc<ModelGraph>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PassResultCache {
+    pub fn new(capacity: usize) -> PassResultCache {
+        PassResultCache {
+            capacity: capacity.max(1),
+            results: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// A default bound comfortably above any replay's distinct-signature
+    /// working set.
+    pub fn default_sized() -> PassResultCache {
+        PassResultCache::new(1 << 12)
+    }
+
+    /// Tag for a pass configuration — fold in the pass name and every
+    /// parameter that changes its output (e.g. the tensor-parallel
+    /// degree). Two configurations with different tags never share
+    /// results.
+    pub fn config_tag<T: std::hash::Hash>(name: &str, params: &T) -> u64 {
+        crate::util::prng::StableHasher::hash_of(&(name, params))
+    }
+
+    /// The rewritten form of `g` under the pass configuration `tag`:
+    /// served from memory when this structure was rewritten before,
+    /// computed by `rewrite` (and stored) otherwise.
+    pub fn rewrite(
+        &self,
+        tag: u64,
+        g: &ModelGraph,
+        rewrite: impl FnOnce() -> ModelGraph,
+    ) -> Arc<ModelGraph> {
+        let key = (tag, g.stable_hash());
+        if let Some(hit) = self.results.lock().unwrap().get(&key).cloned() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let out = Arc::new(rewrite());
+        let mut map = self.results.lock().unwrap();
+        if map.len() >= self.capacity {
+            map.clear();
+        }
+        // A racing thread may have inserted meanwhile; both computed the
+        // same deterministic rewrite, so either value is correct.
+        map.entry(key).or_insert_with(|| out.clone());
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.results.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
     }
 }
 
@@ -664,6 +761,52 @@ mod tests {
     use crate::gpusim::device_by_name;
     use crate::models::zoo;
     use crate::ops::{DType, GemmOp, UtilOp};
+
+    #[test]
+    fn pass_result_cache_memoizes_per_structure_and_config() {
+        let cache = PassResultCache::new(8);
+        let cfg = zoo::gpt2_large();
+        let g = cfg.graph(1, 64);
+        let tag2 = PassResultCache::config_tag("tensor-parallel", &2usize);
+        let tag4 = PassResultCache::config_tag("tensor-parallel", &4usize);
+        assert_ne!(tag2, tag4, "parameters are part of the config tag");
+        let shard = |tp: usize| {
+            let mut rank = g.clone();
+            TensorParallelPass { tp }.run(&mut rank, &PassCtx::structural());
+            rank
+        };
+        let a = cache.rewrite(tag2, &g, || shard(2));
+        let b = cache.rewrite(tag2, &g, || panic!("second lookup must hit"));
+        assert!(Arc::ptr_eq(&a, &b), "hits share the stored rewrite");
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        // A different configuration over the same structure recomputes …
+        let c = cache.rewrite(tag4, &g, || shard(4));
+        assert_ne!(a.stable_hash(), c.stable_hash());
+        // … as does the same configuration over a different structure.
+        let g2 = cfg.graph(1, 128);
+        let d = cache.rewrite(tag2, &g2, || {
+            let mut rank = g2.clone();
+            TensorParallelPass { tp: 2 }.run(&mut rank, &PassCtx::structural());
+            rank
+        });
+        assert_ne!(a.stable_hash(), d.stable_hash());
+        assert_eq!(cache.len(), 3);
+        // The memoized rewrite is the rewrite, node for node.
+        assert_eq!(a.stable_hash(), shard(2).stable_hash());
+    }
+
+    #[test]
+    fn pass_result_cache_bound_clears_instead_of_growing() {
+        let cache = PassResultCache::new(2);
+        let cfg = zoo::gpt2_large();
+        let tag = PassResultCache::config_tag("noop", &0usize);
+        for seq in [16usize, 32, 48, 64] {
+            let g = cfg.graph(1, seq);
+            cache.rewrite(tag, &g, || g.clone());
+        }
+        assert!(cache.len() <= 2, "bound must hold under churn");
+    }
 
     fn fused_count(g: &ModelGraph) -> usize {
         g.nodes()

@@ -10,21 +10,23 @@
 //! pm2lat experiments [--full]               # every table + figure
 //! pm2lat nas --n 1000                       # §IV-D2 speed study
 //! pm2lat partition                          # §IV-D1 case study
-//! pm2lat serve-bench --n 50000 --threads 8 [--decode] [--slo-p99-us 500]
+//! pm2lat serve-bench --n 50000 --threads 8 [--decode] [--slo-p99-us 500] \
+//!                [--cache-ttl-s 60] [--cache-mem-mb 256]
 //! pm2lat serve-sim --device a100 --model gpt2-large --n 64 --qps 8 \
 //!                [--arrival poisson|bursty] [--trace file.json] \
 //!                [--policy continuous|static] \
 //!                [--admit fcfs|sjf|priority|fair-share] [--classes 4] \
 //!                [--max-batch 16] [--chunk 512] [--block-tokens 16] \
-//!                [--tp 2] [--sweep] [--slo-ttft-ms 500] [--service] [--smoke]
+//!                [--tp 2] [--sweep] [--slo-ttft-ms 500] [--service] [--smoke] \
+//!                [--no-iter-cache] [--cache-ttl-s 60] [--cache-mem-mb 256]
 //! ```
 
 use anyhow::{anyhow, Result};
 
 use pm2lat::coordinator::{
     ab_phases, build_service, mixed_workload, mixed_workload_dtyped, quick_neusight,
-    timed_submit, to_batched, to_kind, AbReport, GenerationRequest, GraphRequest,
-    PredictorKind,
+    timed_submit, to_batched, to_kind, AbReport, CacheConfig, GenerationRequest,
+    GraphRequest, PredictorKind,
 };
 use pm2lat::serving::{
     self, Admission, BatchingMode, CapacityPoint, KvPagerConfig, SchedulerConfig,
@@ -192,6 +194,20 @@ fn serve_bench(args: &Args) -> Result<()> {
     let dtypes = [DType::F32, DType::Bf16];
     let base = build_service(&runtime, 1, 0, &devices, &dtypes)?;
     let mut fast = build_service(&runtime, threads, 1 << 17, &devices, &dtypes)?;
+    // Optional cache policy: a per-entry TTL and/or an approximate
+    // memory budget on the fast service's op cache.
+    let ttl_s = args.opt_f64("cache-ttl-s", 0.0);
+    let mem_mb = args.opt_usize("cache-mem-mb", 0);
+    if ttl_s > 0.0 || mem_mb > 0 {
+        let mut cc = CacheConfig::entries(1 << 17);
+        if ttl_s > 0.0 {
+            cc = cc.with_ttl(std::time::Duration::from_secs_f64(ttl_s));
+        }
+        if mem_mb > 0 {
+            cc = cc.with_mem_budget_mb(mem_mb);
+        }
+        fast.engine_mut().set_cache_config(cc);
+    }
     fast.register_neusight(quick_neusight(&runtime, DType::F32)?);
     let scalar = ab_phases(&base, &fast, &workload, batch)?;
     let batched = ab_phases(&base, &fast, &to_batched(&workload), batch)?;
@@ -271,7 +287,7 @@ fn serve_bench(args: &Args) -> Result<()> {
         }
     }
 
-    println!("metrics: {}", fast.metrics.summary());
+    println!("metrics: {}", fast.service_summary());
     if !scalar.identical || !batched.identical || !bf16.identical {
         return Err(anyhow!("cached/parallel results diverged from uncached baseline"));
     }
@@ -402,17 +418,41 @@ fn serve_sim(args: &Args) -> Result<()> {
         streams,
     };
 
-    // Pricing backend: direct PM2Lat, or the cached service path.
+    // Pricing backend: direct PM2Lat, or the cached service path. The
+    // service cache accepts an optional TTL + memory budget.
+    let ttl_s = args.opt_f64("cache-ttl-s", 0.0);
+    let mem_mb = args.opt_usize("cache-mem-mb", 0);
     let runtime = if service { Some(Runtime::open_default()?) } else { None };
     let coordinator = match &runtime {
-        Some(rt) => Some(build_service(
-            rt,
-            pm2lat::util::pool::default_threads(),
-            1 << 17,
-            &[device.as_str()],
-            &[cfg.dtype],
-        )?),
-        None => None,
+        Some(rt) => {
+            let mut c = build_service(
+                rt,
+                pm2lat::util::pool::default_threads(),
+                1 << 17,
+                &[device.as_str()],
+                &[cfg.dtype],
+            )?;
+            if ttl_s > 0.0 || mem_mb > 0 {
+                let mut cc = CacheConfig::entries(1 << 17);
+                if ttl_s > 0.0 {
+                    cc = cc.with_ttl(std::time::Duration::from_secs_f64(ttl_s));
+                }
+                if mem_mb > 0 {
+                    cc = cc.with_mem_budget_mb(mem_mb);
+                }
+                c.engine_mut().set_cache_config(cc);
+            }
+            Some(c)
+        }
+        None => {
+            if ttl_s > 0.0 || mem_mb > 0 {
+                println!(
+                    "note: --cache-ttl-s/--cache-mem-mb size the service op cache \
+                     and have no effect without --service"
+                );
+            }
+            None
+        }
     };
     let mut base_price = |g: &pm2lat::graph::ModelGraph| -> Option<f64> {
         match &coordinator {
@@ -425,32 +465,38 @@ fn serve_sim(args: &Args) -> Result<()> {
                 }])
                 .ok()?
                 .pop()?,
+            // Large ragged iteration graphs fan per-node prediction
+            // across the worker pool (bit-identical to the serial path;
+            // small graphs stay serial — see `predict_graph_pooled`).
             None => pl
                 .as_ref()
                 .expect("direct path built when --service is absent")
-                .predict_graph(&gpu, g, streams),
+                .predict_graph_pooled(&gpu, g, streams, pm2lat::util::pool::default_threads()),
         }
     };
-    // Tensor parallelism: every iteration graph is rewritten to one
-    // rank's sharded work (collectives included) before pricing, so all
-    // downstream numbers — solo, report, sweeps, SLO search — are
-    // cluster-level. tp = 1 is the unwrapped closure, bit for bit.
-    let tp_pass = pm2lat::graph::TensorParallelPass { tp };
-    let tp_ctx = PassCtx::structural();
-    let mut price = |g: &pm2lat::graph::ModelGraph| -> Option<f64> {
-        if tp <= 1 {
-            base_price(g)
-        } else {
-            let mut rank = g.clone();
-            tp_pass.run(&mut rank, &tp_ctx);
-            base_price(&rank)
-        }
+    // The iteration hot path: memoized whole-iteration pricing (on by
+    // default, --no-iter-cache reverts to cold replay) and, for tp > 1,
+    // pass-result reuse so structurally identical iteration graphs share
+    // one tensor-parallel rewrite. All downstream numbers — solo, report,
+    // sweeps, SLO search — go through the same HotPath, so they are
+    // cluster-level when tp > 1 and bit-identical with the caches on or
+    // off.
+    let iter_cache_on = !args.flag("no-iter-cache");
+    let icache = serving::IterCache::default_sized();
+    let pass_cache = pm2lat::graph::PassResultCache::default_sized();
+    let scope = serving::IterScope::new(&cfg, &device, tp, streams)
+        .with_lane(if service { 2 } else { 0 });
+    let hp = serving::HotPath {
+        tp,
+        scope,
+        cache: iter_cache_on.then_some(&icache),
+        passes: (tp > 1).then_some(&pass_cache),
     };
 
     // Calibrate load off the solo request, then scale the population to
     // the target QPS (auto-derived from the solo E2E when no --qps is
     // given, so every model/device lands under load).
-    let solo = serving::simulate(&cfg, &unit[..1], &sim, &mut price)
+    let solo = serving::simulate_hot(&cfg, &unit[..1], &sim, &hp, &mut base_price)
         .map_err(|e| anyhow!("serve-sim: {e}"))?;
     let solo_e2e = solo.completed[0].e2e_s();
     let solo_ttft = solo.completed[0].ttft_s();
@@ -482,12 +528,18 @@ fn serve_sim(args: &Args) -> Result<()> {
         if coordinator.is_some() { " | service path" } else { "" },
     );
     println!("  solo request       : TTFT {:.2} ms, E2E {:.2} ms", solo_ttft * 1e3, solo_e2e * 1e3);
-    let report = serving::simulate(&cfg, &trace, &sim, &mut price)
+    let report = serving::simulate_hot(&cfg, &trace, &sim, &hp, &mut base_price)
         .map_err(|e| anyhow!("serve-sim: {e}"))?;
     println!("  {}", report.summary());
     if report.kv_leaked_blocks != 0 {
         return Err(anyhow!("KV pager leaked {} blocks", report.kv_leaked_blocks));
     }
+
+    // The direct analytical path is Sync, so sweeps and the SLO search
+    // fan rate points across the worker pool (each point shares the
+    // iteration cache). The service path stays serial: PJRT executions
+    // are pinned to the calling thread.
+    let sweep_threads = pm2lat::util::pool::default_threads();
 
     // Throughput–latency Pareto sweep over the same request population.
     // For recorded traces the swept "rate" is a multiplier on the
@@ -496,8 +548,17 @@ fn serve_sim(args: &Args) -> Result<()> {
     if args.flag("sweep") || smoke {
         let rates: Vec<f64> =
             [0.25, 0.5, 1.0, 2.0, 4.0].iter().map(|f| f * base_rate).collect();
-        let points = serving::qps_sweep(&cfg, &unit, &sim, &mut price, &rates)
-            .map_err(|e| anyhow!("sweep: {e}"))?;
+        let points = match (&coordinator, &pl) {
+            (Some(_), _) => {
+                serving::qps_sweep_hot(&cfg, &unit, &sim, &hp, &mut base_price, &rates)
+            }
+            (None, Some(pl)) => {
+                let price = |g: &pm2lat::graph::ModelGraph| pl.predict_graph(&gpu, g, streams);
+                serving::qps_sweep_parallel(&cfg, &unit, &sim, &hp, &price, &rates, sweep_threads)
+            }
+            (None, None) => unreachable!("one pricing backend is always built"),
+        }
+        .map_err(|e| anyhow!("sweep: {e}"))?;
         println!("  -- throughput–latency sweep --");
         print_capacity_header();
         for p in &points {
@@ -518,15 +579,34 @@ fn serve_sim(args: &Args) -> Result<()> {
     };
     if slo_s > 0.0 {
         let steps = if smoke { 3 } else { 6 };
-        let (max_qps, points) = serving::max_qps_under_slo(
-            &cfg,
-            &unit,
-            &sim,
-            &mut price,
-            slo_s,
-            (base_rate / 8.0).max(1e-3),
-            steps,
-        )
+        let lo = (base_rate / 8.0).max(1e-3);
+        let (max_qps, points) = match (&coordinator, &pl) {
+            (Some(_), _) => serving::max_qps_under_slo_hot(
+                &cfg,
+                &unit,
+                &sim,
+                &hp,
+                &mut base_price,
+                slo_s,
+                lo,
+                steps,
+            ),
+            (None, Some(pl)) => {
+                let price = |g: &pm2lat::graph::ModelGraph| pl.predict_graph(&gpu, g, streams);
+                serving::max_qps_under_slo_parallel(
+                    &cfg,
+                    &unit,
+                    &sim,
+                    &hp,
+                    &price,
+                    slo_s,
+                    lo,
+                    steps,
+                    sweep_threads,
+                )
+            }
+            (None, None) => unreachable!("one pricing backend is always built"),
+        }
         .map_err(|e| anyhow!("slo search: {e}"))?;
         println!(
             "  -- max sustainable QPS under p99 TTFT ≤ {:.1} ms --",
@@ -541,6 +621,29 @@ fn serve_sim(args: &Args) -> Result<()> {
         } else {
             println!("  SLO unattainable even at {:.3} req/s", base_rate / 8.0);
         }
+    }
+
+    // Hot-path accounting: the memo must actually be earning its keep —
+    // in smoke mode a zero hit rate with the cache on is a CI failure
+    // (it means the fast path was silently disabled).
+    if iter_cache_on {
+        println!("  iter cache         : {}", icache.stats());
+        if smoke && icache.hit_rate() <= 0.0 {
+            return Err(anyhow!(
+                "iteration cache enabled but never hit — hot path silently disabled"
+            ));
+        }
+    }
+    if tp > 1 {
+        println!(
+            "  tp pass cache      : {} structures, {} hits / {} misses",
+            pass_cache.len(),
+            pass_cache.hits(),
+            pass_cache.misses()
+        );
+    }
+    if let Some(c) = &coordinator {
+        println!("  service            : {}", c.service_summary());
     }
     Ok(())
 }

@@ -163,6 +163,41 @@ impl Pm2Lat {
         crate::graph::predict_graph_latency(graph, streams, |op| self.predict(gpu, op))
     }
 
+    /// [`Pm2Lat::predict_graph`] with the per-node predictions of large
+    /// graphs fanned across the scoped worker pool. Per-node predictions
+    /// are independent pure functions of `(gpu, op)` — the same shared
+    /// immutable borrow the coordinator's scalar fan-out already
+    /// exploits — and the schedule then consumes the durations in node
+    /// order, so the result is bit-identical to the serial path. Small
+    /// graphs (or `threads <= 1`) take the serial path directly: thread
+    /// spawn costs more than the prediction below a few hundred nodes.
+    /// A big ragged serving iteration (dozens of slots × dozens of
+    /// layers) clears the threshold comfortably.
+    pub fn predict_graph_pooled(
+        &self,
+        gpu: &Gpu,
+        graph: &crate::graph::ModelGraph,
+        streams: usize,
+        threads: usize,
+    ) -> Option<f64> {
+        const MIN_PARALLEL_NODES: usize = 512;
+        const CHUNK: usize = 64;
+        if threads <= 1 || graph.len() < MIN_PARALLEL_NODES {
+            return self.predict_graph(gpu, graph, streams);
+        }
+        let per_node = crate::util::pool::parallel_map_chunked(
+            graph.nodes(),
+            threads,
+            CHUNK,
+            |n| self.predict(gpu, &n.op),
+        );
+        let mut dur = Vec::with_capacity(per_node.len());
+        for v in per_node {
+            dur.push(v?);
+        }
+        Some(crate::graph::schedule::schedule(graph, streams, &dur).makespan_s)
+    }
+
     /// Whole-generation latency: the prefill graph plus one decode graph
     /// per emitted token, each aggregated as the `streams`-bounded
     /// critical path. With `gen_len == 0` this is bit-for-bit the plain
@@ -219,6 +254,30 @@ mod tests {
     use crate::ops::{GemmOp, UtilKind, UtilOp};
     use crate::profiler;
     use crate::util::stats::{mean, rel_err_pct};
+
+    #[test]
+    fn pooled_graph_prediction_is_bit_identical_to_serial() {
+        let (gpu, pl) = build("a100", &[DType::F32]);
+        let cfg = crate::models::zoo::gpt2_large();
+        // A big ragged serving iteration: well past the parallel
+        // threshold (36 layers × a dozen slots of attention subgraphs).
+        let slots: Vec<crate::models::SeqSlot> = (0..12)
+            .map(|i| crate::models::SeqSlot { q_len: 1 + (i % 3) * 16, kv_len: 64 + i * 7 })
+            .collect();
+        let g = cfg.mixed_batch_graph(&slots);
+        assert!(g.len() >= 512, "test graph must clear the parallel threshold");
+        for streams in [1usize, 4] {
+            let serial = pl.predict_graph(&gpu, &g, streams).unwrap();
+            let pooled = pl.predict_graph_pooled(&gpu, &g, streams, 4).unwrap();
+            assert_eq!(pooled.to_bits(), serial.to_bits(), "streams={streams}");
+        }
+        // Below the threshold the pooled entry point IS the serial path.
+        let small = cfg.decode_graph(1, 64);
+        assert_eq!(
+            pl.predict_graph_pooled(&gpu, &small, 1, 4),
+            pl.predict_graph(&gpu, &small, 1)
+        );
+    }
 
     fn build(dev: &str, dtypes: &[DType]) -> (Gpu, Pm2Lat) {
         let mut gpu = Gpu::by_name(dev).unwrap();

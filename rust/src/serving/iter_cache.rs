@@ -1,0 +1,456 @@
+//! Iteration-level memoized pricing for the serving hot path.
+//!
+//! Decode-heavy serving traces repeat a small set of batch signatures
+//! thousands of times: once every running sequence is past prefill, the
+//! iteration is "B decode slots at kv lengths k₁…k_B", and consecutive
+//! iterations differ only by +1 on each kv length — across a long replay
+//! (and *especially* across the points of a QPS sweep, which replay the
+//! same population at different arrival rates) the same signatures recur
+//! constantly. Rebuilding and re-pricing a fresh
+//! [`crate::models::TransformerConfig::mixed_batch_graph`] for each one
+//! is pure recomputation.
+//!
+//! [`IterCache`] memoizes the *iteration latency itself*, keyed by a
+//! canonical [`IterationKey`] computed straight from the `&[SeqSlot]`
+//! batch — before any graph exists. A hit skips graph construction,
+//! every rewrite pass (tensor-parallel sharding included), and all
+//! per-node prediction.
+//!
+//! Exactness contract. Pricing is deterministic, so a hit must be
+//! bit-identical to the cold path. Two ingredients make that true:
+//!
+//! * The key is **order-insensitive**: slots are sorted by
+//!   `(q_len, kv_len)`. `mixed_batch_graph` only reads those two fields,
+//!   so two batches with equal sorted signatures build *node-identical*
+//!   graphs — provided the simulator also builds the graph from the same
+//!   canonical order. [`canonical_slots`] is that shared ordering; the
+//!   simulator uses it on cold paths too, so the f64 summation order
+//!   (and hence the last-ulp of the makespan) is a function of the key.
+//! * The key is **exact**, not a hash: the full sorted `(q_len, kv_len)`
+//!   vector is stored and compared, so distinct signatures can never
+//!   alias. [`IterScope`] folds in everything else the price depends on
+//!   (model shape, dtype, device, pricing lane, tensor-parallel degree,
+//!   stream count) as a stable 64-bit tag — scopes are few (typically
+//!   one per replay) and chosen by the caller, so a tag collision would
+//!   require two *deliberately different* scopes hashing equal.
+//!
+//! The cache is `Sync` (one mutex around an arena-backed LRU — the same
+//! O(1) recency structure as `coordinator/cache.rs`, unsharded because
+//! iteration pricing is orders of magnitude coarser than per-op lookups)
+//! so one instance can be shared across the worker threads of a parallel
+//! QPS sweep: whichever rate point prices a signature first populates it
+//! for every other point.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::models::{SeqSlot, TransformerConfig};
+use crate::util::prng::StableHasher;
+
+/// Default entry bound: decode signatures are small (a few hundred bytes
+/// each), so 16 Ki entries is a few MB — enough for every kv-bucket
+/// signature of a long replay plus a whole sweep's worth of variants.
+pub const DEFAULT_ITER_CACHE_CAPACITY: usize = 1 << 14;
+
+/// Everything an iteration's price depends on *besides* the slot batch.
+/// One scope per (model, device, pricing lane, tp, streams) replay; the
+/// scope is folded into every [`IterationKey`] as a stable tag so one
+/// shared cache can serve many scopes without aliasing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct IterScope {
+    /// Stable hash of the model shape (dims, dtype, gating).
+    pub model: u64,
+    /// Stable hash of the device name the pricing backend targets.
+    pub device: u64,
+    /// Caller-chosen pricing-lane tag (e.g. direct vs batched-PJRT
+    /// service path — the two agree only to ~1e-3 relative, so their
+    /// memoized values must never mix). 0 for a single-lane replay.
+    pub lane: u64,
+    /// Tensor-parallel degree the iteration graph is rewritten to.
+    pub tp: u16,
+    /// Stream count of the per-iteration schedule.
+    pub streams: u16,
+}
+
+impl IterScope {
+    /// Scope for pricing `cfg` on `device` at `tp`-way tensor parallelism
+    /// with `streams`-wide schedules. The model tag hashes every field of
+    /// the config that shapes an iteration graph.
+    pub fn new(
+        cfg: &TransformerConfig,
+        device: &str,
+        tp: usize,
+        streams: usize,
+    ) -> IterScope {
+        let model = StableHasher::hash_of(&(
+            cfg.name,
+            cfg.layers,
+            cfg.enc_layers,
+            cfg.hidden,
+            cfg.heads,
+            cfg.kv_heads,
+            cfg.ffn_hidden,
+            cfg.vocab,
+            cfg.dtype,
+            cfg.gated_ffn,
+        ));
+        IterScope {
+            model,
+            device: StableHasher::hash_of(&device),
+            lane: 0,
+            tp: tp as u16,
+            streams: streams as u16,
+        }
+    }
+
+    /// Same scope under a different pricing lane (direct vs service).
+    pub fn with_lane(mut self, lane: u64) -> IterScope {
+        self.lane = lane;
+        self
+    }
+
+    /// The 64-bit tag folded into every key under this scope.
+    pub fn tag(&self) -> u64 {
+        StableHasher::hash_of(&(self.model, self.device, self.lane, self.tp, self.streams))
+    }
+}
+
+/// Canonical signature of one priced iteration: the scope tag plus the
+/// *sorted* `(q_len, kv_len)` multiset of the slot batch. Exact — the
+/// full vector is compared on lookup, so equal keys imply node-identical
+/// canonical graphs (a slot's role is determined by its shape:
+/// `mixed_batch_graph` reads nothing but `q_len`/`kv_len`).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct IterationKey {
+    scope: u64,
+    slots: Vec<(u32, u32)>,
+}
+
+impl IterationKey {
+    /// Key for pricing `slots` under `scope`. Order-insensitive: any
+    /// permutation of the batch yields the same key.
+    pub fn new(scope: IterScope, slots: &[SeqSlot]) -> IterationKey {
+        let mut v: Vec<(u32, u32)> =
+            slots.iter().map(|s| (s.q_len as u32, s.kv_len as u32)).collect();
+        v.sort_unstable();
+        IterationKey { scope: scope.tag(), slots: v }
+    }
+
+    /// Number of slots in the signature.
+    pub fn batch(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// The batch in the canonical order the key (and therefore the memoized
+/// price) is defined over: sorted by `(q_len, kv_len)`. The simulator
+/// builds every iteration graph from this order — cold paths included —
+/// so the price of a batch is a pure function of its [`IterationKey`],
+/// down to the last ulp of the f64 makespan summation.
+pub fn canonical_slots(slots: &[SeqSlot]) -> Vec<SeqSlot> {
+    let mut v = slots.to_vec();
+    v.sort_unstable_by_key(|s| (s.q_len, s.kv_len));
+    v
+}
+
+const NIL: usize = usize::MAX;
+
+struct Entry {
+    key: IterationKey,
+    value: f64,
+    prev: usize,
+    next: usize,
+}
+
+/// Arena-backed intrusive LRU (head = most recently used); same shape as
+/// the coordinator cache's shard, specialized to iteration keys.
+struct Lru {
+    map: HashMap<IterationKey, usize>,
+    entries: Vec<Entry>,
+    head: usize,
+    tail: usize,
+    free: Vec<usize>,
+}
+
+impl Lru {
+    fn new() -> Lru {
+        Lru { map: HashMap::new(), entries: Vec::new(), head: NIL, tail: NIL, free: Vec::new() }
+    }
+
+    fn detach(&mut self, i: usize) {
+        let (p, n) = (self.entries[i].prev, self.entries[i].next);
+        if p == NIL {
+            self.head = n;
+        } else {
+            self.entries[p].next = n;
+        }
+        if n == NIL {
+            self.tail = p;
+        } else {
+            self.entries[n].prev = p;
+        }
+        self.entries[i].prev = NIL;
+        self.entries[i].next = NIL;
+    }
+
+    fn attach_front(&mut self, i: usize) {
+        self.entries[i].prev = NIL;
+        self.entries[i].next = self.head;
+        if self.head != NIL {
+            self.entries[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    fn get(&mut self, key: &IterationKey) -> Option<f64> {
+        let i = *self.map.get(key)?;
+        if self.head != i {
+            self.detach(i);
+            self.attach_front(i);
+        }
+        Some(self.entries[i].value)
+    }
+
+    /// Returns true when an LRU entry was evicted to make room.
+    fn insert(&mut self, key: IterationKey, value: f64, capacity: usize) -> bool {
+        if let Some(&i) = self.map.get(&key) {
+            self.entries[i].value = value;
+            if self.head != i {
+                self.detach(i);
+                self.attach_front(i);
+            }
+            return false;
+        }
+        let mut evicted = false;
+        if self.map.len() >= capacity {
+            let lru = self.tail;
+            self.detach(lru);
+            let old = std::mem::replace(
+                &mut self.entries[lru].key,
+                IterationKey { scope: 0, slots: Vec::new() },
+            );
+            self.map.remove(&old);
+            self.free.push(lru);
+            evicted = true;
+        }
+        let entry = Entry { key: key.clone(), value, prev: NIL, next: NIL };
+        let i = match self.free.pop() {
+            Some(slot) => {
+                self.entries[slot] = entry;
+                slot
+            }
+            None => {
+                self.entries.push(entry);
+                self.entries.len() - 1
+            }
+        };
+        self.map.insert(key, i);
+        self.attach_front(i);
+        evicted
+    }
+}
+
+/// The shared, `Sync` iteration-price memo. Capacity 0 disables it (every
+/// lookup misses, nothing is stored) — the off-switch `serve-sim
+/// --no-iter-cache` uses.
+pub struct IterCache {
+    inner: Mutex<Lru>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl IterCache {
+    pub fn new(capacity: usize) -> IterCache {
+        IterCache {
+            inner: Mutex::new(Lru::new()),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The default-sized cache every hot path starts from.
+    pub fn default_sized() -> IterCache {
+        IterCache::new(DEFAULT_ITER_CACHE_CAPACITY)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn get(&self, key: &IterationKey) -> Option<f64> {
+        if !self.enabled() {
+            return None;
+        }
+        let v = self.inner.lock().unwrap().get(key);
+        match v {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        v
+    }
+
+    pub fn insert(&self, key: IterationKey, value: f64) {
+        if !self.enabled() {
+            return;
+        }
+        let evicted = self.inner.lock().unwrap().insert(key, value, self.capacity);
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        if evicted {
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        *self.inner.lock().unwrap() = Lru::new();
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Lookups served from memory, as a fraction of all lookups.
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits() as f64;
+        let m = self.misses() as f64;
+        if h + m > 0.0 {
+            h / (h + m)
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line operator summary for CLI/bench output.
+    pub fn stats(&self) -> String {
+        format!(
+            "iter-cache: {} entries (cap {}), {} hits / {} misses ({:.1}% hit rate), {} evictions",
+            self.len(),
+            self.capacity,
+            self.hits(),
+            self.misses(),
+            self.hit_rate() * 100.0,
+            self.evictions(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    fn slots(sig: &[(usize, usize)]) -> Vec<SeqSlot> {
+        sig.iter().map(|&(q, kv)| SeqSlot { q_len: q, kv_len: kv }).collect()
+    }
+
+    #[test]
+    fn key_is_order_insensitive_and_exact() {
+        let scope = IterScope::new(&zoo::gpt2_large(), "a100", 1, 1);
+        let a = IterationKey::new(scope, &slots(&[(1, 33), (1, 97), (64, 64)]));
+        let b = IterationKey::new(scope, &slots(&[(64, 64), (1, 97), (1, 33)]));
+        assert_eq!(a, b, "any permutation of the batch is the same key");
+        assert_eq!(a.batch(), 3);
+        // Different multisets — even with equal sums — are different keys.
+        let c = IterationKey::new(scope, &slots(&[(1, 34), (1, 96), (64, 64)]));
+        assert_ne!(a, c);
+        // Multiplicity matters: {x, x} is not {x}.
+        let d1 = IterationKey::new(scope, &slots(&[(1, 50)]));
+        let d2 = IterationKey::new(scope, &slots(&[(1, 50), (1, 50)]));
+        assert_ne!(d1, d2);
+    }
+
+    #[test]
+    fn scope_discriminates_every_dimension() {
+        let cfg = zoo::gpt2_large();
+        let batch = slots(&[(1, 128)]);
+        let base = IterScope::new(&cfg, "a100", 1, 1);
+        let variants = [
+            IterScope::new(&cfg, "l4", 1, 1),
+            IterScope::new(&cfg, "a100", 2, 1),
+            IterScope::new(&cfg, "a100", 1, 4),
+            IterScope::new(&zoo::qwen3_0_6b(), "a100", 1, 1),
+            base.with_lane(1),
+        ];
+        let k0 = IterationKey::new(base, &batch);
+        for v in variants {
+            assert_ne!(k0, IterationKey::new(v, &batch), "scope {v:?} must not alias");
+        }
+    }
+
+    #[test]
+    fn canonical_order_matches_key_order() {
+        // The graph the simulator builds (canonical order) and the key
+        // must sort identically, or a hit could return a price computed
+        // over a differently-ordered summation.
+        let b = slots(&[(7, 9), (1, 40), (1, 12), (7, 3)]);
+        let canon = canonical_slots(&b);
+        let sig: Vec<(u32, u32)> =
+            canon.iter().map(|s| (s.q_len as u32, s.kv_len as u32)).collect();
+        let mut expect: Vec<(u32, u32)> =
+            b.iter().map(|s| (s.q_len as u32, s.kv_len as u32)).collect();
+        expect.sort_unstable();
+        assert_eq!(sig, expect);
+    }
+
+    #[test]
+    fn lru_roundtrip_eviction_and_counters() {
+        let c = IterCache::new(2);
+        let scope = IterScope::default();
+        let k = |n: usize| IterationKey::new(scope, &slots(&[(1, n)]));
+        let v = 0.1f64 + 0.2f64; // non-representable sum: bit-exactness probe
+        c.insert(k(1), v);
+        c.insert(k(2), 2.0);
+        assert_eq!(c.get(&k(1)), Some(v), "hits are bit-identical");
+        c.insert(k(3), 3.0); // evicts k(2): k(1) was just touched
+        assert_eq!(c.get(&k(2)), None, "LRU entry evicted");
+        assert_eq!(c.get(&k(3)), Some(3.0));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 1);
+        assert_eq!(c.hits(), 2);
+        assert_eq!(c.misses(), 1);
+        assert!(c.hit_rate() > 0.6 && c.hit_rate() < 0.7);
+        c.clear();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn disabled_cache_is_a_noop() {
+        let c = IterCache::new(0);
+        assert!(!c.enabled());
+        let k = IterationKey::new(IterScope::default(), &slots(&[(1, 1)]));
+        c.insert(k.clone(), 1.0);
+        assert_eq!(c.get(&k), None);
+        assert_eq!(c.hits() + c.misses(), 0, "disabled lookups are not counted");
+        assert_eq!(c.hit_rate(), 0.0);
+    }
+}

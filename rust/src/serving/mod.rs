@@ -22,14 +22,27 @@
 //! * [`policy`] — pluggable scheduling: static vs. vLLM-style continuous
 //!   batching with chunked prefill; FCFS, shortest-prompt, priority, and
 //!   fair-share admission.
+//! * [`iter_cache`] — the iteration-price memo: a canonical, exact
+//!   [`iter_cache::IterationKey`] computed straight from the slot batch
+//!   fronts an LRU of priced iterations, so repeating decode signatures
+//!   skip graph construction, rewrite passes, and per-node prediction
+//!   entirely. Bit-for-bit safe: both the key and the cold graph build
+//!   use the same canonical slot order.
 //! * [`simulator`] — the event loop: admission → chunk planning → pager
 //!   growth (recompute-preemption under pressure) → one priced mixed
 //!   iteration → virtual-time advance; per-request TTFT/TPOT/E2E,
 //!   GPU-seconds, KV-occupancy timelines, throughput–latency sweeps and
 //!   max-QPS-under-SLO search. [`simulator::simulate_placed`] replays
 //!   the same trace on a tensor-parallel placement by rewriting each
-//!   iteration graph with [`crate::graph::TensorParallelPass`], so SLO
-//!   curves come out cluster-level.
+//!   iteration graph with [`crate::graph::TensorParallelPass`] (memoized
+//!   per structure via [`crate::graph::PassResultCache`] on the hot
+//!   path), so SLO curves come out cluster-level.
+//!   [`simulator::simulate_hot`] bundles the accelerations behind a
+//!   [`simulator::HotPath`]; [`simulator::qps_sweep_parallel`] and
+//!   [`simulator::max_qps_under_slo_parallel`] fan independent rate
+//!   points across the scoped worker pool for `Sync` (analytical)
+//!   pricing — PJRT-backed pricing stays on the calling thread via the
+//!   serial entry points.
 //!
 //! Consumed by `Coordinator::simulate_serving` (the cached service
 //! path), the `pm2lat serve-sim` CLI, and `benches/serving_capacity.rs`.
@@ -37,16 +50,22 @@
 //! property: continuous batching at concurrency 1 reproduces
 //! `Pm2Lat::predict_generation`'s latency curve bit-for-bit.
 
+pub mod iter_cache;
 pub mod kv_pager;
 pub mod policy;
 pub mod simulator;
 pub mod trace;
 
+pub use iter_cache::{
+    canonical_slots, IterCache, IterScope, IterationKey, DEFAULT_ITER_CACHE_CAPACITY,
+};
 pub use kv_pager::{KvPager, KvPagerConfig, PagerError, DEFAULT_BLOCK_TOKENS};
 pub use policy::{Admission, BatchingMode, SchedulerConfig};
 pub use simulator::{
-    max_qps_under_slo, qps_sweep, qps_sweep_placed, simulate, simulate_placed, CapacityPoint,
-    RequestMetrics, ServingReport, ServingSimConfig, SimError,
+    max_qps_under_slo, max_qps_under_slo_hot, max_qps_under_slo_parallel, qps_sweep,
+    qps_sweep_hot, qps_sweep_parallel, qps_sweep_placed, simulate, simulate_hot,
+    simulate_placed, CapacityPoint, HotPath, RequestMetrics, ServingReport, ServingSimConfig,
+    SimError,
 };
 pub use trace::{
     bursty_trace, parse_trace, poisson_trace, scale_arrivals, to_json, with_priority_classes,

@@ -20,10 +20,11 @@
 //! chunking, preemption — is deterministic integer bookkeeping, audited
 //! by conservation checks every iteration (debug builds).
 
-use crate::graph::ModelGraph;
+use crate::graph::{ModelGraph, Pass, PassCtx, PassResultCache, TensorParallelPass};
 use crate::models::{SeqSlot, TransformerConfig};
-use crate::util::stats;
+use crate::util::{pool, stats};
 
+use super::iter_cache::{canonical_slots, IterCache, IterScope, IterationKey};
 use super::kv_pager::{KvPager, KvPagerConfig};
 use super::policy::{BatchingMode, RunningView, SchedulerConfig, WaitingView};
 use super::trace::{scale_arrivals, RequestSpec};
@@ -229,6 +230,119 @@ impl ReqState {
     }
 }
 
+/// Hot-path acceleration state threaded through a replay (and shared
+/// across the points of a sweep): the tensor-parallel degree, an
+/// optional iteration-price memo, and an optional pass-result cache.
+/// All three are pure acceleration — [`simulate_hot`] with any `HotPath`
+/// is bit-for-bit identical to the cold path, because pricing is
+/// deterministic and both the memo key and the cold graph build use the
+/// same canonical slot order (see [`super::iter_cache`]).
+///
+/// `Copy` + `Sync` (it holds only shared references), so one value fans
+/// out across the worker threads of [`qps_sweep_parallel`].
+#[derive(Clone, Copy)]
+pub struct HotPath<'a> {
+    /// Tensor-parallel degree; > 1 rewrites every iteration graph to one
+    /// rank's sharded work (collectives included) before pricing.
+    pub tp: usize,
+    /// Scope folded into every iteration key (model, device, lane, tp,
+    /// streams). Ignored when `cache` is `None`.
+    pub scope: IterScope,
+    /// Iteration-price memo: a hit skips graph construction, rewrite
+    /// passes, and per-node prediction entirely.
+    pub cache: Option<&'a IterCache>,
+    /// Memoized tensor-parallel rewrites (only consulted when `tp > 1`):
+    /// structurally identical iteration graphs share one sharded form.
+    pub passes: Option<&'a PassResultCache>,
+}
+
+impl<'a> HotPath<'a> {
+    /// No memoization — the cold path [`simulate`]/[`simulate_placed`]
+    /// wrap.
+    pub fn cold(tp: usize) -> HotPath<'static> {
+        HotPath { tp: tp.max(1), scope: IterScope::default(), cache: None, passes: None }
+    }
+
+    /// Fully memoized under `scope`.
+    pub fn memoized(
+        tp: usize,
+        scope: IterScope,
+        cache: &'a IterCache,
+        passes: &'a PassResultCache,
+    ) -> HotPath<'a> {
+        HotPath { tp: tp.max(1), scope, cache: Some(cache), passes: Some(passes) }
+    }
+}
+
+/// Price one slot batch under `hp`: memo lookup first (computed straight
+/// from the slots — no graph is built on a hit), then the cold path in
+/// canonical slot order, tensor-parallel rewrite (pass-cache-served when
+/// available) included.
+fn priced_iteration<F>(
+    cfg: &TransformerConfig,
+    hp: &HotPath<'_>,
+    slots: &[SeqSlot],
+    price: &mut F,
+) -> Option<f64>
+where
+    F: FnMut(&ModelGraph) -> Option<f64>,
+{
+    let memo = hp
+        .cache
+        .filter(|c| c.enabled())
+        .map(|c| (c, IterationKey::new(hp.scope, slots)));
+    if let Some((cache, key)) = &memo {
+        if let Some(v) = cache.get(key) {
+            return Some(v);
+        }
+    }
+    // Cold path. The graph is built in the canonical (sorted) slot order
+    // the key is defined over, so any permutation of the same batch
+    // prices identically — down to the last ulp of the f64 makespan —
+    // and a later hit returns exactly what the cold path would have.
+    let graph = cfg.mixed_batch_graph(&canonical_slots(slots));
+    let v = if hp.tp > 1 {
+        let rewrite = || {
+            let mut rank = graph.clone();
+            TensorParallelPass { tp: hp.tp }.run(&mut rank, &PassCtx::structural());
+            rank
+        };
+        match hp.passes {
+            Some(pc) => {
+                let tag = PassResultCache::config_tag("tensor-parallel", &hp.tp);
+                let rank = pc.rewrite(tag, &graph, rewrite);
+                price(&rank)?
+            }
+            None => price(&rewrite())?,
+        }
+    } else {
+        price(&graph)?
+    };
+    if let Some((cache, key)) = memo {
+        cache.insert(key, v);
+    }
+    Some(v)
+}
+
+/// Replay `trace` with the full hot path: iteration memoization,
+/// pass-result reuse, and tensor-parallel placement, per `hp`.
+/// Bit-for-bit identical to [`simulate`]/[`simulate_placed`] at the same
+/// `tp` — the caches are pure acceleration (property-tested in
+/// `tests/serving_hot_path.rs`).
+pub fn simulate_hot<F>(
+    cfg: &TransformerConfig,
+    trace: &[RequestSpec],
+    sim: &ServingSimConfig,
+    hp: &HotPath<'_>,
+    price: &mut F,
+) -> Result<ServingReport, SimError>
+where
+    F: FnMut(&ModelGraph) -> Option<f64>,
+{
+    let mut price_slots = |slots: &[SeqSlot]| priced_iteration(cfg, hp, slots, price);
+    simulate_slots(cfg, trace, sim, &mut price_slots)
+}
+
 /// Replay `trace` against `cfg`'s serving schedule, pricing every
 /// iteration with `price` (typically `Pm2Lat::predict_graph` or the
 /// coordinator's cached graph path). Deterministic for deterministic
@@ -241,6 +355,23 @@ pub fn simulate<F>(
 ) -> Result<ServingReport, SimError>
 where
     F: FnMut(&ModelGraph) -> Option<f64>,
+{
+    simulate_hot(cfg, trace, sim, &HotPath::cold(1), price)
+}
+
+/// The discrete-event core: everything in the loop is deterministic
+/// integer bookkeeping except the one call into `price_slots`, which
+/// maps a planned slot batch to the iteration's latency. All public
+/// entry points funnel here with a slot-pricing closure built by
+/// [`priced_iteration`].
+fn simulate_slots<F>(
+    cfg: &TransformerConfig,
+    trace: &[RequestSpec],
+    sim: &ServingSimConfig,
+    price_slots: &mut F,
+) -> Result<ServingReport, SimError>
+where
+    F: FnMut(&[SeqSlot]) -> Option<f64>,
 {
     if trace.is_empty() {
         return Err(SimError::EmptyTrace);
@@ -439,8 +570,7 @@ where
         debug_assert!(!slots.is_empty(), "a planned iteration cannot be empty");
 
         // --- price the iteration and advance virtual time ---
-        let graph = cfg.mixed_batch_graph(&slots);
-        let dt = price(&graph).ok_or(SimError::Unsupported)?;
+        let dt = price_slots(&slots).ok_or(SimError::Unsupported)?;
         now += dt;
         gpu_busy += dt;
         iterations += 1;
@@ -549,18 +679,7 @@ pub fn simulate_placed<F>(
 where
     F: FnMut(&ModelGraph) -> Option<f64>,
 {
-    if tp <= 1 {
-        return simulate(cfg, trace, sim, price);
-    }
-    use crate::graph::{Pass, PassCtx, TensorParallelPass};
-    let pass = TensorParallelPass { tp };
-    let ctx = PassCtx::structural();
-    let mut placed = |g: &ModelGraph| {
-        let mut rank = g.clone();
-        pass.run(&mut rank, &ctx);
-        price(&rank)
-    };
-    simulate(cfg, trace, sim, &mut placed)
+    simulate_hot(cfg, trace, sim, &HotPath::cold(tp), price)
 }
 
 /// One point of a throughput–latency sweep: the aggregates that matter
@@ -607,13 +726,7 @@ pub fn qps_sweep<F>(
 where
     F: FnMut(&ModelGraph) -> Option<f64>,
 {
-    let mut out = Vec::with_capacity(rates.len());
-    for &qps in rates {
-        let trace = scale_arrivals(unit_trace, qps);
-        let report = simulate(cfg, &trace, sim, price)?;
-        out.push(CapacityPoint::from_report(qps, &report));
-    }
-    Ok(out)
+    qps_sweep_hot(cfg, unit_trace, sim, &HotPath::cold(1), price, rates)
 }
 
 /// [`qps_sweep`] over a tensor-parallel placement: each point replays
@@ -629,13 +742,63 @@ pub fn qps_sweep_placed<F>(
 where
     F: FnMut(&ModelGraph) -> Option<f64>,
 {
+    qps_sweep_hot(cfg, unit_trace, sim, &HotPath::cold(tp), price, rates)
+}
+
+/// Serial sweep with the full hot path. Rate points of one sweep share
+/// `hp`'s caches — the same decode signatures recur at every rate, so
+/// later points run almost entirely from the memo.
+pub fn qps_sweep_hot<F>(
+    cfg: &TransformerConfig,
+    unit_trace: &[RequestSpec],
+    sim: &ServingSimConfig,
+    hp: &HotPath<'_>,
+    price: &mut F,
+    rates: &[f64],
+) -> Result<Vec<CapacityPoint>, SimError>
+where
+    F: FnMut(&ModelGraph) -> Option<f64>,
+{
     let mut out = Vec::with_capacity(rates.len());
     for &qps in rates {
         let trace = scale_arrivals(unit_trace, qps);
-        let report = simulate_placed(cfg, &trace, sim, tp, price)?;
+        let report = simulate_hot(cfg, &trace, sim, hp, price)?;
         out.push(CapacityPoint::from_report(qps, &report));
     }
     Ok(out)
+}
+
+/// [`qps_sweep_hot`] with the rate points fanned across a
+/// `std::thread::scope` worker pool. Each point is an independent replay
+/// over an immutable pricing function, so this needs `F: Fn + Sync` —
+/// satisfied by the analytical stack (`Pm2Lat`/`Gpu` are shared
+/// immutably, exactly as the coordinator's scalar fan-out already does)
+/// but deliberately *not* by the PJRT-backed service closure, which is
+/// `FnMut` and stays on the calling thread via the serial
+/// [`qps_sweep_hot`] (the PJRT client's thread-affinity constraint).
+///
+/// Results are in input order and bit-identical to the serial sweep:
+/// points are independent, and the shared memo can only ever serve
+/// values the cold path would have computed identically.
+pub fn qps_sweep_parallel<F>(
+    cfg: &TransformerConfig,
+    unit_trace: &[RequestSpec],
+    sim: &ServingSimConfig,
+    hp: &HotPath<'_>,
+    price: &F,
+    rates: &[f64],
+    threads: usize,
+) -> Result<Vec<CapacityPoint>, SimError>
+where
+    F: Fn(&ModelGraph) -> Option<f64> + Sync,
+{
+    let results = pool::parallel_map(rates, threads, |&qps| {
+        let trace = scale_arrivals(unit_trace, qps);
+        let mut p = |g: &ModelGraph| price(g);
+        simulate_hot(cfg, &trace, sim, hp, &mut p)
+            .map(|r| CapacityPoint::from_report(qps, &r))
+    });
+    results.into_iter().collect()
 }
 
 /// Find the maximum sustainable arrival rate whose p99 TTFT stays within
@@ -656,10 +819,40 @@ pub fn max_qps_under_slo<F>(
 where
     F: FnMut(&ModelGraph) -> Option<f64>,
 {
+    max_qps_under_slo_hot(
+        cfg,
+        unit_trace,
+        sim,
+        &HotPath::cold(1),
+        price,
+        slo_ttft_p99_s,
+        lo_qps,
+        steps,
+    )
+}
+
+/// [`max_qps_under_slo`] with the full hot path: every probe point's
+/// replay shares `hp`'s caches, so the bisection — which replays the
+/// same population over and over at nearby rates — runs mostly from the
+/// memo after the first probe.
+#[allow(clippy::too_many_arguments)]
+pub fn max_qps_under_slo_hot<F>(
+    cfg: &TransformerConfig,
+    unit_trace: &[RequestSpec],
+    sim: &ServingSimConfig,
+    hp: &HotPath<'_>,
+    price: &mut F,
+    slo_ttft_p99_s: f64,
+    lo_qps: f64,
+    steps: usize,
+) -> Result<(f64, Vec<CapacityPoint>), SimError>
+where
+    F: FnMut(&ModelGraph) -> Option<f64>,
+{
     assert!(lo_qps > 0.0 && slo_ttft_p99_s > 0.0);
     let mut eval = |qps: f64, out: &mut Vec<CapacityPoint>| -> Result<bool, SimError> {
         let trace = scale_arrivals(unit_trace, qps);
-        let report = simulate(cfg, &trace, sim, price)?;
+        let report = simulate_hot(cfg, &trace, sim, hp, price)?;
         let point = CapacityPoint::from_report(qps, &report);
         out.push(point);
         Ok(point.ttft_p99_s <= slo_ttft_p99_s)
@@ -689,6 +882,89 @@ where
             lo = mid;
         } else {
             hi = mid;
+        }
+    }
+    Ok((lo, points))
+}
+
+/// The SLO search with independent probe points priced on the worker
+/// pool. Monotonicity (p99 TTFT never improves with load) is what makes
+/// batched probing sound: within any wave the passes form a prefix, so
+/// the bracket tightens exactly as it would probing serially.
+///
+/// Two changes of shape versus the serial search, same guarantees:
+/// the doubling ladder evaluates `threads`-sized waves concurrently
+/// (same 2^20 overall bound), and each refinement round places
+/// `min(threads, 5)` *geometric* interior probes instead of one
+/// midpoint — shrinking the bracket (k+1)× per round where bisection
+/// manages 2×. The returned rate passes the SLO and some evaluated
+/// higher rate fails it, exactly as for [`max_qps_under_slo`]; the
+/// probe sequence (and therefore the exact knee estimate) differs.
+#[allow(clippy::too_many_arguments)]
+pub fn max_qps_under_slo_parallel<F>(
+    cfg: &TransformerConfig,
+    unit_trace: &[RequestSpec],
+    sim: &ServingSimConfig,
+    hp: &HotPath<'_>,
+    price: &F,
+    slo_ttft_p99_s: f64,
+    lo_qps: f64,
+    steps: usize,
+    threads: usize,
+) -> Result<(f64, Vec<CapacityPoint>), SimError>
+where
+    F: Fn(&ModelGraph) -> Option<f64> + Sync,
+{
+    assert!(lo_qps > 0.0 && slo_ttft_p99_s > 0.0);
+    let mut points = Vec::new();
+    let mut eval_wave = |rates: &[f64],
+                         points: &mut Vec<CapacityPoint>|
+     -> Result<Vec<bool>, SimError> {
+        let pts = qps_sweep_parallel(cfg, unit_trace, sim, hp, price, rates, threads)?;
+        let ok = pts.iter().map(|p| p.ttft_p99_s <= slo_ttft_p99_s).collect();
+        points.extend(pts);
+        Ok(ok)
+    };
+    if !eval_wave(&[lo_qps], &mut points)?[0] {
+        return Ok((0.0, points));
+    }
+    let mut lo = lo_qps;
+    let mut hi = None;
+    let mut base = lo_qps;
+    let mut doublings = 0usize;
+    while hi.is_none() && doublings < 20 {
+        let w = threads.clamp(2, 5).min(20 - doublings);
+        let rates: Vec<f64> = (1..=w).map(|i| base * (1u64 << i) as f64).collect();
+        doublings += w;
+        let ok = eval_wave(&rates, &mut points)?;
+        for (&q, &pass) in rates.iter().zip(&ok) {
+            if pass {
+                lo = lo.max(q);
+            } else {
+                hi = Some(q);
+                break;
+            }
+        }
+        base = *rates.last().expect("wave is non-empty");
+    }
+    let Some(mut hi) = hi else {
+        return Ok((lo, points)); // the SLO survived the whole ladder
+    };
+    for _ in 0..steps {
+        let ratio = hi / lo;
+        if ratio <= 1.0 + 1e-9 {
+            break;
+        }
+        let k = threads.clamp(1, 5);
+        let mids: Vec<f64> =
+            (1..=k).map(|i| lo * ratio.powf(i as f64 / (k + 1) as f64)).collect();
+        let ok = eval_wave(&mids, &mut points)?;
+        for (&q, &pass) in mids.iter().zip(&ok) {
+            if pass {
+                lo = lo.max(q);
+            } else {
+                hi = hi.min(q);
+            }
         }
     }
     Ok((lo, points))
@@ -1051,5 +1327,100 @@ mod tests {
             points.iter().any(|p| p.qps > max_qps && p.ttft_p99_s > slo),
             "the search must have witnessed a violation above the knee"
         );
+    }
+
+    #[test]
+    fn memoized_replay_is_bit_identical_and_actually_hits() {
+        let (gpu, pl) = quick_pl("a100", DType::F32);
+        let cfg = zoo::gpt2_large();
+        // Decode-heavy mixed load: many concurrent sequences, long decode
+        // tails — the regime where signatures repeat.
+        let trace = poisson_trace(16, 30.0, 48, 12, 3);
+        let sim = ample_sim(&cfg);
+        let mut price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
+        let cold = simulate(&cfg, &trace, &sim, &mut price).unwrap();
+        let cache = IterCache::default_sized();
+        let passes = PassResultCache::default_sized();
+        let scope = IterScope::new(&cfg, "a100", 1, 1);
+        let hp = HotPath::memoized(1, scope, &cache, &passes);
+        let warm1 = simulate_hot(&cfg, &trace, &sim, &hp, &mut price).unwrap();
+        assert_eq!(warm1.completed, cold.completed, "memo must not change results");
+        assert_eq!(warm1.makespan_s.to_bits(), cold.makespan_s.to_bits());
+        assert_eq!(warm1.gpu_busy_s.to_bits(), cold.gpu_busy_s.to_bits());
+        // Second replay prices every iteration from memory.
+        let warm2 = simulate_hot(&cfg, &trace, &sim, &hp, &mut price).unwrap();
+        assert_eq!(warm2.makespan_s.to_bits(), cold.makespan_s.to_bits());
+        assert!(cache.hits() >= warm2.iterations as u64, "full-replay hit coverage");
+        assert!(cache.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_bit_for_bit() {
+        let (gpu, pl) = quick_pl("a100", DType::F32);
+        let cfg = zoo::gpt2_large();
+        let unit = poisson_trace(24, 1.0, 48, 6, 9);
+        let sim = ample_sim(&cfg);
+        let mut price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
+        let solo = simulate(&cfg, &unit[..1], &sim, &mut price).unwrap();
+        let base = 1.0 / solo.completed[0].e2e_s();
+        let rates: Vec<f64> = [0.5, 1.0, 2.0, 4.0].iter().map(|k| k * base).collect();
+        let serial = qps_sweep(&cfg, &unit, &sim, &mut price, &rates).unwrap();
+        let cache = IterCache::default_sized();
+        let passes = PassResultCache::default_sized();
+        let hp = HotPath::memoized(1, IterScope::new(&cfg, "a100", 1, 1), &cache, &passes);
+        let par_price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
+        let par =
+            qps_sweep_parallel(&cfg, &unit, &sim, &hp, &par_price, &rates, 4).unwrap();
+        assert_eq!(par.len(), serial.len());
+        for (a, b) in par.iter().zip(&serial) {
+            assert_eq!(a.qps, b.qps, "input order preserved");
+            assert_eq!(a.ttft_p99_s.to_bits(), b.ttft_p99_s.to_bits());
+            assert_eq!(a.e2e_p99_s.to_bits(), b.e2e_p99_s.to_bits());
+            assert_eq!(a.throughput_rps.to_bits(), b.throughput_rps.to_bits());
+            assert_eq!(a.preemptions, b.preemptions);
+        }
+        assert!(cache.hit_rate() > 0.0, "sweep points must share the memo");
+    }
+
+    #[test]
+    fn parallel_slo_search_finds_a_sound_bracket() {
+        let (gpu, pl) = quick_pl("a100", DType::F32);
+        let cfg = zoo::gpt2_large();
+        let unit = poisson_trace(40, 1.0, 64, 4, 13);
+        let sim = ServingSimConfig {
+            scheduler: SchedulerConfig { max_batch: 8, chunk_tokens: 128, ..Default::default() },
+            pager: KvPagerConfig::for_model(&cfg, 80e9, 16),
+            streams: 1,
+        };
+        let mut price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
+        let solo = simulate(&cfg, &unit[..1], &sim, &mut price).unwrap();
+        let slo = solo.completed[0].ttft_s() * 4.0;
+        let lo = 0.05 / solo.completed[0].e2e_s();
+        let cache = IterCache::default_sized();
+        let passes = PassResultCache::default_sized();
+        let hp = HotPath::memoized(1, IterScope::new(&cfg, "a100", 1, 1), &cache, &passes);
+        let par_price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
+        let (max_qps, points) = max_qps_under_slo_parallel(
+            &cfg, &unit, &sim, &hp, &par_price, slo, lo, 3, 4,
+        )
+        .unwrap();
+        assert!(max_qps > 0.0, "light load must satisfy the SLO");
+        let at = |q: f64| points.iter().find(|p| p.qps == q).unwrap();
+        assert!(at(max_qps).ttft_p99_s <= slo, "the returned rate passes");
+        assert!(
+            points.iter().any(|p| p.qps > max_qps && p.ttft_p99_s > slo),
+            "a violation above the knee was witnessed"
+        );
+        // And the serial search agrees the returned rate is sustainable:
+        // it sits at or below the serial knee's failing bracket.
+        let (serial_max, serial_points) =
+            max_qps_under_slo(&cfg, &unit, &sim, &mut price, slo, lo, 3).unwrap();
+        assert!(serial_max > 0.0);
+        let serial_fail = serial_points
+            .iter()
+            .filter(|p| p.ttft_p99_s > slo)
+            .map(|p| p.qps)
+            .fold(f64::INFINITY, f64::min);
+        assert!(max_qps < serial_fail, "parallel knee below the serial violation");
     }
 }

@@ -1,0 +1,256 @@
+//! Iteration-hot-path property tests.
+//!
+//! The hot path's safety contract is *exactness*: the memoized pricing
+//! lane (`IterCache` keyed by canonical slot signatures), the
+//! pass-result reuse (`PassResultCache` keyed by graph structural hash),
+//! and the parallel sweep drivers must all be bit-for-bit identical to
+//! the cold replay — across batching policies, admission disciplines,
+//! dtypes, and tensor-parallel degrees. These tests drive the public
+//! serving API the way the CLI does and compare every f64 by its bit
+//! pattern, never by tolerance.
+
+use pm2lat::graph::PassResultCache;
+use pm2lat::gpusim::Gpu;
+use pm2lat::models::{zoo, SeqSlot, TransformerConfig};
+use pm2lat::ops::DType;
+use pm2lat::pm2lat::Pm2Lat;
+use pm2lat::profiler::ProfileSpec;
+use pm2lat::serving::{
+    canonical_slots, max_qps_under_slo, max_qps_under_slo_parallel, poisson_trace, qps_sweep,
+    qps_sweep_parallel, simulate, simulate_hot, simulate_placed, with_priority_classes,
+    Admission, BatchingMode, HotPath, IterCache, IterScope, IterationKey, KvPagerConfig,
+    SchedulerConfig, ServingReport, ServingSimConfig,
+};
+use pm2lat::util::prng::Rng;
+
+fn quick_pl(device: &str, dtype: DType) -> (Gpu, Pm2Lat) {
+    let mut gpu = Gpu::by_name(device).expect("device in the zoo");
+    let pl = Pm2Lat::build_dtypes(&mut gpu, &ProfileSpec::quick(), &[dtype], false);
+    gpu.reset();
+    (gpu, pl)
+}
+
+fn sim_for(cfg: &TransformerConfig, gpu: &Gpu, mode: &str, admit: &str) -> ServingSimConfig {
+    ServingSimConfig {
+        scheduler: SchedulerConfig {
+            mode: BatchingMode::parse(mode).expect("known mode"),
+            admission: Admission::parse(admit).expect("known admission"),
+            max_batch: 6,
+            chunk_tokens: 96,
+        },
+        pager: KvPagerConfig::for_model(cfg, gpu.spec.mem_bytes(), 16),
+        streams: 1,
+    }
+}
+
+/// Every f64 a report exposes, compared bitwise — down to each completed
+/// request's latency triplet.
+fn assert_bit_identical(a: &ServingReport, b: &ServingReport, ctx: &str) {
+    assert_eq!(a.iterations, b.iterations, "{ctx}: iteration count");
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{ctx}: makespan");
+    assert_eq!(a.gpu_busy_s.to_bits(), b.gpu_busy_s.to_bits(), "{ctx}: gpu busy");
+    assert_eq!(a.completed.len(), b.completed.len(), "{ctx}: completions");
+    for (x, y) in a.completed.iter().zip(&b.completed) {
+        assert_eq!(x.id, y.id, "{ctx}: completion order");
+        assert_eq!(x.ttft_s().to_bits(), y.ttft_s().to_bits(), "{ctx}: ttft req {}", x.id);
+        assert_eq!(x.e2e_s().to_bits(), y.e2e_s().to_bits(), "{ctx}: e2e req {}", x.id);
+        assert_eq!(x.preemptions, y.preemptions, "{ctx}: preemptions req {}", x.id);
+    }
+}
+
+#[test]
+fn property_memoized_replay_is_bit_identical_across_policies() {
+    // gpt2-large F32 on a100: every (batching mode × admission) cell of
+    // the scheduler matrix must replay identically with the iteration
+    // memo on — including the priority-aware disciplines, whose slot
+    // batches depend on request ordering, not just shapes.
+    let (gpu, pl) = quick_pl("a100", DType::F32);
+    let cfg = zoo::gpt2_large();
+    let trace = with_priority_classes(&poisson_trace(12, 25.0, 48, 10, 5), 3);
+    for mode in ["continuous", "static"] {
+        for admit in ["fcfs", "priority", "fair-share"] {
+            let sim = sim_for(&cfg, &gpu, mode, admit);
+            let mut price = |g: &pm2lat::graph::ModelGraph| pl.predict_graph(&gpu, g, 1);
+            let cold = simulate(&cfg, &trace, &sim, &mut price).expect("cold replay");
+
+            let icache = IterCache::default_sized();
+            let passes = PassResultCache::default_sized();
+            let hp =
+                HotPath::memoized(1, IterScope::new(&cfg, "a100", 1, 1), &icache, &passes);
+            let memo =
+                simulate_hot(&cfg, &trace, &sim, &hp, &mut price).expect("memoized replay");
+            let ctx = format!("{mode}/{admit}");
+            assert_bit_identical(&cold, &memo, &ctx);
+            // Replaying again must serve ~every iteration from the memo.
+            let again =
+                simulate_hot(&cfg, &trace, &sim, &hp, &mut price).expect("replayed replay");
+            assert_bit_identical(&cold, &again, &ctx);
+            assert!(
+                icache.hits() >= again.iterations as u64,
+                "{ctx}: second replay should hit every iteration ({} hits, {} iters)",
+                icache.hits(),
+                again.iterations
+            );
+        }
+    }
+}
+
+#[test]
+fn property_memoized_replay_matches_cold_for_bf16_and_tensor_parallel() {
+    // qwen3-0.6b BF16 across tp ∈ {1, 2, 4}: the memoized hot path (with
+    // a *shared* pass-result cache) must reproduce `simulate_placed`
+    // exactly, and for tp > 1 the rewrite memo must actually be used.
+    let (gpu, pl) = quick_pl("a100", DType::Bf16);
+    let cfg = zoo::qwen3_0_6b();
+    let trace = poisson_trace(8, 20.0, 40, 8, 11);
+    let passes = PassResultCache::default_sized();
+    for tp in [1usize, 2, 4] {
+        let sim = sim_for(&cfg, &gpu, "continuous", "fcfs");
+        let mut price = |g: &pm2lat::graph::ModelGraph| pl.predict_graph(&gpu, g, 1);
+        let cold = simulate_placed(&cfg, &trace, &sim, tp, &mut price).expect("cold tp replay");
+
+        let icache = IterCache::default_sized();
+        let hp =
+            HotPath::memoized(tp, IterScope::new(&cfg, "a100", tp, 1), &icache, &passes);
+        let memo = simulate_hot(&cfg, &trace, &sim, &hp, &mut price).expect("memoized replay");
+        assert_bit_identical(&cold, &memo, &format!("tp={tp}"));
+        if tp > 1 {
+            assert!(
+                passes.hits() > 0,
+                "tp={tp}: repeated iteration structures must reuse the sharded rewrite"
+            );
+        }
+    }
+    // Distinct degrees must have produced distinct cached structures.
+    assert!(passes.len() >= 2, "tp=2 and tp=4 rewrites must not alias");
+}
+
+#[test]
+fn property_parallel_sweep_and_slo_search_match_serial_across_policies() {
+    // The parallel drivers are pure fan-out: under a Sync pricing
+    // closure they must emit the same capacity points as the serial
+    // loop, bit for bit, for both batching modes — and the parallel SLO
+    // search must return a rate the serial evaluator confirms passing.
+    let (gpu, pl) = quick_pl("a100", DType::F32);
+    let cfg = zoo::gpt2_large();
+    let unit = poisson_trace(8, 1.0, 48, 8, 17);
+    let price = |g: &pm2lat::graph::ModelGraph| pl.predict_graph(&gpu, g, 1);
+    for mode in ["continuous", "static"] {
+        let sim = sim_for(&cfg, &gpu, mode, "fcfs");
+        let mut p = |g: &pm2lat::graph::ModelGraph| price(g);
+        let solo = simulate(&cfg, &unit[..1], &sim, &mut p).expect("solo");
+        let base = 1.0 / solo.completed[0].e2e_s();
+        let rates: Vec<f64> = [0.5, 1.0, 2.0].iter().map(|f| f * base).collect();
+
+        let serial = qps_sweep(&cfg, &unit, &sim, &mut p, &rates).expect("serial sweep");
+        let icache = IterCache::default_sized();
+        let passes = PassResultCache::default_sized();
+        let hp = HotPath::memoized(1, IterScope::new(&cfg, "a100", 1, 1), &icache, &passes);
+        let par = qps_sweep_parallel(&cfg, &unit, &sim, &hp, &price, &rates, 3)
+            .expect("parallel sweep");
+        assert_eq!(serial.len(), par.len());
+        for (s, q) in serial.iter().zip(&par) {
+            assert_eq!(s.qps.to_bits(), q.qps.to_bits(), "{mode}: rate grid");
+            assert_eq!(s.ttft_p99_s.to_bits(), q.ttft_p99_s.to_bits(), "{mode}: ttft p99");
+            assert_eq!(s.tpot_p50_s.to_bits(), q.tpot_p50_s.to_bits(), "{mode}: tpot p50");
+            assert_eq!(
+                s.throughput_rps.to_bits(),
+                q.throughput_rps.to_bits(),
+                "{mode}: throughput"
+            );
+        }
+        assert!(icache.hit_rate() > 0.0, "{mode}: sweep points must share the memo");
+
+        // SLO search: both drivers probe different rate grids, so the
+        // knees need not coincide — but both knees must *pass* under the
+        // serial evaluator, the ground truth both claim to bound.
+        let slo = solo.completed[0].ttft_s() * 4.0;
+        let (serial_knee, _) =
+            max_qps_under_slo(&cfg, &unit, &sim, &mut p, slo, base / 4.0, 3).expect("serial slo");
+        let (par_knee, _) =
+            max_qps_under_slo_parallel(&cfg, &unit, &sim, &hp, &price, slo, base / 4.0, 3, 3)
+                .expect("parallel slo");
+        for (who, knee) in [("serial", serial_knee), ("parallel", par_knee)] {
+            assert!(knee > 0.0, "{mode}/{who}: light load must satisfy a 4x solo SLO");
+            let at = qps_sweep(&cfg, &unit, &sim, &mut p, &[knee]).expect("knee check");
+            assert!(
+                at[0].ttft_p99_s <= slo,
+                "{mode}/{who}: knee {knee:.3} violates the SLO it claims to satisfy"
+            );
+        }
+    }
+}
+
+#[test]
+fn property_iteration_keys_agree_with_graph_structural_hashes() {
+    // On a randomized corpus of slot batches: two batches get the same
+    // IterationKey if and only if their canonical-order iteration graphs
+    // are structurally identical. This pins the memo's collision story
+    // to the graph interner's — the same 64-bit structural hash the
+    // pass-result cache keys on.
+    let tiny = TransformerConfig {
+        name: "hotpath-tiny",
+        params_b: 0.01,
+        layers: 2,
+        enc_layers: 0,
+        hidden: 64,
+        heads: 4,
+        kv_heads: 4,
+        ffn_hidden: 128,
+        vocab: 512,
+        dtype: DType::F32,
+        gated_ffn: false,
+    };
+    let scope = IterScope::new(&tiny, "a100", 1, 1);
+    let mut rng = Rng::new(0xC0FFEE);
+    // Small q/kv alphabets make key collisions (equal multisets reached
+    // through different orderings) common enough to exercise both sides
+    // of the iff.
+    let qs = [1usize, 1, 8, 16];
+    let kvs = [8usize, 16, 32];
+    let mut batches: Vec<Vec<SeqSlot>> = Vec::new();
+    for _ in 0..36 {
+        let n = 1 + (rng.next_u64() as usize) % 5;
+        let batch: Vec<SeqSlot> = (0..n)
+            .map(|_| {
+                let q = qs[(rng.next_u64() as usize) % qs.len()];
+                let kv = q + kvs[(rng.next_u64() as usize) % kvs.len()];
+                SeqSlot { q_len: q, kv_len: kv }
+            })
+            .collect();
+        batches.push(batch);
+    }
+    let keys: Vec<IterationKey> =
+        batches.iter().map(|b| IterationKey::new(scope, b)).collect();
+    let hashes: Vec<u64> = batches
+        .iter()
+        .map(|b| tiny.mixed_batch_graph(&canonical_slots(b)).stable_hash())
+        .collect();
+    let mut same_key_pairs = 0;
+    for i in 0..batches.len() {
+        for j in (i + 1)..batches.len() {
+            let key_eq = keys[i] == keys[j];
+            let hash_eq = hashes[i] == hashes[j];
+            assert_eq!(
+                key_eq, hash_eq,
+                "batch {i} vs {j}: key equality ({key_eq}) disagrees with \
+                 structural-graph equality ({hash_eq})"
+            );
+            same_key_pairs += key_eq as usize;
+        }
+    }
+    assert!(same_key_pairs > 0, "corpus never collided — iff untested on the equal side");
+
+    // Order insensitivity, end to end: a shuffled batch keys and hashes
+    // identically to the original.
+    for (b, (k, h)) in batches.iter().zip(keys.iter().zip(&hashes)) {
+        let mut rev: Vec<SeqSlot> = b.clone();
+        rev.reverse();
+        assert_eq!(&IterationKey::new(scope, &rev), k, "key must ignore slot order");
+        assert_eq!(
+            tiny.mixed_batch_graph(&canonical_slots(&rev)).stable_hash(),
+            *h,
+            "canonical graph build must ignore slot order"
+        );
+    }
+}
