@@ -13,6 +13,8 @@
 #                      (tiny trace, quick profile; graceful no-cargo skip).
 #   make serve-sim-tp-smoke — same smoke on a tensor-parallel placement
 #                      (--tp 2: rank-graph rewrite + priced collectives).
+#   make serve-sim-prefix-smoke — the smoke with copy-on-write prefix
+#                      sharing on; fails if the prefix index never hits.
 #   make bench-serving — the serving-capacity sweep on the fast setting.
 #   make bench-json  — the same sweep, writing the hot-path measurements
 #                      (iterations/s cold vs memoized, sweep wall-clock)
@@ -20,13 +22,13 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts ci lint doc fmt clippy build test bench-fast bench-serving bench-json serve-sim-smoke serve-sim-tp-smoke
+.PHONY: artifacts ci lint doc fmt clippy build test bench-fast bench-serving bench-json serve-sim-smoke serve-sim-tp-smoke serve-sim-prefix-smoke
 
 # aot.py uses package-relative imports — must run as a module from python/.
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
 
-ci: lint doc test serve-sim-smoke serve-sim-tp-smoke bench-json
+ci: lint doc test serve-sim-smoke serve-sim-tp-smoke serve-sim-prefix-smoke bench-json
 
 # Graceful no-toolchain path: some dev containers ship without cargo, and
 # lint is the one stage that may safely no-op there (skipping style checks
@@ -99,4 +101,16 @@ serve-sim-tp-smoke:
 		cargo run --release --quiet -- serve-sim --tp 2 --smoke; \
 	else \
 		echo "serve-sim-tp-smoke: cargo not found — skipping (toolchain-less container)"; \
+	fi
+
+# The smoke with the copy-on-write prefix pager engaged: the CLI prepends
+# a shared template to every synthetic prompt, and under --smoke the run
+# itself errors if the prefix index never produces a hit — so a silently
+# dead sharing path (index never consulted, blocks never deduped) fails
+# CI instead of just printing zeros.
+serve-sim-prefix-smoke:
+	@if command -v cargo >/dev/null 2>&1; then \
+		cargo run --release --quiet -- serve-sim --prefix-share --smoke; \
+	else \
+		echo "serve-sim-prefix-smoke: cargo not found — skipping (toolchain-less container)"; \
 	fi

@@ -717,7 +717,8 @@ impl<'rt> Coordinator<'rt> {
             PredictorKind::NeuSight => 3,
         };
         let scope = crate::serving::IterScope::new(&req.config, &req.device, 1, req.sim.streams)
-            .with_lane(lane);
+            .with_lane(lane)
+            .with_pager(&req.sim.pager);
         let icache = crate::serving::IterCache::default_sized();
         let hp = crate::serving::simulator::HotPath {
             tp: 1,

@@ -333,8 +333,14 @@ fn serve_sim(args: &Args) -> Result<()> {
     let policy = BatchingMode::parse(args.opt_or("policy", "continuous"))
         .ok_or_else(|| anyhow!("bad --policy (continuous|static)"))?;
     let admission = Admission::parse(args.opt_or("admit", "fcfs"))
-        .ok_or_else(|| anyhow!("bad --admit (fcfs|sjf|priority|fair-share)"))?;
+        .ok_or_else(|| anyhow!("bad --admit (fcfs|sjf|priority|fair-share|prefix-hit)"))?;
     let block_tokens = args.opt_usize("block-tokens", serving::DEFAULT_BLOCK_TOKENS).max(1);
+    // Copy-on-write prefix sharing: --prefix-share switches the pager's
+    // dedupe on; --prefix-tokens sizes the shared template each synthetic
+    // prompt is prepended with (--prefix-groups distinct templates).
+    let prefix_share = args.flag("prefix-share");
+    let prefix_tokens = args.opt_usize("prefix-tokens", if smoke { 48 } else { 256 });
+    let prefix_groups = args.opt_usize("prefix-groups", 1).max(1) as u64;
     let streams = args.opt_usize("streams", 1).max(1);
     let tp = args.opt_usize("tp", 1).max(1);
     if tp > 64 {
@@ -377,6 +383,25 @@ fn serve_sim(args: &Args) -> Result<()> {
         unit
     };
     let recorded = args.opt("trace").is_some();
+    // Shared templates: synthetic prompts get a constant-length template
+    // prepended (so every group member declares the same prefix and the
+    // pager's index actually matches); recorded traces carry their own
+    // prefix fields and replay verbatim, unless --prefix-tokens restamps
+    // them deliberately (clamped below each prompt, shapes untouched).
+    let unit = if prefix_share && !recorded {
+        unit.iter()
+            .map(|r| serving::RequestSpec {
+                prompt_len: r.prompt_len + prefix_tokens,
+                prefix_group: r.id as u64 % prefix_groups,
+                prefix_tokens,
+                ..*r
+            })
+            .collect()
+    } else if prefix_share && args.opt("prefix-tokens").is_some() {
+        serving::with_shared_prefix(&unit, prefix_tokens, prefix_groups)
+    } else {
+        unit
+    };
     if recorded && args.opt_f64("qps", 0.0) > 0.0 {
         return Err(anyhow!(
             "--qps conflicts with --trace: recorded arrivals replay verbatim \
@@ -403,9 +428,11 @@ fn serve_sim(args: &Args) -> Result<()> {
             block_tokens,
             capacity_blocks: ((kv_gb * 1e9 / cfg.kv_cache_bytes(1, block_tokens)) as usize)
                 .max(1),
+            prefix_share,
         }
     } else {
         KvPagerConfig::for_model(&cfg, gpu.spec.mem_bytes(), block_tokens)
+            .with_prefix_share(prefix_share)
     };
     let sim = ServingSimConfig {
         scheduler: SchedulerConfig {
@@ -485,7 +512,8 @@ fn serve_sim(args: &Args) -> Result<()> {
     let icache = serving::IterCache::default_sized();
     let pass_cache = pm2lat::graph::PassResultCache::default_sized();
     let scope = serving::IterScope::new(&cfg, &device, tp, streams)
-        .with_lane(if service { 2 } else { 0 });
+        .with_lane(if service { 2 } else { 0 })
+        .with_pager(&sim.pager);
     let hp = serving::HotPath {
         tp,
         scope,
@@ -527,12 +555,38 @@ fn serve_sim(args: &Args) -> Result<()> {
         sim.pager.block_tokens,
         if coordinator.is_some() { " | service path" } else { "" },
     );
+    if prefix_share {
+        println!(
+            "  prefix sharing     : COW pager on | template {prefix_tokens} tokens × \
+             {prefix_groups} group(s)"
+        );
+    }
     println!("  solo request       : TTFT {:.2} ms, E2E {:.2} ms", solo_ttft * 1e3, solo_e2e * 1e3);
     let report = serving::simulate_hot(&cfg, &trace, &sim, &hp, &mut base_price)
         .map_err(|e| anyhow!("serve-sim: {e}"))?;
     println!("  {}", report.summary());
     if report.kv_leaked_blocks != 0 {
         return Err(anyhow!("KV pager leaked {} blocks", report.kv_leaked_blocks));
+    }
+    if prefix_share {
+        println!(
+            "  prefix hits        : {:.0}% ({}/{} probes) | {} KV blocks saved at peak | \
+             {} COW forks | effective KV {:.0}% vs physical {:.0}%",
+            report.prefix_hit_rate() * 100.0,
+            report.prefix_hits,
+            report.prefix_lookups,
+            report.kv_blocks_saved,
+            report.cow_forks,
+            report.effective_kv_occupancy() * 100.0,
+            report.peak_kv_occupancy() * 100.0,
+        );
+        // CI gate (the --prefix-share --smoke lane): a shared-prefix
+        // trace that never hits the index means sharing silently broke.
+        if smoke && report.prefix_hits == 0 {
+            return Err(anyhow!(
+                "prefix sharing enabled on a shared-prefix trace but the index never hit"
+            ));
+        }
     }
 
     // The direct analytical path is Sync, so sweeps and the SLO search

@@ -72,6 +72,13 @@ pub struct IterScope {
     pub tp: u16,
     /// Stream count of the per-iteration schedule.
     pub streams: u16,
+    /// Stable hash of the KV-pager configuration (block size, capacity,
+    /// prefix sharing). Iteration *prices* do not read the pager, but the
+    /// slot batches a replay produces do — two replays under different KV
+    /// semantics must not share memo entries, or a sweep comparing
+    /// sharing on/off would cross-pollinate its lanes. 0 for callers
+    /// outside a pager's reach.
+    pub pager: u64,
 }
 
 impl IterScope {
@@ -102,6 +109,7 @@ impl IterScope {
             lane: 0,
             tp: tp as u16,
             streams: streams as u16,
+            pager: 0,
         }
     }
 
@@ -111,9 +119,28 @@ impl IterScope {
         self
     }
 
+    /// Same scope under a specific KV-pager configuration, so replays
+    /// with different paging semantics (block size, capacity, prefix
+    /// sharing on/off) can never collide in a shared cache.
+    pub fn with_pager(mut self, pager: &crate::serving::KvPagerConfig) -> IterScope {
+        self.pager = StableHasher::hash_of(&(
+            pager.block_tokens,
+            pager.capacity_blocks,
+            pager.prefix_share,
+        ));
+        self
+    }
+
     /// The 64-bit tag folded into every key under this scope.
     pub fn tag(&self) -> u64 {
-        StableHasher::hash_of(&(self.model, self.device, self.lane, self.tp, self.streams))
+        StableHasher::hash_of(&(
+            self.model,
+            self.device,
+            self.lane,
+            self.tp,
+            self.streams,
+            self.pager,
+        ))
     }
 }
 
@@ -394,17 +421,31 @@ mod tests {
         let cfg = zoo::gpt2_large();
         let batch = slots(&[(1, 128)]);
         let base = IterScope::new(&cfg, "a100", 1, 1);
+        let pc = crate::serving::KvPagerConfig {
+            block_tokens: 16,
+            capacity_blocks: 100,
+            prefix_share: false,
+        };
         let variants = [
             IterScope::new(&cfg, "l4", 1, 1),
             IterScope::new(&cfg, "a100", 2, 1),
             IterScope::new(&cfg, "a100", 1, 4),
             IterScope::new(&zoo::qwen3_0_6b(), "a100", 1, 1),
             base.with_lane(1),
+            base.with_pager(&pc),
+            base.with_pager(&pc.with_prefix_share(true)),
+            base.with_pager(&crate::serving::KvPagerConfig { block_tokens: 32, ..pc }),
         ];
         let k0 = IterationKey::new(base, &batch);
         for v in variants {
             assert_ne!(k0, IterationKey::new(v, &batch), "scope {v:?} must not alias");
         }
+        // Sharing on vs off under otherwise-identical pagers must also
+        // differ from *each other* — the cross-config leak the tag fixes.
+        assert_ne!(
+            IterationKey::new(base.with_pager(&pc), &batch),
+            IterationKey::new(base.with_pager(&pc.with_prefix_share(true)), &batch),
+        );
     }
 
     #[test]

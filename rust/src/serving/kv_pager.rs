@@ -1,5 +1,5 @@
 //! Paged KV-cache allocator — vLLM-style block bookkeeping for the
-//! serving simulator.
+//! serving simulator, with copy-on-write prefix sharing.
 //!
 //! GPU memory for the KV cache is carved into fixed-size blocks of
 //! `block_tokens` tokens each; a request holds a list of blocks that
@@ -9,24 +9,60 @@
 //! [`crate::models::TransformerConfig::kv_cache_bytes`], so block-count
 //! accounting and byte accounting can never disagree.
 //!
-//! Invariants (enforced with debug assertions and checked by the
-//! property tests):
+//! # Prefix sharing (copy-on-write)
+//!
+//! Real continuous-batching engines dedupe shared prompt prefixes —
+//! system prompts, few-shot templates — so requests carrying the same
+//! template reference one physical copy of its KV blocks. The pager
+//! models that with *refcounted* physical blocks and a prefix index:
+//!
+//! * A template is identified by `(prefix_group, prefix_tokens)` on
+//!   [`crate::serving::RequestSpec`] — the simulator's stand-in for a
+//!   content hash of the token blocks (requests in one group share their
+//!   first `prefix_tokens` prompt tokens by construction).
+//! * The index maps `(group, prefix_tokens, block index)` to the
+//!   physical block holding that slice of the template. The first
+//!   request to materialize a prefix block *registers* it on write
+//!   ([`KvPager::grow`]); later arrivals *map* the longest registered
+//!   run at admission ([`KvPager::map_prefix`]), bumping refcounts
+//!   without drawing from the free list — and skipping that much
+//!   prefill recompute.
+//! * Blocks strictly inside the prefix are append-only history and are
+//!   never written again. The one block a holder can write while it is
+//!   shared is the partial *boundary* block (`prefix_tokens` not
+//!   block-aligned): growing past the prefix writes into it, so the
+//!   grow **forks** it copy-on-write while other holders remain, or
+//!   retires its registration in place when the writer is the last.
+//! * [`KvPager::release`] decrements refcounts; a block returns to the
+//!   free list only at refcount zero, so preempting one sharer can
+//!   never free another request's prefix.
+//!
+//! Invariants (enforced with debug assertions after every mutation and
+//! exercised by `tests/kv_pager_cow.rs`):
 //!
 //! * `free + in_use == capacity` after every operation;
+//! * Σ logical blocks (over live allocations) == Σ physical · refs;
 //! * a request's block count is exactly `ceil(tokens / block_tokens)`;
-//! * block ids are never double-allocated and all return to the free
-//!   list when their owner releases.
+//! * the free list holds exactly the zero-ref blocks, each once (no
+//!   double-free, no orphans);
+//! * every registered block is live and the index ↔ per-block tags are
+//!   a bijection.
 
 use std::collections::HashMap;
 
 /// Default tokens per KV block (vLLM's default page size).
 pub const DEFAULT_BLOCK_TOKENS: usize = 16;
 
-/// Static shape of a pager: the block size knob and the block budget.
+/// Static shape of a pager: the block size knob, the block budget, and
+/// whether cross-request prefix sharing is live.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct KvPagerConfig {
     pub block_tokens: usize,
     pub capacity_blocks: usize,
+    /// Enable copy-on-write prefix sharing. Off, the pager is the plain
+    /// private-pages allocator (and every sharing entry point is inert),
+    /// so replays are bit-for-bit the pre-sharing behavior.
+    pub prefix_share: bool,
 }
 
 impl KvPagerConfig {
@@ -49,7 +85,14 @@ impl KvPagerConfig {
         KvPagerConfig {
             block_tokens,
             capacity_blocks: ((budget / bytes_per_block) as usize).max(1),
+            prefix_share: false,
         }
+    }
+
+    /// The same geometry with prefix sharing switched on or off.
+    pub fn with_prefix_share(mut self, on: bool) -> KvPagerConfig {
+        self.prefix_share = on;
+        self
     }
 
     /// Blocks needed to hold `tokens` context entries.
@@ -71,23 +114,88 @@ pub enum PagerError {
     UnknownRequest(usize),
 }
 
-/// Per-request allocation: the materialized context length and the
-/// actual block ids backing it.
+/// Index key of one template prefix block: (group, declared prefix
+/// tokens, block index). Folding the declared length in keeps templates
+/// of different lengths inside one group from aliasing.
+type PrefixKey = (u64, usize, usize);
+
+/// A request's relationship to its template: the declared prefix and the
+/// clamped number of tokens this request may actually share (`effective
+/// = min(declared, caller's cap)` — the simulator caps at `prompt - 1`
+/// so at least one prefill token always remains to produce the first
+/// output logits).
+#[derive(Clone, Copy, Debug)]
+struct PrefixShare {
+    group: u64,
+    declared: usize,
+    effective: usize,
+}
+
+impl PrefixShare {
+    fn key(&self, i: usize) -> PrefixKey {
+        (self.group, self.declared, i)
+    }
+
+    /// Is block `i` pure template-prefix content for a holder whose
+    /// context tops out at `target` tokens after the current grow?
+    /// Full blocks inside the effective prefix always are. The partial
+    /// boundary block qualifies only when this request carries the whole
+    /// declared prefix *and* is not (yet) writing past it — otherwise
+    /// the block would mix template and private tokens.
+    fn registrable(&self, i: usize, target: usize, block_tokens: usize) -> bool {
+        (i + 1) * block_tokens <= self.effective
+            || (self.effective == self.declared
+                && self.declared % block_tokens != 0
+                && i == self.declared / block_tokens
+                && target <= self.declared)
+    }
+
+    /// Blocks [`KvPager::map_prefix`] may map: the registrable range for
+    /// a holder that stays within the declared prefix.
+    fn mappable(&self, i: usize, block_tokens: usize) -> bool {
+        self.registrable(i, self.declared, block_tokens)
+    }
+
+    /// Context tokens materialized once blocks `0..=i` are mapped.
+    fn mapped_tokens(&self, i: usize, block_tokens: usize) -> usize {
+        ((i + 1) * block_tokens).min(self.effective)
+    }
+}
+
+/// Per-request allocation: the materialized context length, the actual
+/// block ids backing it, and the live prefix relationship (cleared once
+/// the request grows past its shared prefix).
 #[derive(Clone, Debug, Default)]
 struct Alloc {
     tokens: usize,
     blocks: Vec<usize>,
+    prefix: Option<PrefixShare>,
 }
 
 /// The allocator. Block ids are dense `0..capacity`; the free list is
 /// LIFO so recently released blocks are reused first (cache-friendly on
-/// real hardware, deterministic here).
+/// real hardware, deterministic here). Physical blocks are refcounted:
+/// without sharing every refcount is 0 or 1 and the pager degenerates to
+/// the plain private-pages allocator.
 #[derive(Clone, Debug)]
 pub struct KvPager {
     config: KvPagerConfig,
     free_list: Vec<usize>,
     allocs: HashMap<usize, Alloc>,
+    /// Per-physical-block reference count; 0 ⇔ on the free list.
+    refs: Vec<u32>,
+    /// Physical block → the prefix-index key it is registered under.
+    registered: Vec<Option<PrefixKey>>,
+    /// Template slice → the physical block holding it.
+    prefix_index: HashMap<PrefixKey, usize>,
+    /// Σ over live allocations of their block counts (== Σ refs).
+    logical: usize,
     peak_in_use: usize,
+    peak_logical: usize,
+    peak_saved: usize,
+    prefix_lookups: u64,
+    prefix_hits: u64,
+    cow_forks: u64,
 }
 
 impl KvPager {
@@ -95,11 +203,21 @@ impl KvPager {
         let config = KvPagerConfig {
             block_tokens: config.block_tokens.max(1),
             capacity_blocks: config.capacity_blocks.max(1),
+            prefix_share: config.prefix_share,
         };
         KvPager {
             free_list: (0..config.capacity_blocks).rev().collect(),
             allocs: HashMap::new(),
+            refs: vec![0; config.capacity_blocks],
+            registered: vec![None; config.capacity_blocks],
+            prefix_index: HashMap::new(),
+            logical: 0,
             peak_in_use: 0,
+            peak_logical: 0,
+            peak_saved: 0,
+            prefix_lookups: 0,
+            prefix_hits: 0,
+            cow_forks: 0,
             config,
         }
     }
@@ -120,9 +238,26 @@ impl KvPager {
         self.config.capacity_blocks - self.free_list.len()
     }
 
+    /// Σ block counts over live allocations — what the requests would
+    /// occupy without sharing. `logical - in_use` is the sharing saving.
+    pub fn logical_blocks(&self) -> usize {
+        self.logical
+    }
+
     /// High-water mark of `blocks_in_use` over the pager's lifetime.
     pub fn peak_blocks(&self) -> usize {
         self.peak_in_use
+    }
+
+    /// High-water mark of [`KvPager::logical_blocks`].
+    pub fn peak_logical_blocks(&self) -> usize {
+        self.peak_logical
+    }
+
+    /// Largest instantaneous `logical - physical` gap — the blocks
+    /// sharing saved at the moment it saved the most.
+    pub fn peak_blocks_saved(&self) -> usize {
+        self.peak_saved
     }
 
     /// Fraction of blocks currently allocated.
@@ -130,75 +265,302 @@ impl KvPager {
         self.blocks_in_use() as f64 / self.config.capacity_blocks as f64
     }
 
+    /// Occupancy the same workload would have without sharing (can
+    /// exceed 1.0 — that is the capacity sharing manufactured).
+    pub fn effective_occupancy(&self) -> f64 {
+        self.logical as f64 / self.config.capacity_blocks as f64
+    }
+
+    /// Shareable prefix blocks probed at admission (map-time probes).
+    pub fn prefix_lookups(&self) -> u64 {
+        self.prefix_lookups
+    }
+
+    /// Probes that found a registered block and mapped it.
+    pub fn prefix_hits(&self) -> u64 {
+        self.prefix_hits
+    }
+
+    /// Copy-on-write forks of shared boundary blocks.
+    pub fn cow_forks(&self) -> u64 {
+        self.cow_forks
+    }
+
     /// Materialized context tokens of a request (0 when unknown).
     pub fn tokens_of(&self, id: usize) -> usize {
         self.allocs.get(&id).map(|a| a.tokens).unwrap_or(0)
     }
 
-    /// Live requests holding at least one block.
+    /// Does request `id` hold a live allocation? (Possibly zero blocks:
+    /// an admission-time [`KvPager::map_prefix`] with no index hits.)
+    pub fn holds(&self, id: usize) -> bool {
+        self.allocs.contains_key(&id)
+    }
+
+    /// The physical block ids backing request `id`, in context order —
+    /// observability for tests (free-list reuse order, sharing).
+    pub fn blocks_of(&self, id: usize) -> Option<&[usize]> {
+        self.allocs.get(&id).map(|a| a.blocks.as_slice())
+    }
+
+    /// Live requests holding an allocation.
     pub fn live_requests(&self) -> usize {
         self.allocs.len()
     }
 
     /// Would growing request `id` to `tokens` context entries fit?
     pub fn can_grow(&self, id: usize, tokens: usize) -> bool {
-        let have = self.allocs.get(&id).map(|a| a.blocks.len()).unwrap_or(0);
-        let need = self.config.blocks_for(tokens).saturating_sub(have);
-        need <= self.free_list.len()
+        self.physical_need(id, tokens) <= self.free_list.len()
+    }
+
+    /// Physical blocks a [`KvPager::grow`] to `tokens` would draw from
+    /// the free list: new blocks past the current allocation, plus one
+    /// for the copy-on-write fork if this grow crosses the shared-prefix
+    /// boundary while peers still reference the boundary block. Shared
+    /// blocks a request already maps cost nothing — this is the "account
+    /// shared blocks once" admission arithmetic.
+    pub fn physical_need(&self, id: usize, tokens: usize) -> usize {
+        let want = self.config.blocks_for(tokens);
+        match self.allocs.get(&id) {
+            None => want,
+            Some(a) => {
+                want.saturating_sub(a.blocks.len()) + self.pending_fork(a, tokens) as usize
+            }
+        }
+    }
+
+    /// Does growing `a` to `tokens` write into a boundary block other
+    /// holders still reference?
+    fn pending_fork(&self, a: &Alloc, tokens: usize) -> bool {
+        match a.prefix {
+            Some(s) if tokens > s.effective => {
+                let w = s.effective / self.config.block_tokens;
+                w < a.blocks.len()
+                    && self.registered[a.blocks[w]].is_some()
+                    && self.refs[a.blocks[w]] > 1
+            }
+            _ => false,
+        }
+    }
+
+    /// Dry-run of [`KvPager::map_prefix`]: how many context tokens would
+    /// a request of template `(group, prefix_tokens)` find registered
+    /// right now? Pure — admission policies use it to rank waiters.
+    pub fn prefix_hit_tokens(&self, group: u64, prefix_tokens: usize, max_tokens: usize) -> usize {
+        let bt = self.config.block_tokens;
+        let share =
+            PrefixShare { group, declared: prefix_tokens, effective: prefix_tokens.min(max_tokens) };
+        let mut tokens = 0usize;
+        let mut i = 0usize;
+        while share.mappable(i, bt) && self.prefix_index.contains_key(&share.key(i)) {
+            tokens = share.mapped_tokens(i, bt);
+            i += 1;
+        }
+        tokens
+    }
+
+    /// Create request `id`'s allocation by mapping the longest registered
+    /// run of its template's prefix blocks: refcounts bump, nothing is
+    /// drawn from the free list. Returns the context tokens the mapping
+    /// materialized — prefill the request does *not* have to recompute.
+    /// `max_tokens` caps the shareable span (callers pass `prompt - 1`
+    /// so the last prompt token is always prefilled for its logits).
+    /// An allocation is created even on zero hits, so a later
+    /// [`KvPager::grow`] knows the template and registers the blocks it
+    /// writes (first arrival publishes, later arrivals share).
+    pub fn map_prefix(
+        &mut self,
+        id: usize,
+        group: u64,
+        prefix_tokens: usize,
+        max_tokens: usize,
+    ) -> usize {
+        debug_assert!(self.config.prefix_share, "map_prefix with sharing disabled");
+        if let Some(a) = self.allocs.get(&id) {
+            debug_assert!(false, "map_prefix on a live allocation ({id})");
+            return a.tokens;
+        }
+        let bt = self.config.block_tokens;
+        let share =
+            PrefixShare { group, declared: prefix_tokens, effective: prefix_tokens.min(max_tokens) };
+        let mut blocks = Vec::new();
+        let mut tokens = 0usize;
+        let mut i = 0usize;
+        while share.mappable(i, bt) {
+            self.prefix_lookups += 1;
+            match self.prefix_index.get(&share.key(i)) {
+                Some(&pb) => {
+                    self.refs[pb] += 1;
+                    self.prefix_hits += 1;
+                    blocks.push(pb);
+                    tokens = share.mapped_tokens(i, bt);
+                    i += 1;
+                }
+                None => break,
+            }
+        }
+        self.logical += blocks.len();
+        self.allocs.insert(id, Alloc { tokens, blocks, prefix: Some(share) });
+        self.note_peaks();
+        debug_assert!(self.audit());
+        tokens
     }
 
     /// Grow (or create) request `id`'s allocation to cover `tokens`
     /// context entries, appending blocks as needed. Shrinking never
     /// happens here — contexts only grow until [`KvPager::release`].
-    /// Returns the number of newly allocated blocks; on failure the
-    /// allocation is untouched (all-or-nothing).
+    /// Growing past a shared prefix triggers the copy-on-write: the
+    /// boundary block forks if peers still reference it, or sheds its
+    /// registration if the writer is the last holder; blocks written
+    /// while still inside the prefix are registered for later arrivals.
+    /// Returns the physical blocks drawn from the free list; on failure
+    /// the allocation is untouched (all-or-nothing).
     pub fn grow(&mut self, id: usize, tokens: usize) -> Result<usize, PagerError> {
-        let entry = self.allocs.entry(id).or_default();
-        let want = self.config.blocks_for(tokens);
-        let need = want.saturating_sub(entry.blocks.len());
+        let need = self.physical_need(id, tokens);
         if need > self.free_list.len() {
-            let free = self.free_list.len();
-            if entry.blocks.is_empty() {
-                self.allocs.remove(&id);
+            return Err(PagerError::OutOfBlocks { need, free: self.free_list.len() });
+        }
+        let mut drawn = 0usize;
+        // Copy-on-write: crossing the shared-prefix boundary writes into
+        // the boundary block.
+        let share = self.allocs.get(&id).and_then(|a| a.prefix);
+        if let Some(s) = share {
+            if tokens > s.effective {
+                let w = s.effective / self.config.block_tokens;
+                let a = self.allocs.get_mut(&id).expect("prefix implies a live alloc");
+                if w < a.blocks.len() && self.registered[a.blocks[w]].is_some() {
+                    let pb = a.blocks[w];
+                    if self.refs[pb] > 1 {
+                        // Fork: private copy for the writer, the shared
+                        // original stays registered for its other holders.
+                        let nb = self.free_list.pop().expect("need included the fork");
+                        self.refs[pb] -= 1;
+                        self.refs[nb] = 1;
+                        a.blocks[w] = nb;
+                        self.cow_forks += 1;
+                        drawn += 1;
+                    } else {
+                        // Last holder: write in place, retire the entry.
+                        let key = self.registered[pb].take().expect("checked above");
+                        self.prefix_index.remove(&key);
+                    }
+                }
+                self.allocs.get_mut(&id).expect("live alloc").prefix = None;
             }
-            return Err(PagerError::OutOfBlocks { need, free });
         }
-        for _ in 0..need {
-            entry.blocks.push(self.free_list.pop().expect("checked above"));
+        let (cur, target, share) = match self.allocs.get(&id) {
+            Some(a) => (a.blocks.len(), a.tokens.max(tokens), a.prefix),
+            None => (0, tokens, None),
+        };
+        let want = self.config.blocks_for(tokens);
+        let bt = self.config.block_tokens;
+        let mut new_blocks = Vec::with_capacity(want.saturating_sub(cur));
+        for i in cur..want {
+            let nb = self.free_list.pop().expect("need was checked");
+            self.refs[nb] = 1;
+            drawn += 1;
+            if let Some(s) = share {
+                // Register-on-write: the first holder to materialize a
+                // template block publishes it, unless a peer already did
+                // (grow never maps — sharing binds only at admission).
+                if s.registrable(i, target, bt) {
+                    let key = s.key(i);
+                    if let std::collections::hash_map::Entry::Vacant(e) =
+                        self.prefix_index.entry(key)
+                    {
+                        e.insert(nb);
+                        self.registered[nb] = Some(key);
+                    }
+                }
+            }
+            new_blocks.push(nb);
         }
+        let entry = self.allocs.entry(id).or_default();
+        let grown = new_blocks.len();
+        entry.blocks.extend(new_blocks);
         entry.tokens = entry.tokens.max(tokens);
-        self.peak_in_use = self.peak_in_use.max(self.blocks_in_use());
+        self.logical += grown;
+        self.note_peaks();
         debug_assert!(self.audit());
-        Ok(need)
+        Ok(drawn)
     }
 
-    /// Return every block request `id` holds (completion, or preemption
-    /// with recompute). Returns the freed block count.
+    /// Drop every block reference request `id` holds (completion, or
+    /// preemption with recompute). Blocks return to the free list only
+    /// at refcount zero — a sharer's release never frees blocks its
+    /// peers still map. Returns the physical blocks actually freed.
     pub fn release(&mut self, id: usize) -> Result<usize, PagerError> {
         let alloc = self.allocs.remove(&id).ok_or(PagerError::UnknownRequest(id))?;
-        let n = alloc.blocks.len();
-        self.free_list.extend(alloc.blocks);
+        self.logical -= alloc.blocks.len();
+        let mut freed = 0usize;
+        for b in alloc.blocks {
+            debug_assert!(self.refs[b] > 0, "double-free of block {b}");
+            self.refs[b] -= 1;
+            if self.refs[b] == 0 {
+                if let Some(key) = self.registered[b].take() {
+                    self.prefix_index.remove(&key);
+                }
+                self.free_list.push(b);
+                freed += 1;
+            }
+        }
+        self.note_peaks();
         debug_assert!(self.audit());
-        Ok(n)
+        Ok(freed)
     }
 
-    /// Conservation check: free + allocated == capacity, no block id
-    /// appears twice, every allocation's block count matches its tokens.
+    fn note_peaks(&mut self) {
+        self.peak_in_use = self.peak_in_use.max(self.blocks_in_use());
+        self.peak_logical = self.peak_logical.max(self.logical);
+        self.peak_saved = self.peak_saved.max(self.logical - self.blocks_in_use());
+    }
+
+    /// Refcount-conservation check: Σ logical blocks == Σ physical·refs,
+    /// the free list is exactly the zero-ref blocks (no double-free, no
+    /// orphans), every allocation's block count matches its tokens, and
+    /// the prefix index ↔ per-block registrations form a bijection over
+    /// live blocks.
     pub fn audit(&self) -> bool {
-        let allocated: usize = self.allocs.values().map(|a| a.blocks.len()).sum();
-        if allocated + self.free_list.len() != self.config.capacity_blocks {
-            return false;
-        }
-        let mut seen = vec![false; self.config.capacity_blocks];
-        for &b in self.free_list.iter().chain(self.allocs.values().flat_map(|a| &a.blocks)) {
-            if b >= seen.len() || seen[b] {
+        let cap = self.config.capacity_blocks;
+        // Recount every block's references from the allocation lists.
+        let mut counted = vec![0u32; cap];
+        let mut logical = 0usize;
+        for a in self.allocs.values() {
+            if a.blocks.len() != self.config.blocks_for(a.tokens) {
                 return false;
             }
-            seen[b] = true;
+            logical += a.blocks.len();
+            let mut in_alloc = std::collections::HashSet::new();
+            for &b in &a.blocks {
+                // One request never holds the same physical block twice.
+                if b >= cap || !in_alloc.insert(b) {
+                    return false;
+                }
+                counted[b] += 1;
+            }
         }
-        self.allocs
-            .values()
-            .all(|a| a.blocks.len() == self.config.blocks_for(a.tokens))
+        if logical != self.logical || counted != self.refs {
+            return false;
+        }
+        // The free list is exactly the zero-ref blocks, each once.
+        let mut on_free = vec![false; cap];
+        for &b in &self.free_list {
+            if b >= cap || on_free[b] || counted[b] != 0 {
+                return false;
+            }
+            on_free[b] = true;
+        }
+        let live = counted.iter().filter(|&&c| c > 0).count();
+        if live + self.free_list.len() != cap {
+            return false;
+        }
+        // Registration bijection over live blocks.
+        if self.prefix_index.len() != self.registered.iter().flatten().count() {
+            return false;
+        }
+        self.prefix_index
+            .iter()
+            .all(|(key, &b)| b < cap && self.registered[b] == Some(*key) && counted[b] > 0)
     }
 }
 
@@ -207,7 +569,11 @@ mod tests {
     use super::*;
 
     fn pager(block_tokens: usize, capacity_blocks: usize) -> KvPager {
-        KvPager::new(KvPagerConfig { block_tokens, capacity_blocks })
+        KvPager::new(KvPagerConfig { block_tokens, capacity_blocks, prefix_share: false })
+    }
+
+    fn sharing(block_tokens: usize, capacity_blocks: usize) -> KvPager {
+        KvPager::new(KvPagerConfig { block_tokens, capacity_blocks, prefix_share: true })
     }
 
     #[test]
@@ -220,6 +586,7 @@ mod tests {
         assert_eq!(p.tokens_of(1), 17);
         assert_eq!(p.grow(2, 64).unwrap(), 4);
         assert_eq!(p.blocks_in_use(), 6);
+        assert_eq!(p.logical_blocks(), 6, "no sharing: logical == physical");
         assert!(p.audit());
         assert_eq!(p.release(1).unwrap(), 2);
         assert_eq!(p.release(2).unwrap(), 4);
@@ -227,6 +594,7 @@ mod tests {
         assert_eq!(p.free_blocks(), 10);
         assert!(p.audit());
         assert_eq!(p.peak_blocks(), 6, "high-water mark survives release");
+        assert_eq!(p.peak_blocks_saved(), 0, "no sharing, no savings");
     }
 
     #[test]
@@ -264,11 +632,107 @@ mod tests {
     }
 
     #[test]
+    fn publisher_registers_and_sharer_maps_without_drawing_blocks() {
+        let mut p = sharing(16, 10);
+        // First arrival: nothing registered yet — zero hits, but the
+        // allocation remembers the template for register-on-write.
+        assert_eq!(p.map_prefix(1, 7, 48, 95), 0);
+        assert!(p.holds(1));
+        assert_eq!(p.prefix_lookups(), 1);
+        assert_eq!(p.prefix_hits(), 0);
+        // Prefill materializes the prefix: blocks 0..3 register.
+        assert_eq!(p.grow(1, 48).unwrap(), 3);
+        // Second arrival maps the whole registered run: 3 blocks, no
+        // free-list draw, refcounts 2.
+        let free_before = p.free_blocks();
+        assert_eq!(p.map_prefix(2, 7, 48, 63), 48);
+        assert_eq!(p.free_blocks(), free_before, "mapping draws nothing");
+        assert_eq!(p.blocks_in_use(), 3);
+        assert_eq!(p.logical_blocks(), 6);
+        assert_eq!(p.peak_blocks_saved(), 3);
+        assert_eq!(p.blocks_of(2).unwrap(), p.blocks_of(1).unwrap());
+        assert_eq!(p.prefix_hits(), 3);
+        // Growing past the (block-aligned) prefix allocates privately —
+        // the crossing block was never shared, so no fork.
+        assert_eq!(p.grow(2, 49).unwrap(), 1);
+        assert_eq!(p.cow_forks(), 0);
+        assert_ne!(p.blocks_of(2).unwrap()[3], p.blocks_of(1).unwrap()[2]);
+        // A different template sees none of it.
+        assert_eq!(p.prefix_hit_tokens(8, 48, 100), 0);
+        assert_eq!(p.prefix_hit_tokens(7, 48, 100), 48);
+        assert!(p.audit());
+    }
+
+    #[test]
+    fn decode_write_forks_shared_boundary_and_last_holder_writes_in_place() {
+        // declared = 24 with 16-token blocks: block 1 is a partial
+        // boundary block — shareable while its holder stays ≤ 24 tokens.
+        let mut p = sharing(16, 10);
+        assert_eq!(p.map_prefix(1, 5, 24, 100), 0);
+        assert_eq!(p.grow(1, 24).unwrap(), 2); // registers blocks 0 and 1
+        assert_eq!(p.map_prefix(2, 5, 24, 100), 24);
+        let b1 = p.blocks_of(1).unwrap()[1];
+        assert_eq!(p.blocks_of(2).unwrap()[1], b1);
+        // Writer 2 crosses the prefix: the boundary block is shared
+        // (refs 2), so the write forks it copy-on-write.
+        assert_eq!(p.physical_need(2, 25), 1, "no new block, one fork");
+        assert_eq!(p.grow(2, 25).unwrap(), 1);
+        assert_eq!(p.cow_forks(), 1);
+        assert_ne!(p.blocks_of(2).unwrap()[1], b1);
+        assert_eq!(p.blocks_of(1).unwrap()[1], b1, "the original stays shared");
+        // Writer 1 crosses too: now the last holder — no fork, the
+        // registration retires in place.
+        assert_eq!(p.physical_need(1, 25), 0);
+        assert_eq!(p.grow(1, 25).unwrap(), 0);
+        assert_eq!(p.cow_forks(), 1);
+        assert_eq!(p.prefix_hit_tokens(5, 24, 100), 16, "only the full block remains");
+        assert!(p.audit());
+    }
+
+    #[test]
+    fn releasing_a_sharer_never_frees_a_peers_prefix() {
+        let mut p = sharing(16, 10);
+        p.map_prefix(1, 3, 32, 100);
+        p.grow(1, 40).unwrap(); // 3 blocks, first two registered
+        assert_eq!(p.map_prefix(2, 3, 32, 100), 32);
+        // Preempting the sharer frees nothing physical: both its blocks
+        // are still referenced by the publisher.
+        assert_eq!(p.release(2).unwrap(), 0);
+        assert_eq!(p.blocks_in_use(), 3);
+        assert_eq!(p.tokens_of(1), 40);
+        assert_eq!(p.prefix_hit_tokens(3, 32, 100), 32, "prefix survives");
+        // Releasing the publisher too drops refcounts to zero: blocks
+        // free, the index empties.
+        assert_eq!(p.release(1).unwrap(), 3);
+        assert_eq!(p.free_blocks(), 10);
+        assert_eq!(p.prefix_hit_tokens(3, 32, 100), 0);
+        assert!(p.audit());
+    }
+
+    #[test]
+    fn sharing_disabled_requests_and_nonshared_ids_take_the_legacy_path() {
+        // prefix_share on, but plain grows (no map_prefix) behave exactly
+        // like the legacy allocator — the differential-test guarantee.
+        let mut on = sharing(16, 8);
+        let mut off = pager(16, 8);
+        for (id, t) in [(1, 20), (2, 64), (1, 40), (3, 16)] {
+            assert_eq!(on.grow(id, t).unwrap(), off.grow(id, t).unwrap());
+        }
+        assert_eq!(on.release(2).unwrap(), off.release(2).unwrap());
+        assert_eq!(on.blocks_in_use(), off.blocks_in_use());
+        assert_eq!(on.logical_blocks(), on.blocks_in_use());
+        assert_eq!((on.prefix_lookups(), on.cow_forks()), (0, 0));
+        assert!(on.audit() && off.audit());
+    }
+
+    #[test]
     fn config_sizes_from_device_memory() {
         let cfg = crate::models::zoo::gpt2_large();
         let a100 = crate::gpusim::device_by_name("a100").unwrap();
         let pc = KvPagerConfig::for_model(&cfg, a100.mem_bytes(), 16);
         assert_eq!(pc.block_tokens, 16);
+        assert!(!pc.prefix_share, "sharing is opt-in");
+        assert!(pc.with_prefix_share(true).prefix_share);
         // Byte accounting matches kv_cache_bytes exactly: capacity in
         // bytes stays within the post-reserve budget and fills most of it.
         let budget = a100.mem_bytes() - cfg.weight_bytes() - 0.7e9 - 0.05 * a100.mem_bytes();

@@ -18,10 +18,13 @@
 //!   request population (the tool behind QPS sweeps).
 //! * [`kv_pager`] — the paged KV-cache allocator: fixed-size token
 //!   blocks, per-request block lists, capacity derived from device HBM
-//!   through `kv_cache_bytes`, conservation-audited.
+//!   through `kv_cache_bytes`, conservation-audited. Opt-in
+//!   copy-on-write prefix sharing dedupes shared prompt templates:
+//!   refcounted physical blocks behind a prefix index, forked on
+//!   decode-time writes, freed only at refcount zero.
 //! * [`policy`] — pluggable scheduling: static vs. vLLM-style continuous
-//!   batching with chunked prefill; FCFS, shortest-prompt, priority, and
-//!   fair-share admission.
+//!   batching with chunked prefill; FCFS, shortest-prompt, priority,
+//!   fair-share, and prefix-hit admission.
 //! * [`iter_cache`] — the iteration-price memo: a canonical, exact
 //!   [`iter_cache::IterationKey`] computed straight from the slot batch
 //!   fronts an LRU of priced iterations, so repeating decode signatures
@@ -68,6 +71,6 @@ pub use simulator::{
     SimError,
 };
 pub use trace::{
-    bursty_trace, parse_trace, poisson_trace, scale_arrivals, to_json, with_priority_classes,
-    RequestSpec,
+    bursty_trace, parse_trace, poisson_trace, scale_arrivals, shared_prefix_trace, to_json,
+    with_priority_classes, with_shared_prefix, RequestSpec,
 };

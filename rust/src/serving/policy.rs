@@ -15,10 +15,11 @@
 //! Admission order is its own axis: FCFS (arrival order),
 //! shortest-prompt-first (an SJF approximation that trades fairness for
 //! mean TTFT), strict priority (higher request classes preempt the queue
-//! order), or fair-share (deterministic round-robin across classes, so
-//! one chatty tenant cannot starve the rest). Policies are pure
-//! functions over small view structs, so they unit-test without an
-//! event loop.
+//! order), fair-share (deterministic round-robin across classes, so
+//! one chatty tenant cannot starve the rest), or prefix-hit (largest
+//! shared-prefix cache hit first — admit the requests whose prefill the
+//! copy-on-write pager can skip). Policies are pure functions over small
+//! view structs, so they unit-test without an event loop.
 
 /// Admission order over the waiting queue.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -37,6 +38,12 @@ pub enum Admission {
     /// class; deterministic (classes cycle in ascending class id from
     /// the lowest present). An all-one-class queue degrades to FCFS.
     FairShare,
+    /// Largest shared-prefix cache hit first (ties by arrival): admit
+    /// the requests the copy-on-write KV pager can serve mostly from
+    /// registered template blocks, maximizing skipped prefill per
+    /// admission slot. With sharing off — or a trace with no shared
+    /// prefixes — every hit is 0 and this degrades to FCFS.
+    PrefixHit,
 }
 
 impl Admission {
@@ -46,6 +53,7 @@ impl Admission {
             "sjf" | "shortest" | "shortest-prompt" => Some(Admission::ShortestPrompt),
             "priority" => Some(Admission::Priority),
             "fair" | "fair-share" => Some(Admission::FairShare),
+            "prefix" | "prefix-hit" => Some(Admission::PrefixHit),
             _ => None,
         }
     }
@@ -56,6 +64,7 @@ impl Admission {
             Admission::ShortestPrompt => "shortest-prompt",
             Admission::Priority => "priority",
             Admission::FairShare => "fair-share",
+            Admission::PrefixHit => "prefix-hit",
         }
     }
 }
@@ -117,6 +126,9 @@ pub struct WaitingView {
     pub remaining_prompt: usize,
     /// Scheduling class ([`crate::serving::RequestSpec::priority`]).
     pub priority: u8,
+    /// Context tokens the KV pager's prefix index would hand this
+    /// request for free right now (0 with sharing off or no template).
+    pub prefix_cached_tokens: usize,
 }
 
 /// What the chunk planner sees of one running request.
@@ -138,8 +150,9 @@ impl SchedulerConfig {
     /// Order the waiting queue for admission: queue indices, most
     /// admittable first. FCFS returns arrival order; shortest-prompt
     /// sorts by remaining prefill; priority sorts descending by class;
-    /// fair-share interleaves classes round-robin. All orders are stable
-    /// — ties keep arrival order — and every policy is a permutation of
+    /// fair-share interleaves classes round-robin; prefix-hit sorts
+    /// descending by cached prefix tokens. All orders are stable —
+    /// ties keep arrival order — and every policy is a permutation of
     /// the queue (admission can reorder but never drop).
     pub fn admission_order(&self, waiting: &[WaitingView]) -> Vec<usize> {
         let mut idx: Vec<usize> = (0..waiting.len()).collect();
@@ -151,6 +164,11 @@ impl SchedulerConfig {
             Admission::Priority => {
                 idx.sort_by_key(|&i| {
                     (std::cmp::Reverse(waiting[i].priority), waiting[i].queue_idx)
+                });
+            }
+            Admission::PrefixHit => {
+                idx.sort_by_key(|&i| {
+                    (std::cmp::Reverse(waiting[i].prefix_cached_tokens), waiting[i].queue_idx)
                 });
             }
             Admission::FairShare => {
@@ -217,6 +235,7 @@ mod tests {
                 arrival_s,
                 remaining_prompt,
                 priority: 0,
+                prefix_cached_tokens: 0,
             })
             .collect()
     }
@@ -230,6 +249,7 @@ mod tests {
                 arrival_s: i as f64,
                 remaining_prompt,
                 priority,
+                prefix_cached_tokens: 0,
             })
             .collect()
     }
@@ -275,6 +295,7 @@ mod tests {
             Admission::ShortestPrompt,
             Admission::Priority,
             Admission::FairShare,
+            Admission::PrefixHit,
         ] {
             let cfg = SchedulerConfig { admission: adm, ..SchedulerConfig::default() };
             let mut o = cfg.admission_order(&w);
@@ -283,6 +304,22 @@ mod tests {
         }
         // One class only → FCFS order (the degenerate single-tenant case).
         let flat = classed(&[(9, 5), (8, 5), (7, 5)]);
+        assert_eq!(cfg.admission_order(&flat), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn prefix_hit_admits_largest_cache_hits_first() {
+        let mut w = waiting(&[(0.0, 300), (0.1, 300), (0.2, 300), (0.3, 300)]);
+        w[1].prefix_cached_tokens = 256;
+        w[3].prefix_cached_tokens = 64;
+        let cfg = SchedulerConfig {
+            admission: Admission::PrefixHit,
+            ..SchedulerConfig::default()
+        };
+        // Biggest hit first; zero-hit requests keep arrival order.
+        assert_eq!(cfg.admission_order(&w), vec![1, 3, 0, 2]);
+        // All-zero hits (sharing off, or a private trace) == FCFS.
+        let flat = waiting(&[(0.0, 10), (0.1, 20), (0.2, 30)]);
         assert_eq!(cfg.admission_order(&flat), vec![0, 1, 2]);
     }
 
@@ -341,6 +378,7 @@ mod tests {
             Admission::ShortestPrompt,
             Admission::Priority,
             Admission::FairShare,
+            Admission::PrefixHit,
         ] {
             assert_eq!(Admission::parse(a.name()), Some(a));
         }
@@ -349,6 +387,7 @@ mod tests {
         }
         assert_eq!(Admission::parse("sjf"), Some(Admission::ShortestPrompt));
         assert_eq!(Admission::parse("fair"), Some(Admission::FairShare));
+        assert_eq!(Admission::parse("prefix"), Some(Admission::PrefixHit));
         assert_eq!(BatchingMode::parse("vllm"), Some(BatchingMode::Continuous));
         assert!(Admission::parse("lifo").is_none());
         assert!(BatchingMode::parse("x").is_none());

@@ -114,6 +114,18 @@ pub struct ServingReport {
     pub kv_timeline: Vec<(f64, f64)>,
     /// Largest concurrent batch observed.
     pub max_concurrency: usize,
+    /// Prefix-index probes at admission (0 unless prefix sharing ran).
+    pub prefix_lookups: u64,
+    /// Probes that mapped a registered template block refcounted.
+    pub prefix_hits: u64,
+    /// Copy-on-write forks of shared boundary blocks.
+    pub cow_forks: u64,
+    /// Peak Σ of per-request block counts — what the workload would have
+    /// occupied without sharing (≥ `peak_kv_blocks`; the gap is sharing).
+    pub peak_logical_kv_blocks: usize,
+    /// Largest instantaneous `logical − physical` gap: the KV blocks
+    /// prefix sharing saved when it saved the most.
+    pub kv_blocks_saved: usize,
 }
 
 impl ServingReport {
@@ -166,9 +178,24 @@ impl ServingReport {
         self.peak_kv_blocks as f64 / self.kv_capacity_blocks.max(1) as f64
     }
 
+    /// Peak *effective* KV occupancy: logical blocks over capacity. Can
+    /// exceed 1.0 — that surplus is the capacity sharing manufactured.
+    pub fn effective_kv_occupancy(&self) -> f64 {
+        self.peak_logical_kv_blocks as f64 / self.kv_capacity_blocks.max(1) as f64
+    }
+
+    /// Fraction of shareable prefix-block probes that hit the index.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups > 0 {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        } else {
+            0.0
+        }
+    }
+
     /// One-paragraph operator summary (the `serve-sim` output body).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} requests in {:.2}s ({:.2} req/s, {:.0} tok/s, util {:.0}%) | \
              TTFT p50 {:.1}ms p99 {:.1}ms | TPOT p50 {:.0}µs p99 {:.0}µs | \
              E2E p50 {:.1}ms p99 {:.1}ms | {} iters, batch ≤ {}, \
@@ -189,7 +216,18 @@ impl ServingReport {
             self.peak_kv_occupancy() * 100.0,
             self.kv_capacity_blocks,
             self.preemptions,
-        )
+        );
+        if self.prefix_lookups > 0 {
+            s.push_str(&format!(
+                " | prefix hit {:.0}% ({} blocks saved, {} COW forks, \
+                 effective KV {:.0}%)",
+                self.prefix_hit_rate() * 100.0,
+                self.kv_blocks_saved,
+                self.cow_forks,
+                self.effective_kv_occupancy() * 100.0,
+            ));
+        }
+        s
     }
 }
 
@@ -386,6 +424,10 @@ where
     };
     let mut pager = KvPager::new(sim.pager);
     let capacity = pager.capacity_blocks();
+    // Prefix sharing engages only when the pager opts in AND a request
+    // declares a template; otherwise every sharing branch below is dead
+    // and the replay is bit-for-bit the private-paging path.
+    let share_on = pager.config().prefix_share;
     // No request may ever need more blocks than exist, and ids must be
     // unique — the pager keys allocations by id, so a collision would
     // merge two requests' block lists.
@@ -452,26 +494,52 @@ where
                     arrival_s: r.spec.arrival_s,
                     remaining_prompt: r.remaining_prefill(),
                     priority: r.spec.priority,
+                    // What the prefix index would hand this request for
+                    // free right now — the KV gate and the prefix-hit
+                    // admission order both read it. Capped at prompt − 1
+                    // so a fully-cached prompt still prefills one token
+                    // for its first-token logits.
+                    prefix_cached_tokens: if share_on && r.spec.prefix_tokens > 0 {
+                        pager.prefix_hit_tokens(
+                            r.spec.prefix_group,
+                            r.spec.prefix_tokens,
+                            r.spec.prompt_len - 1,
+                        )
+                    } else {
+                        0
+                    },
                 })
                 .collect();
             let order = sched.admission_order(&views);
             let mut picked: Vec<usize> = Vec::new();
             // Static mode reserves full-lifetime blocks so a batch never
             // preempts; continuous admits against the first chunk and
-            // relies on preemption under pressure.
+            // relies on preemption under pressure. Blocks the prefix
+            // index already holds are shared — they cost a refcount, not
+            // a free block, so they are excluded from the reservation
+            // (counting each physical block once across sharers).
             let mut reserve = pager.blocks_in_use();
             for &qi in &order {
                 if running.len() + picked.len() >= sched.max_batch {
                     break;
                 }
                 let r = &waiting[qi];
+                let mapped = views[qi].prefix_cached_tokens;
+                let bf = |t: usize| pager.config().blocks_for(t);
                 let need = match sched.mode {
                     BatchingMode::Static => {
-                        pager.config().blocks_for(r.spec.total_len())
+                        // Full lifetime minus the mapped prefix, plus one
+                        // block of copy-on-write allowance if the mapped
+                        // run ends mid-block (growing past it may fork) —
+                        // keeps static batches preemption-free.
+                        bf(r.spec.total_len()) - bf(mapped)
+                            + (mapped % pager.config().block_tokens != 0) as usize
                     }
-                    BatchingMode::Continuous => pager
-                        .config()
-                        .blocks_for(r.remaining_prefill().min(sched.chunk_tokens)),
+                    BatchingMode::Continuous => {
+                        let chunk =
+                            (r.remaining_prefill() - mapped).min(sched.chunk_tokens);
+                        bf(mapped + chunk) - bf(mapped)
+                    }
                 };
                 if reserve + need > capacity {
                     if sched.mode == BatchingMode::Continuous {
@@ -498,7 +566,21 @@ where
                     .iter()
                     .position(|(q, _)| *q == qi)
                     .expect("every picked index was removed");
-                running.push(removed.swap_remove(pos).1);
+                let mut st = removed.swap_remove(pos).1;
+                if share_on && st.spec.prefix_tokens > 0 {
+                    // Bind to the template at admission: map the longest
+                    // registered prefix run (refcount bumps, zero free
+                    // blocks drawn). The mapped context is KV the request
+                    // never prefills. First arrival maps nothing but
+                    // records the template so its prefill publishes.
+                    st.ctx_ready = pager.map_prefix(
+                        st.spec.id,
+                        st.spec.prefix_group,
+                        st.spec.prefix_tokens,
+                        st.spec.prompt_len - 1,
+                    );
+                }
+                running.push(st);
             }
         }
         max_concurrency = max_concurrency.max(running.len());
@@ -526,8 +608,12 @@ where
                 } else {
                     r.ctx_ready + 1 // decode appends this step's token
                 };
-                let held = pager.config().blocks_for(pager.tokens_of(r.spec.id));
-                need += pager.config().blocks_for(new_ctx).saturating_sub(held);
+                // Blocks this grow would actually draw: new blocks past
+                // the request's current allocation (shared prefix blocks
+                // it maps count as held — they cost nothing again), plus
+                // the copy-on-write fork if this step writes a boundary
+                // block other sharers still reference.
+                need += pager.physical_need(r.spec.id, new_ctx);
             }
             if need <= pager.free_blocks() {
                 break plan;
@@ -540,8 +626,11 @@ where
                 return Err(SimError::KvExhausted);
             }
             let mut victim = running.pop().expect("len > 1");
-            if pager.tokens_of(victim.spec.id) > 0 {
-                pager.release(victim.spec.id).expect("victim held blocks");
+            if pager.holds(victim.spec.id) {
+                // Refcounted release: blocks the victim shares with other
+                // requests stay allocated for them — preempting a sharer
+                // never frees a peer's prefix (so this may free nothing).
+                pager.release(victim.spec.id).expect("victim held an allocation");
             }
             victim.ctx_ready = 0;
             victim.preemptions += 1;
@@ -657,6 +746,11 @@ where
         kv_leaked_blocks: pager.blocks_in_use(),
         kv_timeline,
         max_concurrency,
+        prefix_lookups: pager.prefix_lookups(),
+        prefix_hits: pager.prefix_hits(),
+        cow_forks: pager.cow_forks(),
+        peak_logical_kv_blocks: pager.peak_logical_blocks(),
+        kv_blocks_saved: pager.peak_blocks_saved(),
         completed,
     })
 }
@@ -1008,7 +1102,7 @@ mod tests {
         let spec = crate::models::GenerationSpec::new(prompt, gen);
         let direct = pl.predict_generation(&gpu, &cfg, 1, &spec, 1).unwrap();
 
-        let trace = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: prompt, gen_len: gen, priority: 0 }];
+        let trace = vec![RequestSpec { prompt_len: prompt, gen_len: gen, ..RequestSpec::default() }];
         let mut sim = ample_sim(&cfg);
         sim.scheduler.chunk_tokens = prompt; // whole prompt in one iteration
         let mut curve: Vec<f64> = Vec::new();
@@ -1089,6 +1183,7 @@ mod tests {
             pager: KvPagerConfig {
                 block_tokens: 16,
                 capacity_blocks: blocks_for_biggest * 5 / 2,
+                prefix_share: false,
             },
             streams: 1,
         };
@@ -1101,11 +1196,9 @@ mod tests {
         assert!(report.completed.iter().all(|m| m.e2e_s() > 0.0));
         // A request the pager can never hold is rejected up front.
         let giant = vec![RequestSpec {
-            id: 0,
-            arrival_s: 0.0,
             prompt_len: 16 * sim.pager.capacity_blocks + 1,
             gen_len: 1,
-            priority: 0,
+            ..RequestSpec::default()
         }];
         assert!(matches!(
             simulate(&cfg, &giant, &sim, &mut price),
@@ -1155,10 +1248,9 @@ mod tests {
         let trace: Vec<RequestSpec> = (0..12)
             .map(|id| RequestSpec {
                 id,
-                arrival_s: 0.0,
                 prompt_len: 64 + 32 * (id % 3),
                 gen_len: 8 + 4 * (id % 4),
-                priority: 0,
+                ..RequestSpec::default()
             })
             .collect();
         let pager = KvPagerConfig::for_model(&cfg, 80e9, 16);
@@ -1206,13 +1298,12 @@ mod tests {
         let cfg = zoo::gpt2_large();
         // One giant prompt ahead of many small ones, all queued at once,
         // concurrency 1: FCFS makes everyone eat the giant's prefill.
-        let mut trace = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 1024, gen_len: 2, priority: 0 }];
+        let mut trace = vec![RequestSpec { prompt_len: 1024, gen_len: 2, ..RequestSpec::default() }];
         trace.extend((1..7).map(|id| RequestSpec {
             id,
-            arrival_s: 0.0,
             prompt_len: 32,
             gen_len: 2,
-            priority: 0,
+            ..RequestSpec::default()
         }));
         let pager = KvPagerConfig::for_model(&cfg, 80e9, 16);
         let run = |admission: Admission| {
@@ -1250,8 +1341,8 @@ mod tests {
             streams: 1,
         };
         let pair = vec![
-            RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 1024, gen_len: 2, priority: 0 },
-            RequestSpec { id: 1, arrival_s: 0.0, prompt_len: 32, gen_len: 2, priority: 0 },
+            RequestSpec { prompt_len: 1024, gen_len: 2, ..RequestSpec::default() },
+            RequestSpec { id: 1, prompt_len: 32, gen_len: 2, ..RequestSpec::default() },
         ];
         let mut price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
         let r = simulate(&cfg, &pair, &cohort, &mut price).unwrap();
@@ -1275,25 +1366,25 @@ mod tests {
         let (gpu, pl) = quick_pl("t4", DType::F32); // no BF16 tables on T4
         let cfg = zoo::qwen3_0_6b(); // BF16 model
         let sim = ample_sim(&cfg);
-        let trace = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 16, gen_len: 2, priority: 0 }];
+        let trace = vec![RequestSpec { prompt_len: 16, gen_len: 2, ..RequestSpec::default() }];
         let mut price = |g: &ModelGraph| pl.predict_graph(&gpu, g, 1);
         assert_eq!(simulate(&cfg, &trace, &sim, &mut price), Err(SimError::Unsupported));
         assert_eq!(simulate(&cfg, &[], &sim, &mut price), Err(SimError::EmptyTrace));
         // Colliding ids would merge pager allocations — rejected up front.
         let dup = vec![
-            RequestSpec { id: 3, arrival_s: 0.0, prompt_len: 16, gen_len: 2, priority: 0 },
-            RequestSpec { id: 3, arrival_s: 0.1, prompt_len: 16, gen_len: 2, priority: 0 },
+            RequestSpec { id: 3, prompt_len: 16, gen_len: 2, ..RequestSpec::default() },
+            RequestSpec { id: 3, arrival_s: 0.1, prompt_len: 16, gen_len: 2, ..RequestSpec::default() },
         ];
         assert_eq!(
             simulate(&cfg, &dup, &sim, &mut price),
             Err(SimError::DuplicateRequestId(3))
         );
         // Promptless requests can never emit a first token — rejected.
-        let bare = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 0, gen_len: 1, priority: 0 }];
+        let bare = vec![RequestSpec { prompt_len: 0, gen_len: 1, ..RequestSpec::default() }];
         assert_eq!(simulate(&cfg, &bare, &sim, &mut price), Err(SimError::EmptyPrompt(0)));
         // Enc–dec models error instead of panicking in the graph builder.
         let t5 = crate::models::zoo::flan_t5_base();
-        let one = vec![RequestSpec { id: 0, arrival_s: 0.0, prompt_len: 16, gen_len: 1, priority: 0 }];
+        let one = vec![RequestSpec { prompt_len: 16, gen_len: 1, ..RequestSpec::default() }];
         assert_eq!(
             simulate(&t5, &one, &sim, &mut price),
             Err(SimError::EncDecUnsupported)

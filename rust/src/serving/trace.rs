@@ -34,6 +34,29 @@ pub struct RequestSpec {
     /// policy; doubles as the tenant id for `fair-share`. 0 (the default
     /// everywhere) keeps every policy equivalent to its classless form.
     pub priority: u8,
+    /// Prompt-template identity: requests sharing a `prefix_group` share
+    /// their first [`RequestSpec::prefix_tokens`] prompt tokens verbatim
+    /// (the trace-level stand-in for a content hash of the token
+    /// blocks). Only meaningful when `prefix_tokens > 0`.
+    pub prefix_group: u64,
+    /// How many leading prompt tokens are the shared template. 0 (the
+    /// default everywhere) means a fully private prompt, which keeps the
+    /// copy-on-write pager bit-for-bit equivalent to private paging.
+    pub prefix_tokens: usize,
+}
+
+impl Default for RequestSpec {
+    fn default() -> RequestSpec {
+        RequestSpec {
+            id: 0,
+            arrival_s: 0.0,
+            prompt_len: 1,
+            gen_len: 0,
+            priority: 0,
+            prefix_group: 0,
+            prefix_tokens: 0,
+        }
+    }
 }
 
 impl RequestSpec {
@@ -83,7 +106,7 @@ pub fn poisson_trace(
             // Exponential gap; 1 - u keeps ln's argument in (0, 1].
             t += -(1.0 - rng.uniform()).ln() / qps;
             let (prompt_len, gen_len) = sample_lens(&mut rng, mean_prompt, mean_gen);
-            RequestSpec { id, arrival_s: t, prompt_len, gen_len, priority: 0 }
+            RequestSpec { id, arrival_s: t, prompt_len, gen_len, ..RequestSpec::default() }
         })
         .collect()
 }
@@ -113,11 +136,60 @@ pub fn bursty_trace(
                 arrival_s: t,
                 prompt_len,
                 gen_len,
-                priority: 0,
+                ..RequestSpec::default()
             });
         }
     }
     out
+}
+
+/// Stamp a trace with shared prompt templates: every request keeps its
+/// shape but declares its first `min(prefix_tokens, prompt_len - 1)`
+/// prompt tokens shared with the other members of its group (`id %
+/// groups`, round-robin like [`with_priority_classes`]). The clamp
+/// leaves at least one private prompt token so every request still
+/// produces first-token logits from its own prefill. `prefix_tokens =
+/// 0` leaves the trace untouched.
+pub fn with_shared_prefix(
+    trace: &[RequestSpec],
+    prefix_tokens: usize,
+    groups: u64,
+) -> Vec<RequestSpec> {
+    let groups = groups.max(1);
+    trace
+        .iter()
+        .map(|r| RequestSpec {
+            prefix_group: r.id as u64 % groups,
+            prefix_tokens: prefix_tokens.min(r.prompt_len.saturating_sub(1)),
+            ..*r
+        })
+        .collect()
+}
+
+/// Poisson arrivals where every prompt is a shared `prefix_tokens`-token
+/// template (one of `groups` templates, round-robin) followed by a
+/// private log-uniform tail around `mean_private` tokens — the workload
+/// shape prefix caching exists for (system prompts, few-shot headers).
+/// Deterministic for a fixed seed, like [`poisson_trace`].
+pub fn shared_prefix_trace(
+    n: usize,
+    qps: f64,
+    prefix_tokens: usize,
+    mean_private: usize,
+    mean_gen: usize,
+    groups: u64,
+    seed: u64,
+) -> Vec<RequestSpec> {
+    let base = poisson_trace(n, qps, mean_private, mean_gen, seed);
+    let groups = groups.max(1);
+    base.iter()
+        .map(|r| RequestSpec {
+            prompt_len: prefix_tokens + r.prompt_len,
+            prefix_group: r.id as u64 % groups,
+            prefix_tokens,
+            ..*r
+        })
+        .collect()
 }
 
 /// Rescale a trace's arrival times to `factor`× the original rate
@@ -168,7 +240,35 @@ pub fn parse_trace(text: &str) -> Result<Vec<RequestSpec>> {
                 p as u8
             }
         };
-        out.push(RequestSpec { id, arrival_s, prompt_len, gen_len, priority });
+        // Shared-prefix fields are optional too — absent means private.
+        let opt_usize = |name: &str| -> Result<usize> {
+            match item.get(name) {
+                None => Ok(0),
+                Some(v) => {
+                    let v = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("trace[{id}]: non-numeric `{name}`"))?;
+                    if v < 0.0 {
+                        return Err(anyhow!("trace[{id}]: negative `{name}`"));
+                    }
+                    Ok(v as usize)
+                }
+            }
+        };
+        let prefix_group = opt_usize("prefix_group")? as u64;
+        let prefix_tokens = opt_usize("prefix_tokens")?;
+        if prefix_tokens >= prompt_len {
+            return Err(anyhow!("trace[{id}]: prefix_tokens must leave a private prompt token"));
+        }
+        out.push(RequestSpec {
+            id,
+            arrival_s,
+            prompt_len,
+            gen_len,
+            priority,
+            prefix_group,
+            prefix_tokens,
+        });
     }
     out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
     // Re-id in arrival order so downstream bookkeeping is positional.
@@ -189,6 +289,8 @@ pub fn to_json(trace: &[RequestSpec]) -> Json {
                     ("prompt_len", Json::from(r.prompt_len)),
                     ("gen_len", Json::from(r.gen_len)),
                     ("priority", Json::from(r.priority as usize)),
+                    ("prefix_group", Json::from(r.prefix_group as usize)),
+                    ("prefix_tokens", Json::from(r.prefix_tokens)),
                 ])
             })
             .collect(),
@@ -238,6 +340,30 @@ mod tests {
     }
 
     #[test]
+    fn shared_prefix_traces_stamp_templates() {
+        // Generator: prompt = template + private tail, groups round-robin.
+        let t = shared_prefix_trace(40, 4.0, 256, 64, 8, 3, 5);
+        assert!(t.iter().all(|r| r.prefix_tokens == 256 && r.prompt_len > 256));
+        assert!(t.iter().all(|r| r.prefix_group == r.id as u64 % 3));
+        // Arrivals and private shapes match the underlying Poisson draw.
+        let base = poisson_trace(40, 4.0, 64, 8, 5);
+        for (s, b) in t.iter().zip(&base) {
+            assert_eq!(s.arrival_s, b.arrival_s);
+            assert_eq!(s.prompt_len, 256 + b.prompt_len);
+            assert_eq!(s.gen_len, b.gen_len);
+        }
+        // Stamper: shapes untouched, prefix clamped below the prompt.
+        let stamped = with_shared_prefix(&base, 1024, 2);
+        for (s, b) in stamped.iter().zip(&base) {
+            assert_eq!((s.prompt_len, s.gen_len, s.arrival_s), (b.prompt_len, b.gen_len, b.arrival_s));
+            assert_eq!(s.prefix_tokens, 1024.min(b.prompt_len - 1));
+            assert!(s.prefix_tokens < s.prompt_len);
+        }
+        // Zero prefix is the identity.
+        assert_eq!(with_shared_prefix(&base, 0, 4)[0].prefix_tokens, 0);
+    }
+
+    #[test]
     fn scale_arrivals_rescales_times_only() {
         let base = poisson_trace(50, 1.0, 128, 16, 1);
         let fast = scale_arrivals(&base, 4.0);
@@ -274,6 +400,20 @@ mod tests {
         assert_eq!(parse_trace(legacy).unwrap()[0].priority, 0);
         assert!(parse_trace(
             r#"[{"arrival_s": 0.0, "prompt_len": 4, "gen_len": 1, "priority": 999}]"#
+        )
+        .is_err());
+        // Shared-prefix fields round-trip; absent ones default private.
+        let shared = shared_prefix_trace(8, 2.0, 32, 16, 4, 2, 11);
+        let back3 = parse_trace(&to_json(&shared).to_string()).unwrap();
+        assert!(back3
+            .iter()
+            .zip(&shared)
+            .all(|(a, b)| (a.prefix_group, a.prefix_tokens) == (b.prefix_group, b.prefix_tokens)));
+        assert_eq!(parse_trace(legacy).unwrap()[0].prefix_tokens, 0);
+        // A prefix consuming the whole prompt is rejected (no private
+        // token left to prefill).
+        assert!(parse_trace(
+            r#"[{"arrival_s": 0.0, "prompt_len": 4, "gen_len": 1, "prefix_tokens": 4}]"#
         )
         .is_err());
         // Malformed traces are rejected with a reason.
