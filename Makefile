@@ -15,20 +15,25 @@
 #                      (--tp 2: rank-graph rewrite + priced collectives).
 #   make serve-sim-prefix-smoke — the smoke with copy-on-write prefix
 #                      sharing on; fails if the prefix index never hits.
+#   make serve-sim-spec-smoke — the smoke under speculative decoding
+#                      (k=4, α=0.8, auto-draft); fails if no draft token
+#                      is ever accepted or tokens/s does not beat the
+#                      non-speculative baseline on the same trace.
 #   make bench-serving — the serving-capacity sweep on the fast setting.
 #   make bench-json  — the same sweep, writing the hot-path measurements
 #                      (iterations/s cold vs memoized, sweep wall-clock)
-#                      to BENCH_serving.json for CI trend lines.
+#                      to BENCH_serving.json for CI trend lines, then
+#                      appending the speculative k × α crossover lanes.
 
 PYTHON ?= python3
 
-.PHONY: artifacts ci lint doc fmt clippy build test bench-fast bench-serving bench-json serve-sim-smoke serve-sim-tp-smoke serve-sim-prefix-smoke
+.PHONY: artifacts ci lint doc fmt clippy build test bench-fast bench-serving bench-json serve-sim-smoke serve-sim-tp-smoke serve-sim-prefix-smoke serve-sim-spec-smoke
 
 # aot.py uses package-relative imports — must run as a module from python/.
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
 
-ci: lint doc test serve-sim-smoke serve-sim-tp-smoke serve-sim-prefix-smoke bench-json
+ci: lint doc test serve-sim-smoke serve-sim-tp-smoke serve-sim-prefix-smoke serve-sim-spec-smoke bench-json
 
 # Graceful no-toolchain path: some dev containers ship without cargo, and
 # lint is the one stage that may safely no-op there (skipping style checks
@@ -76,7 +81,8 @@ bench-serving:
 # graceful no-cargo skip as lint/doc.
 bench-json:
 	@if command -v cargo >/dev/null 2>&1; then \
-		PM2LAT_BENCH_FAST=1 PM2LAT_BENCH_JSON=BENCH_serving.json cargo bench --bench serving_capacity; \
+		PM2LAT_BENCH_FAST=1 PM2LAT_BENCH_JSON=BENCH_serving.json cargo bench --bench serving_capacity && \
+		PM2LAT_BENCH_FAST=1 PM2LAT_BENCH_JSON=BENCH_serving.json cargo bench --bench spec_decode; \
 	else \
 		echo "bench-json: cargo not found — skipping (toolchain-less container)"; \
 	fi
@@ -113,4 +119,17 @@ serve-sim-prefix-smoke:
 		cargo run --release --quiet -- serve-sim --prefix-share --smoke; \
 	else \
 		echo "serve-sim-prefix-smoke: cargo not found — skipping (toolchain-less container)"; \
+	fi
+
+# The smoke under speculative decoding: k=4 speculated tokens at a
+# uniform 0.8 acceptance, the draft defaulting to an auto-shrunk copy of
+# the target. Under --smoke the run itself errors if no draft token is
+# ever accepted (dead acceptance path) or if speculative tokens/s fails
+# to strictly beat the non-speculative replay of the same trace — so a
+# speculation path that silently stops paying fails CI.
+serve-sim-spec-smoke:
+	@if command -v cargo >/dev/null 2>&1; then \
+		cargo run --release --quiet -- serve-sim --spec-k 4 --accept 0.8 --smoke; \
+	else \
+		echo "serve-sim-spec-smoke: cargo not found — skipping (toolchain-less container)"; \
 	fi

@@ -1,0 +1,148 @@
+//! Bench: speculative-decoding throughput — the k × α × dtype sweep
+//! behind the crossover analysis. For each draft/target lane (gpt2-large
+//! F32 with its auto-draft, qwen3-4b Bf16 with the real qwen3-0.6b as
+//! draft), predict the expected decode tokens/s at every draft length k
+//! and uniform acceptance α, print the grid against the plain-decode
+//! baseline, and assert the subsystem's reason to exist: above the
+//! acceptance threshold (α ≥ 0.8 at k = 4) speculation must strictly
+//! beat non-speculative decode. `PM2LAT_BENCH_JSON=<path>` *appends* one
+//! JSON line per lane (NDJSON — `make bench-json` runs serving_capacity
+//! first, which writes the file, then this bench extends it).
+
+use std::io::Write as _;
+use std::time::Instant;
+
+use pm2lat::gpusim::Gpu;
+use pm2lat::models::transformer::GenerationSpec;
+use pm2lat::models::zoo;
+use pm2lat::ops::DType;
+use pm2lat::pm2lat::Pm2Lat;
+use pm2lat::profiler::ProfileSpec;
+use pm2lat::spec_decode::{auto_draft, AcceptanceModel, SpecConfig};
+use pm2lat::util::json::Json;
+
+const KS: [usize; 4] = [0, 2, 4, 8];
+const ALPHAS: [f64; 4] = [0.5, 0.7, 0.8, 0.9];
+
+fn main() {
+    let fast_mode = std::env::var("PM2LAT_BENCH_FAST").is_ok();
+    let profile = if fast_mode { ProfileSpec::quick() } else { ProfileSpec::experiment() };
+    let device = "a100";
+    let gen = if fast_mode {
+        GenerationSpec::new(64, 32)
+    } else {
+        GenerationSpec::new(128, 64)
+    };
+    let lanes = [
+        (zoo::gpt2_large(), auto_draft(&zoo::gpt2_large())),
+        (zoo::qwen3_4b(), zoo::qwen3_0_6b()),
+    ];
+
+    println!("\n=== speculative decoding: k × α crossover sweep ===");
+    let mut rows = Vec::new();
+    for (target, draft) in lanes {
+        let mut gpu = Gpu::by_name(device).expect("device in the zoo");
+        let mut dtypes = vec![target.dtype];
+        if draft.dtype != target.dtype {
+            dtypes.push(draft.dtype);
+        }
+        let pl = Pm2Lat::build_dtypes(&mut gpu, &profile, &dtypes, false);
+        gpu.reset();
+        let base = pl
+            .predict_generation(&gpu, &target, 1, &gen, 1)
+            .expect("lane models supported on a100")
+            .tokens_per_s();
+        println!(
+            "\n-- {} + draft {} ({}) on {device}: plain decode {base:.0} tok/s --",
+            target.name,
+            draft.name,
+            target.dtype.name()
+        );
+        print!("   {:>6}", "k\\α");
+        for a in ALPHAS {
+            print!(" {a:>10.2}");
+        }
+        println!();
+
+        let t0 = Instant::now();
+        let mut grid = Vec::new();
+        for k in KS {
+            print!("   {k:>6}");
+            for a in ALPHAS {
+                let spec = SpecConfig::new(
+                    draft.clone(),
+                    target.clone(),
+                    k,
+                    AcceptanceModel::uniform(a),
+                );
+                let tps = pl
+                    .predict_speculative(&gpu, &spec, 1, &gen, 1)
+                    .expect("lane models supported on a100")
+                    .tokens_per_s();
+                print!(" {:>9.2}x", tps / base);
+                grid.push((k, a, tps));
+            }
+            println!();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+
+        // The acceptance threshold: above it, speculation must pay.
+        for &(k, a, tps) in &grid {
+            if k == 4 && a >= 0.8 {
+                assert!(
+                    tps > base,
+                    "{}: k=4 α={a} must beat plain decode ({tps:.0} vs {base:.0} tok/s)",
+                    target.name
+                );
+            }
+        }
+        // And k = 0 is the baseline itself, at any α.
+        for &(k, _, tps) in &grid {
+            if k == 0 {
+                assert!(
+                    (tps / base - 1.0).abs() < 1e-9,
+                    "{}: k=0 must reproduce the baseline ({tps} vs {base})",
+                    target.name
+                );
+            }
+        }
+        let best = grid
+            .iter()
+            .filter(|&&(_, a, _)| a == 0.8)
+            .max_by(|x, y| x.2.total_cmp(&y.2))
+            .expect("grid has α=0.8 rows");
+        println!(
+            "   best at α=0.8: k={} → {:.2}x ({:.0} tok/s; {} points in {wall:.1}s wall)",
+            best.0,
+            best.2 / base,
+            best.2,
+            grid.len()
+        );
+        rows.push(Json::obj(vec![
+            ("lane", "spec-decode-crossover".into()),
+            ("target", target.name.into()),
+            ("draft", draft.name.into()),
+            ("dtype", target.dtype.name().into()),
+            ("device", device.into()),
+            ("prompt", gen.prompt_len.into()),
+            ("gen", gen.gen_len.into()),
+            ("baseline_tokens_per_s", base.into()),
+            ("best_k_at_080", best.0.into()),
+            ("best_speedup_at_080", (best.2 / base).into()),
+            ("sweep_points", grid.len().into()),
+            ("sweep_wall_s", wall.into()),
+        ]));
+    }
+
+    if let Ok(path) = std::env::var("PM2LAT_BENCH_JSON") {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .expect("open bench json for append");
+        for row in &rows {
+            writeln!(f, "{row}").expect("append bench json");
+        }
+        println!("\nappended {} lanes to {path}", rows.len());
+    }
+}

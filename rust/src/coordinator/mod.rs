@@ -50,7 +50,10 @@
 //! those, [`Coordinator::simulate_serving`] replays a whole request trace
 //! through the continuous-batching serving simulator
 //! ([`crate::serving`]), pricing every mixed prefill+decode iteration
-//! as one cached graph submission. The NAS preprocessing application
+//! as one cached graph submission — and
+//! [`Coordinator::submit_speculative`] does the same under speculative
+//! decoding, pricing a draft/target pair's rounds and verification
+//! windows through the identical cached path. The NAS preprocessing application
 //! (§IV-D2) and the model runner consume the service through these rather
 //! than driving raw `Pm2Lat`. `pm2lat serve-bench` and
 //! `benches/serve_throughput.rs` measure requests/sec against the serial
@@ -69,5 +72,5 @@ pub use service::{
     ab_phases, build_f32_service, build_service, mixed_workload, mixed_workload_dtyped,
     quick_neusight, timed_submit, to_batched, to_kind, AbReport, Coordinator, Engine,
     GenerationRequest, GraphRequest, PlacedGraphRequest, PredictorKind, Request,
-    ServingRequest, TraceRequest, DEFAULT_CACHE_CAPACITY,
+    ServingRequest, SpeculativeServingRequest, TraceRequest, DEFAULT_CACHE_CAPACITY,
 };

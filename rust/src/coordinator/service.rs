@@ -134,6 +134,28 @@ pub struct ServingRequest {
     pub iter_cache: bool,
 }
 
+/// A speculative-decoding serving request: replay `trace` under a
+/// draft/target pairing ([`crate::spec_decode::SpecConfig`]) — decode
+/// slots become `q = k + 1` verification windows, each iteration also
+/// prices the draft model's rounds through the same cached service path,
+/// and `seed` drives the per-(request, position) acceptance draws.
+/// `spec.k == 0` reproduces [`ServingRequest`]'s plain replay bit for
+/// bit.
+#[derive(Clone, Debug)]
+pub struct SpeculativeServingRequest {
+    pub device: String,
+    pub spec: crate::spec_decode::SpecConfig,
+    pub trace: Vec<crate::serving::RequestSpec>,
+    pub sim: crate::serving::ServingSimConfig,
+    pub kind: PredictorKind,
+    /// Iteration-price memo, as in [`ServingRequest::iter_cache`] —
+    /// draft and target iterations memoize under separate scopes, both
+    /// tagged with the speculation semantics.
+    pub iter_cache: bool,
+    /// Seed of the stochastic acceptance draws (deterministic replay).
+    pub seed: u64,
+}
+
 /// A request after device interning: (device id, tensor-parallel degree,
 /// kind, op). The degree rides into the cache key so per-placement
 /// predictions never alias; single-device paths pass `1`.
@@ -728,6 +750,60 @@ impl<'rt> Coordinator<'rt> {
         };
         crate::serving::simulate_hot(&req.config, &req.trace, &req.sim, &hp, &mut price)
             .map_err(|e| anyhow!("serving simulation: {e}"))
+    }
+
+    /// Speculative-decoding serving API: [`Coordinator::simulate_serving`]
+    /// with a resident draft model — every iteration prices the draft's
+    /// decode rounds and the target's verification windows through the
+    /// same cached graph path, and the seeded acceptance draws decide how
+    /// many tokens each sequence commits per round. Deterministic for a
+    /// fixed `req.seed`; with `spec.k == 0` the report is bit-for-bit the
+    /// plain [`Coordinator::simulate_serving`] replay.
+    pub fn submit_speculative(
+        &self,
+        req: &SpeculativeServingRequest,
+    ) -> Result<crate::serving::ServingReport> {
+        self.resolve_device(&req.device)?; // reject unknown devices early
+        let mut price = |g: &ModelGraph| -> Option<f64> {
+            self.submit_graphs(&[GraphRequest {
+                device: req.device.clone(),
+                graph: g.clone(),
+                kind: req.kind,
+                streams: req.sim.streams,
+            }])
+            .ok()?
+            .pop()?
+        };
+        let lane = match req.kind {
+            PredictorKind::Pm2Lat => 1,
+            PredictorKind::Pm2LatBatched => 2,
+            PredictorKind::NeuSight => 3,
+        };
+        let scope =
+            crate::serving::IterScope::new(&req.spec.target, &req.device, 1, req.sim.streams)
+                .with_lane(lane)
+                .with_pager(&req.sim.pager);
+        let draft_scope =
+            crate::serving::IterScope::new(&req.spec.draft, &req.device, 1, req.sim.streams)
+                .with_lane(lane)
+                .with_pager(&req.sim.pager);
+        let icache = crate::serving::IterCache::default_sized();
+        let hp = crate::serving::simulator::HotPath {
+            tp: 1,
+            scope,
+            cache: req.iter_cache.then_some(&icache),
+            passes: None,
+        };
+        crate::serving::simulate_speculative_hot(
+            &req.spec,
+            &req.trace,
+            &req.sim,
+            &hp,
+            draft_scope,
+            req.seed,
+            &mut price,
+        )
+        .map_err(|e| anyhow!("speculative serving simulation: {e}"))
     }
 
     /// Shared dispatch: scatter per-request answers, return the PJRT
@@ -1693,6 +1769,69 @@ mod tests {
         // Unknown devices are rejected before simulation starts.
         let bad = ServingRequest { device: "h100".into(), ..req };
         assert!(c.simulate_serving(&bad).is_err());
+    }
+
+    #[test]
+    fn submit_speculative_at_k0_matches_plain_serving_bit_for_bit() {
+        use crate::serving::{poisson_trace, KvPagerConfig, SchedulerConfig, ServingSimConfig};
+        use crate::spec_decode::{auto_draft, AcceptanceModel, SpecConfig};
+        let rt = Runtime::open_default().expect("make artifacts");
+        let c = coordinator(&rt);
+        let cfg = crate::models::zoo::gpt2_large();
+        let sim = ServingSimConfig {
+            scheduler: SchedulerConfig { max_batch: 4, chunk_tokens: 128, ..Default::default() },
+            pager: KvPagerConfig::for_models(&[&cfg, &auto_draft(&cfg)], 40e9, 16),
+            streams: 1,
+        };
+        let trace = poisson_trace(8, 40.0, 48, 6, 5);
+        let mk = |k: usize| SpeculativeServingRequest {
+            device: "a100".into(),
+            spec: SpecConfig::new(
+                auto_draft(&cfg),
+                cfg.clone(),
+                k,
+                AcceptanceModel::uniform(0.9),
+            ),
+            trace: trace.clone(),
+            sim,
+            kind: PredictorKind::Pm2Lat,
+            iter_cache: false,
+            seed: 7,
+        };
+        // k = 0 is *exactly* the plain replay: no draft pricing, plain
+        // decode slots, the same f64 bits in every metric.
+        let k0 = c.submit_speculative(&mk(0)).unwrap();
+        let plain = c
+            .simulate_serving(&ServingRequest {
+                device: "a100".into(),
+                config: cfg.clone(),
+                trace: trace.clone(),
+                sim,
+                kind: PredictorKind::Pm2Lat,
+                iter_cache: false,
+            })
+            .unwrap();
+        assert_eq!(k0.completed, plain.completed, "k=0 replay diverged");
+        assert_eq!(k0.makespan_s.to_bits(), plain.makespan_s.to_bits());
+        assert_eq!(k0.gpu_busy_s.to_bits(), plain.gpu_busy_s.to_bits());
+        assert_eq!(k0.iterations, plain.iterations);
+        assert_eq!((k0.spec_rounds, k0.spec_draft_tokens, k0.spec_accepted_tokens), (0, 0, 0));
+        assert_eq!(k0.spec_draft_busy_s, 0.0);
+        // Speculation proper: rounds run, tokens accept, nothing leaks,
+        // and the iteration memo changes nothing but the speed.
+        let sp = c.submit_speculative(&mk(4)).unwrap();
+        assert!(sp.spec_rounds > 0 && sp.spec_accepted_tokens > 0, "{}", sp.summary());
+        assert_eq!(sp.kv_leaked_blocks, 0);
+        let memo = c
+            .submit_speculative(&SpeculativeServingRequest { iter_cache: true, ..mk(4) })
+            .unwrap();
+        assert_eq!(memo.completed, sp.completed, "memo changed the speculative replay");
+        assert_eq!(memo.makespan_s.to_bits(), sp.makespan_s.to_bits());
+        assert_eq!(memo.spec_accepted_tokens, sp.spec_accepted_tokens);
+        // Unknown devices are rejected before simulation starts.
+        assert!(c
+            .submit_speculative(&SpeculativeServingRequest { device: "h100".into(), ..mk(4) })
+            .is_err());
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //!   ([`coordinator`], including whole-generation serving), the
 //!   continuous-batching serving simulator — paged KV cache, mixed
 //!   prefill+decode iterations, cluster-level SLO curves ([`serving`]) —
+//!   speculative decoding as a first-class workload ([`spec_decode`]),
 //!   and the two applications from §IV-D ([`apps`]).
 //!
 //! See `README.md` for the quickstart and CLI tour, and
@@ -39,6 +40,7 @@ pub mod pm2lat;
 pub mod profiler;
 pub mod runtime;
 pub mod serving;
+pub mod spec_decode;
 pub mod util;
 
 pub fn version() -> &'static str {

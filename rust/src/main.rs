@@ -18,7 +18,8 @@
 //!                [--admit fcfs|sjf|priority|fair-share] [--classes 4] \
 //!                [--max-batch 16] [--chunk 512] [--block-tokens 16] \
 //!                [--tp 2] [--sweep] [--slo-ttft-ms 500] [--service] [--smoke] \
-//!                [--no-iter-cache] [--cache-ttl-s 60] [--cache-mem-mb 256]
+//!                [--no-iter-cache] [--cache-ttl-s 60] [--cache-mem-mb 256] \
+//!                [--spec-k 4] [--accept 0.8] [--spec-draft qwen3-0.6b]
 //! ```
 
 use anyhow::{anyhow, Result};
@@ -40,6 +41,7 @@ use pm2lat::models::{runner, zoo};
 use pm2lat::ops::{DType, GemmOp, Op};
 use pm2lat::pm2lat::Pm2Lat;
 use pm2lat::profiler::ProfileSpec;
+use pm2lat::spec_decode::{self, AcceptanceModel, SpecConfig};
 use pm2lat::runtime::Runtime;
 use pm2lat::util::cli::Args;
 
@@ -346,6 +348,35 @@ fn serve_sim(args: &Args) -> Result<()> {
     if tp > 64 {
         return Err(anyhow!("--tp {tp} is past any modeled ring (max 64)"));
     }
+    // Speculative decoding: --spec-k speculated tokens per verification
+    // round (0 = off), --accept the uniform per-position acceptance
+    // probability, --spec-draft the draft model by zoo name. Without an
+    // explicit draft the target is shrunk into an auto-draft (quarter
+    // depth, half width) so `--spec-k 4 --smoke` works out of the box.
+    let spec_k = args.opt_usize("spec-k", 0);
+    let accept = args.opt_f64("accept", 0.7);
+    let spec = if spec_k > 0 || args.opt("spec-draft").is_some() {
+        let draft = match args.opt("spec-draft") {
+            Some(name) => zoo::by_name(name)
+                .ok_or_else(|| anyhow!("unknown --spec-draft model `{name}`"))?,
+            None => spec_decode::auto_draft(&cfg),
+        };
+        if draft.enc_layers > 0 {
+            return Err(anyhow!("--spec-draft must be decoder-only"));
+        }
+        if draft.vocab != cfg.vocab {
+            return Err(anyhow!(
+                "--spec-draft {} (vocab {}) must share {model}'s vocabulary ({})",
+                draft.name, draft.vocab, cfg.vocab
+            ));
+        }
+        Some(SpecConfig::new(draft, cfg.clone(), spec_k, AcceptanceModel::uniform(accept)))
+    } else {
+        None
+    };
+    if spec.is_some() && tp > 1 {
+        return Err(anyhow!("speculative serving is single-rank (drop --tp or --spec-k)"));
+    }
 
     // The request population: recorded JSON, or a synthetic unit-rate
     // trace. Parsed *before* the predictor build so input mistakes
@@ -412,26 +443,41 @@ fn serve_sim(args: &Args) -> Result<()> {
     let service = args.flag("service");
     let mut gpu = Gpu::by_name(&device).ok_or_else(|| anyhow!("unknown device"))?;
     let profile = if smoke { ProfileSpec::quick() } else { ProfileSpec::experiment() };
+    // Every dtype the run prices: the target's, plus the draft's when it
+    // differs (a named draft may run narrower arithmetic).
+    let mut dtypes = vec![cfg.dtype];
+    if let Some(s) = &spec {
+        if s.draft.dtype != cfg.dtype {
+            dtypes.push(s.draft.dtype);
+        }
+    }
     // The direct-path predictor; with --service the coordinator builds
     // its own fitted state, so skip the (expensive) collection here.
     let pl = if service {
         None
     } else {
-        Some(Pm2Lat::build_dtypes(&mut gpu, &profile, &[cfg.dtype], false))
+        Some(Pm2Lat::build_dtypes(&mut gpu, &profile, &dtypes, false))
     };
     gpu.reset();
 
-    // Pager: device HBM minus the resident model, or an explicit budget.
+    // Pager: device HBM minus *every* resident model — under speculation
+    // the draft's weights and its KV cache live on the same card, so both
+    // carve out of the block budget — or an explicit byte budget.
+    let resident: Vec<&pm2lat::models::TransformerConfig> = match &spec {
+        Some(s) => vec![&s.target, &s.draft],
+        None => vec![&cfg],
+    };
     let kv_gb = args.opt_f64("kv-gb", 0.0);
     let pager = if kv_gb > 0.0 {
+        let bytes_per_block: f64 =
+            resident.iter().map(|c| c.kv_cache_bytes(1, block_tokens)).sum();
         KvPagerConfig {
             block_tokens,
-            capacity_blocks: ((kv_gb * 1e9 / cfg.kv_cache_bytes(1, block_tokens)) as usize)
-                .max(1),
+            capacity_blocks: ((kv_gb * 1e9 / bytes_per_block) as usize).max(1),
             prefix_share,
         }
     } else {
-        KvPagerConfig::for_model(&cfg, gpu.spec.mem_bytes(), block_tokens)
+        KvPagerConfig::for_models(&resident, gpu.spec.mem_bytes(), block_tokens)
             .with_prefix_share(prefix_share)
     };
     let sim = ServingSimConfig {
@@ -457,7 +503,7 @@ fn serve_sim(args: &Args) -> Result<()> {
                 pm2lat::util::pool::default_threads(),
                 1 << 17,
                 &[device.as_str()],
-                &[cfg.dtype],
+                &dtypes,
             )?;
             if ttl_s > 0.0 || mem_mb > 0 {
                 let mut cc = CacheConfig::entries(1 << 17);
@@ -561,12 +607,71 @@ fn serve_sim(args: &Args) -> Result<()> {
              {prefix_groups} group(s)"
         );
     }
+    if let Some(s) = &spec {
+        println!(
+            "  speculation        : draft {} ({} layers, {:.2} GB) | k = {} | \
+             α = {accept:.2} → E[tokens/round] {:.2}",
+            s.draft.name,
+            s.draft.layers,
+            s.draft.weight_bytes() / 1e9,
+            s.k,
+            s.expected_tokens_per_round(),
+        );
+    }
     println!("  solo request       : TTFT {:.2} ms, E2E {:.2} ms", solo_ttft * 1e3, solo_e2e * 1e3);
-    let report = serving::simulate_hot(&cfg, &trace, &sim, &hp, &mut base_price)
-        .map_err(|e| anyhow!("serve-sim: {e}"))?;
+    let report = match &spec {
+        Some(s) => {
+            // Draft iterations memoize under their own model scope; both
+            // scopes pick up the speculation tag inside the simulator.
+            let draft_scope = serving::IterScope::new(&s.draft, &device, tp, streams)
+                .with_lane(if service { 2 } else { 0 })
+                .with_pager(&sim.pager);
+            serving::simulate_speculative_hot(s, &trace, &sim, &hp, draft_scope, seed, &mut base_price)
+        }
+        None => serving::simulate_hot(&cfg, &trace, &sim, &hp, &mut base_price),
+    }
+    .map_err(|e| anyhow!("serve-sim: {e}"))?;
     println!("  {}", report.summary());
     if report.kv_leaked_blocks != 0 {
         return Err(anyhow!("KV pager leaked {} blocks", report.kv_leaked_blocks));
+    }
+    if let Some(s) = &spec {
+        // The non-speculative baseline replays the *same* trace through
+        // the same schedule and pager, so the comparison isolates the
+        // draft/verify tradeoff. In smoke mode this is the CI gate:
+        // speculation that never accepts a token, or that prices slower
+        // than plain decode, fails the run.
+        let base = serving::simulate_hot(&cfg, &trace, &sim, &hp, &mut base_price)
+            .map_err(|e| anyhow!("serve-sim baseline: {e}"))?;
+        println!(
+            "  speculation        : {} rounds | {:.2} accepted/round (α̂ {:.0}%) | \
+             draft {:.0}% of GPU busy",
+            report.spec_rounds,
+            report.spec_accepted_per_round(),
+            report.spec_acceptance_rate() * 100.0,
+            report.spec_draft_time_share() * 100.0,
+        );
+        println!(
+            "  vs plain decode    : {:.0} tok/s speculative vs {:.0} tok/s baseline ({:+.1}%)",
+            report.output_tokens_per_s(),
+            base.output_tokens_per_s(),
+            (report.output_tokens_per_s() / base.output_tokens_per_s() - 1.0) * 100.0,
+        );
+        if smoke && s.k > 0 {
+            if report.spec_accepted_tokens == 0 {
+                return Err(anyhow!(
+                    "speculation enabled but no draft token was ever accepted"
+                ));
+            }
+            if report.output_tokens_per_s() <= base.output_tokens_per_s() {
+                return Err(anyhow!(
+                    "speculative decode ({:.1} tok/s) did not beat the non-speculative \
+                     baseline ({:.1} tok/s)",
+                    report.output_tokens_per_s(),
+                    base.output_tokens_per_s()
+                ));
+            }
+        }
     }
     if prefix_share {
         println!(

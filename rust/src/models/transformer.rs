@@ -365,6 +365,30 @@ impl TransformerConfig {
         self.decode_graph(batch, kv_len).lower()
     }
 
+    /// One speculative-decoding *verification* iteration: the target
+    /// model scores `k` draft tokens plus its own next-token position in
+    /// a single pass — `q_len = k + 1` new queries against a KV cache of
+    /// `kv_len` entries (`kv_len` counts the speculated window, whose
+    /// K/V rows this pass appends). Attention over the window is
+    /// *rectangular causal* — exactly the chunked-prefill slot shape the
+    /// existing `q_len`/`kv_len` machinery and `CausalMaskPropagation`
+    /// already price, which makes this a graph builder, not an ops
+    /// change. `k = 0` (no speculation: score one token against the
+    /// cache) emits node-for-node the graph of
+    /// [`TransformerConfig::decode_graph`] — the degenerate anchor
+    /// `tests/spec_decode.rs` pins bit for bit.
+    pub fn verify_graph(&self, batch: usize, kv_len: usize, k: usize) -> ModelGraph {
+        assert_eq!(self.enc_layers, 0, "speculative verification is decoder-only");
+        assert!(kv_len >= k + 1, "kv window must cover the speculated tokens");
+        let mut g = ModelGraph::new();
+        let mut cur: Option<NodeId> = None;
+        for _ in 0..self.layers {
+            cur = Some(self.block_graph(batch, k + 1, kv_len, true, &mut g, cur));
+        }
+        self.head_graph(batch, k + 1, &mut g, cur);
+        g
+    }
+
     /// One tensor-parallel rank's prefill graph: [`TransformerConfig::graph`]
     /// rewritten by [`crate::graph::TensorParallelPass`] — sharded GEMMs
     /// plus the AllReduces that stitch the ranks together. `tp <= 1`

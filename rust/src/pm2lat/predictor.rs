@@ -239,6 +239,121 @@ impl Pm2Lat {
         Some(GenerationPrediction { prefill_s, step_s })
     }
 
+    /// Expected latency curve of a speculative-decoding generation: the
+    /// target's prefill, the draft's prompt ingestion, then one
+    /// [`crate::spec_decode::SpecRound`] per expected verification round
+    /// — `k` draft decode steps plus one `q = k + 1` target verification
+    /// pass ([`TransformerConfig::verify_graph`]), each round committing
+    /// `E[τ] + 1` tokens in expectation (the closed form of
+    /// [`crate::spec_decode::AcceptanceModel`], clamped at the tail).
+    /// The committed context is integerized round to round, so KV
+    /// windows stay real graph shapes. With `k = 0` the curve *is* plain
+    /// decode bit for bit: no draft graphs run, every verification pass
+    /// is node-identical to the matching
+    /// [`TransformerConfig::decode_graph`], and the rounds reproduce
+    /// [`Pm2Lat::predict_generation`]'s `step_s` exactly — the
+    /// degenerate anchor in `tests/spec_decode.rs`. Note the draft's
+    /// re-ingestion of tokens it did not itself propose (the corrected
+    /// token per round) is not modeled, the standard simplification in
+    /// speculative-decoding cost analyses. `None` when any op of either
+    /// model is unsupported on the device.
+    pub fn predict_speculative(
+        &self,
+        gpu: &Gpu,
+        spec: &crate::spec_decode::SpecConfig,
+        batch: usize,
+        gen: &GenerationSpec,
+        streams: usize,
+    ) -> Option<crate::spec_decode::SpeculativePrediction> {
+        use crate::spec_decode::{SpecRound, SpeculativePrediction};
+        let k = spec.k;
+        let prefill_s =
+            self.predict_graph(gpu, &spec.target.graph(batch, gen.prompt_len), streams)?;
+        let draft_prefill_s = if k > 0 {
+            self.predict_graph(gpu, &spec.draft.graph(batch, gen.prompt_len), streams)?
+        } else {
+            0.0
+        };
+        // E[tokens/round] ≥ 1 always — the verification pass's own token
+        // guarantees progress, so the loop terminates in ≤ gen_len rounds.
+        let m = spec.acceptance.expected_tokens_per_round(k);
+        let mut rounds = Vec::new();
+        let mut produced = 0.0f64;
+        while produced + 1e-9 < gen.gen_len as f64 {
+            let committed = gen.prompt_len + produced.round() as usize;
+            let tokens = m.min(gen.gen_len as f64 - produced);
+            let mut draft_s = 0.0;
+            for j in 0..k {
+                let g = spec.draft.decode_graph(batch, committed + j + 1);
+                draft_s += self.predict_graph(gpu, &g, streams)?;
+            }
+            let kv_len = committed + k + 1;
+            let verify_s =
+                self.predict_graph(gpu, &spec.target.verify_graph(batch, kv_len, k), streams)?;
+            rounds.push(SpecRound { kv_len, draft_s, verify_s, tokens });
+            produced += tokens;
+        }
+        Some(SpeculativePrediction { prefill_s, draft_prefill_s, gen_len: gen.gen_len, k, rounds })
+    }
+
+    /// Throughput-vs-acceptance curve at fixed `k`: expected decode
+    /// tokens/s of [`Pm2Lat::predict_speculative`] for each uniform α in
+    /// `alphas` — how good the draft has to be before speculation pays.
+    pub fn speculative_alpha_curve(
+        &self,
+        gpu: &Gpu,
+        spec: &crate::spec_decode::SpecConfig,
+        batch: usize,
+        gen: &GenerationSpec,
+        streams: usize,
+        alphas: &[f64],
+    ) -> Option<Vec<(f64, f64)>> {
+        let mut curve = Vec::with_capacity(alphas.len());
+        for &a in alphas {
+            let mut s = spec.clone();
+            s.acceptance = crate::spec_decode::AcceptanceModel::uniform(a);
+            let p = self.predict_speculative(gpu, &s, batch, gen, streams)?;
+            curve.push((a, p.tokens_per_s()));
+        }
+        Some(curve)
+    }
+
+    /// Crossover-k analysis: expected decode throughput at each draft
+    /// length in `ks` against the plain-decode baseline
+    /// ([`Pm2Lat::predict_generation`] of the target over the same
+    /// generation). Returns the per-k
+    /// [`crate::spec_decode::CrossoverPoint`] rows plus the argmax k; a
+    /// speedup < 1 everywhere
+    /// means this draft/acceptance pairing never pays on this device.
+    pub fn speculative_crossover(
+        &self,
+        gpu: &Gpu,
+        spec: &crate::spec_decode::SpecConfig,
+        batch: usize,
+        gen: &GenerationSpec,
+        streams: usize,
+        ks: &[usize],
+    ) -> Option<(Vec<crate::spec_decode::CrossoverPoint>, usize)> {
+        let base =
+            self.predict_generation(gpu, &spec.target, batch, gen, streams)?.tokens_per_s();
+        let mut points = Vec::with_capacity(ks.len());
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for &k in ks {
+            let mut s = spec.clone();
+            s.k = k;
+            let tps = self.predict_speculative(gpu, &s, batch, gen, streams)?.tokens_per_s();
+            if tps > best.1 {
+                best = (k, tps);
+            }
+            points.push(crate::spec_decode::CrossoverPoint {
+                k,
+                tokens_per_s: tps,
+                speedup: if base > 0.0 { tps / base } else { 0.0 },
+            });
+        }
+        Some((points, best.0))
+    }
+
     /// Per-prediction cost is the headline of §IV-D2 — expose a cheap
     /// query used by the speed benchmarks: number of fitted tables.
     pub fn n_tables(&self) -> usize {

@@ -79,6 +79,16 @@ pub struct IterScope {
     /// sharing on/off would cross-pollinate its lanes. 0 for callers
     /// outside a pager's reach.
     pub pager: u64,
+    /// Stable hash of the speculative-decoding semantics (draft model
+    /// shape, draft length k, acceptance model) the replay runs under —
+    /// see [`crate::spec_decode::SpecConfig::scope_tag`]. Speculation
+    /// changes which slot batches a replay produces (verification
+    /// windows, draft decode rounds) and which model a batch is priced
+    /// for, so memo entries must never mix across k/acceptance
+    /// configurations. Deliberately excludes the stochastic seed: prices
+    /// are seed-independent, so sweeps across seeds share entries. 0 for
+    /// non-speculative replays.
+    pub spec: u64,
 }
 
 impl IterScope {
@@ -110,6 +120,7 @@ impl IterScope {
             tp: tp as u16,
             streams: streams as u16,
             pager: 0,
+            spec: 0,
         }
     }
 
@@ -131,6 +142,14 @@ impl IterScope {
         self
     }
 
+    /// Same scope under specific speculative-decoding semantics, so a
+    /// speculative replay can never share memo entries with the plain
+    /// path (or with a different k/acceptance) in a shared cache.
+    pub fn with_spec(mut self, spec: &crate::spec_decode::SpecConfig) -> IterScope {
+        self.spec = spec.scope_tag();
+        self
+    }
+
     /// The 64-bit tag folded into every key under this scope.
     pub fn tag(&self) -> u64 {
         StableHasher::hash_of(&(
@@ -140,6 +159,7 @@ impl IterScope {
             self.tp,
             self.streams,
             self.pager,
+            self.spec,
         ))
     }
 }
@@ -426,6 +446,12 @@ mod tests {
             capacity_blocks: 100,
             prefix_share: false,
         };
+        let spec = crate::spec_decode::SpecConfig::new(
+            crate::spec_decode::auto_draft(&cfg),
+            cfg.clone(),
+            4,
+            crate::spec_decode::AcceptanceModel::uniform(0.8),
+        );
         let variants = [
             IterScope::new(&cfg, "l4", 1, 1),
             IterScope::new(&cfg, "a100", 2, 1),
@@ -435,11 +461,19 @@ mod tests {
             base.with_pager(&pc),
             base.with_pager(&pc.with_prefix_share(true)),
             base.with_pager(&crate::serving::KvPagerConfig { block_tokens: 32, ..pc }),
+            base.with_spec(&spec),
         ];
         let k0 = IterationKey::new(base, &batch);
         for v in variants {
             assert_ne!(k0, IterationKey::new(v, &batch), "scope {v:?} must not alias");
         }
+        // k and acceptance both separate speculative scopes.
+        let mut spec_k5 = spec.clone();
+        spec_k5.k = 5;
+        assert_ne!(
+            IterationKey::new(base.with_spec(&spec), &batch),
+            IterationKey::new(base.with_spec(&spec_k5), &batch),
+        );
         // Sharing on vs off under otherwise-identical pagers must also
         // differ from *each other* — the cross-config leak the tag fixes.
         assert_ne!(

@@ -46,7 +46,10 @@
 //! * the free list holds exactly the zero-ref blocks, each once (no
 //!   double-free, no orphans);
 //! * every registered block is live and the index ↔ per-block tags are
-//!   a bijection.
+//!   a bijection;
+//! * a block registered as template slice `i` sits at context position
+//!   `i` of every holder (speculative rollbacks via [`KvPager::truncate`]
+//!   drop strictly from the tail and can never reorder a prefix).
 
 use std::collections::HashMap;
 
@@ -76,11 +79,28 @@ impl KvPagerConfig {
         hbm_bytes: f64,
         block_tokens: usize,
     ) -> KvPagerConfig {
+        KvPagerConfig::for_models(&[cfg], hbm_bytes, block_tokens)
+    }
+
+    /// Size a pager for several models resident on one device at once —
+    /// a speculative draft/target pair keeps *both* weight sets and both
+    /// KV caches in HBM, so every model's weights come off the budget
+    /// and one logical block carries `block_tokens` context entries in
+    /// every resident cache. Sizing for the target alone would
+    /// over-promise HBM the moment a draft moves in.
+    /// [`KvPagerConfig::for_model`] is exactly `for_models(&[cfg], ..)`.
+    pub fn for_models(
+        cfgs: &[&crate::models::TransformerConfig],
+        hbm_bytes: f64,
+        block_tokens: usize,
+    ) -> KvPagerConfig {
+        assert!(!cfgs.is_empty(), "for_models needs at least one resident model");
         let block_tokens = block_tokens.max(1);
-        let bytes_per_block = cfg.kv_cache_bytes(1, block_tokens);
+        let bytes_per_block: f64 = cfgs.iter().map(|c| c.kv_cache_bytes(1, block_tokens)).sum();
         // Weights + CUDA context + a workspace reserve proportional to a
         // healthy batch of activations.
-        let reserved = cfg.weight_bytes() + 0.7e9 + 0.05 * hbm_bytes;
+        let reserved =
+            cfgs.iter().map(|c| c.weight_bytes()).sum::<f64>() + 0.7e9 + 0.05 * hbm_bytes;
         let budget = (hbm_bytes - reserved).max(0.0);
         KvPagerConfig {
             block_tokens,
@@ -485,6 +505,44 @@ impl KvPager {
         Ok(drawn)
     }
 
+    /// Shrink request `id`'s context back to `tokens` entries, dropping
+    /// blocks past the new boundary — the speculative-decoding rollback:
+    /// a verification pass that rejects draft tokens must discard their
+    /// KV entries, so the serving loop grows a slot to the full
+    /// speculated window and truncates back to what was accepted. A
+    /// no-op when `tokens` already covers the context (the `k = 0` /
+    /// all-accepted path), which keeps plain-decode replays bit-for-bit
+    /// untouched. Dropped blocks follow [`KvPager::release`]'s per-block
+    /// rule — refcount decrement, free only at zero — so a rollback can
+    /// never free a prefix block a peer still maps, and a registration
+    /// retires only when its last holder lets go. Returns the physical
+    /// blocks actually freed.
+    pub fn truncate(&mut self, id: usize, tokens: usize) -> Result<usize, PagerError> {
+        let a = self.allocs.get_mut(&id).ok_or(PagerError::UnknownRequest(id))?;
+        if tokens >= a.tokens {
+            return Ok(0);
+        }
+        let keep = self.config.blocks_for(tokens);
+        let dropped: Vec<usize> = a.blocks.drain(keep..).collect();
+        a.tokens = tokens;
+        self.logical -= dropped.len();
+        let mut freed = 0usize;
+        for b in dropped {
+            debug_assert!(self.refs[b] > 0, "double-free of block {b}");
+            self.refs[b] -= 1;
+            if self.refs[b] == 0 {
+                if let Some(key) = self.registered[b].take() {
+                    self.prefix_index.remove(&key);
+                }
+                self.free_list.push(b);
+                freed += 1;
+            }
+        }
+        self.note_peaks();
+        debug_assert!(self.audit());
+        Ok(freed)
+    }
+
     /// Drop every block reference request `id` holds (completion, or
     /// preemption with recompute). Blocks return to the free list only
     /// at refcount zero — a sharer's release never frees blocks its
@@ -553,6 +611,21 @@ impl KvPager {
         let live = counted.iter().filter(|&&c| c > 0).count();
         if live + self.free_list.len() != cap {
             return false;
+        }
+        // Positional registration: a block registered as template slice
+        // `i` may only ever sit at context position `i` of its holders —
+        // blocks are appended by `grow`, replaced in place by the COW
+        // fork and dropped strictly from the tail by `truncate`, so a
+        // rollback that disturbed block order (front drain, swap-remove)
+        // is caught here.
+        for a in self.allocs.values() {
+            for (i, &b) in a.blocks.iter().enumerate() {
+                if let Some((_, _, slice)) = self.registered[b] {
+                    if slice != i {
+                        return false;
+                    }
+                }
+            }
         }
         // Registration bijection over live blocks.
         if self.prefix_index.len() != self.registered.iter().flatten().count() {
@@ -723,6 +796,85 @@ mod tests {
         assert_eq!(on.logical_blocks(), on.blocks_in_use());
         assert_eq!((on.prefix_lookups(), on.cow_forks()), (0, 0));
         assert!(on.audit() && off.audit());
+    }
+
+    #[test]
+    fn truncate_rolls_back_tail_blocks_and_nops_at_the_boundary() {
+        let mut p = pager(16, 10);
+        assert!(p.truncate(99, 10).is_err(), "unknown request");
+        p.grow(1, 40).unwrap(); // 3 blocks
+        assert_eq!(p.truncate(1, 40).unwrap(), 0, "no-op at the context");
+        assert_eq!(p.truncate(1, 64).unwrap(), 0, "growing targets are ignored");
+        assert_eq!(p.tokens_of(1), 40);
+        // Roll back to 17 tokens: ceil(17/16) = 2 blocks, one frees.
+        assert_eq!(p.truncate(1, 17).unwrap(), 1);
+        assert_eq!(p.tokens_of(1), 17);
+        assert_eq!((p.blocks_in_use(), p.logical_blocks()), (2, 2));
+        assert!(p.audit());
+        // Truncate to zero keeps the (empty) allocation live.
+        assert_eq!(p.truncate(1, 0).unwrap(), 2);
+        assert!(p.holds(1));
+        assert!(p.blocks_of(1).unwrap().is_empty());
+        assert!(p.audit());
+        // The speculative window pattern: grow to ctx + k + 1, verify,
+        // truncate back to the committed context.
+        p.grow(3, 14).unwrap();
+        let free_before = p.free_blocks();
+        p.grow(3, 14 + 5).unwrap(); // speculate k + 1 = 5 tokens
+        p.truncate(3, 15).unwrap(); // verification accepted one
+        assert_eq!(p.tokens_of(3), 15);
+        assert_eq!(p.free_blocks(), free_before, "rejected KV rolled back");
+        assert!(p.audit());
+    }
+
+    #[test]
+    fn truncate_never_frees_a_shared_prefix_block() {
+        let mut p = sharing(16, 10);
+        p.map_prefix(1, 9, 32, 100);
+        p.grow(1, 40).unwrap(); // 3 blocks, the first two registered
+        assert_eq!(p.map_prefix(2, 9, 32, 100), 32);
+        assert_eq!(p.grow(2, 37).unwrap(), 1); // private tail past the prefix
+        let publisher = p.blocks_of(1).unwrap().to_vec();
+        // The sharer rolls back into the shared span: its private tail
+        // frees, the shared block's refcount drops without freeing or
+        // unregistering it.
+        assert_eq!(p.truncate(2, 10).unwrap(), 1);
+        assert_eq!(p.blocks_in_use(), 3, "publisher still holds all three");
+        assert_eq!(p.prefix_hit_tokens(9, 32, 100), 32, "registrations survive");
+        assert_eq!(p.blocks_of(1).unwrap(), &publisher[..]);
+        assert!(p.audit());
+        // The publisher rolls back too: now the last holder of block 1 —
+        // it frees and its registration retires.
+        assert_eq!(p.truncate(1, 16).unwrap(), 2);
+        assert_eq!(p.prefix_hit_tokens(9, 32, 100), 16, "only block 0 remains");
+        assert!(p.audit());
+    }
+
+    #[test]
+    fn for_models_carves_out_every_resident_model() {
+        let target = crate::models::zoo::gpt2_large();
+        let draft = crate::spec_decode::auto_draft(&target);
+        let a100 = crate::gpusim::device_by_name("a100").unwrap();
+        let solo = KvPagerConfig::for_model(&target, a100.mem_bytes(), 16);
+        let pair = KvPagerConfig::for_models(&[&target, &draft], a100.mem_bytes(), 16);
+        assert!(
+            pair.capacity_blocks < solo.capacity_blocks,
+            "draft weights + draft KV shrink the block budget"
+        );
+        // for_model is exactly the one-model case.
+        assert_eq!(KvPagerConfig::for_models(&[&target], a100.mem_bytes(), 16), solo);
+        // Byte accounting: both caches together stay inside the
+        // post-reserve budget and fill most of it.
+        let budget = a100.mem_bytes()
+            - target.weight_bytes()
+            - draft.weight_bytes()
+            - 0.7e9
+            - 0.05 * a100.mem_bytes();
+        let used = target.kv_cache_bytes(1, pair.capacity_tokens())
+            + draft.kv_cache_bytes(1, pair.capacity_tokens());
+        assert!(used <= budget);
+        let per_block = target.kv_cache_bytes(1, 16) + draft.kv_cache_bytes(1, 16);
+        assert!(used > budget - per_block, "off by < 1 block");
     }
 
     #[test]

@@ -45,7 +45,12 @@
 //!   [`simulator::max_qps_under_slo_parallel`] fan independent rate
 //!   points across the scoped worker pool for `Sync` (analytical)
 //!   pricing — PJRT-backed pricing stays on the calling thread via the
-//!   serial entry points.
+//!   serial entry points. [`simulator::simulate_speculative`] (and its
+//!   hot-path twin) replays the trace under speculative decoding: decode
+//!   slots become `q = k + 1` verification windows, each iteration also
+//!   prices the draft model's rounds, seeded acceptance draws decide the
+//!   tokens committed, and rejected speculated KV rolls back through
+//!   [`kv_pager::KvPager::truncate`].
 //!
 //! Consumed by `Coordinator::simulate_serving` (the cached service
 //! path), the `pm2lat serve-sim` CLI, and `benches/serving_capacity.rs`.
@@ -67,8 +72,8 @@ pub use policy::{Admission, BatchingMode, SchedulerConfig};
 pub use simulator::{
     max_qps_under_slo, max_qps_under_slo_hot, max_qps_under_slo_parallel, qps_sweep,
     qps_sweep_hot, qps_sweep_parallel, qps_sweep_placed, simulate, simulate_hot,
-    simulate_placed, CapacityPoint, HotPath, RequestMetrics, ServingReport, ServingSimConfig,
-    SimError,
+    simulate_placed, simulate_speculative, simulate_speculative_hot, CapacityPoint, HotPath,
+    RequestMetrics, ServingReport, ServingSimConfig, SimError,
 };
 pub use trace::{
     bursty_trace, parse_trace, poisson_trace, scale_arrivals, shared_prefix_trace, to_json,

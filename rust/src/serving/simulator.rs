@@ -22,6 +22,8 @@
 
 use crate::graph::{ModelGraph, Pass, PassCtx, PassResultCache, TensorParallelPass};
 use crate::models::{SeqSlot, TransformerConfig};
+use crate::spec_decode::{AcceptanceModel, SpecConfig};
+use crate::util::prng::{Rng, StableHasher};
 use crate::util::{pool, stats};
 
 use super::iter_cache::{canonical_slots, IterCache, IterScope, IterationKey};
@@ -126,6 +128,18 @@ pub struct ServingReport {
     /// Largest instantaneous `logical − physical` gap: the KV blocks
     /// prefix sharing saved when it saved the most.
     pub kv_blocks_saved: usize,
+    /// Speculative verification rounds executed (0 unless the replay ran
+    /// with a draft model and `k > 0`).
+    pub spec_rounds: usize,
+    /// Draft tokens proposed across all rounds (`k` per round).
+    pub spec_draft_tokens: usize,
+    /// Draft tokens the verification passes accepted (the raw leading
+    /// run τ per round, before the generation-tail cap — so
+    /// `spec_accepted_tokens / spec_draft_tokens` estimates α faithfully).
+    pub spec_accepted_tokens: usize,
+    /// Σ draft-model iteration latencies — the share of `gpu_busy_s`
+    /// spent drafting rather than verifying.
+    pub spec_draft_busy_s: f64,
 }
 
 impl ServingReport {
@@ -193,6 +207,35 @@ impl ServingReport {
         }
     }
 
+    /// Fraction of proposed draft tokens the verifications accepted — the
+    /// empirical α̂ of the replay (0 when no speculation ran).
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.spec_draft_tokens > 0 {
+            self.spec_accepted_tokens as f64 / self.spec_draft_tokens as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean accepted draft tokens per verification round — the empirical
+    /// E[τ] (each round also commits one verification token on top).
+    pub fn spec_accepted_per_round(&self) -> f64 {
+        if self.spec_rounds > 0 {
+            self.spec_accepted_tokens as f64 / self.spec_rounds as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Share of GPU-busy time spent running the draft model.
+    pub fn spec_draft_time_share(&self) -> f64 {
+        if self.gpu_busy_s > 0.0 {
+            self.spec_draft_busy_s / self.gpu_busy_s
+        } else {
+            0.0
+        }
+    }
+
     /// One-paragraph operator summary (the `serve-sim` output body).
     pub fn summary(&self) -> String {
         let mut s = format!(
@@ -225,6 +268,16 @@ impl ServingReport {
                 self.kv_blocks_saved,
                 self.cow_forks,
                 self.effective_kv_occupancy() * 100.0,
+            ));
+        }
+        if self.spec_rounds > 0 {
+            s.push_str(&format!(
+                " | spec {} rounds, {:.2} accepted/round (α̂ {:.0}%, \
+                 draft {:.0}% of busy)",
+                self.spec_rounds,
+                self.spec_accepted_per_round(),
+                self.spec_acceptance_rate() * 100.0,
+                self.spec_draft_time_share() * 100.0,
             ));
         }
         s
@@ -312,6 +365,30 @@ impl<'a> HotPath<'a> {
     }
 }
 
+/// Which model one simulated iteration's slot batch prices against: the
+/// serving target, or the resident speculative draft. Plain replays only
+/// ever see `Target`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum IterPhase {
+    Target,
+    Draft,
+}
+
+/// Speculative-decoding parameters threaded through the event loop.
+/// `k = 0` keeps the whole path *live* but degenerate: decode slots are
+/// the plain `{1, ctx + 1}` windows, no draft batch is ever priced, the
+/// sampler never draws, and every `spec_*` counter stays 0 — so the
+/// replay is bit-for-bit the non-speculative one (pinned by
+/// `tests/spec_decode.rs`).
+#[derive(Clone, Copy)]
+struct SpecParams<'a> {
+    /// Draft tokens proposed per verification round.
+    k: usize,
+    acceptance: &'a AcceptanceModel,
+    /// Seed of the per-(request, position) acceptance streams.
+    seed: u64,
+}
+
 /// Price one slot batch under `hp`: memo lookup first (computed straight
 /// from the slots — no graph is built on a hit), then the cold path in
 /// canonical slot order, tensor-parallel rewrite (pass-cache-served when
@@ -377,8 +454,65 @@ pub fn simulate_hot<F>(
 where
     F: FnMut(&ModelGraph) -> Option<f64>,
 {
-    let mut price_slots = |slots: &[SeqSlot]| priced_iteration(cfg, hp, slots, price);
-    simulate_slots(cfg, trace, sim, &mut price_slots)
+    let mut price_slots =
+        |_phase: IterPhase, slots: &[SeqSlot]| priced_iteration(cfg, hp, slots, price);
+    simulate_slots(cfg, trace, sim, &mut price_slots, None)
+}
+
+/// Replay `trace` under speculative decoding: every decode slot becomes
+/// a `q = k + 1` verification window, each iteration additionally prices
+/// the draft model's `k` decode rounds (plus its prompt ingestion on
+/// prefill chunks), and a seeded acceptance draw decides how many tokens
+/// each sequence commits — rejected speculated KV rolls back through the
+/// refcount-safe [`KvPager::truncate`]. The cold single-device path;
+/// see [`simulate_speculative_hot`] for memoized/tensor-parallel runs.
+pub fn simulate_speculative<F>(
+    spec: &SpecConfig,
+    trace: &[RequestSpec],
+    sim: &ServingSimConfig,
+    seed: u64,
+    price: &mut F,
+) -> Result<ServingReport, SimError>
+where
+    F: FnMut(&ModelGraph) -> Option<f64>,
+{
+    simulate_speculative_hot(spec, trace, sim, &HotPath::cold(1), IterScope::default(), seed, price)
+}
+
+/// [`simulate_speculative`] with the hot path engaged. `hp.scope` is the
+/// *target* model's scope and `draft_scope` the draft's; both get the
+/// spec tag ([`IterScope::with_spec`]) folded in here, so memo entries
+/// can never alias the plain path or another k/acceptance configuration
+/// — while staying shared across seeds (prices are seed-independent;
+/// only the commit pattern differs). Draft batches price against the
+/// draft model under `draft_scope`, target batches against the target
+/// under `hp.scope`, both through `price` (which sees one rank's graph
+/// when `hp.tp > 1`, draft and target alike). With `k = 0` the
+/// speculative machinery stays engaged but degenerate and the report is
+/// bit-for-bit [`simulate_hot`]'s.
+pub fn simulate_speculative_hot<F>(
+    spec: &SpecConfig,
+    trace: &[RequestSpec],
+    sim: &ServingSimConfig,
+    hp: &HotPath<'_>,
+    draft_scope: IterScope,
+    seed: u64,
+    price: &mut F,
+) -> Result<ServingReport, SimError>
+where
+    F: FnMut(&ModelGraph) -> Option<f64>,
+{
+    if spec.draft.enc_layers > 0 {
+        return Err(SimError::EncDecUnsupported);
+    }
+    let target_hp = HotPath { scope: hp.scope.with_spec(spec), ..*hp };
+    let draft_hp = HotPath { scope: draft_scope.with_spec(spec), ..*hp };
+    let mut price_slots = |phase: IterPhase, slots: &[SeqSlot]| match phase {
+        IterPhase::Target => priced_iteration(&spec.target, &target_hp, slots, price),
+        IterPhase::Draft => priced_iteration(&spec.draft, &draft_hp, slots, price),
+    };
+    let params = SpecParams { k: spec.k, acceptance: &spec.acceptance, seed };
+    simulate_slots(&spec.target, trace, sim, &mut price_slots, Some(params))
 }
 
 /// Replay `trace` against `cfg`'s serving schedule, pricing every
@@ -398,18 +532,21 @@ where
 }
 
 /// The discrete-event core: everything in the loop is deterministic
-/// integer bookkeeping except the one call into `price_slots`, which
-/// maps a planned slot batch to the iteration's latency. All public
-/// entry points funnel here with a slot-pricing closure built by
-/// [`priced_iteration`].
+/// integer bookkeeping except the calls into `price_slots`, which map a
+/// planned slot batch (tagged with the model it runs on) to that pass's
+/// latency — plus, under speculation, the seeded acceptance draws. All
+/// public entry points funnel here with a phase-dispatching closure
+/// built over [`priced_iteration`]; plain replays pass `spec: None` and
+/// only ever price `IterPhase::Target` batches.
 fn simulate_slots<F>(
     cfg: &TransformerConfig,
     trace: &[RequestSpec],
     sim: &ServingSimConfig,
     price_slots: &mut F,
+    spec: Option<SpecParams<'_>>,
 ) -> Result<ServingReport, SimError>
 where
-    F: FnMut(&[SeqSlot]) -> Option<f64>,
+    F: FnMut(IterPhase, &[SeqSlot]) -> Option<f64>,
 {
     if trace.is_empty() {
         return Err(SimError::EmptyTrace);
@@ -417,6 +554,7 @@ where
     if cfg.enc_layers > 0 {
         return Err(SimError::EncDecUnsupported);
     }
+    let spec_k = spec.map_or(0, |s| s.k);
     let sched = SchedulerConfig {
         max_batch: sim.scheduler.max_batch.max(1),
         chunk_tokens: sim.scheduler.chunk_tokens.max(1),
@@ -441,7 +579,10 @@ where
             // never produce a first token (GenerationSpec's contract).
             return Err(SimError::EmptyPrompt(r.id));
         }
-        let need = pager.config().blocks_for(r.total_len());
+        // Under speculation the last verification window overshoots the
+        // final context by up to `k` speculated tokens before truncating
+        // back, so the worst-case footprint is total_len + k.
+        let need = pager.config().blocks_for(r.total_len() + spec_k);
         if need > capacity {
             return Err(SimError::RequestTooLarge { id: r.id, need, capacity });
         }
@@ -466,6 +607,10 @@ where
     let mut max_concurrency = 0usize;
     let mut kv_timeline: Vec<(f64, f64)> = Vec::new();
     let mut timeline_stride = 1usize;
+    let mut spec_rounds = 0usize;
+    let mut spec_draft_tokens = 0usize;
+    let mut spec_accepted_tokens = 0usize;
+    let mut spec_draft_busy = 0.0f64;
 
     while completed.len() < trace.len() {
         // Drain arrivals whose time has come.
@@ -606,7 +751,11 @@ where
                 let new_ctx = if r.remaining_prefill() > 0 {
                     r.ctx_ready + p.q
                 } else {
-                    r.ctx_ready + 1 // decode appends this step's token
+                    // Decode appends this step's token — plus the k
+                    // speculated tokens of the verification window, which
+                    // must all hold KV until the acceptance draw rolls the
+                    // rejects back.
+                    r.ctx_ready + spec_k + 1
                 };
                 // Blocks this grow would actually draw: new blocks past
                 // the request's current allocation (shared prefix blocks
@@ -641,12 +790,24 @@ where
         // --- commit growth + build the ragged iteration ---
         let mut slots: Vec<SeqSlot> = Vec::new();
         let mut active: Vec<usize> = Vec::new(); // running idx per slot
+        // Speculative bookkeeping: prefill chunks the draft must ingest
+        // in lockstep, and the committed contexts its decode rounds read.
+        let mut draft_prefill: Vec<SeqSlot> = Vec::new();
+        let mut draft_decode_ctx: Vec<usize> = Vec::new();
         for (i, (r, p)) in running.iter().zip(&plan).enumerate() {
             if p.q == 0 {
                 continue;
             }
             let slot = if r.remaining_prefill() > 0 {
+                if spec_k > 0 {
+                    draft_prefill.push(SeqSlot::prefill(r.ctx_ready, p.q));
+                }
                 SeqSlot::prefill(r.ctx_ready, p.q)
+            } else if spec_k > 0 {
+                // Verification window: q = k + 1 new queries over the
+                // speculated span (rectangular causal attention).
+                draft_decode_ctx.push(r.ctx_ready);
+                SeqSlot::prefill(r.ctx_ready, spec_k + 1)
             } else {
                 SeqSlot::decode(r.ctx_ready)
             };
@@ -659,9 +820,31 @@ where
         debug_assert!(!slots.is_empty(), "a planned iteration cannot be empty");
 
         // --- price the iteration and advance virtual time ---
-        let dt = price_slots(&slots).ok_or(SimError::Unsupported)?;
+        // A speculative iteration costs the draft's work first — its own
+        // prompt ingestion alongside target prefill chunks, then k
+        // autoregressive draft steps over the decoding sequences — plus
+        // the target pass over the ragged batch (verification windows
+        // included). Draft and target run back to back on one device, so
+        // the latencies sum.
+        let mut dt_draft = 0.0f64;
+        if spec_k > 0 {
+            if !draft_prefill.is_empty() {
+                dt_draft +=
+                    price_slots(IterPhase::Draft, &draft_prefill).ok_or(SimError::Unsupported)?;
+            }
+            if !draft_decode_ctx.is_empty() {
+                for j in 0..spec_k {
+                    let step: Vec<SeqSlot> =
+                        draft_decode_ctx.iter().map(|&c| SeqSlot::decode(c + j)).collect();
+                    dt_draft +=
+                        price_slots(IterPhase::Draft, &step).ok_or(SimError::Unsupported)?;
+                }
+            }
+        }
+        let dt = dt_draft + price_slots(IterPhase::Target, &slots).ok_or(SimError::Unsupported)?;
         now += dt;
         gpu_busy += dt;
+        spec_draft_busy += dt_draft;
         iterations += 1;
         if iterations % timeline_stride == 0 {
             kv_timeline.push((now, pager.occupancy()));
@@ -681,6 +864,30 @@ where
             // State is pre-iteration here: zero remaining prefill means
             // the slot was a decode step.
             if r.remaining_prefill() == 0 {
+                if let Some(s) = spec.filter(|s| s.k > 0) {
+                    // Verification outcome: a seeded per-(request,
+                    // position) stream draws the leading accepted run τ —
+                    // deterministic, replay-stable, independent of batch
+                    // order. The round commits τ + 1 tokens (capped at
+                    // the remaining generation) and the rejected
+                    // speculated KV rolls back refcount-safely.
+                    let mut rng = Rng::new(StableHasher::hash_of(&(
+                        s.seed,
+                        r.spec.id as u64,
+                        r.decoded as u64,
+                    )));
+                    let tau = s.acceptance.sample(&mut rng, s.k);
+                    let advance = (tau + 1).min(r.spec.gen_len - r.decoded);
+                    pager
+                        .truncate(r.spec.id, r.ctx_ready + advance)
+                        .expect("verified slot held its speculated window");
+                    r.decoded += advance;
+                    r.ctx_ready += advance;
+                    spec_rounds += 1;
+                    spec_draft_tokens += s.k;
+                    spec_accepted_tokens += tau;
+                    continue;
+                }
                 // Decode step: the appended token is now part of context.
                 r.decoded += 1;
                 r.ctx_ready += 1;
@@ -751,6 +958,10 @@ where
         cow_forks: pager.cow_forks(),
         peak_logical_kv_blocks: pager.peak_logical_blocks(),
         kv_blocks_saved: pager.peak_blocks_saved(),
+        spec_rounds,
+        spec_draft_tokens,
+        spec_accepted_tokens,
+        spec_draft_busy_s: spec_draft_busy,
         completed,
     })
 }

@@ -1,0 +1,379 @@
+//! # spec_decode — speculative decoding as a first-class workload (L2.5)
+//!
+//! Speculative decoding is the first workload in the stack where
+//! *iteration cost and token progress decouple*: a cheap draft model
+//! proposes `k` tokens per round, the target model scores all of them in
+//! one `q = k + 1` verification pass
+//! ([`crate::models::TransformerConfig::verify_graph`]), and the number
+//! of tokens actually committed per round is a random variable — between
+//! 1 (every draft token rejected; the verify pass still yields the
+//! target's own next token) and `k + 1` (all accepted plus the bonus
+//! token from the verification logits).
+//!
+//! This module holds the workload *description* and the acceptance
+//! *mathematics*; the latency numbers come from the layers that consume
+//! it:
+//!
+//! * [`SpecConfig`] pairs a draft and a target
+//!   [`crate::models::TransformerConfig`] with the draft length `k` and
+//!   an [`AcceptanceModel`].
+//! * [`AcceptanceModel`] is the per-position acceptance probability α:
+//!   the analytical closed form `E[τ] = Σ_{i=1..k} Π_{j<i} α_j`
+//!   (`α(1−α^k)/(1−α)` in the uniform case) drives
+//!   `Pm2Lat::predict_speculative`'s expected-latency curve, and the
+//!   seeded Bernoulli sampler drives the serving simulator's
+//!   discrete-event replay
+//!   ([`crate::serving::simulate_speculative_hot`]), which must commit
+//!   an *integer* number of tokens per round.
+//! * [`SpeculativePrediction`] is the analytical latency curve: target
+//!   prefill + draft prompt ingestion, then per-round draft steps and a
+//!   verification pass, with the expected committed tokens per round.
+//! * [`CrossoverPoint`] rows back `Pm2Lat::speculative_crossover`'s
+//!   k-analysis: tokens/s per draft length against the plain-decode
+//!   baseline, locating where speculation starts (or stops) paying.
+//!
+//! The serving integration prices mixed draft+verify iterations through
+//! the existing ragged-batch machinery (verification is a rectangular
+//! causal window — exactly a chunked-prefill slot shape) and rolls
+//! rejected speculated KV back with the refcount-safe
+//! [`crate::serving::KvPager::truncate`]. `k = 0` is the anchored
+//! degenerate case everywhere: the verify graph is node-identical to the
+//! decode graph, the predictor curve is bit-for-bit
+//! `predict_generation`, and the simulator replay is bit-for-bit the
+//! plain serving path (`tests/spec_decode.rs`).
+
+use crate::models::TransformerConfig;
+use crate::util::prng::{Rng, StableHasher};
+
+/// Per-position draft-token acceptance probabilities. Position `i` is
+/// the `i`-th speculated token of a round (0-based); a round commits
+/// `τ + 1` tokens where `τ` is the length of the leading accepted run —
+/// the `+ 1` is the verification pass's own token (the correction at the
+/// first rejection, or the bonus token when everything is accepted).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AcceptanceModel {
+    /// Position-independent acceptance probability α ∈ [0, 1].
+    Uniform(f64),
+    /// Per-position probabilities; positions past the end reuse the last
+    /// entry (an empty vector accepts nothing).
+    PerPosition(Vec<f64>),
+}
+
+impl AcceptanceModel {
+    /// Uniform α, clamped into [0, 1].
+    pub fn uniform(alpha: f64) -> AcceptanceModel {
+        AcceptanceModel::Uniform(alpha.clamp(0.0, 1.0))
+    }
+
+    /// Acceptance probability of draft position `pos` (0-based).
+    pub fn accept_prob(&self, pos: usize) -> f64 {
+        match self {
+            AcceptanceModel::Uniform(a) => *a,
+            AcceptanceModel::PerPosition(v) => match v.get(pos) {
+                Some(&p) => p,
+                None => v.last().copied().unwrap_or(0.0),
+            },
+        }
+    }
+
+    /// Expected leading accepted run length `E[τ]` over `k` draft
+    /// tokens: `Σ_{i=1..k} Π_{j<i} α_j` — the uniform case collapses to
+    /// the closed form `α(1−α^k)/(1−α)` (and to `k` as α → 1).
+    pub fn expected_accepted(&self, k: usize) -> f64 {
+        match self {
+            AcceptanceModel::Uniform(a) => {
+                let a = a.clamp(0.0, 1.0);
+                if a >= 1.0 {
+                    k as f64
+                } else if a <= 0.0 {
+                    0.0
+                } else {
+                    a * (1.0 - a.powi(k as i32)) / (1.0 - a)
+                }
+            }
+            AcceptanceModel::PerPosition(_) => {
+                let mut run = 1.0f64;
+                let mut total = 0.0f64;
+                for pos in 0..k {
+                    run *= self.accept_prob(pos).clamp(0.0, 1.0);
+                    total += run;
+                }
+                total
+            }
+        }
+    }
+
+    /// Expected tokens committed per round: `E[τ] + 1` (the verification
+    /// pass always contributes one target token). Always ≥ 1 — a round
+    /// can never stall.
+    pub fn expected_tokens_per_round(&self, k: usize) -> f64 {
+        self.expected_accepted(k) + 1.0
+    }
+
+    /// Seeded stochastic mode for the discrete-event simulator: sample
+    /// the leading accepted run length `τ ∈ [0, k]` as sequential
+    /// Bernoulli trials. Deterministic for a deterministic `rng`.
+    pub fn sample(&self, rng: &mut Rng, k: usize) -> usize {
+        let mut tau = 0usize;
+        while tau < k && rng.uniform() < self.accept_prob(tau) {
+            tau += 1;
+        }
+        tau
+    }
+
+    /// Stable 64-bit tag over the acceptance semantics (probability bit
+    /// patterns), folded into iteration-memo scopes.
+    pub fn tag(&self) -> u64 {
+        match self {
+            AcceptanceModel::Uniform(a) => StableHasher::hash_of(&(0u8, a.to_bits())),
+            AcceptanceModel::PerPosition(v) => {
+                let bits: Vec<u64> = v.iter().map(|p| p.to_bits()).collect();
+                StableHasher::hash_of(&(1u8, bits))
+            }
+        }
+    }
+}
+
+/// A draft/target pairing: the whole speculative-decoding workload
+/// shape. `k = 0` is the degenerate no-speculation configuration — every
+/// consumer reproduces its plain-decode path bit for bit.
+#[derive(Clone, Debug)]
+pub struct SpecConfig {
+    pub draft: TransformerConfig,
+    pub target: TransformerConfig,
+    /// Draft tokens proposed per round.
+    pub k: usize,
+    pub acceptance: AcceptanceModel,
+}
+
+impl SpecConfig {
+    /// Pair `draft` with `target`. Both must be decoder-only and share a
+    /// vocabulary — speculation verifies draft *token ids* against the
+    /// target distribution, which is meaningless across tokenizers.
+    pub fn new(
+        draft: TransformerConfig,
+        target: TransformerConfig,
+        k: usize,
+        acceptance: AcceptanceModel,
+    ) -> SpecConfig {
+        assert_eq!(draft.enc_layers, 0, "speculative drafts are decoder-only");
+        assert_eq!(target.enc_layers, 0, "speculative targets are decoder-only");
+        assert_eq!(
+            draft.vocab, target.vocab,
+            "draft and target must share a vocabulary"
+        );
+        SpecConfig { draft, target, k, acceptance }
+    }
+
+    /// Expected tokens committed per verification round.
+    pub fn expected_tokens_per_round(&self) -> f64 {
+        self.acceptance.expected_tokens_per_round(self.k)
+    }
+
+    /// Stable tag over the speculation semantics (draft shape, `k`,
+    /// acceptance), folded into [`crate::serving::IterScope`] so memo
+    /// entries can never alias across k/acceptance configurations.
+    pub fn scope_tag(&self) -> u64 {
+        StableHasher::hash_of(&(
+            self.draft.name,
+            self.draft.layers,
+            self.draft.hidden,
+            self.draft.heads,
+            self.draft.kv_heads,
+            self.draft.ffn_hidden,
+            self.draft.dtype,
+            self.k,
+            self.acceptance.tag(),
+        ))
+    }
+}
+
+/// A synthetic draft for targets without a published companion model: a
+/// 4× shallower, 2× narrower copy of the target (same vocabulary, same
+/// head geometry, same dtype). Roughly an order of magnitude cheaper per
+/// decode step, which is the regime where speculation pays.
+pub fn auto_draft(target: &TransformerConfig) -> TransformerConfig {
+    let mut d = target.clone();
+    d.name = "auto-draft";
+    d.layers = (d.layers / 4).max(1);
+    if d.heads % 2 == 0 && d.kv_heads % 2 == 0 && d.hidden % 2 == 0 && d.ffn_hidden % 2 == 0 {
+        // Halving width and heads together preserves head_dim, so the
+        // attention geometry stays valid.
+        d.heads /= 2;
+        d.kv_heads /= 2;
+        d.hidden /= 2;
+        d.ffn_hidden /= 2;
+    }
+    d.params_b = d.weight_params() / 1e9;
+    d
+}
+
+/// One speculative round of the analytical latency curve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpecRound {
+    /// Target KV window of the verification pass (`ctx + k + 1`).
+    pub kv_len: usize,
+    /// Σ of the `k` draft decode steps this round.
+    pub draft_s: f64,
+    /// The one `q = k + 1` target verification pass.
+    pub verify_s: f64,
+    /// Expected tokens committed (`E[τ] + 1`, clamped at the tail of the
+    /// generation).
+    pub tokens: f64,
+}
+
+impl SpecRound {
+    pub fn total_s(&self) -> f64 {
+        self.draft_s + self.verify_s
+    }
+}
+
+/// The full speculative latency curve `Pm2Lat::predict_speculative`
+/// answers: prefill (target + draft prompt ingestion), then one
+/// [`SpecRound`] per expected verification round.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpeculativePrediction {
+    /// Target prefill over the prompt.
+    pub prefill_s: f64,
+    /// Draft prompt ingestion (0 when `k = 0` — no draft runs at all).
+    pub draft_prefill_s: f64,
+    pub gen_len: usize,
+    pub k: usize,
+    pub rounds: Vec<SpecRound>,
+}
+
+impl SpeculativePrediction {
+    /// End-to-end expected latency: prefill + every round.
+    pub fn total_s(&self) -> f64 {
+        self.prefill_s + self.draft_prefill_s + self.decode_s()
+    }
+
+    /// Expected decode-phase latency (draft steps + verification passes).
+    pub fn decode_s(&self) -> f64 {
+        self.rounds.iter().map(SpecRound::total_s).sum()
+    }
+
+    /// Expected time per output token over the decode phase — the
+    /// speculative TPOT (0 when nothing is generated).
+    pub fn time_per_output_token_s(&self) -> f64 {
+        if self.gen_len == 0 {
+            0.0
+        } else {
+            self.decode_s() / self.gen_len as f64
+        }
+    }
+
+    /// Expected steady-state decode throughput (tokens/s).
+    pub fn tokens_per_s(&self) -> f64 {
+        let tpot = self.time_per_output_token_s();
+        if tpot > 0.0 {
+            1.0 / tpot
+        } else {
+            0.0
+        }
+    }
+
+    /// Share of decode time spent in the draft model.
+    pub fn draft_time_share(&self) -> f64 {
+        let total = self.decode_s();
+        if total > 0.0 {
+            self.rounds.iter().map(|r| r.draft_s).sum::<f64>() / total
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One row of the crossover-k analysis: decode throughput at a given
+/// draft length, against the plain-decode baseline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CrossoverPoint {
+    pub k: usize,
+    pub tokens_per_s: f64,
+    /// `tokens_per_s / baseline` — > 1 means speculation pays at this k.
+    pub speedup: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn uniform_expected_accepted_matches_the_closed_form_and_edges() {
+        let m = AcceptanceModel::uniform(0.8);
+        // Σ_{i=1..4} 0.8^i = 0.8 + 0.64 + 0.512 + 0.4096.
+        let expect = 0.8 + 0.64 + 0.512 + 0.4096;
+        assert!((m.expected_accepted(4) - expect).abs() < 1e-12);
+        assert_eq!(m.expected_accepted(0), 0.0);
+        assert_eq!(AcceptanceModel::uniform(0.0).expected_accepted(7), 0.0);
+        assert_eq!(AcceptanceModel::uniform(1.0).expected_accepted(7), 7.0);
+        // Out-of-range inputs clamp instead of exploding the series.
+        assert_eq!(AcceptanceModel::uniform(1.5).expected_accepted(3), 3.0);
+        // tokens/round always includes the verification token.
+        assert!((m.expected_tokens_per_round(4) - (expect + 1.0)).abs() < 1e-12);
+        assert_eq!(AcceptanceModel::uniform(0.0).expected_tokens_per_round(4), 1.0);
+    }
+
+    #[test]
+    fn per_position_model_matches_uniform_when_flat_and_extends_the_tail() {
+        let flat = AcceptanceModel::PerPosition(vec![0.6; 5]);
+        let uni = AcceptanceModel::uniform(0.6);
+        for k in 0..=5 {
+            assert!((flat.expected_accepted(k) - uni.expected_accepted(k)).abs() < 1e-12);
+        }
+        // Past-the-end positions reuse the last entry.
+        let decay = AcceptanceModel::PerPosition(vec![0.9, 0.5]);
+        assert_eq!(decay.accept_prob(0), 0.9);
+        assert_eq!(decay.accept_prob(1), 0.5);
+        assert_eq!(decay.accept_prob(7), 0.5);
+        // E[τ] over k=3: 0.9 + 0.9·0.5 + 0.9·0.5·0.5.
+        let expect = 0.9 + 0.45 + 0.225;
+        assert!((decay.expected_accepted(3) - expect).abs() < 1e-12);
+        assert_eq!(AcceptanceModel::PerPosition(vec![]).expected_accepted(4), 0.0);
+    }
+
+    #[test]
+    fn sampler_is_deterministic_bounded_and_tracks_alpha() {
+        let m = AcceptanceModel::uniform(0.8);
+        let draw = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            m.sample(&mut rng, 4)
+        };
+        assert_eq!(draw(42), draw(42), "seeded sampling is deterministic");
+        // Empirical mean over many seeds approaches E[τ].
+        let n = 4000;
+        let mean = (0..n).map(|s| draw(s as u64) as f64).sum::<f64>() / n as f64;
+        assert!((mean - m.expected_accepted(4)).abs() < 0.1, "mean {mean}");
+        for s in 0..200 {
+            assert!(draw(s) <= 4);
+        }
+        // Degenerate α: always-reject and always-accept are exact.
+        let mut rng = Rng::new(7);
+        assert_eq!(AcceptanceModel::uniform(0.0).sample(&mut rng, 4), 0);
+        assert_eq!(AcceptanceModel::uniform(1.0).sample(&mut rng, 4), 4);
+    }
+
+    #[test]
+    fn spec_config_validates_and_tags_discriminate() {
+        let target = zoo::gpt2_large();
+        let draft = auto_draft(&target);
+        assert_eq!(draft.vocab, target.vocab, "auto draft keeps the vocabulary");
+        assert_eq!(draft.head_dim(), target.head_dim(), "head geometry preserved");
+        assert!(draft.weight_bytes() < target.weight_bytes() / 4.0);
+        let s1 = SpecConfig::new(draft.clone(), target.clone(), 4, AcceptanceModel::uniform(0.8));
+        let s2 = SpecConfig::new(draft.clone(), target.clone(), 5, AcceptanceModel::uniform(0.8));
+        let s3 = SpecConfig::new(draft, target, 4, AcceptanceModel::uniform(0.7));
+        assert_ne!(s1.scope_tag(), s2.scope_tag(), "k is part of the scope");
+        assert_ne!(s1.scope_tag(), s3.scope_tag(), "acceptance is part of the scope");
+        assert!((s1.expected_tokens_per_round() - 3.3616).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "share a vocabulary")]
+    fn mismatched_vocabularies_are_rejected() {
+        let mut draft = zoo::qwen3_0_6b();
+        draft.vocab = 1000;
+        SpecConfig::new(draft, zoo::qwen3_4b(), 4, AcceptanceModel::uniform(0.8));
+    }
+}

@@ -2,11 +2,13 @@
 //!
 //! Three layers of guarantee, bottom-up:
 //!
-//! * **Pager algebra** — randomized allocate/map/extend/fork/free/preempt
-//!   sequences against the refcounted pager, checking after *every* step:
-//!   refcount conservation (Σ logical == Σ physical·refs), free-list
-//!   integrity (LIFO reuse, no double-free, no orphans), all-or-nothing
-//!   grow, and a clean `audit()`.
+//! * **Pager algebra** — randomized allocate/map/extend/fork/truncate/
+//!   free/preempt sequences against the refcounted pager, checking after
+//!   *every* step: refcount conservation (Σ logical == Σ physical·refs),
+//!   free-list integrity (LIFO reuse, no double-free, no orphans),
+//!   all-or-nothing grow, truncate freeing at most its own dropped tail
+//!   (a shared prefix block survives its refcount), and a clean
+//!   `audit()`.
 //! * **Differential serving** — with sharing *enabled* but a trace that
 //!   declares zero shared prefixes, `simulate` is bit-for-bit identical
 //!   to the sharing-disabled path (the same guarantee style as
@@ -73,7 +75,8 @@ fn check_conservation(p: &KvPager, live: &[usize], ctx: &str) {
 fn property_randomized_cow_sequences_conserve_refcounts() {
     // Randomized op sequences over a small sharing pager: admit (map a
     // template prefix), grow (prefill chunks and decode steps, forking
-    // shared boundaries), release (completion), and preempt (release of
+    // shared boundaries), truncate (speculative-decoding rollback of a
+    // rejected tail), release (completion), and preempt (release of
     // the youngest). The shadow model is just the live id set — every
     // richer invariant is recomputed from pager getters after each op.
     for seed in 0..6u64 {
@@ -94,7 +97,7 @@ fn property_randomized_cow_sequences_conserve_refcounts() {
         for step in 0..500 {
             let ctx = format!("seed {seed} step {step}");
             let roll = rng.int_range(0, 99);
-            if roll < 30 || live.is_empty() {
+            if roll < 25 || live.is_empty() {
                 // Admit: map a template (sometimes none — private request).
                 let id = next_id;
                 next_id += 1;
@@ -110,7 +113,7 @@ fn property_randomized_cow_sequences_conserve_refcounts() {
                     continue;
                 }
                 live.push(id);
-            } else if roll < 75 {
+            } else if roll < 55 {
                 // Grow a random live request — prefill chunk or decode step.
                 let id = *rng.choice(&live);
                 let target = p.tokens_of(id) + rng.int_range(1, 2 * bt as i64) as usize;
@@ -136,6 +139,29 @@ fn property_randomized_cow_sequences_conserve_refcounts() {
                     );
                     assert_eq!(before, after, "{ctx}: failed grow left a trace");
                 }
+            } else if roll < 75 {
+                // Truncate: roll back a random tail (the speculative-
+                // decoding rejection path). Truncate may free at most the
+                // blocks it drops from *this* allocation — a tail block
+                // another request still references survives at a lower
+                // refcount, so the free list grows by exactly the count
+                // the pager reports freed, never more than dropped.
+                let id = *rng.choice(&live);
+                let toks = p.tokens_of(id);
+                let target = rng.int_range(0, toks as i64) as usize;
+                let dropped =
+                    p.config().blocks_for(toks) - p.config().blocks_for(target);
+                let before_free = p.free_blocks();
+                let freed = p.truncate(id, target).expect("live request truncates");
+                assert!(freed <= dropped, "{ctx}: truncate freed past its own tail");
+                assert_eq!(
+                    p.free_blocks(),
+                    before_free + freed,
+                    "{ctx}: free list grew by exactly the freed count"
+                );
+                assert_eq!(p.tokens_of(id), target, "{ctx}: truncate lands on target");
+                assert!(p.truncate(id, toks).is_ok(), "{ctx}: re-truncate past end is a no-op");
+                assert_eq!(p.tokens_of(id), target, "{ctx}: no-op left tokens alone");
             } else {
                 // Release (completion) or preempt (youngest) — same pager
                 // operation, different victim selection.

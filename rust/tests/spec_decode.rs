@@ -1,0 +1,205 @@
+//! Speculative-decoding invariants, anchored the same way the serving
+//! simulator is anchored to the predictor: the degenerate configuration
+//! must be *exactly* the code path it generalizes.
+//!
+//! * **k = 0 equivalence** — at every layer. The verification graph at
+//!   `k = 0` is node-identical to the decode graph; the predictor's
+//!   speculative curve reproduces `predict_generation`'s `step_s` bit
+//!   for bit; the simulator's speculative replay reproduces the plain
+//!   replay bit for bit with every speculation counter at zero.
+//! * **Speculation pays** — at a high uniform acceptance the simulated
+//!   serving throughput strictly beats plain decode on the same trace,
+//!   rounds accept tokens, the measured acceptance rate tracks E[τ]/k,
+//!   and the rollback path (`KvPager::truncate`) never leaks a block.
+//! * **Determinism** — the seeded acceptance draws make replays
+//!   bit-reproducible.
+
+use pm2lat::gpusim::Gpu;
+use pm2lat::models::transformer::GenerationSpec;
+use pm2lat::models::zoo;
+use pm2lat::ops::DType;
+use pm2lat::pm2lat::Pm2Lat;
+use pm2lat::profiler::ProfileSpec;
+use pm2lat::serving::{
+    poisson_trace, simulate, simulate_speculative, Admission, BatchingMode, KvPagerConfig,
+    SchedulerConfig, ServingReport, ServingSimConfig,
+};
+use pm2lat::spec_decode::{auto_draft, AcceptanceModel, SpecConfig};
+
+fn quick_pl(device: &str, dtype: DType) -> (Gpu, Pm2Lat) {
+    let mut gpu = Gpu::by_name(device).expect("device in the zoo");
+    let pl = Pm2Lat::build_dtypes(&mut gpu, &ProfileSpec::quick(), &[dtype], false);
+    gpu.reset();
+    (gpu, pl)
+}
+
+#[test]
+fn verify_graph_at_k0_is_node_identical_to_decode() {
+    let cfg = zoo::gpt2_large();
+    for (b, kv) in [(1usize, 33usize), (4, 129)] {
+        let v = cfg.verify_graph(b, kv, 0);
+        let d = cfg.decode_graph(b, kv);
+        assert_eq!(v.lower(), d.lower(), "b={b} kv={kv}: k=0 verification IS decode");
+    }
+    // k > 0 widens every query dimension to k + 1 — same topology (one
+    // node list), strictly more work, never fewer nodes.
+    let v4 = cfg.verify_graph(2, 64, 4);
+    let d = cfg.decode_graph(2, 64);
+    assert_eq!(v4.lower().len(), d.lower().len(), "same node structure at any k");
+    assert_ne!(v4.lower(), d.lower(), "k=4 must not collapse to plain decode");
+}
+
+#[test]
+fn speculative_prediction_at_k0_reproduces_plain_generation_bit_for_bit() {
+    let (gpu, pl) = quick_pl("a100", DType::F32);
+    let target = zoo::gpt2_large();
+    let spec =
+        SpecConfig::new(auto_draft(&target), target.clone(), 0, AcceptanceModel::uniform(0.8));
+    let gen = GenerationSpec::new(64, 12);
+    let plain = pl.predict_generation(&gpu, &target, 2, &gen, 1).expect("supported");
+    let sp = pl.predict_speculative(&gpu, &spec, 2, &gen, 1).expect("supported");
+    assert_eq!(sp.prefill_s.to_bits(), plain.prefill_s.to_bits(), "prefill identical");
+    assert_eq!(sp.draft_prefill_s, 0.0, "no draft runs at k=0");
+    assert_eq!(sp.rounds.len(), plain.step_s.len(), "one round per decode step");
+    for (i, (r, s)) in sp.rounds.iter().zip(&plain.step_s).enumerate() {
+        assert_eq!(r.verify_s.to_bits(), s.to_bits(), "step {i} latency");
+        assert_eq!(r.draft_s, 0.0, "step {i} draft");
+        assert_eq!(r.tokens, 1.0, "step {i} commits exactly one token");
+        assert_eq!(r.kv_len, gen.kv_len_at(i), "step {i} kv window");
+    }
+    assert_eq!(sp.total_s().to_bits(), plain.total_s().to_bits(), "totals identical");
+    assert_eq!(sp.tokens_per_s().to_bits(), plain.tokens_per_s().to_bits());
+}
+
+#[test]
+fn acceptance_drives_throughput_and_crossover_picks_a_positive_k() {
+    let (gpu, pl) = quick_pl("a100", DType::F32);
+    let target = zoo::gpt2_large();
+    let spec =
+        SpecConfig::new(auto_draft(&target), target.clone(), 4, AcceptanceModel::uniform(0.8));
+    let gen = GenerationSpec::new(32, 16);
+    let curve = pl
+        .speculative_alpha_curve(&gpu, &spec, 1, &gen, 1, &[0.0, 0.5, 0.9])
+        .expect("curve");
+    assert_eq!(curve.len(), 3);
+    assert!(
+        curve.windows(2).all(|w| w[0].1 < w[1].1),
+        "tokens/s must rise strictly with α: {curve:?}"
+    );
+    let (points, best_k) = pl
+        .speculative_crossover(&gpu, &spec, 1, &gen, 1, &[0, 2, 4, 8])
+        .expect("crossover");
+    assert_eq!(points.len(), 4);
+    // k = 0 speculation IS the baseline, so its speedup is exactly 1.
+    assert!(
+        (points[0].speedup - 1.0).abs() < 1e-12,
+        "k=0 speedup drifted: {}",
+        points[0].speedup
+    );
+    // At α = 0.8 some speculated k must amortize its verification cost.
+    assert!(best_k > 0, "crossover never paid: {points:?}");
+    let best = points.iter().find(|p| p.k == best_k).expect("argmax k is a swept point");
+    assert!(best.speedup > 1.0, "best k={best_k} speedup {}", best.speedup);
+}
+
+fn spec_sim(resident: &[&pm2lat::models::TransformerConfig]) -> ServingSimConfig {
+    ServingSimConfig {
+        scheduler: SchedulerConfig {
+            mode: BatchingMode::Continuous,
+            admission: Admission::Fcfs,
+            max_batch: 8,
+            chunk_tokens: 128,
+        },
+        pager: KvPagerConfig::for_models(resident, 80e9, 16),
+        streams: 1,
+    }
+}
+
+/// Every f64 a report exposes, compared bitwise, plus the speculation
+/// counters.
+fn assert_reports_bit_identical(a: &ServingReport, b: &ServingReport, ctx: &str) {
+    assert_eq!(a.iterations, b.iterations, "{ctx}: iteration count");
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{ctx}: makespan");
+    assert_eq!(a.gpu_busy_s.to_bits(), b.gpu_busy_s.to_bits(), "{ctx}: gpu busy");
+    assert_eq!(a.preemptions, b.preemptions, "{ctx}: preemptions");
+    assert_eq!(a.peak_kv_blocks, b.peak_kv_blocks, "{ctx}: peak kv");
+    assert_eq!(a.completed.len(), b.completed.len(), "{ctx}: completions");
+    for (x, y) in a.completed.iter().zip(&b.completed) {
+        assert_eq!(x.id, y.id, "{ctx}: completion order");
+        assert_eq!(x.ttft_s().to_bits(), y.ttft_s().to_bits(), "{ctx}: ttft req {}", x.id);
+        assert_eq!(x.e2e_s().to_bits(), y.e2e_s().to_bits(), "{ctx}: e2e req {}", x.id);
+    }
+}
+
+#[test]
+fn simulator_at_k0_is_bit_identical_to_plain_serving() {
+    let (gpu, pl) = quick_pl("a100", DType::F32);
+    let target = zoo::gpt2_large();
+    let draft = auto_draft(&target);
+    let sim = spec_sim(&[&target, &draft]);
+    let trace = poisson_trace(10, 30.0, 64, 8, 11);
+    let mut price = |g: &pm2lat::graph::ModelGraph| pl.predict_graph(&gpu, g, 1);
+    let plain = simulate(&target, &trace, &sim, &mut price).expect("plain replay");
+    let spec = SpecConfig::new(draft, target.clone(), 0, AcceptanceModel::uniform(0.8));
+    let k0 = simulate_speculative(&spec, &trace, &sim, 123, &mut price).expect("k=0 replay");
+    assert_reports_bit_identical(&k0, &plain, "k=0 speculative serving");
+    assert_eq!(
+        (k0.spec_rounds, k0.spec_draft_tokens, k0.spec_accepted_tokens),
+        (0, 0, 0),
+        "no speculation accounting at k=0"
+    );
+    assert_eq!(k0.spec_draft_busy_s, 0.0, "no draft time at k=0");
+    assert_eq!(k0.spec_acceptance_rate(), 0.0);
+}
+
+#[test]
+fn speculative_serving_accepts_tokens_beats_plain_decode_and_never_leaks() {
+    let (gpu, pl) = quick_pl("a100", DType::F32);
+    let target = zoo::gpt2_large();
+    let draft = auto_draft(&target);
+    let sim = spec_sim(&[&target, &draft]);
+    // Decode-heavy trace: short prompts, long tails — where speculation
+    // has room to pay.
+    let trace = poisson_trace(12, 30.0, 48, 16, 9);
+    let mut price = |g: &pm2lat::graph::ModelGraph| pl.predict_graph(&gpu, g, 1);
+    let plain = simulate(&target, &trace, &sim, &mut price).expect("plain replay");
+    let spec =
+        SpecConfig::new(draft, target.clone(), 4, AcceptanceModel::uniform(0.9));
+    let sp = simulate_speculative(&spec, &trace, &sim, 42, &mut price).expect("spec replay");
+
+    // Rounds ran, tokens accepted, and the empirical leading-run rate
+    // tracks E[τ]/k (≈ 0.77 at α = 0.9, k = 4).
+    assert!(sp.spec_rounds > 0, "no verification rounds ran");
+    assert!(sp.spec_accepted_tokens > 0, "nothing accepted at α=0.9");
+    assert_eq!(sp.spec_draft_tokens, 4 * sp.spec_rounds, "k proposals per round");
+    let rate = sp.spec_acceptance_rate();
+    assert!((0.5..=1.0).contains(&rate), "acceptance rate {rate} far from E[τ]/k");
+    assert!(
+        sp.spec_draft_time_share() > 0.0 && sp.spec_draft_time_share() < 0.6,
+        "draft share {} implausible for a quarter-depth half-width draft",
+        sp.spec_draft_time_share()
+    );
+
+    // Rollback safety: every request completes its full generation and
+    // the pager conserves every block through the truncates.
+    assert_eq!(sp.completed.len(), trace.len(), "all requests complete");
+    assert_eq!(sp.kv_leaked_blocks, 0, "rollback leaked KV blocks");
+
+    // The point of the subsystem: strictly more tokens/s than plain
+    // decode on the same trace, schedule, and pager.
+    assert!(
+        sp.output_tokens_per_s() > plain.output_tokens_per_s(),
+        "speculation must pay at α=0.9: {} vs {} tok/s",
+        sp.output_tokens_per_s(),
+        plain.output_tokens_per_s()
+    );
+
+    // Seeded draws: the replay is bit-reproducible, and a different seed
+    // still conserves the pager.
+    let again = simulate_speculative(&spec, &trace, &sim, 42, &mut price).expect("replay");
+    assert_reports_bit_identical(&again, &sp, "same-seed speculative replay");
+    assert_eq!(again.spec_accepted_tokens, sp.spec_accepted_tokens);
+    let other = simulate_speculative(&spec, &trace, &sim, 7, &mut price).expect("other seed");
+    assert_eq!(other.kv_leaked_blocks, 0);
+    assert_eq!(other.completed.len(), trace.len());
+}
