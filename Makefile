@@ -5,10 +5,16 @@
 #                      the PJRT runtime).
 #   make lint        — formatting + clippy-as-errors; skips gracefully in
 #                      toolchain-less containers so CI plumbing still runs.
-#   make doc         — rustdoc for the crate (no deps); same graceful
+#   make doc         — rustdoc for the crate (no deps), warnings as errors
+#                      (broken intra-doc links fail); same graceful
 #                      no-toolchain skip as lint.
+#   make doc-check   — prose/code drift check: every --flag mentioned in
+#                      README/docs must exist in the CLI, every relative
+#                      markdown link must resolve. Pure grep — runs even
+#                      in toolchain-less containers.
 #   make ci          — tier-1 verification in one command: lint, docs,
-#                      release build, full test suite, serve-sim smoke.
+#                      doc-check, release build, full test suite,
+#                      serve-sim smokes, trace smoke.
 #   make serve-sim-smoke — fast serving-simulator end-to-end check
 #                      (tiny trace, quick profile; graceful no-cargo skip).
 #   make serve-sim-tp-smoke — same smoke on a tensor-parallel placement
@@ -19,6 +25,10 @@
 #                      (k=4, α=0.8, auto-draft); fails if no draft token
 #                      is ever accepted or tokens/s does not beat the
 #                      non-speculative baseline on the same trace.
+#   make trace-smoke — the smoke with --trace-out: fails if the Chrome
+#                      trace is empty or invalid JSON (the run itself
+#                      already errors if the span count diverges from the
+#                      reported iteration count).
 #   make bench-serving — the serving-capacity sweep on the fast setting.
 #   make bench-json  — the same sweep, writing the hot-path measurements
 #                      (iterations/s cold vs memoized, sweep wall-clock)
@@ -27,13 +37,13 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts ci lint doc fmt clippy build test bench-fast bench-serving bench-json serve-sim-smoke serve-sim-tp-smoke serve-sim-prefix-smoke serve-sim-spec-smoke
+.PHONY: artifacts ci lint doc doc-check fmt clippy build test bench-fast bench-serving bench-json serve-sim-smoke serve-sim-tp-smoke serve-sim-prefix-smoke serve-sim-spec-smoke trace-smoke
 
 # aot.py uses package-relative imports — must run as a module from python/.
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
 
-ci: lint doc test serve-sim-smoke serve-sim-tp-smoke serve-sim-prefix-smoke serve-sim-spec-smoke bench-json
+ci: lint doc doc-check test serve-sim-smoke serve-sim-tp-smoke serve-sim-prefix-smoke serve-sim-spec-smoke trace-smoke bench-json
 
 # Graceful no-toolchain path: some dev containers ship without cargo, and
 # lint is the one stage that may safely no-op there (skipping style checks
@@ -47,14 +57,24 @@ lint:
 	fi
 
 # Docs are load-bearing (README/ARCHITECTURE link into rustdoc): build
-# them in CI, with the same graceful skip as lint when cargo is absent
-# (skipping doc generation loses nothing; build/test still hard-fail).
+# them in CI with rustdoc warnings promoted to errors, so a broken
+# intra-doc link or a malformed doc attribute fails the lane instead of
+# scrolling by. Same graceful skip as lint when cargo is absent (skipping
+# doc generation loses nothing; build/test still hard-fail).
 doc:
 	@if command -v cargo >/dev/null 2>&1; then \
-		cargo doc --no-deps; \
+		RUSTDOCFLAGS="-D warnings" cargo doc --no-deps; \
 	else \
 		echo "doc: cargo not found — skipping (toolchain-less container)"; \
 	fi
+
+# Prose drifts faster than code: doc-check greps README.md and docs/*.md
+# for CLI flags and relative links and verifies both against the tree.
+# Deliberately toolchain-free so it runs (and fails) even in containers
+# without cargo — stale docs are exactly the regression this lane exists
+# to catch.
+doc-check:
+	@sh scripts/doc_check.sh
 
 fmt:
 	cargo fmt --check
@@ -132,4 +152,23 @@ serve-sim-spec-smoke:
 		cargo run --release --quiet -- serve-sim --spec-k 4 --accept 0.8 --smoke; \
 	else \
 		echo "serve-sim-spec-smoke: cargo not found — skipping (toolchain-less container)"; \
+	fi
+
+# The smoke with the observability layer on: record the replay, write the
+# Chrome trace, then prove the artifact is real — valid JSON, a non-empty
+# traceEvents array, and at least one B/E span pair. The binary itself
+# already hard-errors when the recorded span count diverges from the
+# reported iteration count, so this lane focuses on the exported file.
+trace-smoke:
+	@if command -v cargo >/dev/null 2>&1; then \
+		out=$$(mktemp /tmp/pm2lat-trace.XXXXXX.json) && \
+		cargo run --release --quiet -- serve-sim --smoke --trace-out $$out && \
+		$(PYTHON) -c "import json,sys; \
+ev = json.load(open(sys.argv[1]))['traceEvents']; \
+assert ev, 'empty traceEvents'; \
+assert any(e.get('ph') == 'B' for e in ev), 'no spans in trace'; \
+print('trace-smoke: %d events OK' % len(ev))" $$out; \
+		st=$$?; rm -f $$out; exit $$st; \
+	else \
+		echo "trace-smoke: cargo not found — skipping (toolchain-less container)"; \
 	fi

@@ -18,6 +18,7 @@
 
 use std::collections::HashMap;
 use std::ops::Deref;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -25,6 +26,7 @@ use anyhow::{anyhow, Result};
 use crate::gpusim::Gpu;
 use crate::graph::ModelGraph;
 use crate::neusight::NeuSight;
+use crate::obs::{keys, MetricsRegistry, TraceCtx, TraceEvent, TraceSink};
 use crate::ops::{DType, GemmOp, Op, UtilKind, UtilOp};
 use crate::pm2lat::batch::BatchPredictor;
 use crate::pm2lat::Pm2Lat;
@@ -239,6 +241,32 @@ impl Engine {
         )
     }
 
+    /// Project the service's live counters into the unified metrics
+    /// schema (the `service.*` keys of [`crate::obs::keys`]) — the same
+    /// vocabulary `ServingReport::metrics_registry` speaks, so service-
+    /// and serving-side numbers land in one diffable namespace. Includes
+    /// the cache's residency and eviction breakdown alongside the atomic
+    /// counters [`Engine::service_summary`] formats.
+    pub fn metrics_registry(&self) -> MetricsRegistry {
+        use std::sync::atomic::Ordering::Relaxed;
+        let mut reg = MetricsRegistry::new();
+        let m = &self.metrics;
+        reg.set(keys::SERVICE_REQUESTS, m.requests.load(Relaxed));
+        reg.set(keys::SERVICE_BATCHES, m.batches.load(Relaxed));
+        reg.set(keys::SERVICE_PJRT_CALLS, m.pjrt_calls.load(Relaxed));
+        reg.set(keys::SERVICE_UNSUPPORTED, m.unsupported.load(Relaxed));
+        reg.set(keys::SERVICE_BATCHER_ERRORS, m.batcher_errors.load(Relaxed));
+        reg.set(keys::SERVICE_CACHE_HITS, m.cache_hits.load(Relaxed));
+        reg.set(keys::SERVICE_CACHE_MISSES, m.cache_misses.load(Relaxed));
+        reg.set(keys::SERVICE_CACHE_BATCHED_DEDUP, m.batched_dedup.load(Relaxed));
+        reg.set(keys::SERVICE_CACHE_SCALAR_DEDUP, m.scalar_dedup.load(Relaxed));
+        reg.set(keys::SERVICE_CACHE_ENTRIES, self.cache.len() as u64);
+        reg.set(keys::SERVICE_CACHE_CAPACITY, self.cache.capacity() as u64);
+        reg.set(keys::SERVICE_CACHE_LRU_EVICTIONS, self.cache.lru_evictions());
+        reg.set(keys::SERVICE_CACHE_TTL_EVICTIONS, self.cache.ttl_evictions());
+        reg
+    }
+
     /// Register a device with its fitted PM2Lat state. Duplicate
     /// registration is an error (the seed silently overwrote the previous
     /// state). Returns the interned device id.
@@ -414,6 +442,10 @@ pub struct Coordinator<'rt> {
     neusight: HashMap<DType, NeuSight<'rt>>,
     /// Indexed by interned device id; `None` = scalar fallback only.
     batchers: Vec<Option<BatchPredictor<'rt>>>,
+    /// Observability sink for the serving-simulation APIs
+    /// ([`Coordinator::with_trace_sink`]); `None` = tracing off, the
+    /// replays take the bit-identical untraced path.
+    trace: Option<Arc<dyn TraceSink>>,
 }
 
 impl<'rt> Deref for Coordinator<'rt> {
@@ -430,11 +462,25 @@ impl<'rt> Coordinator<'rt> {
             runtime,
             neusight: HashMap::new(),
             batchers: Vec::new(),
+            trace: None,
         }
     }
 
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.engine.set_threads(threads);
+        self
+    }
+
+    /// Install a trace sink on the serving-simulation APIs:
+    /// [`Coordinator::simulate_serving`] and
+    /// [`Coordinator::submit_speculative`] then emit the full structured
+    /// stream — iteration spans, KV events, spec rounds, plus
+    /// `coordinator-op` cache probes aggregated per pricing call — into
+    /// `sink`. Reports stay bit-for-bit identical with or without a sink
+    /// (`tests/obs_trace.rs`); pass the sink to
+    /// [`crate::obs::chrome_trace`] afterwards to render the run.
+    pub fn with_trace_sink(mut self, sink: Arc<dyn TraceSink>) -> Self {
+        self.trace = Some(sink);
         self
     }
 
@@ -721,15 +767,50 @@ impl<'rt> Coordinator<'rt> {
         req: &ServingRequest,
     ) -> Result<crate::serving::ServingReport> {
         self.resolve_device(&req.device)?; // reject unknown devices early
+        let tc = match &self.trace {
+            Some(s) => TraceCtx::iter(s.as_ref()),
+            None => TraceCtx::off(),
+        };
         let mut price = |g: &ModelGraph| -> Option<f64> {
-            self.submit_graphs(&[GraphRequest {
-                device: req.device.clone(),
-                graph: g.clone(),
-                kind: req.kind,
-                streams: req.sim.streams,
-            }])
-            .ok()?
-            .pop()?
+            // Per-call op-cache delta: the engine's hit/miss counters are
+            // process-wide atomics, so the probe aggregates what *this*
+            // pricing batch contributed (racy only if another thread
+            // submits concurrently — then probes blur across callers but
+            // totals stay exact).
+            let before = tc.on().then(|| {
+                use std::sync::atomic::Ordering::Relaxed;
+                (self.metrics.cache_hits.load(Relaxed), self.metrics.cache_misses.load(Relaxed))
+            });
+            let v = self
+                .submit_graphs(&[GraphRequest {
+                    device: req.device.clone(),
+                    graph: g.clone(),
+                    kind: req.kind,
+                    streams: req.sim.streams,
+                }])
+                .ok()
+                .and_then(|mut r| r.pop())
+                .flatten();
+            if let Some((h0, m0)) = before {
+                use std::sync::atomic::Ordering::Relaxed;
+                let dh = self.metrics.cache_hits.load(Relaxed).saturating_sub(h0);
+                let dm = self.metrics.cache_misses.load(Relaxed).saturating_sub(m0);
+                if dh > 0 {
+                    tc.emit(|| TraceEvent::CacheProbe {
+                        cache: "coordinator-op",
+                        hit: true,
+                        count: dh,
+                    });
+                }
+                if dm > 0 {
+                    tc.emit(|| TraceEvent::CacheProbe {
+                        cache: "coordinator-op",
+                        hit: false,
+                        count: dm,
+                    });
+                }
+            }
+            v
         };
         // The pricing path is a cache-key dimension (scalar vs batched
         // PJRT agree only approximately), exactly as in PredictionCache.
@@ -748,7 +829,7 @@ impl<'rt> Coordinator<'rt> {
             cache: req.iter_cache.then_some(&icache),
             passes: None,
         };
-        crate::serving::simulate_hot(&req.config, &req.trace, &req.sim, &hp, &mut price)
+        crate::serving::simulate_traced(&req.config, &req.trace, &req.sim, &hp, &tc, &mut price)
             .map_err(|e| anyhow!("serving simulation: {e}"))
     }
 
@@ -764,15 +845,46 @@ impl<'rt> Coordinator<'rt> {
         req: &SpeculativeServingRequest,
     ) -> Result<crate::serving::ServingReport> {
         self.resolve_device(&req.device)?; // reject unknown devices early
+        let tc = match &self.trace {
+            Some(s) => TraceCtx::iter(s.as_ref()),
+            None => TraceCtx::off(),
+        };
         let mut price = |g: &ModelGraph| -> Option<f64> {
-            self.submit_graphs(&[GraphRequest {
-                device: req.device.clone(),
-                graph: g.clone(),
-                kind: req.kind,
-                streams: req.sim.streams,
-            }])
-            .ok()?
-            .pop()?
+            // Same per-call op-cache delta probe as simulate_serving.
+            let before = tc.on().then(|| {
+                use std::sync::atomic::Ordering::Relaxed;
+                (self.metrics.cache_hits.load(Relaxed), self.metrics.cache_misses.load(Relaxed))
+            });
+            let v = self
+                .submit_graphs(&[GraphRequest {
+                    device: req.device.clone(),
+                    graph: g.clone(),
+                    kind: req.kind,
+                    streams: req.sim.streams,
+                }])
+                .ok()
+                .and_then(|mut r| r.pop())
+                .flatten();
+            if let Some((h0, m0)) = before {
+                use std::sync::atomic::Ordering::Relaxed;
+                let dh = self.metrics.cache_hits.load(Relaxed).saturating_sub(h0);
+                let dm = self.metrics.cache_misses.load(Relaxed).saturating_sub(m0);
+                if dh > 0 {
+                    tc.emit(|| TraceEvent::CacheProbe {
+                        cache: "coordinator-op",
+                        hit: true,
+                        count: dh,
+                    });
+                }
+                if dm > 0 {
+                    tc.emit(|| TraceEvent::CacheProbe {
+                        cache: "coordinator-op",
+                        hit: false,
+                        count: dm,
+                    });
+                }
+            }
+            v
         };
         let lane = match req.kind {
             PredictorKind::Pm2Lat => 1,
@@ -794,13 +906,14 @@ impl<'rt> Coordinator<'rt> {
             cache: req.iter_cache.then_some(&icache),
             passes: None,
         };
-        crate::serving::simulate_speculative_hot(
+        crate::serving::simulate_speculative_traced(
             &req.spec,
             &req.trace,
             &req.sim,
             &hp,
             draft_scope,
             req.seed,
+            &tc,
             &mut price,
         )
         .map_err(|e| anyhow!("speculative serving simulation: {e}"))

@@ -16,7 +16,9 @@
 //!   continuous-batching serving simulator — paged KV cache, mixed
 //!   prefill+decode iterations, cluster-level SLO curves ([`serving`]) —
 //!   speculative decoding as a first-class workload ([`spec_decode`]),
-//!   and the two applications from §IV-D ([`apps`]).
+//!   the zero-cost-when-off observability layer — structured tracing,
+//!   Chrome-trace export, unified metrics ([`obs`]) — and the two
+//!   applications from §IV-D ([`apps`]).
 //!
 //! See `README.md` for the quickstart and CLI tour, and
 //! `docs/ARCHITECTURE.md` for the end-to-end dataflow (graph IR → passes
@@ -35,6 +37,7 @@ pub mod gpusim;
 pub mod graph;
 pub mod models;
 pub mod neusight;
+pub mod obs;
 pub mod ops;
 pub mod pm2lat;
 pub mod profiler;

@@ -19,7 +19,8 @@
 //!                [--max-batch 16] [--chunk 512] [--block-tokens 16] \
 //!                [--tp 2] [--sweep] [--slo-ttft-ms 500] [--service] [--smoke] \
 //!                [--no-iter-cache] [--cache-ttl-s 60] [--cache-mem-mb 256] \
-//!                [--spec-k 4] [--accept 0.8] [--spec-draft qwen3-0.6b]
+//!                [--spec-k 4] [--accept 0.8] [--spec-draft qwen3-0.6b] \
+//!                [--trace-out trace.json] [--trace-level iter|kernel]
 //! ```
 
 use anyhow::{anyhow, Result};
@@ -38,6 +39,7 @@ use pm2lat::gpusim::Gpu;
 use pm2lat::graph::{AttentionFusion, CausalMaskPropagation, Pass, PassCtx};
 use pm2lat::models::transformer::GenerationSpec;
 use pm2lat::models::{runner, zoo};
+use pm2lat::obs::{chrome_trace, RingRecorder, TraceCtx, TraceEvent, TraceLevel};
 use pm2lat::ops::{DType, GemmOp, Op};
 use pm2lat::pm2lat::Pm2Lat;
 use pm2lat::profiler::ProfileSpec;
@@ -441,6 +443,26 @@ fn serve_sim(args: &Args) -> Result<()> {
     }
 
     let service = args.flag("service");
+    // Observability: --trace-out records the main replay into a bounded
+    // ring and writes a Chrome-trace JSON for Perfetto; --trace-level
+    // kernel adds per-node pricing records (direct path only — with
+    // --service the coordinator prices ops remotely, so there is no
+    // per-kernel stream to tap). See docs/OBSERVABILITY.md.
+    let trace_out = args.opt("trace-out").map(str::to_string);
+    let trace_level = match args.opt("trace-level") {
+        Some(s) => TraceLevel::parse(s)
+            .ok_or_else(|| anyhow!("bad --trace-level `{s}` (expected iter or kernel)"))?,
+        None => TraceLevel::Iter,
+    };
+    if trace_out.is_none() && args.opt("trace-level").is_some() {
+        return Err(anyhow!("--trace-level has no effect without --trace-out"));
+    }
+    if trace_level == TraceLevel::Kernel && service {
+        return Err(anyhow!(
+            "--trace-level kernel needs the direct predictor path (drop --service)"
+        ));
+    }
+    let recorder = trace_out.as_ref().map(|_| RingRecorder::default_sized());
     let mut gpu = Gpu::by_name(&device).ok_or_else(|| anyhow!("unknown device"))?;
     let profile = if smoke { ProfileSpec::quick() } else { ProfileSpec::experiment() };
     // Every dtype the run prices: the target's, plus the draft's when it
@@ -527,6 +549,11 @@ fn serve_sim(args: &Args) -> Result<()> {
             None
         }
     };
+    // Kernel-level tracing taps per-node prices only during the *main*
+    // replay — solo calibration, the spec baseline, sweeps, and the SLO
+    // search all price through this same closure, and their kernels
+    // would otherwise pollute the timeline.
+    let kernel_trace_on = std::cell::Cell::new(false);
     let mut base_price = |g: &pm2lat::graph::ModelGraph| -> Option<f64> {
         match &coordinator {
             Some(c) => c
@@ -541,10 +568,22 @@ fn serve_sim(args: &Args) -> Result<()> {
             // Large ragged iteration graphs fan per-node prediction
             // across the worker pool (bit-identical to the serial path;
             // small graphs stay serial — see `predict_graph_pooled`).
-            None => pl
-                .as_ref()
-                .expect("direct path built when --service is absent")
-                .predict_graph_pooled(&gpu, g, streams, pm2lat::util::pool::default_threads()),
+            None => {
+                let p = pl.as_ref().expect("direct path built when --service is absent");
+                match &recorder {
+                    // Traced pricing is serial but bit-identical; the
+                    // pooled fan-out is only skipped while the tap is on.
+                    Some(r) if kernel_trace_on.get() => {
+                        p.predict_graph_traced(&gpu, g, streams, r)
+                    }
+                    _ => p.predict_graph_pooled(
+                        &gpu,
+                        g,
+                        streams,
+                        pm2lat::util::pool::default_threads(),
+                    ),
+                }
+            }
         }
     };
     // The iteration hot path: memoized whole-iteration pricing (on by
@@ -619,6 +658,14 @@ fn serve_sim(args: &Args) -> Result<()> {
         );
     }
     println!("  solo request       : TTFT {:.2} ms, E2E {:.2} ms", solo_ttft * 1e3, solo_e2e * 1e3);
+    // Only the headline replay is traced: the solo calibration above and
+    // the baseline/sweep/SLO runs below stay silent, so the span count in
+    // the trace equals the report's iteration count exactly.
+    let tc = match &recorder {
+        Some(r) => TraceCtx::with_level(r, trace_level),
+        None => TraceCtx::off(),
+    };
+    kernel_trace_on.set(trace_level == TraceLevel::Kernel);
     let report = match &spec {
         Some(s) => {
             // Draft iterations memoize under their own model scope; both
@@ -626,14 +673,54 @@ fn serve_sim(args: &Args) -> Result<()> {
             let draft_scope = serving::IterScope::new(&s.draft, &device, tp, streams)
                 .with_lane(if service { 2 } else { 0 })
                 .with_pager(&sim.pager);
-            serving::simulate_speculative_hot(s, &trace, &sim, &hp, draft_scope, seed, &mut base_price)
+            serving::simulate_speculative_traced(
+                s,
+                &trace,
+                &sim,
+                &hp,
+                draft_scope,
+                seed,
+                &tc,
+                &mut base_price,
+            )
         }
-        None => serving::simulate_hot(&cfg, &trace, &sim, &hp, &mut base_price),
+        None => serving::simulate_traced(&cfg, &trace, &sim, &hp, &tc, &mut base_price),
     }
     .map_err(|e| anyhow!("serve-sim: {e}"))?;
+    kernel_trace_on.set(false);
     println!("  {}", report.summary());
     if report.kv_leaked_blocks != 0 {
         return Err(anyhow!("KV pager leaked {} blocks", report.kv_leaked_blocks));
+    }
+    if let (Some(path), Some(rec)) = (&trace_out, &recorder) {
+        let events = rec.events();
+        let spans = events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::IterationSpan { .. }))
+            .count();
+        if rec.dropped() > 0 {
+            // The ring kept the newest events; the head of the run is
+            // gone, so the span/iteration invariant no longer applies.
+            println!(
+                "  trace              : ring overflowed — kept the last {} events, \
+                 dropped {}",
+                events.len(),
+                rec.dropped()
+            );
+        } else if spans != report.iterations {
+            return Err(anyhow!(
+                "trace carries {spans} iteration spans but the report counted {} \
+                 iterations",
+                report.iterations
+            ));
+        }
+        std::fs::write(path, chrome_trace(&events).to_string())
+            .map_err(|e| anyhow!("--trace-out {path}: {e}"))?;
+        println!(
+            "  trace              : {} events, {spans} iteration spans (level {}) → {path}",
+            events.len(),
+            trace_level.name(),
+        );
     }
     if let Some(s) = &spec {
         // The non-speculative baseline replays the *same* trace through

@@ -1,0 +1,397 @@
+//! Chrome-trace (Trace Event Format) exporter: renders a recorded event
+//! stream as a JSON timeline loadable in Perfetto
+//! (<https://ui.perfetto.dev>) or `chrome://tracing`.
+//!
+//! Track layout (one process, pid 0):
+//!
+//! * tid 0 `iterations` — one `B`/`E` duration pair per
+//!   [`TraceEvent::IterationSpan`], with batch composition in `args`.
+//! * tid 1 `draft` — the draft-model share of each speculative
+//!   iteration as a sub-span, plus one instant per
+//!   [`TraceEvent::SpecRound`].
+//! * tid 2 `kernels` — kernel-level records laid out sequentially from
+//!   their iteration's start (the predictor prices nodes, it does not
+//!   schedule them on a wall clock; the sequential layout shows cost
+//!   composition, not true overlap).
+//! * tid 16+N `slot N` — per-slot occupancy: which request each batch
+//!   slot held during each iteration.
+//! * counter tracks — `kv blocks in use` stepped at every
+//!   [`TraceEvent::KvEvent`], and one `cache <name>` track per cache
+//!   with cumulative hit/miss totals stepped at iteration boundaries.
+//! * instants — preemptions and copy-on-write forks, pinned to the
+//!   iteration track.
+//!
+//! Timestamps are virtual-time microseconds (the simulator's seconds ×
+//! 1e6). Untimestamped records (kernels, cache probes) are attributed
+//! to the next `IterationSpan` emitted after them — the simulator emits
+//! the span *after* pricing, so "next span" is exactly the iteration
+//! that caused them. `docs/OBSERVABILITY.md` walks through reading the
+//! result.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::event::{KvEventKind, TraceEvent};
+use crate::util::json::Json;
+
+const PID: usize = 0;
+const TID_ITER: usize = 0;
+const TID_DRAFT: usize = 1;
+const TID_KERNEL: usize = 2;
+/// First per-slot track; slot `i` renders on tid `TID_SLOT0 + i`.
+const TID_SLOT0: usize = 16;
+
+fn us(s: f64) -> f64 {
+    s * 1e6
+}
+
+fn event(name: &str, ph: &str, tid: usize, ts_us: f64, args: Option<Json>) -> Json {
+    let mut pairs = vec![
+        ("name", Json::from(name)),
+        ("ph", Json::from(ph)),
+        ("pid", Json::from(PID)),
+        ("tid", Json::from(tid)),
+        ("ts", Json::Num(ts_us)),
+    ];
+    if let Some(a) = args {
+        pairs.push(("args", a));
+    }
+    Json::obj(pairs)
+}
+
+fn instant(name: &str, tid: usize, ts_us: f64, args: Option<Json>) -> Json {
+    let mut pairs = vec![
+        ("name", Json::from(name)),
+        ("ph", Json::from("i")),
+        ("s", Json::from("t")),
+        ("pid", Json::from(PID)),
+        ("tid", Json::from(tid)),
+        ("ts", Json::Num(ts_us)),
+    ];
+    if let Some(a) = args {
+        pairs.push(("args", a));
+    }
+    Json::obj(pairs)
+}
+
+fn counter(name: &str, ts_us: f64, args: Json) -> Json {
+    Json::obj(vec![
+        ("name", Json::from(name)),
+        ("ph", Json::from("C")),
+        ("pid", Json::from(PID)),
+        ("tid", Json::from(TID_ITER)),
+        ("ts", Json::Num(ts_us)),
+        ("args", args),
+    ])
+}
+
+fn thread_name(tid: usize, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::from("thread_name")),
+        ("ph", Json::from("M")),
+        ("pid", Json::from(PID)),
+        ("tid", Json::from(tid)),
+        ("args", Json::obj(vec![("name", Json::from(name))])),
+    ])
+}
+
+/// Render a recorded stream as `{"traceEvents": [...],
+/// "displayTimeUnit": "ms"}`. Pure function of the events — safe to
+/// call on a partial (ring-truncated) stream, though whole-run
+/// invariants then only hold for the recorded suffix.
+pub fn chrome_trace(events: &[TraceEvent]) -> Json {
+    let mut out: Vec<Json> = vec![
+        Json::obj(vec![
+            ("name", Json::from("process_name")),
+            ("ph", Json::from("M")),
+            ("pid", Json::from(PID)),
+            ("args", Json::obj(vec![("name", Json::from("pm2lat serve-sim"))])),
+        ]),
+        thread_name(TID_ITER, "iterations"),
+    ];
+    let mut named: BTreeSet<usize> = BTreeSet::new();
+    named.insert(TID_ITER);
+
+    // Untimestamped records buffered until the span that owns them.
+    // (op, node, dur_s, bytes-if-collective)
+    let mut pending_kernels: Vec<(&'static str, usize, f64, Option<f64>)> = Vec::new();
+    // cache name → cumulative (hits, misses); re-emitted as counter
+    // samples at the next iteration boundary after any probe.
+    let mut cache_totals: BTreeMap<&'static str, (u64, u64)> = BTreeMap::new();
+    let mut cache_dirty = false;
+    let mut last_end_us = 0.0f64;
+
+    let flush_caches = |out: &mut Vec<Json>, totals: &BTreeMap<&str, (u64, u64)>, ts: f64| {
+        for (cache, &(hits, misses)) in totals {
+            out.push(counter(
+                &format!("cache {cache}"),
+                ts,
+                Json::obj(vec![
+                    ("hits", Json::Num(hits as f64)),
+                    ("misses", Json::Num(misses as f64)),
+                ]),
+            ));
+        }
+    };
+    let lay_kernels = |out: &mut Vec<Json>,
+                           named: &mut BTreeSet<usize>,
+                           pending: &mut Vec<(&'static str, usize, f64, Option<f64>)>,
+                           from_us: f64| {
+        let mut t = from_us;
+        for (op, node, dur_s, bytes) in pending.drain(..) {
+            if named.insert(TID_KERNEL) {
+                out.push(thread_name(TID_KERNEL, "kernels"));
+            }
+            let mut args = vec![("node", Json::from(node))];
+            if let Some(b) = bytes {
+                args.push(("bytes", Json::Num(b)));
+            }
+            let end = t + us(dur_s);
+            out.push(event(op, "B", TID_KERNEL, t, Some(Json::obj(args))));
+            out.push(event(op, "E", TID_KERNEL, end, None));
+            t = end;
+        }
+    };
+
+    for ev in events {
+        match ev {
+            TraceEvent::KernelPriced { node, op, dur_s } => {
+                pending_kernels.push((op, *node, *dur_s, None));
+            }
+            TraceEvent::CommPriced { node, op, bytes, dur_s } => {
+                pending_kernels.push((op, *node, *dur_s, Some(*bytes)));
+            }
+            TraceEvent::CacheProbe { cache, hit, count } => {
+                let entry = cache_totals.entry(cache).or_insert((0, 0));
+                if *hit {
+                    entry.0 += count;
+                } else {
+                    entry.1 += count;
+                }
+                cache_dirty = true;
+            }
+            TraceEvent::IterationSpan {
+                iter,
+                start_s,
+                dur_s,
+                draft_dur_s,
+                batch,
+                prefill_slots,
+                decode_slots,
+                q_tokens,
+                kv_tokens,
+                slot_reqs,
+            } => {
+                let start_us = us(*start_s);
+                let end_us = us(*start_s + *dur_s);
+                let name = format!("iter {iter}");
+                let args = Json::obj(vec![
+                    ("batch", Json::from(*batch)),
+                    ("prefill_slots", Json::from(*prefill_slots)),
+                    ("decode_slots", Json::from(*decode_slots)),
+                    ("q_tokens", Json::from(*q_tokens)),
+                    ("kv_tokens", Json::from(*kv_tokens)),
+                ]);
+                out.push(event(&name, "B", TID_ITER, start_us, Some(args)));
+                out.push(event(&name, "E", TID_ITER, end_us, None));
+                if *draft_dur_s > 0.0 {
+                    if named.insert(TID_DRAFT) {
+                        out.push(thread_name(TID_DRAFT, "draft"));
+                    }
+                    out.push(event("draft", "B", TID_DRAFT, start_us, None));
+                    out.push(event("draft", "E", TID_DRAFT, us(*start_s + *draft_dur_s), None));
+                }
+                lay_kernels(&mut out, &mut named, &mut pending_kernels, start_us);
+                if cache_dirty {
+                    flush_caches(&mut out, &cache_totals, start_us);
+                    cache_dirty = false;
+                }
+                for (i, &req) in slot_reqs.iter().enumerate() {
+                    let tid = TID_SLOT0 + i;
+                    if named.insert(tid) {
+                        out.push(thread_name(tid, &format!("slot {i}")));
+                    }
+                    let slot_name = format!("req {req}");
+                    out.push(event(&slot_name, "B", tid, start_us, None));
+                    out.push(event(&slot_name, "E", tid, end_us, None));
+                }
+                last_end_us = end_us;
+            }
+            TraceEvent::KvEvent { t_s, kind, request, delta_blocks, tokens, blocks_in_use } => {
+                let ts = us(*t_s);
+                out.push(counter(
+                    "kv blocks in use",
+                    ts,
+                    Json::obj(vec![("blocks", Json::from(*blocks_in_use))]),
+                ));
+                let marker = match kind {
+                    KvEventKind::Preempt => Some("preempt"),
+                    KvEventKind::Fork => Some("cow fork"),
+                    _ => None,
+                };
+                if let Some(what) = marker {
+                    out.push(instant(
+                        &format!("{what} req {request}"),
+                        TID_ITER,
+                        ts,
+                        Some(Json::obj(vec![
+                            ("delta_blocks", Json::Num(*delta_blocks as f64)),
+                            ("tokens", Json::from(*tokens)),
+                        ])),
+                    ));
+                }
+            }
+            TraceEvent::SpecRound { t_s, request, round, proposed, accepted, committed } => {
+                if named.insert(TID_DRAFT) {
+                    out.push(thread_name(TID_DRAFT, "draft"));
+                }
+                out.push(instant(
+                    &format!("spec round {round}"),
+                    TID_DRAFT,
+                    us(*t_s),
+                    Some(Json::obj(vec![
+                        ("request", Json::from(*request)),
+                        ("proposed", Json::from(*proposed)),
+                        ("accepted", Json::from(*accepted)),
+                        ("committed", Json::from(*committed)),
+                    ])),
+                ));
+            }
+        }
+    }
+    // A truncated stream can end with records whose owning span never
+    // arrived; pin them after the last rendered iteration rather than
+    // dropping them.
+    lay_kernels(&mut out, &mut named, &mut pending_kernels, last_end_us);
+    if cache_dirty {
+        flush_caches(&mut out, &cache_totals, last_end_us);
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::from("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::CacheProbe { cache: "iter-memo", hit: false, count: 1 },
+            TraceEvent::KernelPriced { node: 0, op: "gemm", dur_s: 2e-6 },
+            TraceEvent::CommPriced { node: 1, op: "AllReduce", bytes: 1024.0, dur_s: 1e-6 },
+            TraceEvent::KvEvent {
+                t_s: 0.0,
+                kind: KvEventKind::Grow,
+                request: 0,
+                delta_blocks: 2,
+                tokens: 32,
+                blocks_in_use: 2,
+            },
+            TraceEvent::IterationSpan {
+                iter: 0,
+                start_s: 0.0,
+                dur_s: 1e-3,
+                draft_dur_s: 2e-4,
+                batch: 2,
+                prefill_slots: 1,
+                decode_slots: 1,
+                q_tokens: 33,
+                kv_tokens: 64,
+                slot_reqs: vec![0, 1],
+            },
+            TraceEvent::SpecRound {
+                t_s: 1e-3,
+                request: 1,
+                round: 1,
+                proposed: 4,
+                accepted: 2,
+                committed: 3,
+            },
+            TraceEvent::KvEvent {
+                t_s: 1e-3,
+                kind: KvEventKind::Release,
+                request: 0,
+                delta_blocks: -2,
+                tokens: 0,
+                blocks_in_use: 0,
+            },
+        ]
+    }
+
+    fn events_arr(j: &Json) -> &[Json] {
+        j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array")
+    }
+
+    #[test]
+    fn export_is_valid_json_with_balanced_spans() {
+        let j = chrome_trace(&sample_events());
+        let text = j.to_string();
+        let re = Json::parse(&text).expect("exported trace parses");
+        assert_eq!(re, j);
+
+        // Per-(pid, tid) B/E stack discipline: depth never negative,
+        // every B closed.
+        let mut depth: BTreeMap<(usize, usize), i64> = BTreeMap::new();
+        let mut b_count = 0;
+        for ev in events_arr(&j) {
+            let ph = ev.get("ph").and_then(Json::as_str).unwrap();
+            let key = (
+                ev.get("pid").and_then(Json::as_usize).unwrap_or(0),
+                ev.get("tid").and_then(Json::as_usize).unwrap_or(0),
+            );
+            match ph {
+                "B" => {
+                    b_count += 1;
+                    *depth.entry(key).or_insert(0) += 1;
+                }
+                "E" => {
+                    let d = depth.entry(key).or_insert(0);
+                    *d -= 1;
+                    assert!(*d >= 0, "E without B on {key:?}");
+                }
+                _ => {}
+            }
+        }
+        assert!(b_count > 0);
+        assert!(depth.values().all(|&d| d == 0), "unbalanced spans: {depth:?}");
+    }
+
+    #[test]
+    fn export_has_counter_slot_and_metadata_tracks() {
+        let j = chrome_trace(&sample_events());
+        let evs = events_arr(&j);
+        let phs: Vec<&str> =
+            evs.iter().filter_map(|e| e.get("ph").and_then(Json::as_str)).collect();
+        assert!(phs.contains(&"C"), "counter samples missing");
+        assert!(phs.contains(&"M"), "metadata missing");
+        assert!(phs.contains(&"i"), "instants missing");
+        // Both declared slot tracks got named and populated.
+        let names: Vec<&str> =
+            evs.iter().filter_map(|e| e.get("name").and_then(Json::as_str)).collect();
+        assert!(names.contains(&"req 0") && names.contains(&"req 1"));
+        assert!(names.contains(&"kv blocks in use"));
+        assert!(names.contains(&"cache iter-memo"));
+        assert!(names.contains(&"AllReduce"));
+    }
+
+    #[test]
+    fn kernels_lay_out_sequentially_inside_their_iteration() {
+        let j = chrome_trace(&sample_events());
+        let evs = events_arr(&j);
+        let kernel_b: Vec<f64> = evs
+            .iter()
+            .filter(|e| {
+                e.get("tid").and_then(Json::as_usize) == Some(TID_KERNEL)
+                    && e.get("ph").and_then(Json::as_str) == Some("B")
+            })
+            .filter_map(|e| e.get("ts").and_then(Json::as_f64))
+            .collect();
+        assert_eq!(kernel_b.len(), 2);
+        // First kernel starts at the iteration start (0µs); the second
+        // starts where the first ended (2µs).
+        assert_eq!(kernel_b[0], 0.0);
+        assert!((kernel_b[1] - 2.0).abs() < 1e-9, "{kernel_b:?}");
+    }
+}

@@ -1,0 +1,335 @@
+//! Typed trace records — the event vocabulary of the observability
+//! layer.
+//!
+//! Every record is a plain value: producers construct them behind a
+//! [`crate::obs::TraceCtx`] check (so the off path never even builds
+//! one), sinks serialize them with [`TraceEvent::to_json`], and the
+//! Chrome-trace exporter ([`crate::obs::chrome_trace`]) lays them out on
+//! a timeline. Timestamps are the serving simulator's *virtual* seconds
+//! — the same clock `ServingReport::makespan_s` reports — not wall
+//! time; kernel- and cache-level records carry no timestamp of their own
+//! and inherit the enclosing iteration's (see the field docs).
+//!
+//! The full field-by-field schema, with worked examples, lives in
+//! `docs/OBSERVABILITY.md`.
+
+use crate::util::json::Json;
+
+/// Trace granularity, as selected by `serve-sim --trace-level`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceLevel {
+    /// Iteration spans, KV events, speculative rounds, cache probes —
+    /// the serving-engine view. One event per scheduler decision;
+    /// bounded by the iteration count.
+    Iter,
+    /// Everything in [`TraceLevel::Iter`] plus one
+    /// [`TraceEvent::KernelPriced`] / [`TraceEvent::CommPriced`] per
+    /// graph node actually priced — the kernel-band view. Memoized
+    /// iterations skip pricing entirely, so kernel events appear only on
+    /// memo misses (run with the iteration cache off for a complete
+    /// kernel timeline).
+    Kernel,
+}
+
+impl TraceLevel {
+    pub fn parse(s: &str) -> Option<TraceLevel> {
+        match s {
+            "iter" => Some(TraceLevel::Iter),
+            "kernel" => Some(TraceLevel::Kernel),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceLevel::Iter => "iter",
+            TraceLevel::Kernel => "kernel",
+        }
+    }
+}
+
+/// What happened to a request's KV allocation. Block deltas are signed
+/// physical draws/returns against the free list; refcount-only moves
+/// (sharing) are zero-delta so the running sum of deltas always equals
+/// the pager's `blocks_in_use` — the trace-side mirror of
+/// `KvPager::audit`'s conservation invariant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvEventKind {
+    /// Blocks drawn to cover a grown context (prefill chunk, decode
+    /// append, or a speculative verification window).
+    Grow,
+    /// A shared boundary block was copy-on-write forked by a writer
+    /// while peers still referenced it. The drawn block is accounted by
+    /// the enclosing [`KvEventKind::Grow`]; this event is the marker.
+    Fork,
+    /// Speculative rollback: rejected draft tokens' KV dropped from the
+    /// tail (`KvPager::truncate`).
+    Truncate,
+    /// Recompute-preemption: the victim's blocks released, the request
+    /// re-queued to re-prefill.
+    Preempt,
+    /// Completion: the request's whole allocation released.
+    Release,
+    /// Admission-time prefix mapping: registered template blocks bound
+    /// by refcount, zero free-list draw.
+    MapPrefix,
+}
+
+impl KvEventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvEventKind::Grow => "grow",
+            KvEventKind::Fork => "fork",
+            KvEventKind::Truncate => "truncate",
+            KvEventKind::Preempt => "preempt",
+            KvEventKind::Release => "release",
+            KvEventKind::MapPrefix => "map_prefix",
+        }
+    }
+}
+
+/// One structured trace record. See the variant docs for the emission
+/// site and `docs/OBSERVABILITY.md` for the operator-facing schema.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// One discrete-event simulator iteration: exactly one of these per
+    /// counted iteration (`ServingReport::iterations`), draft passes
+    /// folded in via `draft_dur_s`. Emitted by `simulate_slots` after
+    /// pricing, so any kernel/cache records since the previous span
+    /// belong to this iteration.
+    IterationSpan {
+        /// 0-based iteration ordinal.
+        iter: usize,
+        /// Virtual time the iteration started executing.
+        start_s: f64,
+        /// Iteration latency (draft + target under speculation).
+        dur_s: f64,
+        /// Share of `dur_s` spent on draft-model passes (0 when not
+        /// speculating).
+        draft_dur_s: f64,
+        /// Sequences in the ragged batch.
+        batch: usize,
+        /// Slots still prefilling (chunked prompt ingestion).
+        prefill_slots: usize,
+        /// Slots decoding (or verifying, under speculation).
+        decode_slots: usize,
+        /// Σ query tokens across the batch.
+        q_tokens: usize,
+        /// Σ KV context tokens across the batch.
+        kv_tokens: usize,
+        /// Request id per slot, in batch order — the per-slot tracks of
+        /// the Chrome export.
+        slot_reqs: Vec<usize>,
+    },
+    /// One non-collective graph node priced (kernel level only). No
+    /// timestamp: kernels belong to the next [`TraceEvent::IterationSpan`]
+    /// emitted after them.
+    KernelPriced {
+        /// Node index within the iteration graph.
+        node: usize,
+        /// Op family tag (`gemm`, `util`, or the custom kernel's name).
+        op: &'static str,
+        /// Predicted kernel latency.
+        dur_s: f64,
+    },
+    /// One collective priced (kernel level only, tensor-parallel rank
+    /// graphs). Same timestamp convention as [`TraceEvent::KernelPriced`].
+    CommPriced {
+        node: usize,
+        /// Collective name (`AllReduce`, `AllGather`).
+        op: &'static str,
+        /// Payload bytes held per rank.
+        bytes: f64,
+        dur_s: f64,
+    },
+    /// One KV-pager mutation, timestamped with the virtual time of the
+    /// iteration that caused it.
+    KvEvent {
+        t_s: f64,
+        kind: KvEventKind,
+        /// Request id the allocation belongs to.
+        request: usize,
+        /// Signed physical blocks drawn from (+) or returned to (−) the
+        /// free list. Zero for refcount-only moves.
+        delta_blocks: i64,
+        /// Context tokens materialized after the event (0 after a full
+        /// release).
+        tokens: usize,
+        /// Pager-wide physical blocks allocated after the event — the
+        /// KV-occupancy counter track.
+        blocks_in_use: usize,
+    },
+    /// One speculative verification round's outcome.
+    SpecRound {
+        t_s: f64,
+        request: usize,
+        /// 1-based round ordinal across the whole replay.
+        round: usize,
+        /// Draft tokens proposed (`k`).
+        proposed: usize,
+        /// Leading accepted run τ.
+        accepted: usize,
+        /// Tokens committed (`τ + 1`, capped at the remaining
+        /// generation).
+        committed: usize,
+    },
+    /// A cache consulted: the iteration-price memo (`iter-memo`) or the
+    /// coordinator's op cache (`coordinator-op`, aggregated per pricing
+    /// call via `count`). Untimestamped; attributed to the enclosing
+    /// iteration like kernel records.
+    CacheProbe {
+        /// Which cache: `iter-memo` | `coordinator-op`.
+        cache: &'static str,
+        hit: bool,
+        /// Probes this record stands for (1 for the memo; the per-batch
+        /// delta for the coordinator's op cache).
+        count: u64,
+    },
+}
+
+impl TraceEvent {
+    /// Stable record-type tag — the `"ev"` field of the NDJSON encoding.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::IterationSpan { .. } => "iteration",
+            TraceEvent::KernelPriced { .. } => "kernel",
+            TraceEvent::CommPriced { .. } => "comm",
+            TraceEvent::KvEvent { .. } => "kv",
+            TraceEvent::SpecRound { .. } => "spec_round",
+            TraceEvent::CacheProbe { .. } => "cache_probe",
+        }
+    }
+
+    /// One self-describing JSON object per record (the NDJSON sink
+    /// writes exactly this, one per line).
+    pub fn to_json(&self) -> Json {
+        match self {
+            TraceEvent::IterationSpan {
+                iter,
+                start_s,
+                dur_s,
+                draft_dur_s,
+                batch,
+                prefill_slots,
+                decode_slots,
+                q_tokens,
+                kv_tokens,
+                slot_reqs,
+            } => Json::obj(vec![
+                ("ev", Json::from(self.kind())),
+                ("iter", Json::from(*iter)),
+                ("start_s", Json::from(*start_s)),
+                ("dur_s", Json::from(*dur_s)),
+                ("draft_dur_s", Json::from(*draft_dur_s)),
+                ("batch", Json::from(*batch)),
+                ("prefill_slots", Json::from(*prefill_slots)),
+                ("decode_slots", Json::from(*decode_slots)),
+                ("q_tokens", Json::from(*q_tokens)),
+                ("kv_tokens", Json::from(*kv_tokens)),
+                (
+                    "slot_reqs",
+                    Json::Arr(slot_reqs.iter().map(|&r| Json::from(r)).collect()),
+                ),
+            ]),
+            TraceEvent::KernelPriced { node, op, dur_s } => Json::obj(vec![
+                ("ev", Json::from(self.kind())),
+                ("node", Json::from(*node)),
+                ("op", Json::from(*op)),
+                ("dur_s", Json::from(*dur_s)),
+            ]),
+            TraceEvent::CommPriced { node, op, bytes, dur_s } => Json::obj(vec![
+                ("ev", Json::from(self.kind())),
+                ("node", Json::from(*node)),
+                ("op", Json::from(*op)),
+                ("bytes", Json::from(*bytes)),
+                ("dur_s", Json::from(*dur_s)),
+            ]),
+            TraceEvent::KvEvent { t_s, kind, request, delta_blocks, tokens, blocks_in_use } => {
+                Json::obj(vec![
+                    ("ev", Json::from(self.kind())),
+                    ("t_s", Json::from(*t_s)),
+                    ("kind", Json::from(kind.name())),
+                    ("request", Json::from(*request)),
+                    ("delta_blocks", Json::Num(*delta_blocks as f64)),
+                    ("tokens", Json::from(*tokens)),
+                    ("blocks_in_use", Json::from(*blocks_in_use)),
+                ])
+            }
+            TraceEvent::SpecRound { t_s, request, round, proposed, accepted, committed } => {
+                Json::obj(vec![
+                    ("ev", Json::from(self.kind())),
+                    ("t_s", Json::from(*t_s)),
+                    ("request", Json::from(*request)),
+                    ("round", Json::from(*round)),
+                    ("proposed", Json::from(*proposed)),
+                    ("accepted", Json::from(*accepted)),
+                    ("committed", Json::from(*committed)),
+                ])
+            }
+            TraceEvent::CacheProbe { cache, hit, count } => Json::obj(vec![
+                ("ev", Json::from(self.kind())),
+                ("cache", Json::from(*cache)),
+                ("hit", Json::from(*hit)),
+                ("count", Json::Num(*count as f64)),
+            ]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_event_serializes_with_its_kind_tag() {
+        let events = [
+            TraceEvent::IterationSpan {
+                iter: 0,
+                start_s: 0.0,
+                dur_s: 1e-3,
+                draft_dur_s: 0.0,
+                batch: 2,
+                prefill_slots: 1,
+                decode_slots: 1,
+                q_tokens: 65,
+                kv_tokens: 192,
+                slot_reqs: vec![0, 1],
+            },
+            TraceEvent::KernelPriced { node: 3, op: "gemm", dur_s: 1e-6 },
+            TraceEvent::CommPriced { node: 4, op: "AllReduce", bytes: 4096.0, dur_s: 2e-6 },
+            TraceEvent::KvEvent {
+                t_s: 0.5,
+                kind: KvEventKind::Grow,
+                request: 7,
+                delta_blocks: 3,
+                tokens: 48,
+                blocks_in_use: 12,
+            },
+            TraceEvent::SpecRound {
+                t_s: 0.6,
+                request: 7,
+                round: 1,
+                proposed: 4,
+                accepted: 2,
+                committed: 3,
+            },
+            TraceEvent::CacheProbe { cache: "iter-memo", hit: true, count: 1 },
+        ];
+        for ev in &events {
+            let j = ev.to_json();
+            assert_eq!(j.get("ev").and_then(Json::as_str), Some(ev.kind()));
+            // Round-trips through the parser (the NDJSON line is valid).
+            let text = j.to_string();
+            assert_eq!(Json::parse(&text).expect("valid json"), j, "{text}");
+        }
+    }
+
+    #[test]
+    fn trace_level_parses_both_names_and_rejects_junk() {
+        assert_eq!(TraceLevel::parse("iter"), Some(TraceLevel::Iter));
+        assert_eq!(TraceLevel::parse("kernel"), Some(TraceLevel::Kernel));
+        assert_eq!(TraceLevel::parse("verbose"), None);
+        assert_eq!(TraceLevel::Iter.name(), "iter");
+        assert_eq!(TraceLevel::Kernel.name(), "kernel");
+    }
+}

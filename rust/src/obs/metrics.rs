@@ -1,0 +1,317 @@
+//! Unified metrics schema: one dotted-key namespace for the counters
+//! that used to live in three places (`ServingReport` fields,
+//! `Engine::service_summary()`, the pager's getters), plus the
+//! [`ReportBuilder`] that makes the registry the *only* way a
+//! `ServingReport` gets constructed — so no simulator path can silently
+//! zero a counter another path populates.
+//!
+//! Counters are integral occurrence counts (`u64`); gauges are values
+//! with physical units (seconds, blocks as capacities). Gauges hold the
+//! producer's `f64` bit pattern untouched, which is what lets the
+//! builder round-trip `makespan_s`/`gpu_busy_s` through the registry
+//! without perturbing the bit-for-bit identity the hot-path tests pin.
+//! Key constants live in [`keys`]; `docs/OBSERVABILITY.md` carries the
+//! operator-facing table.
+
+use std::collections::BTreeMap;
+
+use crate::serving::simulator::{RequestMetrics, ServingReport};
+use crate::util::json::Json;
+
+/// Canonical metric keys. Serving keys are filled by the simulator via
+/// [`ReportBuilder`]; `kv.*` by [`crate::serving::KvPager::fill_registry`];
+/// `service.*` by `Engine::metrics_registry`.
+pub mod keys {
+    // Serving loop (counters unless noted).
+    pub const ITERATIONS: &str = "serving.iterations";
+    pub const PREEMPTIONS: &str = "serving.preemptions";
+    pub const MAX_CONCURRENCY: &str = "serving.max_concurrency";
+    /// Gauge, seconds.
+    pub const MAKESPAN_S: &str = "serving.makespan_s";
+    /// Gauge, seconds.
+    pub const GPU_BUSY_S: &str = "serving.gpu_busy_s";
+
+    // KV pager.
+    pub const KV_CAPACITY_BLOCKS: &str = "kv.capacity_blocks";
+    pub const KV_PEAK_BLOCKS: &str = "kv.peak_blocks";
+    pub const KV_PEAK_LOGICAL_BLOCKS: &str = "kv.peak_logical_blocks";
+    pub const KV_BLOCKS_SAVED: &str = "kv.blocks_saved";
+    /// Blocks still allocated at end of run — any non-zero value is a
+    /// leak (`ServingReport::kv_leaked_blocks`).
+    pub const KV_LEAKED_BLOCKS: &str = "kv.leaked_blocks";
+    pub const KV_PREFIX_LOOKUPS: &str = "kv.prefix_lookups";
+    pub const KV_PREFIX_HITS: &str = "kv.prefix_hits";
+    pub const KV_COW_FORKS: &str = "kv.cow_forks";
+
+    // Speculative decoding.
+    pub const SPEC_ROUNDS: &str = "spec.rounds";
+    pub const SPEC_DRAFT_TOKENS: &str = "spec.draft_tokens";
+    pub const SPEC_ACCEPTED_TOKENS: &str = "spec.accepted_tokens";
+    /// Gauge, seconds.
+    pub const SPEC_DRAFT_BUSY_S: &str = "spec.draft_busy_s";
+
+    // Coordinator service (`Engine::metrics_registry`).
+    pub const SERVICE_REQUESTS: &str = "service.requests";
+    pub const SERVICE_BATCHES: &str = "service.batches";
+    pub const SERVICE_PJRT_CALLS: &str = "service.pjrt_calls";
+    pub const SERVICE_UNSUPPORTED: &str = "service.unsupported";
+    pub const SERVICE_BATCHER_ERRORS: &str = "service.batcher_errors";
+    pub const SERVICE_CACHE_HITS: &str = "service.cache.hits";
+    pub const SERVICE_CACHE_MISSES: &str = "service.cache.misses";
+    pub const SERVICE_CACHE_BATCHED_DEDUP: &str = "service.cache.batched_dedup";
+    pub const SERVICE_CACHE_SCALAR_DEDUP: &str = "service.cache.scalar_dedup";
+    pub const SERVICE_CACHE_ENTRIES: &str = "service.cache.entries";
+    pub const SERVICE_CACHE_CAPACITY: &str = "service.cache.capacity";
+    pub const SERVICE_CACHE_LRU_EVICTIONS: &str = "service.cache.lru_evictions";
+    pub const SERVICE_CACHE_TTL_EVICTIONS: &str = "service.cache.ttl_evictions";
+}
+
+/// Flat, sorted registry of `u64` counters and `f64` gauges under
+/// dotted keys. Cheap to build, deterministic to render (BTreeMap
+/// order), and schema-free by design: subsystems own their key
+/// constants in [`keys`].
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `by` to a counter (creating it at zero).
+    pub fn incr(&mut self, key: &str, by: u64) {
+        *self.counters.entry(key.to_string()).or_insert(0) += by;
+    }
+
+    /// Set a counter to an absolute value.
+    pub fn set(&mut self, key: &str, value: u64) {
+        self.counters.insert(key.to_string(), value);
+    }
+
+    /// Read a counter; missing keys read as 0.
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge. The `f64` is stored verbatim (no rounding), so
+    /// reading it back is bit-exact.
+    pub fn set_gauge(&mut self, key: &str, value: f64) {
+        self.gauges.insert(key.to_string(), value);
+    }
+
+    /// Read a gauge; missing keys read as 0.0.
+    pub fn gauge(&self, key: &str) -> f64 {
+        self.gauges.get(key).copied().unwrap_or(0.0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty()
+    }
+
+    /// `{"counters": {...}, "gauges": {...}}` — keys sorted, suitable
+    /// for diffing across runs.
+    pub fn to_json(&self) -> Json {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+            .collect();
+        let gauges = self
+            .gauges
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Num(v)))
+            .collect();
+        Json::obj(vec![("counters", Json::Obj(counters)), ("gauges", Json::Obj(gauges))])
+    }
+
+    /// Human-readable `key = value` lines, counters then gauges, sorted.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        out
+    }
+}
+
+/// The single construction site for [`ServingReport`].
+///
+/// Every simulator path funnels its totals into the registry under the
+/// [`keys`] schema and calls [`ReportBuilder::build`]; the report's
+/// fields are then *read out of* the registry, so a path that forgets a
+/// counter yields that counter's zero in both the registry and the
+/// report — visibly, not divergently, and a future field added here is
+/// added for every path at once.
+#[derive(Debug, Default)]
+pub struct ReportBuilder {
+    reg: MetricsRegistry,
+    completed: Vec<RequestMetrics>,
+    kv_timeline: Vec<(f64, f64)>,
+}
+
+impl ReportBuilder {
+    pub fn new() -> ReportBuilder {
+        ReportBuilder::default()
+    }
+
+    pub fn registry_mut(&mut self) -> &mut MetricsRegistry {
+        &mut self.reg
+    }
+
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.reg
+    }
+
+    /// Pull every pager-owned `kv.*` key from the live pager (delegates
+    /// to [`crate::serving::KvPager::fill_registry`]).
+    pub fn absorb_pager(&mut self, pager: &crate::serving::KvPager) {
+        pager.fill_registry(&mut self.reg);
+    }
+
+    pub fn with_completed(mut self, completed: Vec<RequestMetrics>) -> ReportBuilder {
+        self.completed = completed;
+        self
+    }
+
+    pub fn with_kv_timeline(mut self, kv_timeline: Vec<(f64, f64)>) -> ReportBuilder {
+        self.kv_timeline = kv_timeline;
+        self
+    }
+
+    /// Materialize the report from the registry. Gauges come back with
+    /// the exact bits `set_gauge` stored; counters narrow from `u64` to
+    /// the report's `usize`/`u64` fields.
+    pub fn build(self) -> ServingReport {
+        let r = &self.reg;
+        ServingReport {
+            completed: self.completed,
+            iterations: r.counter(keys::ITERATIONS) as usize,
+            makespan_s: r.gauge(keys::MAKESPAN_S),
+            gpu_busy_s: r.gauge(keys::GPU_BUSY_S),
+            max_concurrency: r.counter(keys::MAX_CONCURRENCY) as usize,
+            preemptions: r.counter(keys::PREEMPTIONS) as usize,
+            peak_kv_blocks: r.counter(keys::KV_PEAK_BLOCKS) as usize,
+            kv_capacity_blocks: r.counter(keys::KV_CAPACITY_BLOCKS) as usize,
+            kv_leaked_blocks: r.counter(keys::KV_LEAKED_BLOCKS) as usize,
+            kv_timeline: self.kv_timeline,
+            prefix_lookups: r.counter(keys::KV_PREFIX_LOOKUPS),
+            prefix_hits: r.counter(keys::KV_PREFIX_HITS),
+            cow_forks: r.counter(keys::KV_COW_FORKS),
+            peak_logical_kv_blocks: r.counter(keys::KV_PEAK_LOGICAL_BLOCKS) as usize,
+            kv_blocks_saved: r.counter(keys::KV_BLOCKS_SAVED) as usize,
+            spec_rounds: r.counter(keys::SPEC_ROUNDS) as usize,
+            spec_draft_tokens: r.counter(keys::SPEC_DRAFT_TOKENS) as usize,
+            spec_accepted_tokens: r.counter(keys::SPEC_ACCEPTED_TOKENS) as usize,
+            spec_draft_busy_s: r.gauge(keys::SPEC_DRAFT_BUSY_S),
+        }
+    }
+}
+
+impl ServingReport {
+    /// Project this report back into the unified metrics schema —
+    /// the inverse of [`ReportBuilder::build`] (minus per-request
+    /// metrics and the timeline, which are not scalar).
+    pub fn metrics_registry(&self) -> MetricsRegistry {
+        let mut reg = MetricsRegistry::new();
+        reg.set(keys::ITERATIONS, self.iterations as u64);
+        reg.set(keys::PREEMPTIONS, self.preemptions as u64);
+        reg.set(keys::MAX_CONCURRENCY, self.max_concurrency as u64);
+        reg.set_gauge(keys::MAKESPAN_S, self.makespan_s);
+        reg.set_gauge(keys::GPU_BUSY_S, self.gpu_busy_s);
+        reg.set(keys::KV_CAPACITY_BLOCKS, self.kv_capacity_blocks as u64);
+        reg.set(keys::KV_PEAK_BLOCKS, self.peak_kv_blocks as u64);
+        reg.set(keys::KV_LEAKED_BLOCKS, self.kv_leaked_blocks as u64);
+        reg.set(keys::KV_PEAK_LOGICAL_BLOCKS, self.peak_logical_kv_blocks as u64);
+        reg.set(keys::KV_BLOCKS_SAVED, self.kv_blocks_saved as u64);
+        reg.set(keys::KV_PREFIX_LOOKUPS, self.prefix_lookups);
+        reg.set(keys::KV_PREFIX_HITS, self.prefix_hits);
+        reg.set(keys::KV_COW_FORKS, self.cow_forks);
+        reg.set(keys::SPEC_ROUNDS, self.spec_rounds as u64);
+        reg.set(keys::SPEC_DRAFT_TOKENS, self.spec_draft_tokens as u64);
+        reg.set(keys::SPEC_ACCEPTED_TOKENS, self.spec_accepted_tokens as u64);
+        reg.set_gauge(keys::SPEC_DRAFT_BUSY_S, self.spec_draft_busy_s);
+        reg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_are_independent_namespaces() {
+        let mut reg = MetricsRegistry::new();
+        reg.incr("a.count", 2);
+        reg.incr("a.count", 3);
+        reg.set_gauge("a.count", 0.5); // same key, different namespace
+        assert_eq!(reg.counter("a.count"), 5);
+        assert_eq!(reg.gauge("a.count"), 0.5);
+        assert_eq!(reg.counter("missing"), 0);
+        assert_eq!(reg.gauge("missing"), 0.0);
+    }
+
+    #[test]
+    fn gauges_round_trip_bit_exact() {
+        let mut reg = MetricsRegistry::new();
+        // An "ugly" value that rounding through text would perturb.
+        let v = 0.1 + 0.2;
+        reg.set_gauge(keys::MAKESPAN_S, v);
+        assert_eq!(reg.gauge(keys::MAKESPAN_S).to_bits(), v.to_bits());
+    }
+
+    #[test]
+    fn builder_report_registry_round_trip() {
+        let mut rb = ReportBuilder::new();
+        {
+            let reg = rb.registry_mut();
+            reg.set(keys::ITERATIONS, 17);
+            reg.set(keys::PREEMPTIONS, 2);
+            reg.set(keys::MAX_CONCURRENCY, 6);
+            reg.set_gauge(keys::MAKESPAN_S, 1.25);
+            reg.set_gauge(keys::GPU_BUSY_S, 1.0);
+            reg.set(keys::KV_CAPACITY_BLOCKS, 128);
+            reg.set(keys::KV_PEAK_BLOCKS, 77);
+            reg.set(keys::SPEC_ROUNDS, 4);
+            reg.set(keys::SPEC_DRAFT_TOKENS, 16);
+            reg.set(keys::SPEC_ACCEPTED_TOKENS, 9);
+            reg.set_gauge(keys::SPEC_DRAFT_BUSY_S, 0.125);
+        }
+        let report = rb.build();
+        assert_eq!(report.iterations, 17);
+        assert_eq!(report.preemptions, 2);
+        assert_eq!(report.max_concurrency, 6);
+        assert_eq!(report.makespan_s, 1.25);
+        assert_eq!(report.peak_kv_blocks, 77);
+        assert_eq!(report.spec_accepted_tokens, 9);
+        // Unset keys build as zero — visible, never divergent.
+        assert_eq!(report.kv_leaked_blocks, 0);
+        assert_eq!(report.cow_forks, 0);
+
+        let back = report.metrics_registry();
+        assert_eq!(back.counter(keys::ITERATIONS), 17);
+        assert_eq!(back.counter(keys::SPEC_DRAFT_TOKENS), 16);
+        assert_eq!(back.gauge(keys::MAKESPAN_S).to_bits(), 1.25f64.to_bits());
+    }
+
+    #[test]
+    fn json_render_sorted_and_parseable() {
+        let mut reg = MetricsRegistry::new();
+        reg.set("b.two", 2);
+        reg.set("a.one", 1);
+        reg.set_gauge("c.half", 0.5);
+        let j = reg.to_json();
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+        let rendered = reg.render();
+        let a = rendered.find("a.one").unwrap();
+        let b = rendered.find("b.two").unwrap();
+        assert!(a < b, "render must be key-sorted:\n{rendered}");
+        assert!(rendered.contains("c.half = 0.5"));
+    }
+}

@@ -1,0 +1,138 @@
+//! Observability: structured tracing and unified metrics for the
+//! serving stack — zero-cost when off.
+//!
+//! The layer has four pieces, each in its own submodule:
+//!
+//! * [`event`] — the typed record vocabulary ([`TraceEvent`]): iteration
+//!   spans, kernel/collective pricings, KV-pager mutations, speculative
+//!   rounds, cache probes.
+//! * [`sink`] — where records go ([`TraceSink`]): a bounded in-memory
+//!   ring ([`RingRecorder`]), a streaming NDJSON file ([`NdjsonSink`]),
+//!   or nowhere ([`NoopSink`]).
+//! * [`chrome`] — the Chrome-trace/Perfetto exporter
+//!   ([`chrome_trace`]): one track per batch slot plus KV-occupancy and
+//!   cache-hit counter tracks.
+//! * [`metrics`] — the unified counter schema ([`MetricsRegistry`],
+//!   [`keys`]) and the [`ReportBuilder`] every simulator path funnels
+//!   through, so no path can silently zero a `ServingReport` counter.
+//!
+//! # The off path costs nothing
+//!
+//! Producers thread a [`TraceCtx`] — a `Copy` pair of
+//! `Option<&dyn TraceSink>` and a [`TraceLevel`]. When the option is
+//! `None` (the default, [`TraceCtx::off`]), [`TraceCtx::emit`] never
+//! invokes its record-building closure: no event is constructed, no
+//! allocation happens, no virtual branch is taken beyond one `Option`
+//! check. `tests/obs_trace.rs` pins this with to_bits comparisons: runs
+//! through the traced entry points with no sink are bit-for-bit
+//! identical to the pre-observability paths, and stay ulp-identical
+//! with a live sink — tracing observes pricing, never participates.
+//!
+//! # Wiring
+//!
+//! * CLI: `serve-sim --trace-out FILE [--trace-level iter|kernel]`
+//!   records the replay into a ring and writes the Chrome export.
+//! * Library: `simulate_traced` / `simulate_speculative_traced` accept
+//!   a `TraceCtx`; `Coordinator::with_trace_sink` installs a sink on
+//!   the service so coordinator-priced serving traces too.
+//!
+//! The operator-facing guide — full event schema, Perfetto walkthrough,
+//! troubleshooting table — is `docs/OBSERVABILITY.md`.
+
+pub mod chrome;
+pub mod event;
+pub mod metrics;
+pub mod sink;
+
+pub use chrome::chrome_trace;
+pub use event::{KvEventKind, TraceEvent, TraceLevel};
+pub use metrics::{keys, MetricsRegistry, ReportBuilder};
+pub use sink::{NdjsonSink, NoopSink, RingRecorder, TraceSink};
+
+/// Borrowed tracing context threaded through the serving stack.
+///
+/// `Copy`, two words wide, and inert when `sink` is `None` — the form
+/// every `*_traced` entry point takes. Producers write:
+///
+/// ```ignore
+/// tc.emit(|| TraceEvent::KvEvent { .. });
+/// ```
+///
+/// and the closure only runs when a sink is installed.
+#[derive(Clone, Copy)]
+pub struct TraceCtx<'a> {
+    /// Destination for records; `None` disables all emission.
+    pub sink: Option<&'a dyn TraceSink>,
+    /// Granularity producers should honor (kernel-level sites check
+    /// [`TraceCtx::kernel`] before pricing per-node).
+    pub level: TraceLevel,
+}
+
+impl TraceCtx<'static> {
+    /// Tracing disabled — the context the untraced public entry points
+    /// pass through to the shared core.
+    pub const fn off() -> TraceCtx<'static> {
+        TraceCtx { sink: None, level: TraceLevel::Iter }
+    }
+}
+
+impl<'a> TraceCtx<'a> {
+    /// Iteration-level context over a sink.
+    pub fn iter(sink: &'a dyn TraceSink) -> TraceCtx<'a> {
+        TraceCtx { sink: Some(sink), level: TraceLevel::Iter }
+    }
+
+    /// Context over a sink at an explicit level.
+    pub fn with_level(sink: &'a dyn TraceSink, level: TraceLevel) -> TraceCtx<'a> {
+        TraceCtx { sink: Some(sink), level }
+    }
+
+    /// Is any sink installed?
+    pub fn on(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Should kernel-granularity records be produced?
+    pub fn kernel(&self) -> bool {
+        self.sink.is_some() && self.level == TraceLevel::Kernel
+    }
+
+    /// Emit lazily: `build` runs only when a sink is installed.
+    #[inline]
+    pub fn emit(&self, build: impl FnOnce() -> TraceEvent) {
+        if let Some(sink) = self.sink {
+            sink.emit(&build());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_context_never_builds_the_event() {
+        let tc = TraceCtx::off();
+        assert!(!tc.on());
+        assert!(!tc.kernel());
+        let mut built = false;
+        tc.emit(|| {
+            built = true;
+            TraceEvent::CacheProbe { cache: "iter-memo", hit: true, count: 1 }
+        });
+        assert!(!built, "off path must not construct events");
+    }
+
+    #[test]
+    fn live_context_reaches_the_sink_and_respects_level() {
+        let ring = RingRecorder::new(8);
+        let tc = TraceCtx::iter(&ring);
+        assert!(tc.on());
+        assert!(!tc.kernel(), "iter level must not enable kernel records");
+        tc.emit(|| TraceEvent::CacheProbe { cache: "iter-memo", hit: false, count: 1 });
+        assert_eq!(ring.len(), 1);
+
+        let tk = TraceCtx::with_level(&ring, TraceLevel::Kernel);
+        assert!(tk.kernel());
+    }
+}

@@ -1,0 +1,215 @@
+//! Trace sinks — where emitted [`TraceEvent`]s go.
+//!
+//! Three implementations cover the design space:
+//!
+//! * [`NoopSink`] — the default. Producers never reach a sink on the off
+//!   path (emission is gated on an `Option` check in
+//!   [`crate::obs::TraceCtx`]), so this type exists for call sites that
+//!   need *a* sink value unconditionally (e.g. the bit-identity property
+//!   tests, which run the traced entry points with a sink that swallows
+//!   everything).
+//! * [`RingRecorder`] — bounded in-memory ring. The CLI records into one
+//!   of these and hands the drained events to the Chrome exporter;
+//!   overflow drops the *oldest* events and counts them, so a runaway
+//!   trace degrades to a suffix window instead of unbounded memory.
+//! * [`NdjsonSink`] — streams one JSON object per line to a file, for
+//!   runs too large to buffer or for piping into external tooling
+//!   (`jq`, pandas). I/O errors are counted, never propagated: tracing
+//!   must not be able to fail the run it observes.
+//!
+//! All sinks are `Send + Sync`; emission takes `&self` so a single sink
+//! can be shared across the parallel sweep workers or coordinator
+//! batcher threads without ceremony.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::event::TraceEvent;
+
+/// Receiver for structured trace records.
+///
+/// Implementations must tolerate concurrent emission (`&self`, shared
+/// across threads) and must never panic or error out of `emit` — the
+/// observed run's outcome cannot depend on its observer.
+pub trait TraceSink: Send + Sync {
+    /// Record one event. Infallible by contract; sinks with fallible
+    /// backends (files) swallow and count errors internally.
+    fn emit(&self, ev: &TraceEvent);
+
+    /// Flush any buffered state to the backing store. Default: no-op.
+    fn flush(&self) {}
+}
+
+/// A sink that discards everything — the explicit form of "tracing off".
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopSink;
+
+impl TraceSink for NoopSink {
+    fn emit(&self, _ev: &TraceEvent) {}
+}
+
+#[derive(Debug, Default)]
+struct RingState {
+    buf: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+/// Bounded in-memory recorder: keeps the most recent `cap` events,
+/// counting (not silently losing) anything evicted by overflow.
+#[derive(Debug)]
+pub struct RingRecorder {
+    state: Mutex<RingState>,
+    cap: usize,
+}
+
+impl RingRecorder {
+    /// Ring holding at most `cap` events (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize) -> RingRecorder {
+        RingRecorder { state: Mutex::new(RingState::default()), cap: cap.max(1) }
+    }
+
+    /// A capacity comfortably above any smoke/CI run's event count
+    /// (~1M events ≈ hundreds of thousands of iterations at iter level).
+    pub fn default_sized() -> RingRecorder {
+        RingRecorder::new(1 << 20)
+    }
+
+    /// Events currently buffered.
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("ring poisoned").buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted by ring overflow since construction. When this is
+    /// non-zero the recorded stream is a suffix of the run, and
+    /// whole-run invariants (span count == iterations, KV conservation)
+    /// no longer hold on it.
+    pub fn dropped(&self) -> u64 {
+        self.state.lock().expect("ring poisoned").dropped
+    }
+
+    /// Snapshot the buffered events in emission order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.state.lock().expect("ring poisoned").buf.iter().cloned().collect()
+    }
+}
+
+impl TraceSink for RingRecorder {
+    fn emit(&self, ev: &TraceEvent) {
+        let mut st = self.state.lock().expect("ring poisoned");
+        if st.buf.len() == self.cap {
+            st.buf.pop_front();
+            st.dropped += 1;
+        }
+        st.buf.push_back(ev.clone());
+    }
+}
+
+/// Streaming newline-delimited-JSON file sink: one
+/// [`TraceEvent::to_json`] object per line, in emission order.
+#[derive(Debug)]
+pub struct NdjsonSink {
+    writer: Mutex<BufWriter<File>>,
+    io_errors: AtomicU64,
+}
+
+impl NdjsonSink {
+    /// Create (truncating) the target file.
+    pub fn create(path: impl AsRef<Path>) -> std::io::Result<NdjsonSink> {
+        let file = File::create(path)?;
+        Ok(NdjsonSink { writer: Mutex::new(BufWriter::new(file)), io_errors: AtomicU64::new(0) })
+    }
+
+    /// Write errors swallowed so far. A non-zero value means the file on
+    /// disk is incomplete.
+    pub fn io_errors(&self) -> u64 {
+        self.io_errors.load(Ordering::Relaxed)
+    }
+}
+
+impl TraceSink for NdjsonSink {
+    fn emit(&self, ev: &TraceEvent) {
+        let mut w = self.writer.lock().expect("ndjson poisoned");
+        if writeln!(w, "{}", ev.to_json()).is_err() {
+            self.io_errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn flush(&self) {
+        let mut w = self.writer.lock().expect("ndjson poisoned");
+        if w.flush().is_err() {
+            self.io_errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::KvEventKind;
+
+    fn probe(i: u64) -> TraceEvent {
+        TraceEvent::CacheProbe { cache: "iter-memo", hit: i % 2 == 0, count: i }
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_counts_drops() {
+        let ring = RingRecorder::new(4);
+        for i in 0..10 {
+            ring.emit(&probe(i));
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.dropped(), 6);
+        let kept: Vec<u64> = ring
+            .events()
+            .iter()
+            .map(|e| match e {
+                TraceEvent::CacheProbe { count, .. } => *count,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(kept, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn ring_capacity_clamps_to_one() {
+        let ring = RingRecorder::new(0);
+        ring.emit(&probe(1));
+        ring.emit(&probe(2));
+        assert_eq!(ring.len(), 1);
+        assert_eq!(ring.dropped(), 1);
+    }
+
+    #[test]
+    fn ndjson_writes_one_parseable_line_per_event() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("pm2lat_obs_sink_test_{}.ndjson", std::process::id()));
+        let sink = NdjsonSink::create(&path).expect("create ndjson");
+        sink.emit(&probe(1));
+        sink.emit(&TraceEvent::KvEvent {
+            t_s: 0.25,
+            kind: KvEventKind::Release,
+            request: 3,
+            delta_blocks: -2,
+            tokens: 0,
+            blocks_in_use: 0,
+        });
+        sink.flush();
+        assert_eq!(sink.io_errors(), 0);
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = crate::util::json::Json::parse(line).expect("line parses");
+            assert!(j.get("ev").is_some(), "{line}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -198,6 +198,47 @@ impl Pm2Lat {
         Some(crate::graph::schedule::schedule(graph, streams, &dur).makespan_s)
     }
 
+    /// [`Pm2Lat::predict_graph`] with kernel-band observability: one
+    /// [`crate::obs::TraceEvent::KernelPriced`] per non-collective node
+    /// and one [`crate::obs::TraceEvent::CommPriced`] per collective,
+    /// emitted to `sink` in node order as each prediction lands. The
+    /// returned latency is bit-identical to `predict_graph` — same
+    /// per-node predictions in the same order, same schedule over the
+    /// same duration vector; the sink only watches them go by. Drives
+    /// `serve-sim --trace-level kernel`.
+    pub fn predict_graph_traced(
+        &self,
+        gpu: &Gpu,
+        graph: &crate::graph::ModelGraph,
+        streams: usize,
+        sink: &dyn crate::obs::TraceSink,
+    ) -> Option<f64> {
+        use crate::obs::TraceEvent;
+        let mut dur = Vec::with_capacity(graph.len());
+        for (i, n) in graph.nodes().iter().enumerate() {
+            let v = self.predict(gpu, &n.op)?;
+            match &n.op {
+                Op::Comm(c) => sink.emit(&TraceEvent::CommPriced {
+                    node: i,
+                    op: c.kind.name(),
+                    bytes: c.bytes(),
+                    dur_s: v,
+                }),
+                Op::Gemm(_) => {
+                    sink.emit(&TraceEvent::KernelPriced { node: i, op: "gemm", dur_s: v })
+                }
+                Op::Util(_) => {
+                    sink.emit(&TraceEvent::KernelPriced { node: i, op: "util", dur_s: v })
+                }
+                Op::Custom(c) => {
+                    sink.emit(&TraceEvent::KernelPriced { node: i, op: c.name(), dur_s: v })
+                }
+            }
+            dur.push(v);
+        }
+        Some(crate::graph::schedule::schedule(graph, streams, &dur).makespan_s)
+    }
+
     /// Whole-generation latency: the prefill graph plus one decode graph
     /// per emitted token, each aggregated as the `streams`-bounded
     /// critical path. With `gen_len == 0` this is bit-for-bit the plain

@@ -40,6 +40,14 @@
 //! so one instance can be shared across the worker threads of a parallel
 //! QPS sweep: whichever rate point prices a signature first populates it
 //! for every other point.
+//!
+//! Observability: a traced replay ([`crate::serving::simulate_traced`])
+//! emits one `iter-memo` [`crate::obs::TraceEvent::CacheProbe`] per
+//! lookup, and the hit/miss totals those probes sum to are exactly
+//! [`IterCache::hits`] / [`IterCache::misses`] — the conservation test
+//! in `rust/tests/obs_trace.rs` pins that equality. Note the flip side
+//! for kernel-level tracing: a memo hit skips pricing entirely, so no
+//! per-node records appear for memoized iterations.
 
 use std::collections::HashMap;
 use std::hash::Hash;

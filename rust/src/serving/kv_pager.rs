@@ -306,6 +306,25 @@ impl KvPager {
         self.cow_forks
     }
 
+    /// Project every pager-owned counter into the unified metrics
+    /// schema (`kv.*` keys of [`crate::obs::keys`]) — the one place the
+    /// pager's numbers enter a [`crate::obs::MetricsRegistry`], used by
+    /// [`crate::obs::ReportBuilder::absorb_pager`] so every simulator
+    /// path reports identical KV accounting. `kv.leaked_blocks` is the
+    /// *current* allocation: at end of run any non-zero value is a leak.
+    /// See `docs/OBSERVABILITY.md` for the operator-facing key table.
+    pub fn fill_registry(&self, reg: &mut crate::obs::MetricsRegistry) {
+        use crate::obs::keys;
+        reg.set(keys::KV_CAPACITY_BLOCKS, self.config.capacity_blocks as u64);
+        reg.set(keys::KV_PEAK_BLOCKS, self.peak_in_use as u64);
+        reg.set(keys::KV_PEAK_LOGICAL_BLOCKS, self.peak_logical as u64);
+        reg.set(keys::KV_BLOCKS_SAVED, self.peak_saved as u64);
+        reg.set(keys::KV_LEAKED_BLOCKS, self.blocks_in_use() as u64);
+        reg.set(keys::KV_PREFIX_LOOKUPS, self.prefix_lookups);
+        reg.set(keys::KV_PREFIX_HITS, self.prefix_hits);
+        reg.set(keys::KV_COW_FORKS, self.cow_forks);
+    }
+
     /// Materialized context tokens of a request (0 when unknown).
     pub fn tokens_of(&self, id: usize) -> usize {
         self.allocs.get(&id).map(|a| a.tokens).unwrap_or(0)

@@ -52,6 +52,16 @@
 //!   tokens committed, and rejected speculated KV rolls back through
 //!   [`kv_pager::KvPager::truncate`].
 //!
+//! Every replay is also *observable*: [`simulator::simulate_traced`] and
+//! [`simulator::simulate_speculative_traced`] take a
+//! [`crate::obs::TraceCtx`] and emit the structured event stream —
+//! iteration spans, KV grow/fork/truncate/preempt/release, speculative
+//! rounds, cache probes — that [`crate::obs::chrome_trace`] renders as a
+//! Perfetto timeline (`serve-sim --trace-out`, and
+//! `docs/OBSERVABILITY.md` for the operator's guide). Tracing is
+//! zero-cost when off and never perturbs a report: the untraced entry
+//! points are the traced ones with [`crate::obs::TraceCtx::off`].
+//!
 //! Consumed by `Coordinator::simulate_serving` (the cached service
 //! path), the `pm2lat serve-sim` CLI, and `benches/serving_capacity.rs`.
 //! Anchored to the rest of the stack by the batch-size-1 equivalence
@@ -72,8 +82,9 @@ pub use policy::{Admission, BatchingMode, SchedulerConfig};
 pub use simulator::{
     max_qps_under_slo, max_qps_under_slo_hot, max_qps_under_slo_parallel, qps_sweep,
     qps_sweep_hot, qps_sweep_parallel, qps_sweep_placed, simulate, simulate_hot,
-    simulate_placed, simulate_speculative, simulate_speculative_hot, CapacityPoint, HotPath,
-    RequestMetrics, ServingReport, ServingSimConfig, SimError,
+    simulate_placed, simulate_speculative, simulate_speculative_hot,
+    simulate_speculative_traced, simulate_traced, CapacityPoint, HotPath, RequestMetrics,
+    ServingReport, ServingSimConfig, SimError,
 };
 pub use trace::{
     bursty_trace, parse_trace, poisson_trace, scale_arrivals, shared_prefix_trace, to_json,

@@ -19,8 +19,20 @@
 //! through the cached service. Everything else — queueing, paging,
 //! chunking, preemption — is deterministic integer bookkeeping, audited
 //! by conservation checks every iteration (debug builds).
+//!
+//! Every replay can additionally be *observed*: the `*_traced` entry
+//! points ([`simulate_traced`], [`simulate_speculative_traced`]) take a
+//! [`crate::obs::TraceCtx`] and emit one
+//! [`crate::obs::TraceEvent::IterationSpan`] per iteration plus KV-pager
+//! events, speculative-round outcomes, and iteration-memo cache probes.
+//! Emission is behind one `Option` check — the untraced entry points
+//! pass [`crate::obs::TraceCtx::off`] and stay bit-for-bit what they
+//! were (pinned by `tests/obs_trace.rs`). All paths build their
+//! [`ServingReport`] through [`crate::obs::ReportBuilder`], so every
+//! counter flows through the unified metrics schema exactly once.
 
 use crate::graph::{ModelGraph, Pass, PassCtx, PassResultCache, TensorParallelPass};
+use crate::obs::{keys, KvEventKind, ReportBuilder, TraceCtx, TraceEvent};
 use crate::models::{SeqSlot, TransformerConfig};
 use crate::spec_decode::{AcceptanceModel, SpecConfig};
 use crate::util::prng::{Rng, StableHasher};
@@ -392,10 +404,13 @@ struct SpecParams<'a> {
 /// Price one slot batch under `hp`: memo lookup first (computed straight
 /// from the slots — no graph is built on a hit), then the cold path in
 /// canonical slot order, tensor-parallel rewrite (pass-cache-served when
-/// available) included.
+/// available) included. Each memo consult emits one `iter-memo`
+/// [`TraceEvent::CacheProbe`] through `tc` (nothing is emitted when the
+/// memo is absent or disabled — the cache was never consulted).
 fn priced_iteration<F>(
     cfg: &TransformerConfig,
     hp: &HotPath<'_>,
+    tc: &TraceCtx<'_>,
     slots: &[SeqSlot],
     price: &mut F,
 ) -> Option<f64>
@@ -407,7 +422,13 @@ where
         .filter(|c| c.enabled())
         .map(|c| (c, IterationKey::new(hp.scope, slots)));
     if let Some((cache, key)) = &memo {
-        if let Some(v) = cache.get(key) {
+        let probed = cache.get(key);
+        tc.emit(|| TraceEvent::CacheProbe {
+            cache: "iter-memo",
+            hit: probed.is_some(),
+            count: 1,
+        });
+        if let Some(v) = probed {
             return Some(v);
         }
     }
@@ -454,9 +475,30 @@ pub fn simulate_hot<F>(
 where
     F: FnMut(&ModelGraph) -> Option<f64>,
 {
+    simulate_traced(cfg, trace, sim, hp, &TraceCtx::off(), price)
+}
+
+/// [`simulate_hot`] with observability: every iteration, KV-pager
+/// mutation, and memo probe is emitted through `tc`. With
+/// [`TraceCtx::off`] this *is* `simulate_hot` — the untraced entry
+/// points delegate here, and `tests/obs_trace.rs` pins that a live
+/// sink leaves every report field bit-for-bit unchanged (tracing
+/// observes pricing, never participates in it).
+pub fn simulate_traced<F>(
+    cfg: &TransformerConfig,
+    trace: &[RequestSpec],
+    sim: &ServingSimConfig,
+    hp: &HotPath<'_>,
+    tc: &TraceCtx<'_>,
+    price: &mut F,
+) -> Result<ServingReport, SimError>
+where
+    F: FnMut(&ModelGraph) -> Option<f64>,
+{
+    let tcv = *tc;
     let mut price_slots =
-        |_phase: IterPhase, slots: &[SeqSlot]| priced_iteration(cfg, hp, slots, price);
-    simulate_slots(cfg, trace, sim, &mut price_slots, None)
+        |_phase: IterPhase, slots: &[SeqSlot]| priced_iteration(cfg, hp, &tcv, slots, price);
+    simulate_slots(cfg, trace, sim, &mut price_slots, None, tc)
 }
 
 /// Replay `trace` under speculative decoding: every decode slot becomes
@@ -502,17 +544,41 @@ pub fn simulate_speculative_hot<F>(
 where
     F: FnMut(&ModelGraph) -> Option<f64>,
 {
+    simulate_speculative_traced(spec, trace, sim, hp, draft_scope, seed, &TraceCtx::off(), price)
+}
+
+/// [`simulate_speculative_hot`] with observability: on top of the plain
+/// traced stream, each verification round emits a
+/// [`TraceEvent::SpecRound`] and its KV rollback a `truncate`
+/// [`TraceEvent::KvEvent`]; the draft passes' cost folds into each
+/// iteration span's `draft_dur_s` (one span per DES iteration, drafting
+/// included). [`TraceCtx::off`] makes this exactly
+/// `simulate_speculative_hot`.
+pub fn simulate_speculative_traced<F>(
+    spec: &SpecConfig,
+    trace: &[RequestSpec],
+    sim: &ServingSimConfig,
+    hp: &HotPath<'_>,
+    draft_scope: IterScope,
+    seed: u64,
+    tc: &TraceCtx<'_>,
+    price: &mut F,
+) -> Result<ServingReport, SimError>
+where
+    F: FnMut(&ModelGraph) -> Option<f64>,
+{
     if spec.draft.enc_layers > 0 {
         return Err(SimError::EncDecUnsupported);
     }
     let target_hp = HotPath { scope: hp.scope.with_spec(spec), ..*hp };
     let draft_hp = HotPath { scope: draft_scope.with_spec(spec), ..*hp };
+    let tcv = *tc;
     let mut price_slots = |phase: IterPhase, slots: &[SeqSlot]| match phase {
-        IterPhase::Target => priced_iteration(&spec.target, &target_hp, slots, price),
-        IterPhase::Draft => priced_iteration(&spec.draft, &draft_hp, slots, price),
+        IterPhase::Target => priced_iteration(&spec.target, &target_hp, &tcv, slots, price),
+        IterPhase::Draft => priced_iteration(&spec.draft, &draft_hp, &tcv, slots, price),
     };
     let params = SpecParams { k: spec.k, acceptance: &spec.acceptance, seed };
-    simulate_slots(&spec.target, trace, sim, &mut price_slots, Some(params))
+    simulate_slots(&spec.target, trace, sim, &mut price_slots, Some(params), tc)
 }
 
 /// Replay `trace` against `cfg`'s serving schedule, pricing every
@@ -544,6 +610,7 @@ fn simulate_slots<F>(
     sim: &ServingSimConfig,
     price_slots: &mut F,
     spec: Option<SpecParams<'_>>,
+    tc: &TraceCtx<'_>,
 ) -> Result<ServingReport, SimError>
 where
     F: FnMut(IterPhase, &[SeqSlot]) -> Option<f64>,
@@ -724,6 +791,16 @@ where
                         st.spec.prefix_tokens,
                         st.spec.prompt_len - 1,
                     );
+                    // Refcount-only: mapped blocks draw nothing from the
+                    // free list, so the delta is zero by construction.
+                    tc.emit(|| TraceEvent::KvEvent {
+                        t_s: now,
+                        kind: KvEventKind::MapPrefix,
+                        request: st.spec.id,
+                        delta_blocks: 0,
+                        tokens: st.ctx_ready,
+                        blocks_in_use: pager.blocks_in_use(),
+                    });
                 }
                 running.push(st);
             }
@@ -779,7 +856,16 @@ where
                 // Refcounted release: blocks the victim shares with other
                 // requests stay allocated for them — preempting a sharer
                 // never frees a peer's prefix (so this may free nothing).
-                pager.release(victim.spec.id).expect("victim held an allocation");
+                let freed =
+                    pager.release(victim.spec.id).expect("victim held an allocation");
+                tc.emit(|| TraceEvent::KvEvent {
+                    t_s: now,
+                    kind: KvEventKind::Preempt,
+                    request: victim.spec.id,
+                    delta_blocks: -(freed as i64),
+                    tokens: 0,
+                    blocks_in_use: pager.blocks_in_use(),
+                });
             }
             victim.ctx_ready = 0;
             victim.preemptions += 1;
@@ -811,9 +897,31 @@ where
             } else {
                 SeqSlot::decode(r.ctx_ready)
             };
-            pager
+            let forks_before = pager.cow_forks();
+            let drawn = pager
                 .grow(r.spec.id, slot.kv_len)
                 .expect("iteration demand was checked against free blocks");
+            tc.emit(|| TraceEvent::KvEvent {
+                t_s: now,
+                kind: KvEventKind::Grow,
+                request: r.spec.id,
+                delta_blocks: drawn as i64,
+                tokens: slot.kv_len,
+                blocks_in_use: pager.blocks_in_use(),
+            });
+            if pager.cow_forks() > forks_before {
+                // The forked block's draw is inside `drawn` above; this
+                // marker (delta 0) just pins *when* a shared boundary
+                // block went private.
+                tc.emit(|| TraceEvent::KvEvent {
+                    t_s: now,
+                    kind: KvEventKind::Fork,
+                    request: r.spec.id,
+                    delta_blocks: 0,
+                    tokens: slot.kv_len,
+                    blocks_in_use: pager.blocks_in_use(),
+                });
+            }
             slots.push(slot);
             active.push(i);
         }
@@ -857,6 +965,26 @@ where
                 timeline_stride *= 2;
             }
         }
+        // One span per counted iteration — the invariant the CLI and
+        // `tests/obs_trace.rs` check against `ServingReport::iterations`.
+        // Emitted before effects run, so slot state (prefill vs decode)
+        // still describes what this iteration executed.
+        tc.emit(|| {
+            let prefill_slots =
+                active.iter().filter(|&&i| running[i].remaining_prefill() > 0).count();
+            TraceEvent::IterationSpan {
+                iter: iterations - 1,
+                start_s: now - dt,
+                dur_s: dt,
+                draft_dur_s: dt_draft,
+                batch: slots.len(),
+                prefill_slots,
+                decode_slots: slots.len() - prefill_slots,
+                q_tokens: slots.iter().map(|s| s.q_len).sum(),
+                kv_tokens: slots.iter().map(|s| s.kv_len).sum(),
+                slot_reqs: active.iter().map(|&i| running[i].spec.id).collect(),
+            }
+        });
 
         // --- apply effects: token progress, TTFT, completions ---
         for (&i, slot) in active.iter().zip(&slots) {
@@ -878,7 +1006,7 @@ where
                     )));
                     let tau = s.acceptance.sample(&mut rng, s.k);
                     let advance = (tau + 1).min(r.spec.gen_len - r.decoded);
-                    pager
+                    let freed = pager
                         .truncate(r.spec.id, r.ctx_ready + advance)
                         .expect("verified slot held its speculated window");
                     r.decoded += advance;
@@ -886,6 +1014,22 @@ where
                     spec_rounds += 1;
                     spec_draft_tokens += s.k;
                     spec_accepted_tokens += tau;
+                    tc.emit(|| TraceEvent::KvEvent {
+                        t_s: now,
+                        kind: KvEventKind::Truncate,
+                        request: r.spec.id,
+                        delta_blocks: -(freed as i64),
+                        tokens: r.ctx_ready,
+                        blocks_in_use: pager.blocks_in_use(),
+                    });
+                    tc.emit(|| TraceEvent::SpecRound {
+                        t_s: now,
+                        request: r.spec.id,
+                        round: spec_rounds,
+                        proposed: s.k,
+                        accepted: tau,
+                        committed: advance,
+                    });
                     continue;
                 }
                 // Decode step: the appended token is now part of context.
@@ -905,7 +1049,15 @@ where
                 continue;
             }
             let r = running.remove(i);
-            pager.release(r.spec.id).expect("completed request held blocks");
+            let freed = pager.release(r.spec.id).expect("completed request held blocks");
+            tc.emit(|| TraceEvent::KvEvent {
+                t_s: now,
+                kind: KvEventKind::Release,
+                request: r.spec.id,
+                delta_blocks: -(freed as i64),
+                tokens: 0,
+                blocks_in_use: pager.blocks_in_use(),
+            });
             completed.push(RequestMetrics {
                 id: r.spec.id,
                 arrival_s: r.spec.arrival_s,
@@ -943,27 +1095,27 @@ where
     }
 
     completed.sort_by_key(|m| m.id);
-    Ok(ServingReport {
-        iterations,
-        makespan_s: now,
-        gpu_busy_s: gpu_busy,
-        preemptions,
-        kv_capacity_blocks: capacity,
-        peak_kv_blocks: pager.peak_blocks(),
-        kv_leaked_blocks: pager.blocks_in_use(),
-        kv_timeline,
-        max_concurrency,
-        prefix_lookups: pager.prefix_lookups(),
-        prefix_hits: pager.prefix_hits(),
-        cow_forks: pager.cow_forks(),
-        peak_logical_kv_blocks: pager.peak_logical_blocks(),
-        kv_blocks_saved: pager.peak_blocks_saved(),
-        spec_rounds,
-        spec_draft_tokens,
-        spec_accepted_tokens,
-        spec_draft_busy_s: spec_draft_busy,
-        completed,
-    })
+    // Every path builds its report through the unified metrics schema:
+    // loop totals under `serving.*`/`spec.*`, the pager's own counters
+    // via `KvPager::fill_registry` — so a path that forgot a counter
+    // would zero it in the registry AND the report, never just one.
+    // Gauges round-trip the f64 bits untouched (ReportBuilder contract),
+    // keeping this construction bit-for-bit the old struct literal.
+    let mut rb = ReportBuilder::new();
+    {
+        let reg = rb.registry_mut();
+        reg.set(keys::ITERATIONS, iterations as u64);
+        reg.set_gauge(keys::MAKESPAN_S, now);
+        reg.set_gauge(keys::GPU_BUSY_S, gpu_busy);
+        reg.set(keys::PREEMPTIONS, preemptions as u64);
+        reg.set(keys::MAX_CONCURRENCY, max_concurrency as u64);
+        reg.set(keys::SPEC_ROUNDS, spec_rounds as u64);
+        reg.set(keys::SPEC_DRAFT_TOKENS, spec_draft_tokens as u64);
+        reg.set(keys::SPEC_ACCEPTED_TOKENS, spec_accepted_tokens as u64);
+        reg.set_gauge(keys::SPEC_DRAFT_BUSY_S, spec_draft_busy);
+    }
+    rb.absorb_pager(&pager);
+    Ok(rb.with_completed(completed).with_kv_timeline(kv_timeline).build())
 }
 
 /// Replay `trace` on a tensor-parallel placement: every iteration graph

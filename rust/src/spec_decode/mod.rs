@@ -41,6 +41,16 @@
 //! decode graph, the predictor curve is bit-for-bit
 //! `predict_generation`, and the simulator replay is bit-for-bit the
 //! plain serving path (`tests/spec_decode.rs`).
+//!
+//! Observability: under [`crate::serving::simulate_speculative_traced`]
+//! every verification emits a [`crate::obs::TraceEvent::SpecRound`]
+//! (proposed `k`, accepted run τ, committed tokens), and the per-round
+//! stream reproduces the report's aggregate counters exactly — summed
+//! `proposed`/`accepted` equal `ServingReport::spec_draft_tokens` /
+//! `spec_accepted_tokens`. The Chrome export renders rounds as instants
+//! on the `draft` track next to the draft-share sub-spans, which is the
+//! fastest way to *see* an acceptance-rate problem rather than infer it
+//! from α̂.
 
 use crate::models::TransformerConfig;
 use crate::util::prng::{Rng, StableHasher};

@@ -1,0 +1,412 @@
+//! Observability-layer property tests.
+//!
+//! The tracing contract has two halves, and both are exact:
+//!
+//! 1. **Tracing never perturbs a replay.** The traced entry points with
+//!    no sink — or a [`NoopSink`], or a live ring — must reproduce the
+//!    untraced hot path bit for bit, across plain, tensor-parallel,
+//!    prefix-shared, and speculative serving. Every f64 is compared by
+//!    its bit pattern.
+//! 2. **The stream conserves the report.** Exactly one iteration span
+//!    per counted iteration; KV deltas that sum to the pager's live
+//!    block count at every event and to zero at the end; speculative
+//!    rounds whose sums reproduce the report's counters; memo probes
+//!    that reconcile with the cache's own hit/miss counters; a Chrome
+//!    export that parses and balances every B/E pair.
+
+use pm2lat::graph::PassResultCache;
+use pm2lat::gpusim::Gpu;
+use pm2lat::models::{zoo, SeqSlot, TransformerConfig};
+use pm2lat::obs::{
+    chrome_trace, KvEventKind, NoopSink, RingRecorder, TraceCtx, TraceEvent, TraceLevel,
+};
+use pm2lat::ops::DType;
+use pm2lat::pm2lat::Pm2Lat;
+use pm2lat::profiler::ProfileSpec;
+use pm2lat::serving::{
+    poisson_trace, shared_prefix_trace, simulate_hot, simulate_speculative_hot,
+    simulate_speculative_traced, simulate_traced, Admission, BatchingMode, HotPath, IterCache,
+    IterScope, KvPagerConfig, RequestSpec, SchedulerConfig, ServingReport, ServingSimConfig,
+};
+use pm2lat::spec_decode::{auto_draft, AcceptanceModel, SpecConfig};
+use pm2lat::util::json::Json;
+
+fn quick_pl(device: &str, dtype: DType) -> (Gpu, Pm2Lat) {
+    let mut gpu = Gpu::by_name(device).expect("device in the zoo");
+    let pl = Pm2Lat::build_dtypes(&mut gpu, &ProfileSpec::quick(), &[dtype], false);
+    gpu.reset();
+    (gpu, pl)
+}
+
+fn sim_for(resident: &[&TransformerConfig], prefix_share: bool) -> ServingSimConfig {
+    ServingSimConfig {
+        scheduler: SchedulerConfig {
+            mode: BatchingMode::Continuous,
+            admission: Admission::Fcfs,
+            max_batch: 6,
+            chunk_tokens: 96,
+        },
+        pager: KvPagerConfig::for_models(resident, 80e9, 16).with_prefix_share(prefix_share),
+        streams: 1,
+    }
+}
+
+fn assert_bit_identical(a: &ServingReport, b: &ServingReport, ctx: &str) {
+    assert_eq!(a.iterations, b.iterations, "{ctx}: iteration count");
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{ctx}: makespan");
+    assert_eq!(a.gpu_busy_s.to_bits(), b.gpu_busy_s.to_bits(), "{ctx}: gpu busy");
+    assert_eq!(a.preemptions, b.preemptions, "{ctx}: preemptions");
+    assert_eq!(a.peak_kv_blocks, b.peak_kv_blocks, "{ctx}: peak kv");
+    assert_eq!(a.cow_forks, b.cow_forks, "{ctx}: cow forks");
+    assert_eq!(a.spec_rounds, b.spec_rounds, "{ctx}: spec rounds");
+    assert_eq!(a.spec_accepted_tokens, b.spec_accepted_tokens, "{ctx}: accepted");
+    assert_eq!(a.completed.len(), b.completed.len(), "{ctx}: completions");
+    for (x, y) in a.completed.iter().zip(&b.completed) {
+        assert_eq!(x.id, y.id, "{ctx}: completion order");
+        assert_eq!(x.ttft_s().to_bits(), y.ttft_s().to_bits(), "{ctx}: ttft req {}", x.id);
+        assert_eq!(x.e2e_s().to_bits(), y.e2e_s().to_bits(), "{ctx}: e2e req {}", x.id);
+        assert_eq!(x.preemptions, y.preemptions, "{ctx}: preemptions req {}", x.id);
+    }
+}
+
+/// One serving scenario the tracing suite sweeps: a workload plus the
+/// degrees of freedom (tp, prefix sharing, speculation) that exercise
+/// every emission site in the simulator.
+struct Scenario {
+    name: &'static str,
+    cfg: TransformerConfig,
+    trace: Vec<RequestSpec>,
+    sim: ServingSimConfig,
+    tp: usize,
+    spec: Option<SpecConfig>,
+}
+
+fn scenarios() -> Vec<Scenario> {
+    let target = zoo::gpt2_large();
+    let spec = SpecConfig::new(auto_draft(&target), target.clone(), 4, AcceptanceModel::uniform(0.8));
+    vec![
+        Scenario {
+            name: "plain",
+            cfg: target.clone(),
+            trace: poisson_trace(10, 25.0, 48, 8, 5),
+            sim: sim_for(&[&target], false),
+            tp: 1,
+            spec: None,
+        },
+        Scenario {
+            name: "tp=2",
+            cfg: target.clone(),
+            trace: poisson_trace(8, 20.0, 40, 8, 11),
+            sim: sim_for(&[&target], false),
+            tp: 2,
+            spec: None,
+        },
+        Scenario {
+            name: "prefix-share",
+            cfg: target.clone(),
+            trace: shared_prefix_trace(10, 25.0, 64, 24, 8, 2, 7),
+            sim: sim_for(&[&target], true),
+            tp: 1,
+            spec: None,
+        },
+        Scenario {
+            name: "spec",
+            cfg: target.clone(),
+            trace: poisson_trace(10, 30.0, 48, 10, 9),
+            sim: sim_for(&[&target, &spec.draft], false),
+            tp: 1,
+            spec: Some(spec),
+        },
+    ]
+}
+
+/// Run one scenario through a traced entry point with fresh caches,
+/// returning the report, the recorded stream, and the memo's hit/miss
+/// counters (for probe reconciliation).
+fn run_traced(
+    sc: &Scenario,
+    gpu: &Gpu,
+    pl: &Pm2Lat,
+    tc: &TraceCtx<'_>,
+) -> (ServingReport, u64, u64) {
+    let icache = IterCache::default_sized();
+    let passes = PassResultCache::default_sized();
+    let scope = IterScope::new(&sc.cfg, "a100", sc.tp, 1).with_pager(&sc.sim.pager);
+    let hp = HotPath::memoized(sc.tp, scope, &icache, &passes);
+    let mut price = |g: &pm2lat::graph::ModelGraph| pl.predict_graph(gpu, g, 1);
+    let report = match &sc.spec {
+        Some(s) => {
+            let draft_scope =
+                IterScope::new(&s.draft, "a100", sc.tp, 1).with_pager(&sc.sim.pager);
+            simulate_speculative_traced(
+                s,
+                &sc.trace,
+                &sc.sim,
+                &hp,
+                draft_scope,
+                42,
+                tc,
+                &mut price,
+            )
+        }
+        None => simulate_traced(&sc.cfg, &sc.trace, &sc.sim, &hp, tc, &mut price),
+    }
+    .unwrap_or_else(|e| panic!("{}: traced replay failed: {e}", sc.name));
+    (report, icache.hits(), icache.misses())
+}
+
+fn run_untraced(sc: &Scenario, gpu: &Gpu, pl: &Pm2Lat) -> ServingReport {
+    let icache = IterCache::default_sized();
+    let passes = PassResultCache::default_sized();
+    let scope = IterScope::new(&sc.cfg, "a100", sc.tp, 1).with_pager(&sc.sim.pager);
+    let hp = HotPath::memoized(sc.tp, scope, &icache, &passes);
+    let mut price = |g: &pm2lat::graph::ModelGraph| pl.predict_graph(gpu, g, 1);
+    match &sc.spec {
+        Some(s) => {
+            let draft_scope =
+                IterScope::new(&s.draft, "a100", sc.tp, 1).with_pager(&sc.sim.pager);
+            simulate_speculative_hot(s, &sc.trace, &sc.sim, &hp, draft_scope, 42, &mut price)
+        }
+        None => simulate_hot(&sc.cfg, &sc.trace, &sc.sim, &hp, &mut price),
+    }
+    .unwrap_or_else(|e| panic!("{}: untraced replay failed: {e}", sc.name))
+}
+
+#[test]
+fn property_tracing_never_perturbs_the_replay() {
+    // Untraced hot path vs. noop-sink context vs. live ring recorder:
+    // three runs of every scenario, all bit-for-bit identical. Tracing
+    // observes pricing; it must never participate in it.
+    let (gpu, pl) = quick_pl("a100", DType::F32);
+    for sc in &scenarios() {
+        let untraced = run_untraced(sc, &gpu, &pl);
+
+        let noop = NoopSink;
+        let (with_noop, _, _) = run_traced(sc, &gpu, &pl, &TraceCtx::iter(&noop));
+        assert_bit_identical(&untraced, &with_noop, &format!("{} (noop sink)", sc.name));
+
+        let ring = RingRecorder::default_sized();
+        let (with_ring, _, _) =
+            run_traced(sc, &gpu, &pl, &TraceCtx::with_level(&ring, TraceLevel::Iter));
+        assert_bit_identical(&untraced, &with_ring, &format!("{} (live ring)", sc.name));
+        assert!(!ring.is_empty(), "{}: live ring must have recorded", sc.name);
+        assert_eq!(ring.dropped(), 0, "{}: these replays fit the default ring", sc.name);
+    }
+}
+
+#[test]
+fn property_trace_stream_conserves_the_report() {
+    let (gpu, pl) = quick_pl("a100", DType::F32);
+    for sc in &scenarios() {
+        let ring = RingRecorder::default_sized();
+        let (report, memo_hits, memo_misses) =
+            run_traced(sc, &gpu, &pl, &TraceCtx::with_level(&ring, TraceLevel::Iter));
+        assert_eq!(ring.dropped(), 0, "{}: stream must be complete", sc.name);
+        let events = ring.events();
+
+        // Exactly one span per counted iteration, in virtual-time order,
+        // with a self-consistent batch decomposition.
+        let mut spans = 0usize;
+        let mut last_start = f64::NEG_INFINITY;
+        // KV conservation: the running sum of signed block deltas must
+        // mirror the pager's own `blocks_in_use` at every event — the
+        // trace-side twin of `KvPager::audit`.
+        let mut live_blocks = 0i64;
+        let mut last_kv_t = f64::NEG_INFINITY;
+        let mut releases = 0usize;
+        let mut grew = false;
+        let mut mapped_prefix = false;
+        let (mut rounds, mut proposed, mut accepted) = (0usize, 0usize, 0usize);
+        let (mut probe_hits, mut probe_misses) = (0u64, 0u64);
+        for ev in &events {
+            match ev {
+                TraceEvent::IterationSpan {
+                    iter,
+                    start_s,
+                    dur_s,
+                    draft_dur_s,
+                    batch,
+                    prefill_slots,
+                    decode_slots,
+                    q_tokens,
+                    slot_reqs,
+                    ..
+                } => {
+                    assert_eq!(*iter, spans, "{}: span ordinals must be dense", sc.name);
+                    assert!(*start_s >= last_start, "{}: spans out of order", sc.name);
+                    last_start = *start_s;
+                    assert!(*dur_s > 0.0, "{}: empty span", sc.name);
+                    assert!(
+                        *draft_dur_s >= 0.0 && *draft_dur_s <= *dur_s,
+                        "{}: draft time exceeds the iteration",
+                        sc.name
+                    );
+                    assert_eq!(prefill_slots + decode_slots, *batch, "{}: batch split", sc.name);
+                    assert_eq!(slot_reqs.len(), *batch, "{}: slot roster", sc.name);
+                    assert!(*q_tokens > 0, "{}: an iteration prices > 0 tokens", sc.name);
+                    spans += 1;
+                }
+                TraceEvent::KvEvent { t_s, kind, delta_blocks, blocks_in_use, .. } => {
+                    assert!(*t_s >= last_kv_t, "{}: kv events out of order", sc.name);
+                    last_kv_t = *t_s;
+                    live_blocks += delta_blocks;
+                    assert_eq!(
+                        live_blocks, *blocks_in_use as i64,
+                        "{}: kv deltas diverged from the pager at a {} event",
+                        sc.name,
+                        kind.name()
+                    );
+                    match kind {
+                        KvEventKind::Release => releases += 1,
+                        KvEventKind::Grow => {
+                            assert!(*delta_blocks >= 0, "{}: negative grow", sc.name);
+                            grew = true;
+                        }
+                        KvEventKind::MapPrefix | KvEventKind::Fork => {
+                            assert_eq!(*delta_blocks, 0, "{}: refcount-only moves draw nothing", sc.name);
+                            mapped_prefix |= *kind == KvEventKind::MapPrefix;
+                        }
+                        KvEventKind::Truncate | KvEventKind::Preempt => {
+                            assert!(*delta_blocks <= 0, "{}: rollback must free", sc.name)
+                        }
+                    }
+                }
+                TraceEvent::SpecRound { round, proposed: p, accepted: a, committed, .. } => {
+                    rounds += 1;
+                    assert_eq!(*round, rounds, "{}: round ordinals must be dense", sc.name);
+                    proposed += p;
+                    accepted += a;
+                    assert!(a <= p, "{}: accepted beyond proposal", sc.name);
+                    assert!(*committed >= 1, "{}: every round commits the verify token", sc.name);
+                }
+                TraceEvent::CacheProbe { cache, hit, count } => {
+                    assert_eq!(*cache, "iter-memo", "{}: only the memo probes here", sc.name);
+                    if *hit {
+                        probe_hits += count;
+                    } else {
+                        probe_misses += count;
+                    }
+                }
+                TraceEvent::KernelPriced { .. } | TraceEvent::CommPriced { .. } => {
+                    panic!("{}: kernel records must not appear at iter level", sc.name)
+                }
+            }
+        }
+        assert_eq!(spans, report.iterations, "{}: one span per iteration", sc.name);
+        assert!(grew, "{}: a replay that completes requests must grow KV", sc.name);
+        assert_eq!(live_blocks, 0, "{}: all KV must be released at the end", sc.name);
+        assert_eq!(
+            releases,
+            report.completed.len(),
+            "{}: one release per completion",
+            sc.name
+        );
+        assert_eq!(
+            (rounds, proposed, accepted),
+            (report.spec_rounds, report.spec_draft_tokens, report.spec_accepted_tokens),
+            "{}: spec rounds must reproduce the report's counters",
+            sc.name
+        );
+        assert_eq!(
+            (probe_hits, probe_misses),
+            (memo_hits, memo_misses),
+            "{}: memo probes must reconcile with the cache's counters",
+            sc.name
+        );
+        if sc.name == "prefix-share" {
+            assert!(mapped_prefix, "prefix-share: admission must map the template");
+        }
+    }
+}
+
+#[test]
+fn chrome_export_is_valid_json_with_balanced_spans() {
+    // Export a real recorded stream (the speculative scenario exercises
+    // every track: iterations, draft instants, slots, counters) and walk
+    // the parsed JSON: every B has its E on the same thread, in order.
+    let (gpu, pl) = quick_pl("a100", DType::F32);
+    let sc = &scenarios().into_iter().find(|s| s.spec.is_some()).expect("spec scenario");
+    let ring = RingRecorder::default_sized();
+    let (report, _, _) =
+        run_traced(sc, &gpu, &pl, &TraceCtx::with_level(&ring, TraceLevel::Iter));
+    let events = ring.events();
+
+    let text = chrome_trace(&events).to_string();
+    let doc = Json::parse(&text).expect("chrome export must be valid JSON");
+    let tev = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(!tev.is_empty(), "export must not be empty");
+
+    let mut depth: std::collections::BTreeMap<(usize, usize), usize> =
+        std::collections::BTreeMap::new();
+    let mut iter_spans = 0usize;
+    let (mut counters, mut instants, mut meta) = (0usize, 0usize, 0usize);
+    let mut last_ts: std::collections::BTreeMap<(usize, usize), f64> =
+        std::collections::BTreeMap::new();
+    for e in tev {
+        let ph = e.get("ph").and_then(Json::as_str).expect("every event has a phase");
+        let pid = e.get("pid").and_then(Json::as_usize).unwrap_or(0);
+        let tid = e.get("tid").and_then(Json::as_usize).unwrap_or(0);
+        if let Some(ts) = e.get("ts").and_then(Json::as_f64) {
+            assert!(ts >= 0.0, "timestamps are non-negative µs");
+            let t = last_ts.entry((pid, tid)).or_insert(f64::NEG_INFINITY);
+            // Span ends are computed as (start + dur) while the next
+            // start is the simulator's accumulated clock; the two can
+            // disagree by a ulp, so monotonicity holds to a tolerance
+            // far below any rendered pixel.
+            assert!(ts >= *t - 1e-6, "per-track timestamps must be monotone (tid {tid})");
+            *t = ts.max(*t);
+        }
+        match ph {
+            "B" => {
+                *depth.entry((pid, tid)).or_insert(0) += 1;
+                if tid == 0 {
+                    iter_spans += 1;
+                }
+            }
+            "E" => {
+                let d = depth.get_mut(&(pid, tid)).expect("E without B");
+                assert!(*d > 0, "unbalanced E on tid {tid}");
+                *d -= 1;
+            }
+            "C" => counters += 1,
+            "i" => instants += 1,
+            "M" => meta += 1,
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    assert!(depth.values().all(|&d| d == 0), "every B must close: {depth:?}");
+    assert_eq!(iter_spans, report.iterations, "one iteration track span per iteration");
+    assert!(counters > 0, "KV-occupancy counter track missing");
+    assert!(instants > 0, "speculative rounds must render as instants");
+    assert!(meta > 0, "thread-name metadata missing");
+}
+
+#[test]
+fn predict_graph_traced_is_bit_identical_and_covers_every_node() {
+    // The kernel-level tap prices serially through the same per-node
+    // `predict` the pooled path uses: same makespan to the last bit, one
+    // record per graph node.
+    let (gpu, pl) = quick_pl("a100", DType::F32);
+    let cfg = zoo::gpt2_large();
+    let g = cfg.mixed_batch_graph(&[
+        SeqSlot { q_len: 16, kv_len: 16 },
+        SeqSlot { q_len: 1, kv_len: 48 },
+    ]);
+    let plain = pl.predict_graph(&gpu, &g, 1).expect("graph supported");
+    let ring = RingRecorder::default_sized();
+    let traced = pl.predict_graph_traced(&gpu, &g, 1, &ring).expect("traced supported");
+    assert_eq!(plain.to_bits(), traced.to_bits(), "tracing must not move the prediction");
+    assert_eq!(ring.len(), g.nodes().len(), "one pricing record per node");
+    for ev in &ring.events() {
+        match ev {
+            TraceEvent::KernelPriced { op, dur_s, .. } => {
+                assert!(!op.is_empty() && dur_s.is_finite() && *dur_s >= 0.0);
+            }
+            TraceEvent::CommPriced { dur_s, .. } => assert!(*dur_s >= 0.0),
+            other => panic!("unexpected record from the predictor: {other:?}"),
+        }
+    }
+}

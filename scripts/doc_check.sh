@@ -1,0 +1,68 @@
+#!/bin/sh
+# doc_check.sh — the prose/code drift gate behind `make doc-check`.
+#
+# Two checks, both pure grep so the lane runs even in containers without
+# a Rust toolchain:
+#
+#   1. Every `--flag` mentioned in README.md or docs/*.md must exist in
+#      the CLI (rust/src/main.rs) or be a known build-tool flag — stale
+#      flag references are the fastest way docs rot.
+#   2. Every relative markdown link must resolve to a file in the tree
+#      (http/mailto/#anchor links are skipped).
+#
+# Exit non-zero with one line per violation.
+set -eu
+cd "$(dirname "$0")/.."
+
+fail=0
+docs="README.md"
+for f in docs/*.md; do
+  docs="$docs $f"
+done
+
+# Build-tool flags (cargo, python, perfetto) that legitimately appear in
+# prose but are not pm2lat CLI surface.
+whitelist=" --release --quiet --check --all-targets --no-deps --bench --out-dir --help --version --locked --offline "
+
+for f in $docs; do
+  [ -f "$f" ] || continue
+
+  # --- stale CLI flags ---
+  # A live flag shows up in main.rs either spelled out (`--trace-out` in
+  # the usage header) or as the quoted name the parser reads
+  # (`args.opt("trace-out")`).
+  # The delimiter class before `--` keeps heading-anchor slugs
+  # (#section--subtitle) from reading as flags.
+  for flag in $(grep -oE -- '(^|[[:space:]`"(=|])--[a-z][a-z0-9-]*' "$f" \
+      | sed 's/^[^-]*//' | sort -u); do
+    case "$whitelist" in
+      *" $flag "*) continue ;;
+    esac
+    bare=${flag#--}
+    if ! grep -qF -- "$flag" rust/src/main.rs && \
+       ! grep -qF -- "\"$bare\"" rust/src/main.rs; then
+      echo "doc-check: $f mentions $flag, which rust/src/main.rs does not define" >&2
+      fail=1
+    fi
+  done
+
+  # --- broken relative links ---
+  dir=$(dirname "$f")
+  for link in $(grep -oE '\]\([^)]+\)' "$f" | sed -e 's/^](//' -e 's/)$//' | sort -u); do
+    case "$link" in
+      http://* | https://* | mailto:* | \#*) continue ;;
+    esac
+    target=${link%%#*}
+    [ -n "$target" ] || continue
+    if [ ! -e "$dir/$target" ] && [ ! -e "$target" ]; then
+      echo "doc-check: $f links to $link but no such file exists" >&2
+      fail=1
+    fi
+  done
+done
+
+if [ "$fail" -ne 0 ]; then
+  echo "doc-check: FAILED" >&2
+  exit 1
+fi
+echo "doc-check: OK"
